@@ -1,0 +1,180 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): every layer of the stack
+//! composes on a real workload.
+//!
+//! 1. **L2 via PJRT** — load the AOT-compiled `bert_layer` artifact and run
+//!    GLUE-like sentences through a BERT encoder layer (python never runs).
+//! 2. **Trace extraction** — rebuild the N-term partial-product vectors the
+//!    layer's matmuls feed through 32-term BFloat16 fused adders.
+//! 3. **L1 via PJRT + L3 batcher** — serve every vector through the Pallas
+//!    online `⊙` reduction artifact behind the dynamic batcher, from
+//!    concurrent client threads, and verify each result **bit-exactly**
+//!    against the Rust `⊙`-tree model; report latency/throughput.
+//! 4. **Hardware evaluation** — run the same trace through the
+//!    switching-activity power model for the baseline and the paper's best
+//!    32-term BF16 configuration (8-2-2) and report the Table I(b) row.
+//!
+//! Run: `make artifacts && cargo run --release --example bert_e2e`
+
+use online_fp_add::arith::tree::{tree_sum, RadixConfig};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::coordinator::batcher::{Batcher, BatcherConfig};
+use online_fp_add::formats::BF16;
+use online_fp_add::hw::datapath::DatapathParams;
+use online_fp_add::hw::design::{attach_power, evaluate_area};
+use online_fp_add::hw::power::ActivitySim;
+use online_fp_add::runtime::{BertLayerExe, BertWeights, Runtime};
+use online_fp_add::util::cli::Args;
+use online_fp_add::util::prng::XorShift;
+use online_fp_add::workload::glue::{GlueConfig, GlueCorpus};
+use online_fp_add::workload::partial_product_trace;
+use online_fp_add::workload::Trace;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_TERMS: usize = 32;
+const GUARD: u32 = 16; // Frame.hw_default(8, 7, 32) baked into the artifact
+
+fn main() {
+    let args = Args::from_env();
+    let sentences = args.get_usize("sentences", 4).unwrap();
+    let vectors_per_mm = args.get_usize("vectors", 160).unwrap();
+
+    // ---- 1. L2 forward passes through PJRT ------------------------------
+    let dir = Runtime::default_artifact_dir();
+    if !dir.join("bert_layer.hlo.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let rt = Runtime::new(&dir).expect("PJRT CPU client");
+    println!("PJRT platform: {}", rt.platform());
+    let layer = BertLayerExe::load(&rt).expect("bert_layer artifact");
+    let weights = BertWeights::random(0xBE27);
+    let corpus = GlueCorpus::new(GlueConfig::default(), 0x617E);
+    let (seq, d) = online_fp_add::runtime::bert_dims();
+
+    let mut rng = XorShift::new(0xE2E);
+    let mut trace = Trace::new(BF16, N_TERMS);
+    let t0 = Instant::now();
+    for s in 0..sentences {
+        let x = corpus.embed_sentence(&mut rng);
+        let acts = layer.run(&rt, &x, &weights).expect("bert layer forward");
+        // ---- 2. partial-product traces from three of the layer matmuls --
+        for (name, a, b, shape) in [
+            ("q_proj", &x, &weights.wq, (seq, d, d)),
+            ("ctx", &acts.attn, &acts.v, (seq, seq, d)),
+            ("ffn1", &acts.h, &weights.w1, (seq, d, weights.w1.len() / d)),
+        ] {
+            let t = partial_product_trace(a, b, shape, BF16, N_TERMS, vectors_per_mm, s as u64);
+            trace.vectors.extend(t.vectors);
+            let _ = name;
+        }
+    }
+    println!(
+        "ran {sentences} sentences through the PJRT BERT layer in {:.2}s; \
+         extracted {} adder vectors (exponent spread {:.1} octaves, {:.0}% zero lanes)",
+        t0.elapsed().as_secs_f64(),
+        trace.len(),
+        trace.mean_exponent_spread(),
+        100.0 * trace.zero_fraction()
+    );
+
+    // ---- 3. serve every vector through the Pallas artifact --------------
+    let spec = AccSpec::truncated(GUARD);
+    let batcher = Batcher::spawn_with(
+        BatcherConfig {
+            n_terms: N_TERMS,
+            linger: std::time::Duration::from_micros(300),
+            ..Default::default()
+        },
+        {
+            let dir = dir.clone();
+            move || {
+                let rt = Runtime::new(dir).expect("PJRT client (dispatcher)");
+                let exe = online_fp_add::runtime::OnlineReduceExe::load_bf16_n32(&rt)
+                    .expect("reduce artifact");
+                move |rows: &[(Vec<i32>, Vec<i32>)]| {
+                    let mut e_all = Vec::new();
+                    let mut m_all = Vec::new();
+                    for (e, m) in rows {
+                        e_all.extend_from_slice(e);
+                        m_all.extend_from_slice(m);
+                    }
+                    let out = exe.run(&rt, &e_all, &m_all).expect("pjrt execute");
+                    out.lambda.into_iter().zip(out.acc).collect::<Vec<_>>()
+                }
+            }
+        },
+    );
+    let handle = batcher.handle();
+    let vectors = Arc::new(trace.vectors.clone());
+    let t1 = Instant::now();
+    let clients = 8usize;
+    let mismatches: usize = std::thread::scope(|scope| {
+        (0..clients)
+            .map(|c| {
+                let h = handle.clone();
+                let vecs = Arc::clone(&vectors);
+                scope.spawn(move || {
+                    let mut bad = 0usize;
+                    for v in vecs.iter().skip(c).step_by(clients) {
+                        let e: Vec<i32> = v.iter().map(|t| t.raw_exp()).collect();
+                        let m: Vec<i32> = v.iter().map(|t| t.signed_sig() as i32).collect();
+                        let resp = h.reduce(e, m).expect("batched reduce");
+                        let want = tree_sum(v, &RadixConfig::binary(N_TERMS as u32).unwrap(), spec);
+                        if resp.lambda != want.lambda
+                            || resp.acc != want.acc.to_i128() as i64
+                        {
+                            bad += 1;
+                        }
+                    }
+                    bad
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum()
+    });
+    let served = trace.len();
+    let dt = t1.elapsed().as_secs_f64();
+    let m = batcher.metrics();
+    println!(
+        "served {served} reductions through the Pallas ⊙ artifact in {dt:.2}s \
+         ({:.0} req/s, {clients} clients)",
+        served as f64 / dt
+    );
+    println!(
+        "batching: {} batches, mean fill {:.1}; latency {}",
+        m.batches.get(),
+        m.mean_batch_fill(),
+        m.latency.summary()
+    );
+    assert_eq!(mismatches, 0, "PJRT vs Rust ⊙-tree mismatch");
+    println!("all {served} results match the Rust bit-accurate ⊙ tree exactly ✓");
+
+    // ---- 4. hardware evaluation on the same trace ------------------------
+    println!("\nhardware evaluation on this trace (paper Table I(b), BFloat16 row):");
+    for cfgs in ["32", "8-2-2"] {
+        let c: RadixConfig = cfgs.parse().unwrap();
+        let mut point = evaluate_area(BF16, N_TERMS as u32, &c, 1.0);
+        attach_power(&mut point, &trace.vectors);
+        println!(
+            "  {:<8} area {:>6.0} µm²  power {:>5.2} mW  ({} @ {:.2} ns, {} stages)",
+            cfgs,
+            point.area_um2,
+            point.power_mw.unwrap(),
+            if point.feasible { "meets clock" } else { "min clock" },
+            point.clock_ns,
+            point.stages,
+        );
+    }
+    // Quick activity sanity: the sim must agree with the arith model.
+    let params = DatapathParams::new(BF16, N_TERMS as u32, AccSpec::hw_default(BF16, N_TERMS));
+    let mut sim = ActivitySim::new(params, &"8-2-2".parse().unwrap());
+    for v in trace.vectors.iter().take(64) {
+        sim.step(v);
+    }
+    let want = tree_sum(&trace.vectors[63], &"8-2-2".parse().unwrap(), AccSpec::hw_default(BF16, N_TERMS));
+    assert_eq!(sim.last_state().0, want.lambda as i64);
+    println!("\nE2E complete: L2 (PJRT BERT) → trace → L1 (Pallas ⊙, batched) → L3 hardware models ✓");
+}

@@ -1,0 +1,63 @@
+//! Design-space explorer: sweep every mixed-radix configuration of an
+//! N-term adder for a chosen format, with workload-driven power, and print
+//! the Pareto frontier — the tool a hardware team would actually run when
+//! sizing a fused accumulator for their datatype.
+//!
+//! Run: `cargo run --release --example dse_explorer -- --format e4m3 --n 32`
+
+use online_fp_add::coordinator::Coordinator;
+use online_fp_add::dse::{sweep_format, SweepOptions};
+use online_fp_add::formats::format_by_name;
+use online_fp_add::util::cli::Args;
+use online_fp_add::util::table::Table;
+use online_fp_add::workload::bert::power_trace;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let fmt = format_by_name(args.get_or("format", "bf16")).expect("unknown --format");
+    let n = args.get_usize("n", 32).unwrap() as u32;
+    let clock = args.get_f64("clock", 1.0).unwrap();
+    let vectors = args.get_usize("vectors", 256).unwrap();
+
+    let coord = Coordinator::default_parallelism().verbose(true);
+    let trace = Arc::new(power_trace(fmt, n as usize, vectors, 0xD5E));
+    println!(
+        "exploring {} {n}-term adders @ {clock} ns on a BERT/GLUE trace \
+         (spread {:.1} octaves, {:.0}% zero lanes)\n",
+        fmt,
+        trace.mean_exponent_spread(),
+        100.0 * trace.zero_fraction()
+    );
+    let opts = SweepOptions { clock_ns: clock, ..Default::default() };
+    let points = sweep_format(fmt, n, &opts, Some(trace), &coord);
+
+    let base = points[0].clone();
+    let mut t = Table::new(vec!["config", "area µm²", "Δ area", "power mW", "Δ power", "pareto"]);
+    // Pareto: not dominated in (area, power).
+    let dominated = |i: usize| {
+        points.iter().enumerate().any(|(j, q)| {
+            j != i
+                && q.area_um2 <= points[i].area_um2
+                && q.power_mw.unwrap_or(f64::MAX) <= points[i].power_mw.unwrap_or(f64::MAX)
+                && (q.area_um2 < points[i].area_um2
+                    || q.power_mw.unwrap_or(f64::MAX) < points[i].power_mw.unwrap_or(f64::MAX))
+        })
+    };
+    for (i, p) in points.iter().enumerate() {
+        let pw = p.power_mw.unwrap_or(0.0);
+        t.row(vec![
+            p.config.to_string(),
+            format!("{:.0}", p.area_um2),
+            format!("{:+.1}%", 100.0 * (p.area_um2 - base.area_um2) / base.area_um2),
+            format!("{pw:.2}"),
+            format!(
+                "{:+.1}%",
+                100.0 * (pw - base.power_mw.unwrap_or(1.0)) / base.power_mw.unwrap_or(1.0)
+            ),
+            if dominated(i) { "" } else { "◆" }.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("◆ = Pareto-optimal in (area, power); first row is the paper's baseline.");
+}

@@ -1,0 +1,42 @@
+//! Diagnostic probe: area/register breakdown of 32-term BFloat16 adders at
+//! the paper's 1 GHz operating point for every radix configuration.
+//! Useful when calibrating the hardware model (EXPERIMENTS.md §Calibration).
+
+use online_fp_add::arith::tree::{enumerate_configs, RadixConfig};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::BF16;
+use online_fp_add::hw::datapath::{build_adder, DatapathParams};
+use online_fp_add::hw::pipeline::{min_clock_ns, paper_stages};
+use online_fp_add::hw::{design, gates};
+use online_fp_add::util::table::Table;
+
+fn main() {
+    let fmt = BF16;
+    let n = 32;
+    let clock = 1.0;
+    let stages = paper_stages(fmt, n);
+    println!("32-term BFloat16 @ {clock} ns, {stages} stages\n");
+    let mut t = Table::new(vec![
+        "config", "comb µm²", "reg bits", "total µm²", "Δ vs base", "comb ns", "minclk@k",
+    ]);
+    let base = design::evaluate_area(fmt, n, &RadixConfig::baseline(n), clock);
+    let mut configs = enumerate_configs(n);
+    configs.sort_by_key(|c| c.levels());
+    for cfg in configs {
+        let p = design::evaluate_area(fmt, n, &cfg, clock);
+        let params = DatapathParams::new(fmt, n, AccSpec::hw_default(fmt, n as usize));
+        let adder = build_adder(params, &cfg);
+        let comb = gates::ge_to_um2(adder.nl.area());
+        let minclk = min_clock_ns(&adder, stages);
+        t.row(vec![
+            format!("{cfg}{}", if p.feasible { "" } else { " (!)" }),
+            format!("{comb:.0}"),
+            format!("{}", p.reg_bits),
+            format!("{:.0}", p.area_um2),
+            format!("{:+.1}%", 100.0 * (p.area_um2 - base.area_um2) / base.area_um2),
+            format!("{:.2}", p.comb_delay_ns),
+            format!("{minclk:.2}"),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,36 @@
+//! Internal profiling target for the §Perf pass: hammer the two hot paths
+//! (bit-accurate ⊙ tree and the activity simulator) for a few seconds.
+use online_fp_add::arith::tree::{tree_sum, RadixConfig};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, BF16};
+use online_fp_add::hw::datapath::DatapathParams;
+use online_fp_add::hw::power::ActivitySim;
+use online_fp_add::util::prng::XorShift;
+
+fn main() {
+    let mut rng = XorShift::new(1);
+    let vecs: Vec<Vec<Fp>> =
+        (0..256).map(|_| (0..32).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect()).collect();
+    let spec = AccSpec::hw_default(BF16, 32);
+    let cfg: RadixConfig = "8-2-2".parse().unwrap();
+    let mode = std::env::args().nth(1).unwrap_or_else(|| "tree".into());
+    match mode.as_str() {
+        "tree" => {
+            for _ in 0..20000 {
+                for v in &vecs {
+                    std::hint::black_box(tree_sum(v, &cfg, spec));
+                }
+            }
+        }
+        "power" => {
+            let params = DatapathParams::new(BF16, 32, spec);
+            let mut sim = ActivitySim::new(params, &cfg);
+            for _ in 0..20000 {
+                for v in &vecs {
+                    sim.step(v);
+                }
+            }
+        }
+        _ => panic!("tree|power"),
+    }
+}

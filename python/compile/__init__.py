@@ -1,0 +1,9 @@
+"""Build-time python package: JAX/Pallas author + AOT-compile path.
+
+The accumulator contract is int64, so x64 mode must be on before any jax
+import touches dtypes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,71 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser on the Rust side reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import BF16_N32, FP32_N16
+
+# Batch size baked into the reduction artifacts; the Rust coordinator pads
+# the final partial batch with zero terms (identity leaves).
+REDUCE_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def artifacts() -> dict[str, tuple]:
+    """name -> (fn, example_args) for every exported graph."""
+    reduce_bf16 = model.online_reduce_graph(BF16_N32, REDUCE_BATCH, 32)
+    reduce_fp32 = model.online_reduce_graph(FP32_N16, REDUCE_BATCH, 16)
+    dot_bf16 = model.online_dot_graph(BF16_N32, REDUCE_BATCH, 32)
+    return {
+        "bert_layer": (model.bert_layer, model.bert_layer_shapes()),
+        "online_reduce_bf16_n32": reduce_bf16,
+        "online_reduce_fp32_n16": reduce_fp32,
+        "online_dot_bf16_n32": dot_bf16,
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", help="emit a single artifact by name")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, (fn, example_args) in artifacts().items():
+        if args.only and name != args.only:
+            continue
+        text = lower_fn(fn, example_args)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

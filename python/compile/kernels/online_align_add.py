@@ -1,0 +1,230 @@
+"""L1 Pallas kernel: the paper's online align-and-add as a parallel reduction.
+
+The hardware-adaptation insight (DESIGN.md §Hardware adaptation): because the
+align-and-add operator (eq. 8) is associative, a vector unit can reduce N
+floating-point terms with a *log-depth data-parallel tree* instead of the
+serial max-then-align-then-add pass — the same move online-softmax makes for
+attention. The kernel carries only the tiny ``(lam, acc)`` running state per
+batch row, tiles the batch axis HBM->VMEM via BlockSpec, and combines terms
+in a fully unrolled balanced tree inside VMEM.
+
+Kernels are lowered with ``interpret=True``: real-TPU Pallas emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO so the Rust runtime can load and run the artifact anywhere, and the
+TPU VMEM/MXU story is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import Frame, MAX_SHIFT
+
+
+def _combine(lam1, acc1, lam2, acc2):
+    """eq. 8 on int64 accumulators (shift clamp per ref.py contract)."""
+    lam = jnp.maximum(lam1, lam2)
+    d1 = jnp.minimum((lam - lam1).astype(jnp.int64), MAX_SHIFT)
+    d2 = jnp.minimum((lam - lam2).astype(jnp.int64), MAX_SHIFT)
+    return lam, jnp.right_shift(acc1, d1) + jnp.right_shift(acc2, d2)
+
+
+def _online_reduce_kernel(e_ref, m_ref, lam_ref, acc_ref, *, f: int, n: int):
+    """One batch tile: reduce the term axis with a balanced ⊙ tree.
+
+    e_ref, m_ref: (TB, N) int32 — raw exponents / signed significands.
+    lam_ref:      (TB,)  int32 — output max exponents.
+    acc_ref:      (TB,)  int64 — output aligned sums in the ``f`` frame.
+    """
+    lam = e_ref[...].astype(jnp.int64)
+    acc = m_ref[...].astype(jnp.int64) << f
+    width = n
+    while width > 1:
+        half = width // 2
+        lam = lam.reshape(lam.shape[0], half, 2)
+        acc = acc.reshape(acc.shape[0], half, 2)
+        lam, acc = _combine(lam[..., 0], acc[..., 0], lam[..., 1], acc[..., 1])
+        width = half
+    lam_ref[...] = lam[:, 0].astype(jnp.int32)
+    acc_ref[...] = acc[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("frame", "tile"))
+def online_reduce(e, m, *, frame: Frame, tile: int = 8):
+    """Batched online align-and-add reduction.
+
+    Args:
+      e: (B, N) int32 raw exponents (0 = zero term). N must be a power of 2.
+      m: (B, N) int32 signed significands.
+      frame: accumulator frame (format + guard bits).
+      tile: batch rows per VMEM block.
+
+    Returns:
+      (lam, acc): (B,) int32 max exponents and (B,) int64 aligned sums.
+    """
+    b, n = e.shape
+    assert n & (n - 1) == 0, "term count must be a power of two"
+    assert b % tile == 0, "batch must divide the tile size"
+    kernel = functools.partial(_online_reduce_kernel, f=frame.f, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int64),
+        ],
+        interpret=True,  # CPU-PJRT executable HLO; see module docstring
+    )(e, m)
+
+
+def _dot_products_kernel(a_ref, b_ref, e_ref, m_ref, *, frame: Frame):
+    """Quantize elementwise products of two operand tiles onto the frame's
+    FP grid and emit (e, m) term pairs — the matmul-side producer feeding
+    the multi-term adder (the paper's power-estimation workload shape).
+
+    a_ref, b_ref: (TB, N) float32; outputs (TB, N) int32 pairs.
+    """
+    prod = a_ref[...] * b_ref[...]
+    sign = jnp.signbit(prod)
+    mag = jnp.abs(prod)
+    nz = mag > 0.0
+    safe = jnp.where(nz, mag, 1.0)
+    # frexp-free decomposition: exponent from log2, significand by scaling.
+    ex = jnp.floor(jnp.log2(safe)).astype(jnp.int32)
+    sig = safe * jnp.exp2(-(ex.astype(jnp.float32)))  # in [1, 2)
+    # Renormalize boundary cases from log2 rounding.
+    hi = sig >= 2.0
+    sig = jnp.where(hi, sig * 0.5, sig)
+    ex = jnp.where(hi, ex + 1, ex)
+    scaled = sig * (1 << frame.mbits)
+    rounded = jnp.round(scaled).astype(jnp.int32)  # RNE
+    carry = rounded >= (1 << (frame.mbits + 1))
+    rounded = jnp.where(carry, rounded >> 1, rounded)
+    ex = jnp.where(carry, ex + 1, ex)
+    raw_e = ex + frame.bias
+    max_e = (1 << frame.ebits) - 2
+    # Saturate overflow, FTZ underflow, zero products.
+    overflow = raw_e > max_e
+    raw_e = jnp.clip(raw_e, 0, max_e)
+    rounded = jnp.where(overflow, (1 << (frame.mbits + 1)) - 1, rounded)
+    dead = (~nz) | (raw_e < 1)
+    raw_e = jnp.where(dead, 0, raw_e)
+    rounded = jnp.where(dead, 0, rounded)
+    e_ref[...] = raw_e
+    m_ref[...] = jnp.where(sign, -rounded, rounded)
+
+
+@functools.partial(jax.jit, static_argnames=("frame", "tile"))
+def quantized_products(a, b, *, frame: Frame, tile: int = 8):
+    """Pallas producer kernel: (B, N) float32 operand pairs -> (e, m) terms."""
+    bsz, n = a.shape
+    assert bsz % tile == 0
+    kernel = functools.partial(_dot_products_kernel, frame=frame)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, n), jnp.int32),
+        ],
+        interpret=True,
+    )(a, b)
+
+
+def online_dot(a, b, *, frame: Frame, tile: int = 8):
+    """End-to-end L1 pipeline: products -> (e, m) -> online ⊙ reduction.
+
+    The fused multi-term dot product the paper's intro motivates: alignment
+    of the N addends happens online inside the reduction, never against a
+    pre-computed global max exponent.
+    """
+    e, m = quantized_products(a, b, frame=frame, tile=tile)
+    return online_reduce(e, m, frame=frame, tile=tile)
+
+
+def _online_reduce_tiled_kernel(e_ref, m_ref, lam_ref, acc_ref, *, f: int, tile_n: int):
+    """Grid-carried online accumulation: the term axis is tiled HBM->VMEM
+    and the kernel carries only the tiny ``(lam, acc)`` running state across
+    grid steps — the paper's online recurrence (Algorithm 3) lifted to
+    tile granularity, exactly like online-softmax in flash-attention.
+
+    Grid: (terms // tile_n,). Outputs are accumulated in place.
+    """
+    step = pl.program_id(0)
+
+    # Reduce this tile with the balanced ⊙ tree.
+    lam = e_ref[...].astype(jnp.int64)
+    acc = m_ref[...].astype(jnp.int64) << f
+    width = tile_n
+    while width > 1:
+        half = width // 2
+        lam = lam.reshape(lam.shape[0], half, 2)
+        acc = acc.reshape(acc.shape[0], half, 2)
+        lam, acc = _combine(lam[..., 0], acc[..., 0], lam[..., 1], acc[..., 1])
+        width = half
+    tile_lam = lam[:, 0]
+    tile_acc = acc[:, 0]
+
+    # ⊙-combine with the carried state (identity at step 0).
+    prev_lam = jnp.where(step == 0, jnp.zeros_like(tile_lam), lam_ref[...].astype(jnp.int64))
+    prev_acc = jnp.where(step == 0, jnp.zeros_like(tile_acc), acc_ref[...])
+    new_lam, new_acc = _combine(prev_lam, prev_acc, tile_lam, tile_acc)
+    lam_ref[...] = new_lam.astype(jnp.int32)
+    acc_ref[...] = new_acc
+
+
+@functools.partial(jax.jit, static_argnames=("frame", "tile_n", "tile_b"))
+def online_reduce_tiled(e, m, *, frame: Frame, tile_n: int = 8, tile_b: int = 8):
+    """Online reduction over a term axis longer than one VMEM tile.
+
+    Args:
+      e, m: (B, N) int32 with N a multiple of ``tile_n`` (a power of two).
+
+    Returns the same ``(lam, acc)`` as :func:`online_reduce`; the reduction
+    order is tile-major (tile trees combined left-to-right), which matches
+    the Rust ``RadixConfig`` ``[2]*log2(tile_n) + [N/tile_n]``... not quite:
+    the carried state folds serially, i.e. config ``tile tree`` then a
+    serial ⊙ chain — associativity (eq. 10) makes the float value identical
+    and tests pin the exact bit pattern against a numpy mirror.
+    """
+    b, n = e.shape
+    assert tile_n & (tile_n - 1) == 0 and n % tile_n == 0
+    assert b % tile_b == 0
+    kernel = functools.partial(_online_reduce_tiled_kernel, f=frame.f, tile_n=tile_n)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((b, tile_n), lambda i: (0, i)),
+            pl.BlockSpec((b, tile_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int64),
+        ],
+        interpret=True,
+    )(e, m)

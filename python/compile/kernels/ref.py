@@ -1,0 +1,168 @@
+"""Pure-jnp correctness oracles for the online align-and-add kernels.
+
+Terms are *(raw exponent, signed significand)* integer pairs in the same
+fixed-point frame the Rust bit-accurate models use:
+
+* ``e``  — raw biased exponent (``0`` encodes a zero term),
+* ``m``  — the integer ``(-1)^s * 1.mant * 2^mbits`` (``0`` for zero terms),
+* frame — a partial sum tagged with running max exponent ``lam`` holds the
+  value ``acc * 2^(lam - bias - mbits - f)`` where ``f`` is the guard
+  (fractional extension) width.
+
+Shift amounts are clamped to 63 because the accumulator is an ``int64``:
+an arithmetic shift by >= 63 already yields the sign fill, which is exactly
+what a wider datapath would leave in the low 64 bits. The kernels model the
+*truncated* hardware datapath (no sticky bit); the Rust side cross-checks
+``(lam, acc)`` bit-exactly against its own truncated-mode models.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+MAX_SHIFT = 63  # plain int: a jnp scalar would be a captured constant in pallas
+
+
+@dataclass(frozen=True)
+class Frame:
+    """Accumulator frame parameters for one FP format / term count."""
+
+    ebits: int
+    mbits: int
+    f: int  # guard bits below the significand ("fractional extension")
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.ebits - 1)) - 1
+
+    @staticmethod
+    def hw_default(ebits: int, mbits: int, n_terms: int) -> "Frame":
+        """Mirror of Rust ``AccSpec::hw_default``: sig_bits + ceil(log2 N) + 3."""
+        log_n = max(1, int(np.ceil(np.log2(max(n_terms, 2)))))
+        return Frame(ebits, mbits, (mbits + 1) + log_n + 3)
+
+
+def _shr(acc, d):
+    """Arithmetic right shift with the int64 clamp described above."""
+    return jnp.right_shift(acc, jnp.minimum(d.astype(jnp.int64), MAX_SHIFT))
+
+
+def combine(lam1, acc1, lam2, acc2):
+    """The paper's align-and-add operator (eq. 8) on int64 accumulators."""
+    lam = jnp.maximum(lam1, lam2)
+    acc = _shr(acc1, lam - lam1) + _shr(acc2, lam - lam2)
+    return lam, acc
+
+
+def leaf(e, m, frame: Frame):
+    """Lift terms into the operator domain: ``[e; m << f]``."""
+    return e.astype(jnp.int64), m.astype(jnp.int64) << frame.f
+
+
+def baseline_ref(e, m, frame: Frame):
+    """Algorithm 2 (the serial baseline): global max exponent, then align+add.
+
+    ``e, m``: integer arrays with the term axis last. Returns ``(lam, acc)``
+    with the term axis reduced.
+    """
+    lam_n, acc = leaf(e, m, frame)
+    lam = jnp.max(lam_n, axis=-1)
+    aligned = _shr(acc, lam[..., None] - lam_n)
+    return lam, jnp.sum(aligned, axis=-1)
+
+
+def online_ref(e, m, frame: Frame):
+    """Algorithm 3 (the online serial recurrence, eq. 7), term by term."""
+    lam_i, acc_i = leaf(e, m, frame)
+    lam = jnp.zeros(e.shape[:-1], jnp.int64)
+    acc = jnp.zeros(e.shape[:-1], jnp.int64)
+    for i in range(e.shape[-1]):
+        lam, acc = combine(lam, acc, lam_i[..., i], acc_i[..., i])
+    return lam, acc
+
+
+def tree_ref(e, m, frame: Frame):
+    """Balanced radix-2 tree of eq. 8 operators (adjacent pairing), matching
+    the Pallas kernel's reduction order bit-for-bit. Term count must be a
+    power of two."""
+    n = e.shape[-1]
+    assert n & (n - 1) == 0, "tree_ref needs a power-of-two term count"
+    lam, acc = leaf(e, m, frame)
+    while n > 1:
+        lam = lam.reshape(*lam.shape[:-1], n // 2, 2)
+        acc = acc.reshape(*acc.shape[:-1], n // 2, 2)
+        lam, acc = combine(lam[..., 0], acc[..., 0], lam[..., 1], acc[..., 1])
+        n //= 2
+    return lam[..., 0], acc[..., 0]
+
+
+def state_to_float(lam, acc, frame: Frame):
+    """Decode an ``(lam, acc)`` state to its real value (float64)."""
+    scale = np.asarray(lam, np.float64) - frame.bias - frame.mbits - frame.f
+    return np.asarray(acc, np.float64) * np.exp2(scale)
+
+
+def decode_terms(e, m, frame: Frame):
+    """Decode ``(e, m)`` term arrays to float64 values."""
+    e = np.asarray(e, np.int64)
+    m = np.asarray(m, np.int64)
+    val = m.astype(np.float64) * np.exp2(e - frame.bias - frame.mbits)
+    return np.where(e == 0, 0.0, val)
+
+
+def encode_terms(x, frame: Frame):
+    """Encode exactly-representable float values into ``(e, m)`` int32 pairs.
+
+    Callers pass values already on the format grid (e.g. from ``quantize``);
+    a value outside the normal range raises.
+    """
+    x = np.asarray(x, np.float64)
+    e = np.zeros(x.shape, np.int32)
+    m = np.zeros(x.shape, np.int32)
+    nz = x != 0.0
+    mant, ex = np.frexp(np.abs(x))  # mant in [0.5, 1)
+    raw_e = (ex - 1 + frame.bias).astype(np.int64)
+    sig = np.round(mant * (1 << (frame.mbits + 1))).astype(np.int64)
+    # sig lands in [2^mbits, 2^(mbits+1)]; a carry bumps the exponent.
+    carry = sig == (1 << (frame.mbits + 1))
+    sig = np.where(carry, sig >> 1, sig)
+    raw_e = np.where(carry, raw_e + 1, raw_e)
+    if np.any(nz & ((raw_e < 1) | (raw_e > (1 << frame.ebits) - 1))):
+        raise ValueError("value outside the format's normal range")
+    e[nz] = raw_e[nz].astype(np.int32)
+    m[nz] = np.where(np.signbit(x), -sig, sig)[nz].astype(np.int32)
+    return e, m
+
+
+def quantize(x, frame: Frame):
+    """Round float64 values to the frame's (ebits, mbits) grid (RNE, FTZ on
+    underflow, saturate-to-max-finite on overflow)."""
+    x = np.asarray(x, np.float64)
+    out = np.zeros_like(x)
+    nz = x != 0.0
+    if not np.any(nz):
+        return out
+    mant, ex = np.frexp(np.abs(x))
+    sig = mant * (1 << (frame.mbits + 1))  # in [2^mbits, 2^(mbits+1))
+    rounded = np.round(sig)  # numpy rounds half to even
+    carry = rounded >= (1 << (frame.mbits + 1))
+    rounded = np.where(carry, rounded / 2.0, rounded)
+    ex = np.where(carry, ex + 1, ex)
+    raw_e = ex - 1 + frame.bias
+    val = rounded * np.exp2(ex - 1 - frame.mbits) * np.sign(x)
+    # FTZ below the normal range, saturate above it.
+    val = np.where(raw_e < 1, 0.0, val)
+    max_val = (2.0 - np.exp2(-float(frame.mbits))) * np.exp2(
+        (1 << frame.ebits) - 2 - frame.bias
+    )
+    val = np.clip(val, -max_val, max_val)
+    out[nz] = val[nz]
+    return out
+
+
+# The two concrete frames baked into the AOT artifacts.
+BF16_N32 = Frame.hw_default(ebits=8, mbits=7, n_terms=32)
+FP32_N16 = Frame.hw_default(ebits=8, mbits=23, n_terms=16)

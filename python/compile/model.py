@@ -1,0 +1,90 @@
+"""L2 JAX model: the paper's power-estimation workload.
+
+The paper estimates adder power by "employing multi-term adders in matrix
+multiplication kernels for the BERT Transformer using input data from the
+GLUE dataset" (§IV). This module provides:
+
+* :func:`bert_layer` — a single BERT-style encoder layer whose matmul
+  operands are exposed so the Rust side can reconstruct every N-term
+  dot-product the multi-term adders would see;
+* :func:`online_reduce_graph` / :func:`online_dot_graph` — the L1 Pallas
+  kernels wrapped for AOT export.
+
+Everything here runs at *build* time only: ``aot.py`` lowers these functions
+to HLO text once, and the Rust runtime executes the artifacts via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.online_align_add import online_dot, online_reduce
+from .kernels.ref import Frame
+
+
+def bert_layer(x, wq, wk, wv, wo, w1, w2):
+    """One BERT-style encoder layer (pre-LN omitted for clarity).
+
+    Args:
+      x:  (S, D) token activations.
+      wq, wk, wv, wo: (D, D) attention projections.
+      w1: (D, F), w2: (F, D) feed-forward weights.
+
+    Returns a tuple of every matmul *operand* pair's left/right matrices plus
+    the layer output, so the trace extractor can rebuild all dot products:
+    (q, k, v, attn, ctx, h, g, out).
+    """
+    d = x.shape[-1]
+    q = x @ wq
+    k = x @ wk
+    v = x @ wv
+    scores = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = attn @ v
+    h = ctx @ wo + x
+    g = jax.nn.gelu(h @ w1)
+    out = g @ w2 + h
+    return q, k, v, attn, ctx, h, g, out
+
+
+def bert_layer_shapes(seq: int = 128, d: int = 256, ff: int = 1024):
+    """ShapeDtypeStructs for :func:`bert_layer` AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((seq, d), f32),  # x
+        jax.ShapeDtypeStruct((d, d), f32),  # wq
+        jax.ShapeDtypeStruct((d, d), f32),  # wk
+        jax.ShapeDtypeStruct((d, d), f32),  # wv
+        jax.ShapeDtypeStruct((d, d), f32),  # wo
+        jax.ShapeDtypeStruct((d, ff), f32),  # w1
+        jax.ShapeDtypeStruct((ff, d), f32),  # w2
+    )
+
+
+def online_reduce_graph(frame: Frame, batch: int, n_terms: int):
+    """(fn, example_args) computing the batched online ⊙ reduction."""
+
+    def fn(e, m):
+        lam, acc = online_reduce(e, m, frame=frame)
+        return lam, acc
+
+    args = (
+        jax.ShapeDtypeStruct((batch, n_terms), jnp.int32),
+        jax.ShapeDtypeStruct((batch, n_terms), jnp.int32),
+    )
+    return fn, args
+
+
+def online_dot_graph(frame: Frame, batch: int, n_terms: int):
+    """(fn, example_args) for the fused products -> ⊙ reduction pipeline."""
+
+    def fn(a, b):
+        lam, acc = online_dot(a, b, frame=frame)
+        return lam, acc
+
+    args = (
+        jax.ShapeDtypeStruct((batch, n_terms), jnp.float32),
+        jax.ShapeDtypeStruct((batch, n_terms), jnp.float32),
+    )
+    return fn, args

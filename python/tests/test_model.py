@@ -1,0 +1,78 @@
+"""L2 model checks: shapes, determinism, numerical sanity of the BERT layer
+and of the exported reduction graphs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import BF16_N32, Frame
+
+
+def small_inputs(seq=16, d=32, ff=64, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s, scale=0.1), jnp.float32)
+    return (
+        mk(seq, d),
+        mk(d, d),
+        mk(d, d),
+        mk(d, d),
+        mk(d, d),
+        mk(d, ff),
+        mk(ff, d),
+    )
+
+
+def test_bert_layer_shapes_and_finiteness():
+    args = small_inputs()
+    q, k, v, attn, ctx, h, g, out = model.bert_layer(*args)
+    seq, d = args[0].shape
+    ff = args[5].shape[1]
+    assert q.shape == (seq, d) and k.shape == (seq, d) and v.shape == (seq, d)
+    assert attn.shape == (seq, seq)
+    assert ctx.shape == (seq, d) and h.shape == (seq, d) and out.shape == (seq, d)
+    assert g.shape == (seq, ff)
+    for t in (q, k, v, attn, ctx, h, g, out):
+        assert np.all(np.isfinite(np.asarray(t)))
+    # softmax rows sum to one
+    np.testing.assert_allclose(np.asarray(attn).sum(axis=-1), 1.0, rtol=1e-5)
+
+
+def test_bert_layer_deterministic():
+    args = small_inputs(seed=1)
+    out1 = model.bert_layer(*args)[-1]
+    out2 = model.bert_layer(*args)[-1]
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_residual_paths_present():
+    # Zero weights: attention/FFN collapse, output must equal the residual x.
+    seq, d, ff = 8, 16, 32
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(seq, d)), jnp.float32)
+    zero_d = jnp.zeros((d, d), jnp.float32)
+    out = model.bert_layer(
+        x, zero_d, zero_d, zero_d, zero_d, jnp.zeros((d, ff), jnp.float32),
+        jnp.zeros((ff, d), jnp.float32),
+    )[-1]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+
+@pytest.mark.parametrize("batch,n", [(8, 32), (16, 16)])
+def test_reduce_graph_lowering_roundtrip(batch, n):
+    frame = Frame(8, 7, 16)
+    fn, args = model.online_reduce_graph(frame, batch, n)
+    lowered = jax.jit(fn).lower(*args)
+    text = lowered.as_text()
+    assert "stablehlo" in text or "module" in text
+
+
+def test_graph_executes_on_cpu():
+    fn, _ = model.online_reduce_graph(BF16_N32, 8, 32)
+    e = np.zeros((8, 32), np.int32)
+    m = np.zeros((8, 32), np.int32)
+    e[:, 0] = 100
+    m[:, 0] = 1 << 7
+    lam, acc = fn(e, m)
+    assert np.all(np.asarray(lam) == 100)
+    assert np.all(np.asarray(acc) == (1 << 7) << BF16_N32.f)

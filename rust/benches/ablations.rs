@@ -1,0 +1,148 @@
+//! Ablation studies over the hardware model's design choices (DESIGN.md):
+//!
+//! 1. **Scheduling regions** — what happens to the Fig. 4 comparison if the
+//!    scheduler may stagger individual lanes (idealized retiming no HLS
+//!    has)? This isolates how much of the proposed designs' win is the
+//!    modularity/scheduling-flexibility effect the paper claims.
+//! 2. **Implementation selection** — disable the compact-variant downgrade
+//!    pass to measure how much area slack-aware sizing recovers.
+//! 3. **Guard-width sensitivity** — the accuracy/area trade-off of the
+//!    truncated datapath: ULP error vs the correctly-rounded oracle and
+//!    area as the fractional extension shrinks.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::exact::exact_rounded_sum;
+use online_fp_add::arith::tree::RadixConfig;
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, FpClass, BF16};
+use online_fp_add::hw::datapath::{build_adder, DatapathParams};
+use online_fp_add::hw::gates;
+use online_fp_add::hw::pipeline::{min_clock_ns, paper_stages, pipeline};
+use online_fp_add::util::prng::XorShift;
+use online_fp_add::util::table::Table;
+
+fn main() {
+    ablate_regions_and_implsel();
+    ablate_guard_width();
+}
+
+/// Ablation 1+2: evaluate baseline vs 8-2-2 under four scheduler variants.
+fn ablate_regions_and_implsel() {
+    println!("=== Ablation: scheduling regions × implementation selection ===");
+    println!("(32-term BFloat16 @ paper operating point; Δ = 8-2-2 vs baseline)\n");
+    let fmt = BF16;
+    let n = 32u32;
+    let stages = paper_stages(fmt, n);
+    let mut t = Table::new(vec![
+        "variant",
+        "base µm²",
+        "base regs",
+        "8-2-2 µm²",
+        "8-2-2 regs",
+        "Δ total",
+    ]);
+    for (label, strip_regions, strip_alts, clock_mult) in [
+        ("full model @ tight clock", false, false, 1.0),
+        ("no impl-selection @ tight", false, true, 1.0),
+        ("no regions @ tight", true, false, 1.0),
+        ("full model @ 1.5x clock", false, false, 1.5),
+        ("no impl-selection @ 1.5x", false, true, 1.5),
+        ("no regions @ 1.5x", true, false, 1.5),
+    ] {
+        let eval = |cfg: &RadixConfig| {
+            let params = DatapathParams::new(fmt, n, AccSpec::hw_default(fmt, n as usize));
+            let mut adder = build_adder(params, cfg);
+            if strip_regions {
+                for node in &mut adder.nl.nodes {
+                    node.region.clear();
+                }
+            }
+            if strip_alts {
+                for node in &mut adder.nl.nodes {
+                    node.alt = None;
+                }
+            }
+            let clock = (min_clock_ns(&adder, stages).max(1.0) * 1.001) * clock_mult;
+            let p = pipeline(&adder, stages, clock).expect("feasible at min clock");
+            (gates::ge_to_um2(p.total_area), p.reg_bits)
+        };
+        let base = eval(&RadixConfig::baseline(n));
+        let tree = eval(&"8-2-2".parse().unwrap());
+        t.row(vec![
+            label.to_string(),
+            format!("{:.0}", base.0),
+            base.1.to_string(),
+            format!("{:.0}", tree.0),
+            tree.1.to_string(),
+            format!("{:+.1}%", 100.0 * (tree.0 - base.0) / base.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Reading (measured): at the tight operating point the register-\n\
+         boundary structure itself drives the tree's advantage — neither\n\
+         knob moves it. Slack (relaxed clock) lets implementation selection\n\
+         shrink combinational area, and lane-level retiming mainly helps the\n\
+         monolithic baseline, i.e. the regions constraint is what keeps the\n\
+         baseline honest about real HLS scheduling.\n"
+    );
+}
+
+/// Ablation 3: guard bits vs accuracy vs area (32-term BF16, 8-2-2).
+fn ablate_guard_width() {
+    println!("=== Ablation: guard width (accuracy vs area) ===\n");
+    let fmt = BF16;
+    let n = 32usize;
+    let cfg: RadixConfig = "8-2-2".parse().unwrap();
+    let mut rng = XorShift::new(0xAB1A);
+    let vectors: Vec<Vec<Fp>> =
+        (0..3000).map(|_| (0..n).map(|_| rng.gen_fp_gauss(fmt, 8.0)).collect()).collect();
+    let mut t = Table::new(vec![
+        "guard bits",
+        "area µm² (comb)",
+        "mean |err| ULP",
+        "max |err| ULP",
+        "exact matches",
+    ]);
+    for guard in [2u32, 4, 8, 12, 16, 24] {
+        let adder = MultiTermAdder {
+            format: fmt,
+            n_terms: n,
+            spec: AccSpec::truncated(guard),
+            arch: Architecture::Tree(cfg.clone()),
+        };
+        let params = DatapathParams::new(fmt, n as u32, AccSpec::truncated(guard));
+        let area = gates::ge_to_um2(build_adder(params, &cfg).nl.area());
+        let mut sum_err = 0f64;
+        let mut max_err = 0f64;
+        let mut exact = 0usize;
+        let mut counted = 0usize;
+        for v in &vectors {
+            let got = adder.add(v);
+            let want = exact_rounded_sum(v, fmt);
+            if want.class() != FpClass::Normal || got.class() != FpClass::Normal {
+                continue;
+            }
+            let err = (got.bits as i64 - want.bits as i64).abs() as f64;
+            sum_err += err;
+            max_err = max_err.max(err);
+            exact += (err == 0.0) as usize;
+            counted += 1;
+        }
+        t.row(vec![
+            guard.to_string(),
+            format!("{area:.0}"),
+            format!("{:.3}", sum_err / counted as f64),
+            format!("{max_err:.0}"),
+            format!("{:.1}%", 100.0 * exact as f64 / counted as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Reading: the hw-default guard (16 bits for BF16/32 terms) buys\n\
+         correct rounding on virtually all vectors; tiny guards trade ULPs\n\
+         for area — the knob a deployment would tune."
+    );
+}

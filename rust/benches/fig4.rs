@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Fig. 4 — area (a) and average power (b) of
+//! 32-term BFloat16 adders across all mixed-radix configurations vs the
+//! radix-32 baseline, at the 1 GHz / §IV pipeline-depth operating point.
+//!
+//! Run: `cargo bench --bench fig4`
+
+use online_fp_add::coordinator::Coordinator;
+use online_fp_add::dse::report;
+use std::time::Instant;
+
+fn main() {
+    let coord = Coordinator::default_parallelism();
+    let t0 = Instant::now();
+    let (table, points) = report::fig4(512, &coord);
+    println!("=== Fig. 4: 32-term BFloat16 adders @ 1 GHz ===\n");
+    println!("{}", table.render());
+    println!("{}", report::fig4_headline(&points));
+    println!(
+        "\n[fig4 regenerated in {:.2}s over {} design points]",
+        t0.elapsed().as_secs_f64(),
+        points.len()
+    );
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Fig. 5 — the most area-efficient 32-term
+//! BFloat16 designs for clock-period targets with 1–4 pipeline stages,
+//! plus the equal-depth clock-speed headline.
+//!
+//! Run: `cargo bench --bench fig5`
+
+use online_fp_add::coordinator::Coordinator;
+use online_fp_add::dse::report;
+use std::time::Instant;
+
+fn main() {
+    let coord = Coordinator::default_parallelism();
+    let t0 = Instant::now();
+    println!("=== Fig. 5: area-efficient designs per clock-period target ===\n");
+    let table = report::fig5(&coord);
+    println!("{}", table.render());
+    println!("{}", report::fig5_speed_headline(&coord));
+    println!("\n[fig5 regenerated in {:.2}s]", t0.elapsed().as_secs_f64());
+}

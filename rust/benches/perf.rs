@@ -1,0 +1,125 @@
+//! Bench: hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! * bit-accurate `⊙` tree evaluation throughput (terms/s),
+//! * the online serial recurrence and the baseline,
+//! * switching-activity power simulation throughput (term-events/s),
+//! * dynamic-batcher round-trip under concurrency,
+//! * PJRT artifact execution latency (when artifacts are present).
+//!
+//! Run: `cargo bench --bench perf`
+
+use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::tree::RadixConfig;
+use online_fp_add::arith::AccSpec;
+use online_fp_add::bench_util::{bench, black_box, header};
+use online_fp_add::coordinator::batcher::{Batcher, BatcherConfig};
+use online_fp_add::formats::{Fp, BF16, FP32};
+use online_fp_add::hw::datapath::DatapathParams;
+use online_fp_add::hw::power::ActivitySim;
+use online_fp_add::runtime::{OnlineReduceExe, Runtime};
+use online_fp_add::util::prng::XorShift;
+
+fn trace(n: usize, vectors: usize, seed: u64) -> Vec<Vec<Fp>> {
+    let mut rng = XorShift::new(seed);
+    (0..vectors).map(|_| (0..n).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect()).collect()
+}
+
+fn main() {
+    header("arithmetic hot paths (bit-accurate, 32-term BF16)");
+    let vecs = trace(32, 256, 1);
+    let spec = AccSpec::hw_default(BF16, 32);
+    let cfg: RadixConfig = "8-2-2".parse().unwrap();
+    let r = bench("tree_sum 8-2-2 (256 vecs)", 1.0, || {
+        for v in &vecs {
+            black_box(online_fp_add::arith::tree::tree_sum(v, &cfg, spec));
+        }
+    });
+    println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
+    let r = bench("baseline_sum (256 vecs)", 1.0, || {
+        for v in &vecs {
+            black_box(online_fp_add::arith::baseline::baseline_sum(v, spec));
+        }
+    });
+    println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
+    let r = bench("online_sum (256 vecs)", 1.0, || {
+        for v in &vecs {
+            black_box(online_fp_add::arith::online::online_sum(v, spec));
+        }
+    });
+    println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
+
+    header("full fused adders (incl. normalize/round)");
+    let adder = MultiTermAdder::hw(FP32, 32, Architecture::Tree("8-2-2".parse().unwrap()));
+    let mut rng = XorShift::new(2);
+    let fp32vecs: Vec<Vec<Fp>> =
+        (0..256).map(|_| (0..32).map(|_| rng.gen_fp_gauss(FP32, 4.0)).collect()).collect();
+    let r = bench("MultiTermAdder FP32 8-2-2 (256 adds)", 1.0, || {
+        for v in &fp32vecs {
+            black_box(adder.add(v));
+        }
+    });
+    println!("{}   [{:.2} M adds/s]", r.line(), r.throughput(256.0) / 1e6);
+
+    header("switching-activity power simulation (32-term BF16)");
+    let params = DatapathParams::new(BF16, 32, spec);
+    for cfgs in ["32", "8-2-2"] {
+        let c: RadixConfig = cfgs.parse().unwrap();
+        let mut sim = ActivitySim::new(params, &c);
+        let r = bench(&format!("ActivitySim {cfgs} (256 vecs)"), 1.0, || {
+            for v in &vecs {
+                sim.step(v);
+            }
+        });
+        println!(
+            "{}   [{:.1} M term-events/s]",
+            r.line(),
+            r.throughput(256.0 * 32.0) / 1e6
+        );
+    }
+
+    header("dynamic batcher (checksum executor, 16 client threads)");
+    let batcher = Batcher::spawn(
+        BatcherConfig { n_terms: 32, linger: std::time::Duration::from_micros(100), ..Default::default() },
+        |rows: &[(Vec<i32>, Vec<i32>)]| {
+            rows.iter()
+                .map(|(e, m)| (*e.iter().max().unwrap(), m.iter().map(|&x| x as i64).sum()))
+                .collect::<Vec<(i32, i64)>>()
+        },
+    );
+    let handle = batcher.handle();
+    let r = bench("batched reduce round-trip x512", 2.0, || {
+        let threads: Vec<_> = (0..16)
+            .map(|t| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    for i in 0..32 {
+                        let e = vec![(t * 32 + i) as i32 + 1; 32];
+                        let m = vec![1i32; 32];
+                        h.reduce(e, m).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+    });
+    println!("{}   [{:.0} k req/s]", r.line(), r.throughput(512.0) / 1e3);
+    println!("batcher metrics: mean fill {:.1}", batcher.metrics().mean_batch_fill());
+
+    header("PJRT artifact execution (needs `make artifacts`)");
+    let dir = Runtime::default_artifact_dir();
+    if dir.join("online_reduce_bf16_n32.hlo.txt").exists() {
+        let rt = Runtime::new(dir).expect("PJRT client");
+        let exe = OnlineReduceExe::load_bf16_n32(&rt).expect("artifact");
+        let mut rng = XorShift::new(3);
+        let e: Vec<i32> = (0..64 * 32).map(|_| rng.range_i64(1, 254) as i32).collect();
+        let m: Vec<i32> = (0..64 * 32).map(|_| rng.range_i64(-255, 255) as i32).collect();
+        let r = bench("online_reduce_bf16_n32 (batch 64)", 2.0, || {
+            black_box(exe.run(&rt, &e, &m).unwrap());
+        });
+        println!("{}   [{:.0} k rows/s]", r.line(), r.throughput(64.0) / 1e3);
+    } else {
+        println!("SKIP: artifacts missing");
+    }
+}

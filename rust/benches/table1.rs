@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Table I — area and power of 16-, 32- and
+//! 64-term adders for FP32 / BFloat16 / FP8_e4m3 / FP8_e5m2 / FP8_e6m1,
+//! base vs best-proposed configuration, with the paper's savings alongside.
+//!
+//! Run: `cargo bench --bench table1`
+
+use online_fp_add::coordinator::Coordinator;
+use online_fp_add::dse::report;
+use std::time::Instant;
+
+fn main() {
+    let coord = Coordinator::default_parallelism();
+    for n in [16u32, 32, 64] {
+        let t0 = Instant::now();
+        let (table, _) = report::table1(n, 512, &coord);
+        let label = match n {
+            16 => "a",
+            32 => "b",
+            _ => "c",
+        };
+        println!("=== Table I({label}) — {n}-term adders ===\n");
+        println!("{}", table.render());
+        println!("[{n}-term sweep in {:.2}s]\n", t0.elapsed().as_secs_f64());
+    }
+}

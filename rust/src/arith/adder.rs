@@ -1,0 +1,199 @@
+//! Complete multi-term fused floating-point adders (Algorithm 1):
+//! special-value screening, alignment + addition by a selectable
+//! architecture, then shared normalization and rounding.
+//!
+//! This is the crate's main user-facing entry point for *numerics*; the
+//! hardware models in [`crate::hw`] mirror the same architectures
+//! structurally for area/power/delay.
+
+use super::baseline::baseline_sum;
+use super::exact::exact_sum;
+use super::normalize::normalize_round;
+use super::online::online_sum;
+use super::operator::AlignAcc;
+use super::tree::{tree_sum, RadixConfig};
+use super::AccSpec;
+use crate::formats::{Fp, FpClass, FpFormat};
+
+/// Which alignment-and-addition architecture to run.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum Architecture {
+    /// Algorithm 2 / Fig. 1: global max exponent, then align + add.
+    Baseline,
+    /// Algorithm 3 / eq. 7: the online fused serial recurrence.
+    Online,
+    /// eq. 9 / Fig. 2: a mixed-radix tree of `⊙` operators.
+    Tree(RadixConfig),
+    /// The Kulisch-style exact window (order-independent golden reference).
+    Exact,
+}
+
+impl Architecture {
+    /// Parse `"baseline"`, `"online"`, `"exact"` or a radix config (`"8-2-2"`).
+    pub fn parse(s: &str, _n_terms: u32) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "base" => Ok(Architecture::Baseline),
+            "online" | "serial-online" => Ok(Architecture::Online),
+            "exact" | "kulisch" => Ok(Architecture::Exact),
+            other => other.parse::<RadixConfig>().map(Architecture::Tree),
+        }
+    }
+}
+
+/// A configured N-term fused adder.
+#[derive(Clone, Debug)]
+pub struct MultiTermAdder {
+    pub format: FpFormat,
+    pub n_terms: usize,
+    pub spec: AccSpec,
+    pub arch: Architecture,
+}
+
+impl MultiTermAdder {
+    /// An adder with an exact (never-truncating) datapath.
+    pub fn exact(format: FpFormat, n_terms: usize, arch: Architecture) -> Self {
+        MultiTermAdder { format, n_terms, spec: AccSpec::exact(format), arch }
+    }
+
+    /// An adder with the hardware-default truncated datapath.
+    pub fn hw(format: FpFormat, n_terms: usize, arch: Architecture) -> Self {
+        MultiTermAdder { format, n_terms, spec: AccSpec::hw_default(format, n_terms), arch }
+    }
+
+    /// Fused multi-term addition: `S = Σ f_i`, rounded once (RNE).
+    ///
+    /// `terms.len()` must not exceed `n_terms`; shorter inputs are padded
+    /// with zeros exactly as unused lanes of the hardware would be.
+    ///
+    /// Special values (screened before the datapath, as real fused adders
+    /// do in their unpack stage):
+    /// * any NaN input → NaN;
+    /// * `+Inf` and `−Inf` both present → NaN (invalid operation);
+    /// * any Inf → that Inf;
+    /// * otherwise the finite datapath result.
+    pub fn add(&self, terms: &[Fp]) -> Fp {
+        assert!(
+            terms.len() <= self.n_terms,
+            "adder has {} input lanes, got {} terms",
+            self.n_terms,
+            terms.len()
+        );
+        // Unpack/screen stage.
+        let mut pos_inf = false;
+        let mut neg_inf = false;
+        for t in terms {
+            debug_assert_eq!(t.format, self.format, "term format mismatch");
+            match t.class() {
+                FpClass::Nan => return Fp::nan(self.format),
+                FpClass::Inf => {
+                    if t.sign() {
+                        neg_inf = true;
+                    } else {
+                        pos_inf = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if pos_inf && neg_inf {
+            return Fp::nan(self.format);
+        }
+        if pos_inf || neg_inf {
+            return Fp::overflow(neg_inf, self.format);
+        }
+        // Finite datapath: pad to the lane count and run the architecture.
+        let mut lanes: Vec<Fp> = Vec::with_capacity(self.n_terms);
+        lanes.extend_from_slice(terms);
+        lanes.resize(self.n_terms, Fp::zero(self.format));
+        let state = self.run_finite(&lanes);
+        normalize_round(&state, self.effective_spec(), self.format)
+    }
+
+    /// The raw alignment-and-addition state (before normalize/round) —
+    /// used by tests and by the switching-activity power model, which needs
+    /// the intermediate signals.
+    pub fn run_finite(&self, lanes: &[Fp]) -> AlignAcc {
+        match &self.arch {
+            Architecture::Baseline => baseline_sum(lanes, self.spec),
+            Architecture::Online => online_sum(lanes, self.spec),
+            Architecture::Tree(cfg) => tree_sum(lanes, cfg, self.spec),
+            Architecture::Exact => exact_sum(lanes, self.format),
+        }
+    }
+
+    fn effective_spec(&self) -> AccSpec {
+        match self.arch {
+            // The exact window uses its own frame λ = f = exp_range.
+            Architecture::Exact => AccSpec { f: self.format.exp_range(), exact: true, narrow: false },
+            _ => self.spec,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact::exact_rounded_sum;
+    use crate::formats::{BF16, FP32, PAPER_FORMATS};
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn special_value_rules() {
+        let adder = MultiTermAdder::exact(BF16, 4, Architecture::Baseline);
+        let inf = Fp::overflow(false, BF16);
+        let ninf = Fp::overflow(true, BF16);
+        let nan = Fp::nan(BF16);
+        let one = Fp::from_f64(1.0, BF16);
+        assert_eq!(adder.add(&[one, nan, one, one]).class(), FpClass::Nan);
+        assert_eq!(adder.add(&[inf, ninf, one, one]).class(), FpClass::Nan);
+        assert_eq!(adder.add(&[inf, one, one, one]).class(), FpClass::Inf);
+        let r = adder.add(&[ninf, one, one, one]);
+        assert_eq!(r.class(), FpClass::Inf);
+        assert!(r.sign());
+    }
+
+    #[test]
+    fn padding_with_zeros_is_transparent() {
+        let adder = MultiTermAdder::exact(BF16, 16, Architecture::Online);
+        let ts: Vec<Fp> = [1.0, 2.0, 3.0].iter().map(|&x| Fp::from_f64(x, BF16)).collect();
+        assert_eq!(adder.add(&ts).to_f64(), 6.0);
+    }
+
+    #[test]
+    fn all_architectures_agree_with_oracle_in_exact_mode() {
+        let mut rng = XorShift::new(0xADD);
+        for fmt in PAPER_FORMATS {
+            let archs = [
+                Architecture::Baseline,
+                Architecture::Online,
+                Architecture::Exact,
+                Architecture::Tree("4-4".parse().unwrap()),
+                Architecture::Tree("2-2-2-2".parse().unwrap()),
+                Architecture::Tree("8-2".parse().unwrap()),
+            ];
+            for _ in 0..30 {
+                let ts: Vec<Fp> = (0..16).map(|_| rng.gen_fp_normal(fmt)).collect();
+                let oracle = exact_rounded_sum(&ts, fmt);
+                for arch in &archs {
+                    let adder = MultiTermAdder::exact(fmt, 16, arch.clone());
+                    assert_eq!(adder.add(&ts).bits, oracle.bits, "{fmt} {arch:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_datapath_stays_within_one_ulp_for_fp32_dot_products() {
+        // The hw-default guard keeps results faithful (≤ 1 ulp from the
+        // correctly-rounded sum) on realistic magnitudes.
+        let mut rng = XorShift::new(0x0DD);
+        let adder = MultiTermAdder::hw(FP32, 32, Architecture::Tree("8-2-2".parse().unwrap()));
+        for _ in 0..200 {
+            let ts: Vec<Fp> = (0..32).map(|_| rng.gen_fp_gauss(FP32, 10.0)).collect();
+            let got = adder.add(&ts);
+            let oracle = exact_rounded_sum(&ts, FP32);
+            let diff = (got.bits as i64 - oracle.bits as i64).abs();
+            assert!(diff <= 1, "got {got:?} oracle {oracle:?}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Algorithm 2 — the serial baseline: find the global maximum exponent,
+//! align every fraction against it, then add (paper Fig. 1).
+//!
+//! This is the architecture used by the majority of multi-term adders
+//! (Intel NNP-T, templatized HLS dot products, exact FDPA operators — refs
+//! [10][11][12] in the paper) and the comparison target of the evaluation.
+
+use super::operator::AlignAcc;
+use super::{AccSpec, WideInt};
+use crate::formats::{Fp, FpClass};
+
+/// Serial baseline alignment-and-addition over finite terms.
+///
+/// Literally Algorithm 2: loop 1 computes `λ_N = max e_i`; loop 2 computes
+/// `Σ m_i ≫ (λ_N − e_i)`. The two loops cannot be merged — the second
+/// depends on the fully-resolved maximum — which is precisely the serial
+/// dependency the paper's online formulation removes.
+pub fn baseline_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
+    // Loop 1 (lines 1-3): maximum exponent.
+    let mut lambda = 0i32; // λ_0: below every normal exponent
+    for t in terms {
+        debug_assert!(matches!(t.class(), FpClass::Zero | FpClass::Normal));
+        lambda = lambda.max(t.raw_exp());
+    }
+    // Loop 2 (lines 4-7): align each fraction to λ_N and accumulate.
+    if spec.narrow {
+        // i128 fast path (§Perf); bit-identical to the wide path.
+        let mut acc = 0i128;
+        let mut sticky = false;
+        for t in terms {
+            if t.class() == FpClass::Zero {
+                continue;
+            }
+            let m = (t.signed_sig() as i128) << spec.f;
+            let d = ((lambda - t.raw_exp()) as u32).min(127);
+            acc += m >> d;
+            sticky |= (m as u128) & ((1u128 << d) - 1) != 0;
+        }
+        debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+        return AlignAcc { lambda, acc: WideInt::from_i128(acc), sticky };
+    }
+    let mut acc = WideInt::ZERO;
+    let mut sticky = false;
+    for t in terms {
+        if t.class() == FpClass::Zero {
+            continue;
+        }
+        let m = WideInt::from_i64(t.signed_sig()).shl(spec.f);
+        let (am, dropped) = m.shr_sticky((lambda - t.raw_exp()) as u32);
+        debug_assert!(!(spec.exact && dropped), "exact datapath must never drop bits");
+        acc = acc.add(&am);
+        sticky |= dropped;
+    }
+    AlignAcc { lambda, acc, sticky }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Fp, BF16, FP8_E4M3};
+
+    fn terms(xs: &[f64]) -> Vec<Fp> {
+        xs.iter().map(|&x| Fp::from_f64(x, BF16)).collect()
+    }
+
+    #[test]
+    fn empty_and_all_zero_sum_to_identity() {
+        let spec = AccSpec::exact(BF16);
+        assert!(baseline_sum(&[], spec).is_identity());
+        assert!(baseline_sum(&terms(&[0.0, 0.0, -0.0]), spec).is_identity());
+    }
+
+    #[test]
+    fn simple_sums() {
+        let spec = AccSpec::exact(BF16);
+        let r = baseline_sum(&terms(&[1.0, 2.0, 3.0]), spec);
+        // λ must be the exponent of 2.0/3.0 (raw 128), acc the aligned sum.
+        assert_eq!(r.lambda, 128);
+        // acc·2^(λ-bias-mbits-f) = 6.0
+        let val = r.acc.to_f64_lossy()
+            * (2f64).powi(r.lambda - BF16.bias() - BF16.mbits as i32 - spec.f as i32);
+        assert_eq!(val, 6.0);
+    }
+
+    #[test]
+    fn cancellation_to_zero() {
+        let spec = AccSpec::exact(BF16);
+        let r = baseline_sum(&terms(&[5.0, -5.0, 12.0, -12.0]), spec);
+        assert!(r.acc.is_zero());
+        assert!(!r.sticky);
+    }
+
+    #[test]
+    fn fp8_small_format() {
+        let spec = AccSpec::exact(FP8_E4M3);
+        let xs: Vec<Fp> = [0.5, 1.5, -0.25].iter().map(|&x| Fp::from_f64(x, FP8_E4M3)).collect();
+        let r = baseline_sum(&xs, spec);
+        let val = r.acc.to_f64_lossy()
+            * (2f64).powi(r.lambda - FP8_E4M3.bias() - FP8_E4M3.mbits as i32 - spec.f as i32);
+        assert_eq!(val, 1.75);
+    }
+}

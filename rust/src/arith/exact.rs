@@ -1,0 +1,94 @@
+//! Independent golden reference: a Kulisch-style exact fixed-point
+//! accumulator over the format's *entire* exponent range.
+//!
+//! Unlike the λ-frame algorithms (baseline / online / trees), this path
+//! never aligns anything: every term lands at its absolute position
+//! `m · 2^e` in one global window, so the sum is exact by construction and
+//! independent of term order. It cross-checks the other algorithms in the
+//! tests and serves as the oracle for the correctly-rounded result.
+//! (Kulisch accumulation is the "map FP to fixed-point" alternative the
+//! paper's §II contrasts against — refs [15][16].)
+
+use super::normalize::normalize_round;
+use super::operator::AlignAcc;
+use super::{AccSpec, WideInt};
+use crate::formats::{Fp, FpClass, FpFormat};
+
+/// Exact sum of finite terms in a global fixed-point window.
+///
+/// The returned state uses the frame `λ = f = exp_range`, in which a term
+/// with raw exponent `e` contributes `m << e` — no data-dependent shifts,
+/// no bit ever dropped.
+pub fn exact_sum(terms: &[Fp], fmt: FpFormat) -> AlignAcc {
+    let k = fmt.exp_range() as i32; // frame constant: λ = f = k
+    let mut acc = WideInt::ZERO;
+    for t in terms {
+        debug_assert!(matches!(t.class(), FpClass::Zero | FpClass::Normal));
+        if t.class() == FpClass::Zero {
+            continue;
+        }
+        let m = WideInt::from_i64(t.signed_sig());
+        acc = acc.add(&m.shl(t.raw_exp() as u32));
+    }
+    AlignAcc { lambda: k, acc, sticky: false }
+}
+
+/// The correctly-rounded (RNE) sum of finite terms in `fmt` — the oracle
+/// every adder configuration is validated against.
+pub fn exact_rounded_sum(terms: &[Fp], fmt: FpFormat) -> Fp {
+    let k = fmt.exp_range();
+    let state = exact_sum(terms, fmt);
+    normalize_round(&state, AccSpec { f: k, exact: true, narrow: false }, fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baseline::baseline_sum;
+    use super::super::normalize::normalize_round;
+    use super::*;
+    use crate::formats::{BF16, FP8_E4M3, FP8_E5M2, FP8_E6M1};
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn exact_sum_is_order_independent() {
+        let mut rng = XorShift::new(0xE0);
+        for _ in 0..50 {
+            let mut ts: Vec<Fp> = (0..32).map(|_| rng.gen_fp_normal(BF16)).collect();
+            let a = exact_sum(&ts, BF16);
+            rng.shuffle(&mut ts);
+            assert_eq!(exact_sum(&ts, BF16), a);
+        }
+    }
+
+    #[test]
+    fn matches_lambda_frame_baseline_after_rounding() {
+        let mut rng = XorShift::new(0xE1);
+        for fmt in [BF16, FP8_E5M2, FP8_E6M1] {
+            let spec = AccSpec::exact(fmt);
+            for _ in 0..200 {
+                let ts: Vec<Fp> = (0..16).map(|_| rng.gen_fp_normal(fmt)).collect();
+                let via_baseline = normalize_round(&baseline_sum(&ts, spec), spec, fmt);
+                let via_exact = exact_rounded_sum(&ts, fmt);
+                assert_eq!(via_baseline.bits, via_exact.bits, "{fmt}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_independent_i128_kulisch_for_fp8() {
+        // Third opinion: for 8-bit formats the whole window fits i128, so a
+        // trivially-simple independent implementation can confirm both.
+        let mut rng = XorShift::new(0xE2);
+        for fmt in [FP8_E4M3, FP8_E5M2, FP8_E6M1] {
+            for _ in 0..500 {
+                let ts: Vec<Fp> = (0..64).map(|_| rng.gen_fp_normal(fmt)).collect();
+                let mut acc: i128 = 0;
+                for t in &ts {
+                    acc += (t.signed_sig() as i128) << t.raw_exp();
+                }
+                let state = exact_sum(&ts, fmt);
+                assert_eq!(state.acc.to_i128(), acc, "{fmt}");
+            }
+        }
+    }
+}

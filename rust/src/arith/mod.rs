@@ -1,0 +1,104 @@
+//! Bit-accurate models of every alignment-and-addition algorithm in the
+//! paper, over a common fixed-point accumulator representation.
+//!
+//! All algorithms operate on *(exponent, signed fraction)* pairs in a shared
+//! accumulator frame described by [`AccSpec`]:
+//!
+//! * a term with raw exponent `e` and signed significand `m` (the integer
+//!   `(-1)^s · 1.m · 2^mbits`) is loaded as `m << f` and aligned by
+//!   arithmetic right shifts;
+//! * an accumulator tagged with running maximum exponent `λ` holds the value
+//!   `acc · 2^(λ − bias − mbits − f)`.
+//!
+//! With `f` large enough to cover the format's worst-case alignment distance
+//! ([`AccSpec::exact`]) no shift ever discards a bit, and the baseline
+//! (Algorithm 2), the online recurrence (Algorithm 3) and every mixed-radix
+//! `⊙` tree (eq. 9) produce **bit-identical** accumulators. With a finite
+//! guard ([`AccSpec::truncated`]) the models reproduce real datapath
+//! truncation, including sticky-bit collection for round-to-nearest-even.
+
+pub mod adder;
+pub mod baseline;
+pub mod exact;
+pub mod normalize;
+pub mod online;
+pub mod operator;
+pub mod tree;
+pub mod wide;
+
+use crate::formats::FpFormat;
+pub use wide::WideInt;
+
+/// Accumulator datapath geometry: how many fractional extension bits `f`
+/// sit below the significand when a term is loaded.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct AccSpec {
+    /// Fractional extension (guard) bits below the loaded significand.
+    pub f: u32,
+    /// True when `f` covers the worst-case alignment distance, i.e. no
+    /// shift can ever discard a nonzero bit (used for debug assertions).
+    pub exact: bool,
+    /// True when every accumulator value provably fits in an `i128`
+    /// (significand + guard + carry headroom ≤ 120 bits) — enables the
+    /// narrow fast path in the `⊙` operators (§Perf).
+    pub narrow: bool,
+}
+
+impl AccSpec {
+    /// A datapath wide enough that alignment never discards bits; in this
+    /// mode all algorithms in this crate agree bit-exactly and the rounded
+    /// result is the correctly-rounded sum of the inputs.
+    pub fn exact(format: FpFormat) -> Self {
+        // Worst-case alignment distance is max_normal_exp - 1; one extra bit
+        // of margin keeps the reasoning simple.
+        let f = format.exp_range();
+        AccSpec { f, exact: true, narrow: f + format.sig_bits() + 16 <= 120 }
+    }
+
+    /// A hardware-realistic datapath with `guard` extension bits and sticky
+    /// collection; mirrors the fixed-width alignment networks of real fused
+    /// multi-term adders.
+    pub fn truncated(guard: u32) -> Self {
+        // Narrow bound: max significand (25 bits incl. sign) + guard +
+        // carry headroom for ≤ 4096 terms (12 bits) must fit i128.
+        AccSpec { f: guard, exact: false, narrow: guard + 25 + 12 + 1 <= 120 }
+    }
+
+    /// Default truncated geometry used by the hardware models: enough guard
+    /// for faithful rounding of an N-term sum (significand + log2(N) + 3).
+    pub fn hw_default(format: FpFormat, n_terms: usize) -> Self {
+        let log_n = usize::BITS - (n_terms.max(2) - 1).leading_zeros();
+        AccSpec::truncated(format.sig_bits() + log_n + 3)
+    }
+
+    /// Total accumulator bits needed for `n_terms` of `format` (significand,
+    /// sign, carry headroom and the `f` extension), as the hardware model
+    /// sees it.
+    pub fn acc_width(&self, format: FpFormat, n_terms: usize) -> u32 {
+        let log_n = usize::BITS - (n_terms.max(2) - 1).leading_zeros();
+        format.sig_bits() + 1 + log_n + 1 + self.f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{BF16, FP32};
+
+    #[test]
+    fn exact_spec_covers_alignment_range() {
+        let s = AccSpec::exact(FP32);
+        assert!(s.f as i32 >= FP32.max_normal_exp() - 1);
+        assert!(s.exact);
+        // And stays comfortably inside the WideInt capacity for 64 terms.
+        assert!(s.acc_width(FP32, 64) < wide::WIDE_BITS as u32);
+    }
+
+    #[test]
+    fn hw_default_guard_scales_with_terms() {
+        let s16 = AccSpec::hw_default(BF16, 16);
+        let s64 = AccSpec::hw_default(BF16, 64);
+        assert!(s64.f > s16.f);
+        assert!(!s16.exact);
+    }
+}

@@ -1,0 +1,162 @@
+//! Step 4 of Algorithm 1: normalize and round the aligned sum back into the
+//! input format (leading-zero count, round-to-nearest-even, overflow /
+//! underflow handling).
+//!
+//! This stage is *shared verbatim* by the baseline and all proposed designs
+//! (paper §IV-A: "Normalization and rounding are the same for all designs
+//! under comparison"), which is why the hardware models reuse a single
+//! normalize/round netlist as well.
+
+use super::operator::AlignAcc;
+use super::AccSpec;
+use crate::formats::{Fp, FpFormat, SpecialsMode};
+
+/// Normalize and round an alignment-and-addition result to `fmt` (RNE).
+///
+/// Semantics notes:
+/// * exact cancellation yields `+0` (IEEE default-rounding sign rule);
+/// * underflow flushes to a signed zero (FTZ, consistent with decode);
+/// * overflow saturates per the format's [`SpecialsMode`];
+/// * in truncated mode the sticky flag only participates in tie-breaking.
+///   For a *negative* accumulator the dropped (floored) bits make the
+///   stored magnitude an over-estimate of the true magnitude by < 1 LSB,
+///   so rounding may differ from the infinitely-precise result by one ULP
+///   in rare cases — the standard accepted behaviour of fixed-width
+///   alignment datapaths (and impossible in [`AccSpec::exact`] mode, where
+///   sticky is always false and the result is correctly rounded).
+pub fn normalize_round(state: &AlignAcc, spec: AccSpec, fmt: FpFormat) -> Fp {
+    if state.acc.is_zero() {
+        // True zero or a totally-cancelled sum; sticky-only residue
+        // underflows to zero under FTZ either way.
+        return Fp::zero(fmt);
+    }
+    let sign = state.acc.is_negative();
+    let p = state.acc.abs_msb().expect("nonzero accumulator") as i64;
+
+    // Value = |acc| · 2^(λ − bias − mbits − f); leading one at position p
+    // means result raw exponent r = λ + p − mbits − f.
+    let mbits = fmt.mbits as i64;
+    let mut r = state.lambda as i64 + p - mbits - spec.f as i64;
+
+    // Extract mantissa (mbits bits below the leading one), guard and sticky.
+    let lo = p - mbits;
+    let mut mant = state.acc.abs_extract(lo, fmt.mbits);
+    let guard = state.acc.abs_bit(lo - 1);
+    let sticky = state.acc.abs_any_below(lo - 1) || state.sticky;
+
+    // Round to nearest, ties to even.
+    if guard && (sticky || (mant & 1) == 1) {
+        mant += 1;
+        if mant == (1u64 << fmt.mbits) {
+            mant = 0;
+            r += 1;
+        }
+    }
+
+    if r <= 0 {
+        // Underflow: flush to signed zero.
+        return Fp::pack(sign, 0, 0, fmt);
+    }
+    if r > fmt.max_normal_exp() as i64
+        || (r == fmt.max_normal_exp() as i64
+            && fmt.specials == SpecialsMode::NoInf
+            && mant > fmt.max_finite_mant())
+    {
+        return Fp::overflow(sign, fmt);
+    }
+    Fp::pack(sign, r as i32, mant, fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baseline::baseline_sum;
+    use super::*;
+    use crate::formats::{FpClass, BF16, FP32, FP8_E4M3};
+
+    fn add_bf16(xs: &[f64]) -> Fp {
+        let ts: Vec<Fp> = xs.iter().map(|&x| Fp::from_f64(x, BF16)).collect();
+        let spec = AccSpec::exact(BF16);
+        normalize_round(&baseline_sum(&ts, spec), spec, BF16)
+    }
+
+    #[test]
+    fn simple_exact_sums() {
+        assert_eq!(add_bf16(&[1.0, 2.0, 3.0]).to_f64(), 6.0);
+        assert_eq!(add_bf16(&[0.5, 0.25]).to_f64(), 0.75);
+        assert_eq!(add_bf16(&[100.0, -100.0]).to_f64(), 0.0);
+        assert_eq!(add_bf16(&[-1.0, -2.0]).to_f64(), -3.0);
+    }
+
+    #[test]
+    fn cancellation_yields_positive_zero() {
+        let r = add_bf16(&[5.0, -5.0]);
+        assert_eq!(r.class(), FpClass::Zero);
+        assert!(!r.sign());
+    }
+
+    #[test]
+    fn rne_on_aligned_sum() {
+        // BF16: 1.0 has 7-bit mantissa; adding 2^-9 twice gives 1 + 2^-8,
+        // exactly halfway -> ties to even -> 1.0.
+        let r = add_bf16(&[1.0, 0.001953125, 0.001953125]);
+        assert_eq!(r.to_f64(), 1.0);
+        // Adding 2^-9 three times crosses the tie -> rounds up.
+        let r = add_bf16(&[1.0, 0.001953125, 0.001953125, 0.001953125]);
+        assert_eq!(r.to_f64(), 1.0 + 1.0 / 128.0);
+    }
+
+    #[test]
+    fn carry_propagation_renormalizes() {
+        // 1.9921875 = largest BF16 mantissa at exponent 0; +ulp/2 rounds to 2.0.
+        let r = add_bf16(&[1.9921875, 0.00390625]);
+        assert_eq!(r.to_f64(), 2.0);
+    }
+
+    #[test]
+    fn overflow_saturates_per_format() {
+        // BF16 (IEEE): overflow -> Inf.
+        let big = 3.0e38;
+        let ts: Vec<Fp> = (0..4).map(|_| Fp::from_f64(big, BF16)).collect();
+        let spec = AccSpec::exact(BF16);
+        let r = normalize_round(&baseline_sum(&ts, spec), spec, BF16);
+        assert_eq!(r.class(), FpClass::Inf);
+        assert!(!r.sign());
+        // e4m3 (NoInf): overflow -> ±448 (max finite).
+        let ts: Vec<Fp> = (0..4).map(|_| Fp::from_f64(-448.0, FP8_E4M3)).collect();
+        let spec = AccSpec::exact(FP8_E4M3);
+        let r = normalize_round(&baseline_sum(&ts, spec), spec, FP8_E4M3);
+        assert_eq!(r.to_f64(), -448.0);
+    }
+
+    #[test]
+    fn underflow_flushes_to_zero() {
+        // Two minimal normals of opposite sign at distance: result below
+        // the normal range flushes to zero.
+        let tiny = Fp::pack(false, 1, 0, FP32); // 2^-126
+        let tiny_neg_half = Fp::pack(true, 1, 1 << 22, FP32); // -1.5 * 2^-126
+        let spec = AccSpec::exact(FP32);
+        let r = normalize_round(&baseline_sum(&[tiny, tiny_neg_half], spec), spec, FP32);
+        assert_eq!(r.class(), FpClass::Zero);
+        assert!(r.sign(), "result of -0.5*2^-126 keeps its sign through FTZ");
+    }
+
+    #[test]
+    fn fp32_matches_native_two_term_addition() {
+        // For two-term sums in exact mode, result == native f32 addition
+        // (both are correctly rounded).
+        let cases = [
+            (1.0f32, 2.5f32),
+            (0.1, 0.2),
+            (1e20, -1e20),
+            (1e20, 3.0),
+            (1.5e-38, 2.5e-38),
+            (-7.25, 0.0078125),
+        ];
+        let spec = AccSpec::exact(FP32);
+        for (a, b) in cases {
+            let ts = [Fp::from_f64(a as f64, FP32), Fp::from_f64(b as f64, FP32)];
+            let r = normalize_round(&baseline_sum(&ts, spec), spec, FP32);
+            assert_eq!(r.to_f64() as f32, a + b, "{a} + {b}");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! The paper's associative align-and-add operator `⊙` (eq. 8).
+//!
+//! ```text
+//! [λi]   [λj]   [        max(λi, λj)                                 ]
+//! [oi] ⊙ [oj] = [ oi ≫ (max−λi)  +  oj ≫ (max−λj)                    ]
+//! ```
+//!
+//! The operand of `⊙` is an [`AlignAcc`]: a partial sum `o` tagged with the
+//! maximum exponent `λ` of the terms it covers (plus the sticky bit real
+//! datapaths carry for faithful rounding). Leaves are single floating-point
+//! terms ([`AlignAcc::leaf`]); eq. 9 states that any parenthesisation of
+//! `⊙` over the N leaves yields the final `(max exponent, aligned sum)`.
+
+use super::{AccSpec, WideInt};
+use crate::formats::{Fp, FpClass};
+
+/// A partial alignment-and-addition state: the `[λ; o]` vector of eq. 8.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct AlignAcc {
+    /// Running maximum raw (biased) exponent of the covered terms.
+    pub lambda: i32,
+    /// Partial sum of the covered significands, aligned to `lambda`, in the
+    /// frame `acc · 2^(lambda − bias − mbits − f)`.
+    pub acc: WideInt,
+    /// True if any alignment shift discarded a nonzero bit (hardware sticky).
+    pub sticky: bool,
+}
+
+impl AlignAcc {
+    /// Identity element: λ = 0 (below every normal exponent), o = 0.
+    ///
+    /// `identity() ⊙ x == x` because the identity's accumulator is zero and
+    /// its λ never exceeds a normal term's exponent — except for the
+    /// all-zero-terms case where it keeps λ at 0, which normalizes to ±0.
+    pub const IDENTITY: AlignAcc = AlignAcc { lambda: 0, acc: WideInt::ZERO, sticky: false };
+
+    /// Lift one finite floating-point term into the operator domain:
+    /// `[e_i; m_i << f]`.
+    ///
+    /// Zero terms enter as `[0; 0]` (the identity), matching hardware where
+    /// a zero operand contributes neither to the max-exponent tree nor to
+    /// the fraction sum. Inf/NaN must be filtered by the caller
+    /// (see [`crate::arith::adder`]).
+    pub fn leaf(term: Fp, spec: AccSpec) -> AlignAcc {
+        debug_assert!(
+            matches!(term.class(), FpClass::Zero | FpClass::Normal),
+            "leaf() requires a finite term"
+        );
+        if term.class() == FpClass::Zero {
+            return AlignAcc::IDENTITY;
+        }
+        AlignAcc {
+            lambda: term.raw_exp(),
+            acc: WideInt::from_i64_shl(term.signed_sig(), spec.f),
+            sticky: false,
+        }
+    }
+
+    /// True when this state is exactly the identity (no terms absorbed yet,
+    /// or only zeros).
+    pub fn is_identity(&self) -> bool {
+        self.lambda == 0 && self.acc.is_zero() && !self.sticky
+    }
+}
+
+/// The radix-2 `⊙` operator (eq. 8).
+///
+/// Note only the smaller-λ operand actually shifts (the other shift amount
+/// is zero) — exactly the single-shifter + swap structure the hardware
+/// model ascribes to a radix-2 node.
+#[inline]
+pub fn op_combine(a: &AlignAcc, b: &AlignAcc, spec: AccSpec) -> AlignAcc {
+    let lambda = a.lambda.max(b.lambda);
+    if spec.narrow {
+        // i128 fast path (§Perf); bit-identical to the wide path.
+        let (va, vb) = (a.acc.to_i128_narrow(), b.acc.to_i128_narrow());
+        let da = ((lambda - a.lambda) as u32).min(127);
+        let db = ((lambda - b.lambda) as u32).min(127);
+        let dropped = ((va as u128) & ((1u128 << da) - 1) != 0)
+            | ((vb as u128) & ((1u128 << db) - 1) != 0);
+        debug_assert!(!(spec.exact && dropped), "exact datapath must never drop bits");
+        return AlignAcc {
+            lambda,
+            acc: WideInt::from_i128((va >> da) + (vb >> db)),
+            sticky: a.sticky | b.sticky | dropped,
+        };
+    }
+    let (sa, da) = shift_for(a, lambda);
+    let (sb, db) = shift_for(b, lambda);
+    debug_assert!(!(spec.exact && (da || db)), "exact datapath must never drop bits");
+    AlignAcc { lambda, acc: sa.add(&sb), sticky: a.sticky | b.sticky | da | db }
+}
+
+/// The radix-r generalisation: one max over all λs, then every operand is
+/// aligned by its own distance and all are added in one compressor tree.
+/// This is *structurally* the baseline of Fig. 1 applied to `r` operands —
+/// the paper's observation that the baseline N-term adder is the
+/// single-radix-N corner of the proposed design space.
+pub fn op_combine_many(parts: &[AlignAcc], spec: AccSpec) -> AlignAcc {
+    debug_assert!(!parts.is_empty());
+    let lambda = parts.iter().map(|p| p.lambda).max().unwrap();
+    if spec.narrow {
+        // Fast path (§Perf): the AccSpec guarantees every accumulator fits
+        // an i128, so the shift/add runs on two limbs instead of six.
+        // Semantically identical (same arithmetic shift + sticky), checked
+        // bit-for-bit against the wide path in tests.
+        let mut acc = 0i128;
+        let mut sticky = false;
+        for p in parts {
+            let v = p.acc.to_i128_narrow();
+            // d ≤ 127 suffices: a narrow value shifted ≥ 127 is pure sign
+            // fill either way, and the mask below still sees all its bits.
+            let d = ((lambda - p.lambda) as u32).min(127);
+            acc += v >> d;
+            let dropped = (v as u128) & ((1u128 << d) - 1) != 0;
+            debug_assert!(!(spec.exact && dropped), "exact datapath must never drop bits");
+            sticky |= p.sticky | dropped;
+        }
+        return AlignAcc { lambda, acc: WideInt::from_i128(acc), sticky };
+    }
+    let mut acc = WideInt::ZERO;
+    let mut sticky = false;
+    for p in parts {
+        let (shifted, dropped) = shift_for(p, lambda);
+        debug_assert!(!(spec.exact && dropped), "exact datapath must never drop bits");
+        acc = acc.add(&shifted);
+        sticky |= p.sticky | dropped;
+    }
+    AlignAcc { lambda, acc, sticky }
+}
+
+#[inline]
+fn shift_for(p: &AlignAcc, lambda: i32) -> (WideInt, bool) {
+    let d = (lambda - p.lambda) as u32;
+    p.acc.shr_sticky(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::AccSpec;
+    use crate::formats::{Fp, BF16};
+
+    fn leaf(x: f64, spec: AccSpec) -> AlignAcc {
+        AlignAcc::leaf(Fp::from_f64(x, BF16), spec)
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let spec = AccSpec::exact(BF16);
+        let x = leaf(3.25, spec);
+        assert_eq!(op_combine(&AlignAcc::IDENTITY, &x, spec), x);
+        assert_eq!(op_combine(&x, &AlignAcc::IDENTITY, spec), x);
+    }
+
+    #[test]
+    fn commutative_in_exact_mode() {
+        let spec = AccSpec::exact(BF16);
+        let a = leaf(1.5, spec);
+        let b = leaf(-0.0078125, spec);
+        assert_eq!(op_combine(&a, &b, spec), op_combine(&b, &a, spec));
+    }
+
+    #[test]
+    fn associative_in_exact_mode() {
+        let spec = AccSpec::exact(BF16);
+        let (a, b, c) = (leaf(100.0, spec), leaf(-0.125, spec), leaf(7.0, spec));
+        let l = op_combine(&op_combine(&a, &b, spec), &c, spec);
+        let r = op_combine(&a, &op_combine(&b, &c, spec), spec);
+        assert_eq!(l, r); // eq. 10
+    }
+
+    #[test]
+    fn radix_many_equals_folded_radix2_exact() {
+        let spec = AccSpec::exact(BF16);
+        let parts = [leaf(1.0, spec), leaf(256.0, spec), leaf(-0.5, spec), leaf(3.0, spec)];
+        let folded = parts[1..]
+            .iter()
+            .fold(parts[0], |acc, p| op_combine(&acc, p, spec));
+        assert_eq!(op_combine_many(&parts, spec), folded);
+    }
+
+    #[test]
+    fn truncation_sets_sticky() {
+        // Tiny guard: aligning 1.0 against 2^20 must drop bits.
+        let spec = AccSpec::truncated(2);
+        let big = leaf(1048576.0, spec);
+        let small = leaf(1.0, spec);
+        let r = op_combine(&big, &small, spec);
+        assert!(r.sticky);
+        assert_eq!(r.lambda, big.lambda);
+    }
+
+    #[test]
+    fn max_exponent_tracked() {
+        let spec = AccSpec::exact(BF16);
+        let r = op_combine(&leaf(0.5, spec), &leaf(4.0, spec), spec);
+        assert_eq!(r.lambda, Fp::from_f64(4.0, BF16).raw_exp());
+    }
+}

@@ -1,0 +1,252 @@
+//! Mixed-radix trees of `⊙` operators (paper §III-C, Fig. 2, eq. 9).
+//!
+//! A configuration such as `8-2-2` describes a 32-term adder whose first
+//! level uses radix-8 operators (32 → 4 partial states), second level
+//! radix-2 (4 → 2) and third level radix-2 (2 → 1). The baseline N-term
+//! adder is the single-level configuration `N` — a corner of the same
+//! design space.
+
+use super::operator::{op_combine_many, AlignAcc};
+use super::AccSpec;
+use crate::formats::Fp;
+use std::fmt;
+use std::str::FromStr;
+
+/// A mixed-radix tree configuration: the radix of the operator used at each
+/// level, leaves-first. The product of radices is the number of terms.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct RadixConfig {
+    radices: Vec<u32>,
+}
+
+impl RadixConfig {
+    /// Build from per-level radices (leaf level first). Every radix must be
+    /// ≥ 2 and there must be at least one level.
+    pub fn new(radices: Vec<u32>) -> Result<Self, String> {
+        if radices.is_empty() {
+            return Err("configuration needs at least one level".into());
+        }
+        if let Some(r) = radices.iter().find(|&&r| r < 2) {
+            return Err(format!("radix {r} < 2 is not a valid operator"));
+        }
+        let terms: u64 = radices.iter().map(|&r| r as u64).product();
+        if terms > 4096 {
+            return Err(format!("configuration covers {terms} terms (> 4096)"));
+        }
+        Ok(RadixConfig { radices })
+    }
+
+    /// The single-level baseline configuration for `n` terms.
+    pub fn baseline(n: u32) -> Self {
+        RadixConfig { radices: vec![n] }
+    }
+
+    /// The full binary tree (`2-2-...-2`) for `n = 2^k` terms.
+    pub fn binary(n: u32) -> Result<Self, String> {
+        if !n.is_power_of_two() || n < 2 {
+            return Err(format!("binary tree needs a power-of-two term count, got {n}"));
+        }
+        Ok(RadixConfig { radices: vec![2; n.trailing_zeros() as usize] })
+    }
+
+    /// Number of input terms the configuration covers (product of radices).
+    pub fn terms(&self) -> u32 {
+        self.radices.iter().product()
+    }
+
+    /// Per-level radices, leaf level first.
+    pub fn radices(&self) -> &[u32] {
+        &self.radices
+    }
+
+    /// Number of operator levels.
+    pub fn levels(&self) -> usize {
+        self.radices.len()
+    }
+
+    /// True for the single-level (baseline, Fig. 1) configuration.
+    pub fn is_baseline(&self) -> bool {
+        self.radices.len() == 1
+    }
+
+    /// Number of operator nodes at level `l` (0 = leaf level).
+    pub fn nodes_at_level(&self, l: usize) -> u32 {
+        let mut n = self.terms();
+        for r in &self.radices[..=l] {
+            n /= r;
+        }
+        n
+    }
+}
+
+impl fmt::Display for RadixConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.radices.iter().map(|r| r.to_string()).collect();
+        f.write_str(&parts.join("-"))
+    }
+}
+
+impl fmt::Debug for RadixConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "RadixConfig({self})")
+    }
+}
+
+impl FromStr for RadixConfig {
+    type Err = String;
+
+    /// Parse the paper's notation: `"8-2-2"`, `"4-4-2"`, `"32"`, ...
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let radices: Result<Vec<u32>, _> = s
+            .split('-')
+            .map(|p| p.trim().parse::<u32>().map_err(|e| format!("bad radix {p:?}: {e}")))
+            .collect();
+        RadixConfig::new(radices?)
+    }
+}
+
+/// Evaluate a mixed-radix `⊙` tree over `terms` (finite values only;
+/// specials are handled by [`crate::arith::adder`]).
+///
+/// `terms.len()` must equal `config.terms()` — hardware adders have a fixed
+/// input width; callers pad shorter vectors with zeros
+/// ([`AlignAcc::IDENTITY`] leaves), which is what the real datapath does.
+pub fn tree_sum(terms: &[Fp], config: &RadixConfig, spec: AccSpec) -> AlignAcc {
+    assert_eq!(
+        terms.len(),
+        config.terms() as usize,
+        "term count must match the configuration width (pad with zeros)"
+    );
+    // Allocation-free fast path for hardware-sized adders (N ≤ 64): a
+    // stack buffer reduced in place level by level. The per-level Vec
+    // allocations dominated the profile before this — see EXPERIMENTS.md
+    // §Perf.
+    if terms.len() <= 64 {
+        let mut buf = [AlignAcc::IDENTITY; 64];
+        for (slot, t) in buf.iter_mut().zip(terms) {
+            *slot = AlignAcc::leaf(*t, spec);
+        }
+        return reduce_in_place(&mut buf, terms.len(), config, spec);
+    }
+    let mut buf: Vec<AlignAcc> = terms.iter().map(|t| AlignAcc::leaf(*t, spec)).collect();
+    let live = buf.len();
+    reduce_in_place(&mut buf, live, config, spec)
+}
+
+fn reduce_in_place(
+    buf: &mut [AlignAcc],
+    mut live: usize,
+    config: &RadixConfig,
+    spec: AccSpec,
+) -> AlignAcc {
+    for &r in &config.radices {
+        let r = r as usize;
+        let groups = live / r;
+        for g in 0..groups {
+            buf[g] = op_combine_many(&buf[g * r..(g + 1) * r], spec);
+        }
+        live = groups;
+    }
+    debug_assert_eq!(live, 1);
+    buf[0]
+}
+
+/// All factorizations of `n` into ordered radices ≥ 2 — the design space
+/// the paper sweeps (each entry is one candidate adder architecture).
+pub fn enumerate_configs(n: u32) -> Vec<RadixConfig> {
+    let mut out = Vec::new();
+    let mut prefix = Vec::new();
+    fn rec(n: u32, prefix: &mut Vec<u32>, out: &mut Vec<RadixConfig>) {
+        if n == 1 {
+            if !prefix.is_empty() {
+                out.push(RadixConfig { radices: prefix.clone() });
+            }
+            return;
+        }
+        for r in 2..=n {
+            if n % r == 0 {
+                prefix.push(r);
+                rec(n / r, prefix, out);
+                prefix.pop();
+            }
+        }
+    }
+    rec(n, &mut prefix, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::baseline::baseline_sum;
+    use super::*;
+    use crate::formats::{Fp, BF16, FP32, FP8_E5M2};
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn parse_and_display() {
+        let c: RadixConfig = "8-2-2".parse().unwrap();
+        assert_eq!(c.terms(), 32);
+        assert_eq!(c.to_string(), "8-2-2");
+        assert_eq!(c.levels(), 3);
+        assert!("8-0-2".parse::<RadixConfig>().is_err());
+        assert!("".parse::<RadixConfig>().is_err());
+        assert!(RadixConfig::baseline(32).is_baseline());
+    }
+
+    #[test]
+    fn nodes_at_level() {
+        let c: RadixConfig = "4-4-2".parse().unwrap();
+        assert_eq!(c.nodes_at_level(0), 8);
+        assert_eq!(c.nodes_at_level(1), 2);
+        assert_eq!(c.nodes_at_level(2), 1);
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        // Ordered factorizations of 8 into parts ≥ 2: 8, 2-4, 4-2, 2-2-2.
+        let cfgs = enumerate_configs(8);
+        assert_eq!(cfgs.len(), 4);
+        assert!(cfgs.iter().any(|c| c.to_string() == "2-2-2"));
+        // 16: 16, 2-8, 8-2, 4-4, 2-2-4, 2-4-2, 4-2-2, 2-2-2-2 = 8 configs.
+        assert_eq!(enumerate_configs(16).len(), 8);
+    }
+
+    #[test]
+    fn all_trees_match_baseline_bitexact_exact_mode() {
+        // eq. 9 / eq. 10: any parenthesisation over the leaves is the same.
+        let mut rng = XorShift::new(0x7EE5);
+        for fmt in [BF16, FP32, FP8_E5M2] {
+            let spec = AccSpec::exact(fmt);
+            for n in [8u32, 16, 32] {
+                let configs = enumerate_configs(n);
+                for _ in 0..20 {
+                    let ts: Vec<Fp> = (0..n).map(|_| rng.gen_fp_normal(fmt)).collect();
+                    let base = baseline_sum(&ts, spec);
+                    for cfg in &configs {
+                        let r = tree_sum(&ts, cfg, spec);
+                        assert_eq!(r, base, "cfg={cfg} fmt={fmt} n={n}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn radix_n_config_is_the_baseline() {
+        let mut rng = XorShift::new(3);
+        let spec = AccSpec::truncated(6);
+        for _ in 0..100 {
+            let ts: Vec<Fp> = (0..16).map(|_| rng.gen_fp_normal(BF16)).collect();
+            let cfg = RadixConfig::baseline(16);
+            assert_eq!(tree_sum(&ts, &cfg, spec), baseline_sum(&ts, spec));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "term count must match")]
+    fn wrong_width_panics() {
+        let spec = AccSpec::exact(BF16);
+        let ts = vec![Fp::zero(BF16); 7];
+        tree_sum(&ts, &RadixConfig::baseline(8), spec);
+    }
+}

@@ -1,0 +1,411 @@
+//! `WideInt`: a fixed-width (384-bit) two's-complement integer.
+//!
+//! 384 bits cover the widest accumulator this crate ever needs — an exact
+//! FP32 window (256-bit alignment range + 25-bit significand + carry
+//! headroom for ≥ 64 terms) — while staying `Copy` and allocation-free so
+//! the bit-accurate simulators can run millions of align-add operations per
+//! second. Arithmetic right shifts report whether any dropped bit was
+//! nonzero (the hardware *sticky* signal).
+
+/// Number of 64-bit limbs.
+pub const LIMBS: usize = 6;
+/// Total width in bits.
+pub const WIDE_BITS: usize = LIMBS * 64;
+
+/// Two's-complement 384-bit integer (little-endian limbs).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct WideInt {
+    pub limbs: [u64; LIMBS],
+}
+
+impl WideInt {
+    pub const ZERO: WideInt = WideInt { limbs: [0; LIMBS] };
+
+    /// Sign-extend an `i64`.
+    #[inline]
+    pub fn from_i64(v: i64) -> Self {
+        let ext = if v < 0 { u64::MAX } else { 0 };
+        let mut limbs = [ext; LIMBS];
+        limbs[0] = v as u64;
+        WideInt { limbs }
+    }
+
+    /// `from_i64(v) << sh` computed directly (hot path: lifting a term into
+    /// the accumulator frame without a full-width shift).
+    #[inline]
+    pub fn from_i64_shl(v: i64, sh: u32) -> Self {
+        debug_assert!((sh as usize) < WIDE_BITS);
+        let ext = if v < 0 { u64::MAX } else { 0 };
+        let mut limbs = [ext; LIMBS];
+        let (limb_sh, bit_sh) = ((sh / 64) as usize, sh % 64);
+        for l in limbs.iter_mut().take(limb_sh) {
+            *l = 0;
+        }
+        if bit_sh == 0 {
+            limbs[limb_sh] = v as u64;
+        } else {
+            limbs[limb_sh] = (v as u64) << bit_sh;
+            if limb_sh + 1 < LIMBS {
+                limbs[limb_sh + 1] = ((v >> (64 - bit_sh)) as u64) | (ext << bit_sh);
+            }
+        }
+        let out = WideInt { limbs };
+        debug_assert_eq!(out, Self::from_i64(v).shl(sh));
+        out
+    }
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.limbs == [0; LIMBS]
+    }
+
+    #[inline]
+    pub fn is_negative(&self) -> bool {
+        (self.limbs[LIMBS - 1] >> 63) == 1
+    }
+
+    /// Wrapping two's-complement addition (the accumulator headroom
+    /// guarantees no live overflow; a debug assertion catches misuse).
+    #[inline]
+    pub fn wrapping_add(&self, rhs: &WideInt) -> Self {
+        let mut out = [0u64; LIMBS];
+        let mut carry = 0u64;
+        for i in 0..LIMBS {
+            let (s1, c1) = self.limbs[i].overflowing_add(rhs.limbs[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        WideInt { limbs: out }
+    }
+
+    /// Addition with a debug-mode check that the signed result did not wrap.
+    #[inline]
+    pub fn add(&self, rhs: &WideInt) -> Self {
+        let r = self.wrapping_add(rhs);
+        debug_assert!(
+            !(self.is_negative() == rhs.is_negative() && r.is_negative() != self.is_negative()),
+            "WideInt overflow: accumulator headroom exceeded"
+        );
+        r
+    }
+
+    /// Two's-complement negation.
+    #[inline]
+    pub fn neg(&self) -> Self {
+        let mut out = [0u64; LIMBS];
+        let mut carry = 1u64;
+        for i in 0..LIMBS {
+            let (s, c) = (!self.limbs[i]).overflowing_add(carry);
+            out[i] = s;
+            carry = c as u64;
+        }
+        WideInt { limbs: out }
+    }
+
+    /// Absolute value (as the same bit width; `MIN` cannot occur given the
+    /// accumulator headroom).
+    #[inline]
+    pub fn abs(&self) -> Self {
+        if self.is_negative() {
+            self.neg()
+        } else {
+            *self
+        }
+    }
+
+    /// Logical/arithmetic left shift by `sh` bits (`sh < WIDE_BITS`).
+    pub fn shl(&self, sh: u32) -> Self {
+        let sh = sh as usize;
+        debug_assert!(sh < WIDE_BITS);
+        if sh == 0 {
+            return *self;
+        }
+        let (limb_sh, bit_sh) = (sh / 64, sh % 64);
+        let mut out = [0u64; LIMBS];
+        for i in (limb_sh..LIMBS).rev() {
+            let lo = self.limbs[i - limb_sh] << bit_sh;
+            let hi = if bit_sh > 0 && i > limb_sh {
+                self.limbs[i - limb_sh - 1] >> (64 - bit_sh)
+            } else {
+                0
+            };
+            out[i] = lo | hi;
+        }
+        WideInt { limbs: out }
+    }
+
+    /// Arithmetic right shift by `sh` bits, reporting whether any dropped
+    /// bit was nonzero (the *sticky* signal). `sh` may exceed the width; the
+    /// result is then the sign fill and sticky covers the whole value.
+    pub fn shr_sticky(&self, sh: u32) -> (Self, bool) {
+        if sh == 0 {
+            return (*self, false);
+        }
+        let fill = if self.is_negative() { u64::MAX } else { 0 };
+        let sh = sh as usize;
+        if sh >= WIDE_BITS {
+            // Everything shifts out: result is the sign fill; sticky unless
+            // the value was zero (a negative value always drops set bits).
+            return (WideInt { limbs: [fill; LIMBS] }, !self.is_zero());
+        }
+        let (limb_sh, bit_sh) = (sh / 64, sh % 64);
+        // Sticky: any nonzero bit among the dropped low `sh` bits.
+        let mut sticky = false;
+        for i in 0..limb_sh {
+            sticky |= self.limbs[i] != 0;
+        }
+        if bit_sh > 0 {
+            sticky |= (self.limbs[limb_sh] & ((1u64 << bit_sh) - 1)) != 0;
+        }
+        let mut out = [fill; LIMBS];
+        for i in 0..LIMBS - limb_sh {
+            let lo = self.limbs[i + limb_sh] >> bit_sh;
+            let hi = if bit_sh > 0 {
+                let src = if i + limb_sh + 1 < LIMBS { self.limbs[i + limb_sh + 1] } else { fill };
+                src << (64 - bit_sh)
+            } else {
+                0
+            };
+            out[i] = lo | hi;
+        }
+        (WideInt { limbs: out }, sticky)
+    }
+
+    /// Arithmetic right shift discarding the sticky signal.
+    #[inline]
+    pub fn shr(&self, sh: u32) -> Self {
+        self.shr_sticky(sh).0
+    }
+
+    /// Position of the most significant set bit of `|self|` (0-based), or
+    /// `None` if zero.
+    pub fn abs_msb(&self) -> Option<u32> {
+        let mag = self.abs();
+        for i in (0..LIMBS).rev() {
+            if mag.limbs[i] != 0 {
+                return Some(i as u32 * 64 + 63 - mag.limbs[i].leading_zeros());
+            }
+        }
+        None
+    }
+
+    /// Bit `pos` of `|self|` (0 if `pos` is out of range).
+    #[inline]
+    pub fn abs_bit(&self, pos: i64) -> bool {
+        if pos < 0 || pos >= WIDE_BITS as i64 {
+            return false;
+        }
+        let mag = self.abs();
+        (mag.limbs[(pos / 64) as usize] >> (pos % 64)) & 1 == 1
+    }
+
+    /// True if any bit of `|self|` strictly below `pos` is set.
+    pub fn abs_any_below(&self, pos: i64) -> bool {
+        if pos <= 0 {
+            return false;
+        }
+        let pos = (pos as usize).min(WIDE_BITS);
+        let mag = self.abs();
+        let (limb, bit) = (pos / 64, pos % 64);
+        for i in 0..limb {
+            if mag.limbs[i] != 0 {
+                return true;
+            }
+        }
+        if bit > 0 && limb < LIMBS && (mag.limbs[limb] & ((1u64 << bit) - 1)) != 0 {
+            return true;
+        }
+        false
+    }
+
+    /// Extract bits `[lo, lo+len)` of `|self|` as a `u64` (`len <= 64`);
+    /// out-of-range bits read as zero, negative `lo` shifts in zeros.
+    pub fn abs_extract(&self, lo: i64, len: u32) -> u64 {
+        debug_assert!(len <= 64);
+        let mag = self.abs();
+        let mut out = 0u64;
+        for k in 0..len {
+            let pos = lo + k as i64;
+            if pos >= 0 && pos < WIDE_BITS as i64 {
+                let bit = (mag.limbs[(pos / 64) as usize] >> (pos % 64)) & 1;
+                out |= bit << k;
+            }
+        }
+        out
+    }
+
+    /// Unchecked narrow load: low two limbs as `i128`. Only valid when the
+    /// value is known to fit (the `AccSpec::narrow` invariant).
+    #[inline]
+    pub fn to_i128_narrow(&self) -> i128 {
+        (self.limbs[0] as u128 | ((self.limbs[1] as u128) << 64)) as i128
+    }
+
+    /// Sign-extend an `i128` (inverse of [`Self::to_i128_narrow`]).
+    #[inline]
+    pub fn from_i128(v: i128) -> Self {
+        let ext = if v < 0 { u64::MAX } else { 0 };
+        let mut limbs = [ext; LIMBS];
+        limbs[0] = v as u64;
+        limbs[1] = (v >> 64) as u64;
+        WideInt { limbs }
+    }
+
+    /// Lossy conversion to `i128` (asserts the value fits in debug builds).
+    pub fn to_i128(&self) -> i128 {
+        let lo = self.limbs[0] as u128 | ((self.limbs[1] as u128) << 64);
+        let fill = if self.is_negative() { u64::MAX } else { 0 };
+        debug_assert!(
+            self.limbs[2..].iter().all(|&l| l == fill)
+                && ((self.limbs[1] >> 63 == 1) == self.is_negative()),
+            "WideInt does not fit i128"
+        );
+        lo as i128
+    }
+
+    /// Exact conversion to `f64` would lose bits; this returns the closest
+    /// `f64` (used only for diagnostics, never for correctness decisions).
+    pub fn to_f64_lossy(&self) -> f64 {
+        let neg = self.is_negative();
+        let mag = self.abs();
+        let mut v = 0.0f64;
+        for i in (0..LIMBS).rev() {
+            v = v * 1.8446744073709552e19 + mag.limbs[i] as f64;
+        }
+        if neg {
+            -v
+        } else {
+            v
+        }
+    }
+}
+
+impl std::cmp::Ord for WideInt {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        match (self.is_negative(), other.is_negative()) {
+            (true, false) => std::cmp::Ordering::Less,
+            (false, true) => std::cmp::Ordering::Greater,
+            _ => self.limbs.iter().rev().cmp(other.limbs.iter().rev()),
+        }
+    }
+}
+
+impl std::cmp::PartialOrd for WideInt {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl std::fmt::Debug for WideInt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_negative() {
+            write!(f, "-{:?}", self.neg())
+        } else {
+            write!(f, "0x")?;
+            let mut started = false;
+            for i in (0..LIMBS).rev() {
+                if started {
+                    write!(f, "{:016x}", self.limbs[i])?;
+                } else if self.limbs[i] != 0 || i == 0 {
+                    write!(f, "{:x}", self.limbs[i])?;
+                    started = true;
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(v: i64) -> WideInt {
+        WideInt::from_i64(v)
+    }
+
+    #[test]
+    fn add_neg_roundtrip() {
+        let a = w(12345);
+        let b = w(-999);
+        assert_eq!(a.add(&b), w(11346));
+        assert_eq!(a.neg().neg(), a);
+        assert_eq!(w(-1).add(&w(1)), WideInt::ZERO);
+    }
+
+    #[test]
+    fn shl_shr_inverse_when_no_drop() {
+        let a = w(0x1234_5678_9abc_def0);
+        for sh in [0u32, 1, 7, 63, 64, 65, 130, 200, 300] {
+            let (back, sticky) = a.shl(sh).shr_sticky(sh);
+            assert_eq!(back, a, "sh={sh}");
+            assert!(!sticky, "sh={sh}");
+        }
+    }
+
+    #[test]
+    fn shr_matches_i128_semantics() {
+        // Arithmetic shift (floor division) on negatives, with sticky.
+        for v in [-7i64, -8, -1, 7, 8, 1, 12345, -99999] {
+            for sh in [1u32, 2, 3, 5, 17] {
+                let (r, sticky) = w(v).shr_sticky(sh);
+                let expect = (v as i128) >> sh;
+                assert_eq!(r.to_i128(), expect, "v={v} sh={sh}");
+                let dropped = (v as i128) & ((1i128 << sh) - 1);
+                assert_eq!(sticky, dropped != 0, "v={v} sh={sh}");
+            }
+        }
+    }
+
+    #[test]
+    fn shift_composition_equals_single_shift() {
+        // (x >> a) >> b == x >> (a+b): the property that makes incremental
+        // (online) alignment shifts exact-equivalent to one-shot alignment.
+        let vals = [w(-123456789), w(987654321), w(-1), w(0x7fff_ffff_ffff_ffff)];
+        for v in vals {
+            let big = v.shl(200);
+            for (a, b) in [(3u32, 5u32), (64, 64), (1, 200), (100, 30)] {
+                let (r1, s1a) = big.shr_sticky(a);
+                let (r1, s1b) = r1.shr_sticky(b);
+                let (r2, s2) = big.shr_sticky(a + b);
+                assert_eq!(r1, r2);
+                assert_eq!(s1a || s1b, s2);
+            }
+        }
+    }
+
+    #[test]
+    fn shr_beyond_width() {
+        let (r, sticky) = w(5).shr_sticky(WIDE_BITS as u32 + 10);
+        assert!(r.is_zero());
+        assert!(sticky);
+        let (r, sticky) = w(-5).shr_sticky(WIDE_BITS as u32 + 10);
+        assert_eq!(r.to_i128(), -1);
+        assert!(sticky);
+        let (r, sticky) = WideInt::ZERO.shr_sticky(1000);
+        assert!(r.is_zero() && !sticky);
+    }
+
+    #[test]
+    fn msb_and_extract() {
+        let a = w(0b1011).shl(100);
+        assert_eq!(a.abs_msb(), Some(103));
+        assert_eq!(a.abs_extract(100, 4), 0b1011);
+        assert_eq!(a.abs_extract(101, 3), 0b101);
+        assert!(a.abs_any_below(101));
+        assert!(!a.abs_any_below(100));
+        // Negative values are measured on the magnitude.
+        let b = a.neg();
+        assert_eq!(b.abs_msb(), Some(103));
+        assert_eq!(b.abs_extract(100, 4), 0b1011);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(w(-2) < w(1));
+        assert!(w(5) > w(3));
+        assert!(w(-10).shl(100) < w(-10));
+        assert!(w(10).shl(100) > w(10));
+    }
+}

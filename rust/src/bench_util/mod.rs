@@ -1,0 +1,116 @@
+//! Benchmark harness (the offline environment has no criterion): warmup +
+//! repeated timed runs with median/mean/stddev reporting, plus a tiny
+//! `black_box` to defeat dead-code elimination.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Opaque identity the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    /// Events-per-second given how many logical events one iteration covers.
+    pub fn throughput(&self, events_per_iter: f64) -> f64 {
+        events_per_iter / self.median_s
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} /iter   (mean {:>12}, ±{:.1}%, {} iters)",
+            self.name,
+            fmt_duration(self.median_s),
+            fmt_duration(self.mean_s),
+            if self.mean_s > 0.0 { 100.0 * self.stddev_s / self.mean_s } else { 0.0 },
+            self.iters
+        )
+    }
+}
+
+/// Format seconds scaled to a readable unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` with warmup, auto-scaling the iteration count so the measured
+/// phase takes roughly `target_s` seconds, and report robust statistics.
+pub fn bench<F: FnMut()>(name: &str, target_s: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration: time single runs until 5% of target elapsed.
+    let t0 = Instant::now();
+    let mut single = Vec::new();
+    loop {
+        let t = Instant::now();
+        f();
+        single.push(t.elapsed().as_secs_f64());
+        if t0.elapsed().as_secs_f64() > target_s * 0.05 && !single.is_empty() {
+            break;
+        }
+    }
+    let per_iter = stats::median(&single).max(1e-9);
+    // Samples of `batch` iterations each; at least 5 samples.
+    let samples = 10usize;
+    let batch = ((target_s / samples as f64) / per_iter).ceil().max(1.0) as usize;
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples * batch,
+        median_s: stats::median(&times),
+        mean_s: stats::mean(&times),
+        stddev_s: stats::stddev(&times),
+    }
+}
+
+/// Print a bench-suite header (used by the `cargo bench` binaries).
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let r = bench("noop-ish", 0.05, || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.iters >= 10);
+        assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.0), "2.000 s");
+        assert_eq!(fmt_duration(2.5e-3), "2.500 ms");
+        assert_eq!(fmt_duration(3.2e-6), "3.200 µs");
+        assert_eq!(fmt_duration(5e-9), "5.0 ns");
+    }
+}

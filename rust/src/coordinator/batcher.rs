@@ -1,0 +1,352 @@
+//! Dynamic batcher: the leader-side request path for the PJRT reduction
+//! executables.
+//!
+//! The AOT artifacts have a fixed batch geometry (64 rows), so serving
+//! individual dot-product requests efficiently requires vLLM-router-style
+//! dynamic batching: requests queue up, a dispatcher thread drains up to a
+//! full batch (or whatever arrived within the linger window), executes one
+//! PJRT call, and completes each request's one-shot channel. A bounded
+//! queue provides backpressure.
+
+use super::metrics::{Counter, LatencyHistogram};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One N-term reduction request: the `(e, m)` pairs of a single row.
+pub struct ReduceRequest {
+    pub e: Vec<i32>,
+    pub m: Vec<i32>,
+    submitted: Instant,
+    reply: SyncSender<ReduceResponse>,
+}
+
+/// The completed `(λ, acc)` state for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReduceResponse {
+    pub lambda: i32,
+    pub acc: i64,
+}
+
+/// Shared metrics for a batcher instance.
+#[derive(Default, Debug)]
+pub struct BatcherMetrics {
+    pub requests: Counter,
+    pub rejected: Counter,
+    pub batches: Counter,
+    pub batch_fill: Counter, // total rows over all batches (fill = rows/batches)
+    pub latency: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+}
+
+impl BatcherMetrics {
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.batch_fill.get() as f64 / b as f64
+        }
+    }
+}
+
+/// Handle used by request producers.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: SyncSender<ReduceRequest>,
+    n_terms: usize,
+    metrics: Arc<BatcherMetrics>,
+}
+
+/// Error returned when the bounded queue is full (backpressure) or closed.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full — caller should retry or shed load.
+    Overloaded,
+    /// Batcher shut down.
+    Closed,
+}
+
+impl BatcherHandle {
+    /// Submit one reduction row and wait for its result.
+    pub fn reduce(&self, e: Vec<i32>, m: Vec<i32>) -> Result<ReduceResponse, SubmitError> {
+        let rx = self.submit(e, m)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Submit without waiting; returns the one-shot receiver.
+    pub fn submit(
+        &self,
+        e: Vec<i32>,
+        m: Vec<i32>,
+    ) -> Result<Receiver<ReduceResponse>, SubmitError> {
+        assert_eq!(e.len(), self.n_terms, "row width must match the artifact");
+        assert_eq!(m.len(), self.n_terms);
+        let (reply, rx) = sync_channel(1);
+        let req = ReduceRequest { e, m, submitted: Instant::now(), reply };
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.requests.inc();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.inc();
+                Err(SubmitError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    pub fn metrics(&self) -> &BatcherMetrics {
+        &self.metrics
+    }
+}
+
+/// The executor side: anything that can reduce a padded batch of rows.
+///
+/// Implemented by the PJRT wrapper ([`crate::runtime::OnlineReduceExe`] via
+/// a closure) and by pure-Rust mocks in tests/fault-injection. PJRT handles
+/// are not `Send`, so they must be *created on* the dispatcher thread via
+/// [`Batcher::spawn_with`].
+pub trait BatchExecutor: 'static {
+    /// `rows` elements, each `(e, m)` of width `n_terms`; returns one
+    /// `(λ, acc)` per row, in order.
+    fn execute(&mut self, rows: &[(Vec<i32>, Vec<i32>)]) -> Vec<(i32, i64)>;
+}
+
+impl<F> BatchExecutor for F
+where
+    F: FnMut(&[(Vec<i32>, Vec<i32>)]) -> Vec<(i32, i64)> + 'static,
+{
+    fn execute(&mut self, rows: &[(Vec<i32>, Vec<i32>)]) -> Vec<(i32, i64)> {
+        (self)(rows)
+    }
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Max rows per PJRT execution (the artifact's baked batch size).
+    pub max_batch: usize,
+    /// Row width (the artifact's term count).
+    pub n_terms: usize,
+    /// How long the dispatcher lingers for more rows once one arrived.
+    pub linger: Duration,
+    /// Bounded queue depth (backpressure threshold).
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            n_terms: 32,
+            linger: Duration::from_micros(200),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// A running batcher: dispatcher thread + handle.
+pub struct Batcher {
+    handle: BatcherHandle,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the dispatcher loop around a `Send` executor.
+    pub fn spawn<E: BatchExecutor + Send>(cfg: BatcherConfig, exe: E) -> Self {
+        Self::spawn_with(cfg, move || exe)
+    }
+
+    /// Spawn the dispatcher loop, constructing the executor *on* the
+    /// dispatcher thread — required for PJRT executables, which are not
+    /// `Send`.
+    pub fn spawn_with<E, F>(cfg: BatcherConfig, make_exe: F) -> Self
+    where
+        E: BatchExecutor,
+        F: FnOnce() -> E + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<ReduceRequest>(cfg.queue_depth);
+        let metrics = Arc::new(BatcherMetrics::default());
+        let m = Arc::clone(&metrics);
+        let dispatcher = std::thread::Builder::new()
+            .name("ofa-batcher".into())
+            .spawn(move || {
+                let mut exe = make_exe();
+                dispatch_loop(cfg, rx, &mut exe, &m)
+            })
+            .expect("spawning batcher");
+        Batcher {
+            handle: BatcherHandle { tx, n_terms: cfg.n_terms, metrics },
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+
+    pub fn metrics(&self) -> &BatcherMetrics {
+        &self.handle.metrics
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        // Close the queue: after in-flight handles drop, dispatcher exits.
+        let (dead_tx, _) = sync_channel(1);
+        self.handle.tx = dead_tx;
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+fn dispatch_loop(
+    cfg: BatcherConfig,
+    rx: Receiver<ReduceRequest>,
+    exe: &mut dyn BatchExecutor,
+    metrics: &BatcherMetrics,
+) {
+    loop {
+        // Block for the first request of the next batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all handles dropped
+        };
+        let mut batch = vec![first];
+        // Linger briefly to fill the batch.
+        let deadline = Instant::now() + cfg.linger;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Execute one padded PJRT call for the whole batch.
+        let rows: Vec<(Vec<i32>, Vec<i32>)> =
+            batch.iter().map(|r| (r.e.clone(), r.m.clone())).collect();
+        let t0 = Instant::now();
+        let results = exe.execute(&rows);
+        metrics.exec_latency.observe(t0.elapsed());
+        metrics.batches.inc();
+        metrics.batch_fill.add(batch.len() as u64);
+        debug_assert_eq!(results.len(), batch.len());
+        for (req, (lambda, acc)) in batch.into_iter().zip(results) {
+            metrics.latency.observe(req.submitted.elapsed());
+            let _ = req.reply.send(ReduceResponse { lambda, acc }); // receiver may be gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Executor that computes a trivial checksum so tests can verify
+    /// request/response pairing survives batching.
+    fn checksum_exe() -> impl BatchExecutor {
+        |rows: &[(Vec<i32>, Vec<i32>)]| {
+            rows.iter()
+                .map(|(e, m)| {
+                    let lam = *e.iter().max().unwrap();
+                    let acc: i64 = m.iter().map(|&x| x as i64).sum();
+                    (lam, acc)
+                })
+                .collect::<Vec<_>>()
+        }
+    }
+
+    fn cfg(n_terms: usize) -> BatcherConfig {
+        BatcherConfig { n_terms, linger: Duration::from_millis(2), ..Default::default() }
+    }
+
+    #[test]
+    fn responses_match_their_requests() {
+        let batcher = Batcher::spawn(cfg(4), checksum_exe());
+        let handle = batcher.handle();
+        let workers: Vec<_> = (0..32)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let e = vec![i as i32 + 1; 4];
+                    let m = vec![i as i32; 4];
+                    let r = h.reduce(e, m).unwrap();
+                    assert_eq!(r.lambda, i as i32 + 1);
+                    assert_eq!(r.acc, 4 * i as i64);
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(batcher.metrics().requests.get(), 32);
+        assert!(batcher.metrics().batches.get() <= 32);
+    }
+
+    #[test]
+    fn batches_actually_coalesce() {
+        let batcher = Batcher::spawn(
+            BatcherConfig { linger: Duration::from_millis(50), n_terms: 2, ..Default::default() },
+            checksum_exe(),
+        );
+        let handle = batcher.handle();
+        // Pre-load many requests, then wait: the linger window must merge
+        // them into far fewer executions than requests.
+        let rxs: Vec<_> =
+            (0..64).map(|i| handle.submit(vec![1, 2], vec![i, i]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let batches = batcher.metrics().batches.get();
+        assert!(batches <= 4, "expected coalescing, got {batches} batches");
+        assert!(batcher.metrics().mean_batch_fill() >= 16.0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Executor that blocks until told, so the queue can fill up.
+        let (gate_tx, gate_rx) = sync_channel::<()>(0);
+        let exe = move |rows: &[(Vec<i32>, Vec<i32>)]| {
+            let _ = gate_rx.recv();
+            rows.iter().map(|_| (0, 0i64)).collect::<Vec<_>>()
+        };
+        let batcher = Batcher::spawn(
+            BatcherConfig {
+                queue_depth: 4,
+                max_batch: 1,
+                n_terms: 1,
+                linger: Duration::ZERO,
+            },
+            exe,
+        );
+        let handle = batcher.handle();
+        let mut pending = Vec::new();
+        let mut overloaded = false;
+        for i in 0..32 {
+            match handle.submit(vec![i], vec![i]) {
+                Ok(rx) => pending.push(rx),
+                Err(SubmitError::Overloaded) => {
+                    overloaded = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(overloaded, "bounded queue must reject past its depth");
+        assert!(batcher.metrics().rejected.get() >= 1);
+        // Release the gate so the dispatcher can drain before drop.
+        for _ in 0..pending.len() {
+            let _ = gate_tx.send(());
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! L3 experiment coordinator: a leader/worker orchestrator for hardware
+//! evaluation sweeps plus a dynamic batcher for the PJRT request path.
+//!
+//! Two roles, mirroring the two things the evaluation needs:
+//!
+//! * [`Coordinator`] — fans experiment jobs (one per adder configuration ×
+//!   workload) out over a [`pool::ThreadPool`], collects structured
+//!   results in input order, tracks progress and throughput; this is what
+//!   drives Fig. 4 / Fig. 5 / Table I regeneration.
+//! * [`batcher::Batcher`] — coalesces single dot-product requests into the
+//!   fixed-geometry PJRT executions of the AOT artifacts with bounded-queue
+//!   backpressure (the serving-shaped demo in `examples/bert_e2e.rs`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod pool;
+
+use metrics::Counter;
+use pool::ThreadPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Leader-side orchestration of a sweep of independent jobs.
+pub struct Coordinator {
+    pool: ThreadPool,
+    verbose: bool,
+    pub jobs_done: Arc<Counter>,
+}
+
+impl Coordinator {
+    pub fn new(threads: usize) -> Self {
+        Coordinator {
+            pool: ThreadPool::new(threads.max(1)),
+            verbose: false,
+            jobs_done: Arc::new(Counter::default()),
+        }
+    }
+
+    /// Machine-sized coordinator.
+    pub fn default_parallelism() -> Self {
+        Self::new(ThreadPool::default_size())
+    }
+
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Run `f` over all jobs in parallel, preserving order; logs progress
+    /// when verbose. Each job's wall time is folded into the throughput
+    /// line printed at the end.
+    pub fn run<T, R, F>(&self, label: &str, jobs: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = jobs.len();
+        let t0 = Instant::now();
+        if self.verbose {
+            eprintln!("[coordinator] {label}: {n} jobs on {} workers", self.pool.size());
+        }
+        let done = Arc::clone(&self.jobs_done);
+        let logged = Arc::new(AtomicBool::new(!self.verbose));
+        let out = self.pool.par_map(jobs, move |job| {
+            let r = f(job);
+            done.inc();
+            r
+        });
+        if !logged.load(Ordering::Relaxed) || self.verbose {
+            let dt = t0.elapsed().as_secs_f64();
+            if self.verbose {
+                eprintln!(
+                    "[coordinator] {label}: {n} jobs in {dt:.2}s ({:.1} jobs/s)",
+                    n as f64 / dt.max(1e-9)
+                );
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_preserves_order_and_counts() {
+        let c = Coordinator::new(4);
+        let out = c.run("square", (0..50i64).collect(), |x| x * x);
+        assert_eq!(out, (0..50i64).map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(c.jobs_done.get(), 50);
+    }
+
+    #[test]
+    fn multiple_sweeps_reuse_the_pool() {
+        let c = Coordinator::new(2);
+        let a = c.run("a", vec![1, 2, 3], |x| x + 1);
+        let b = c.run("b", vec![10, 20], |x| x * 2);
+        assert_eq!(a, vec![2, 3, 4]);
+        assert_eq!(b, vec![20, 40]);
+        assert_eq!(c.jobs_done.get(), 5);
+    }
+}

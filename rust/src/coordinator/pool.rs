@@ -1,0 +1,164 @@
+//! A small work-stealing-free thread pool (`std` only — no tokio/rayon in
+//! the offline environment).
+//!
+//! Supports fire-and-forget jobs and an ordered [`ThreadPool::par_map`]
+//! used by the DSE sweeps and the power simulator to parallelise over
+//! configurations / trace shards.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("ofa-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // A panicking job must not poison the pool;
+                                // par_map turns the dropped channel into an
+                                // error on the caller side.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, in_flight }
+    }
+
+    /// A pool sized to the machine (cores, capped at 16).
+    pub fn default_size() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool alive");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Parallel map preserving input order. Panics in `f` surface as a
+    /// panic here (with the item index), not as a hung receiver.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, std::thread::Result<R>)>, Receiver<_>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.submit(move || {
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("worker alive");
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(_) => panic!("par_map job {i} panicked"),
+            }
+        }
+        out.into_iter().map(|o| o.expect("all indices filled")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.par_map((0..100u64).collect(), |x| x * x);
+        assert_eq!(out, (0..100u64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_submitted_jobs_run() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "par_map job")]
+    fn panicking_job_is_reported() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.par_map(vec![1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn pool_survives_panicking_fire_and_forget() {
+        let pool = ThreadPool::new(1);
+        pool.submit(|| panic!("ignored"));
+        let out = pool.par_map(vec![7], |x| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+}

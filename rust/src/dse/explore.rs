@@ -1,0 +1,107 @@
+//! Sweep engine: evaluate every radix configuration of an N-term adder in
+//! parallel over the experiment coordinator.
+
+use super::super::coordinator::Coordinator;
+use crate::arith::tree::{enumerate_configs, RadixConfig};
+use crate::formats::FpFormat;
+use crate::hw::design::{attach_power, evaluate_area_at, DesignPoint};
+use crate::hw::pipeline::paper_stages;
+use crate::workload::Trace;
+use std::sync::Arc;
+
+/// Sweep parameters (defaults = the paper's §IV operating point).
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Clock period target (paper: 1 GHz ⇒ 1.0 ns).
+    pub clock_ns: f64,
+    /// Pipeline depth; `None` = the paper's per-format policy.
+    pub stages: Option<u32>,
+    /// Cap on enumerated configurations (the N=64 space has 32 entries; a
+    /// cap keeps quick runs quick). `0` = no cap.
+    pub max_configs: usize,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions { clock_ns: 1.0, stages: None, max_configs: 0 }
+    }
+}
+
+/// Evaluate all configurations of an `n`-term `fmt` adder; attaches power
+/// when a workload trace is supplied. The baseline (radix-N) is always the
+/// first returned point.
+pub fn sweep_format(
+    fmt: FpFormat,
+    n: u32,
+    opts: &SweepOptions,
+    trace: Option<Arc<Trace>>,
+    coord: &Coordinator,
+) -> Vec<DesignPoint> {
+    let stages = opts.stages.unwrap_or_else(|| paper_stages(fmt, n));
+    let mut configs = enumerate_configs(n);
+    // Baseline first, then by level count (the paper's Fig. 4 ordering).
+    configs.sort_by_key(|c| (c.levels(), c.to_string()));
+    let baseline_pos = configs.iter().position(|c| c.is_baseline()).unwrap();
+    configs.swap(0, baseline_pos);
+    if opts.max_configs > 0 && configs.len() > opts.max_configs {
+        configs.truncate(opts.max_configs);
+    }
+    let clock = opts.clock_ns;
+    coord.run(
+        &format!("sweep {fmt} N={n}"),
+        configs,
+        move |cfg: RadixConfig| {
+            let mut point = evaluate_area_at(fmt, n, &cfg, clock, stages);
+            if let Some(t) = &trace {
+                attach_power(&mut point, &t.vectors);
+            }
+            point
+        },
+    )
+}
+
+/// The best (minimum) point by a key, never the baseline itself.
+pub fn best_proposed<'a, F: Fn(&DesignPoint) -> f64>(
+    points: &'a [DesignPoint],
+    key: F,
+) -> &'a DesignPoint {
+    points
+        .iter()
+        .filter(|p| !p.config.is_baseline())
+        .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
+        .expect("at least one proposed configuration")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::BF16;
+    use crate::workload::bert::power_trace;
+
+    #[test]
+    fn sweep_covers_all_configs_with_baseline_first() {
+        let coord = Coordinator::new(4);
+        let points = sweep_format(BF16, 16, &SweepOptions::default(), None, &coord);
+        assert_eq!(points.len(), 8); // ordered factorizations of 16
+        assert!(points[0].config.is_baseline());
+        assert!(points.iter().all(|p| p.area_um2 > 0.0));
+    }
+
+    #[test]
+    fn sweep_with_power_attaches_power_everywhere() {
+        let coord = Coordinator::new(4);
+        let trace = Arc::new(power_trace(BF16, 16, 64, 3));
+        let opts = SweepOptions { max_configs: 4, ..Default::default() };
+        let points = sweep_format(BF16, 16, &opts, Some(trace), &coord);
+        assert_eq!(points.len(), 4);
+        assert!(points.iter().all(|p| p.power_mw.unwrap() > 0.0));
+    }
+
+    #[test]
+    fn best_proposed_is_not_baseline() {
+        let coord = Coordinator::new(2);
+        let points = sweep_format(BF16, 8, &SweepOptions::default(), None, &coord);
+        let best = best_proposed(&points, |p| p.area_um2);
+        assert!(!best.config.is_baseline());
+    }
+}

@@ -1,0 +1,10 @@
+//! Design-space exploration: sweep every mixed-radix configuration of a
+//! multi-term adder (the paper's §IV methodology), attach workload-driven
+//! power, and render the paper's tables and figures with paper-vs-measured
+//! columns.
+
+pub mod explore;
+pub mod paper;
+pub mod report;
+
+pub use explore::{sweep_format, SweepOptions};

@@ -1,0 +1,113 @@
+//! The paper's published evaluation numbers (Table I and the §IV-A text),
+//! kept here so every report can print paper-vs-measured side by side.
+
+/// One Table I row: (format name, base area 10³µm², proposed area, proposed
+/// area config, area saving %, base power mW, proposed power, power config
+/// is the same as the area config in the paper, power saving %).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRow {
+    pub format: &'static str,
+    pub base_area_kum2: f64,
+    pub prop_area_kum2: f64,
+    pub config: &'static str,
+    pub area_save_pct: f64,
+    pub base_power_mw: f64,
+    pub prop_power_mw: f64,
+    pub power_save_pct: f64,
+}
+
+const fn row(
+    format: &'static str,
+    base_area_kum2: f64,
+    prop_area_kum2: f64,
+    config: &'static str,
+    area_save_pct: f64,
+    base_power_mw: f64,
+    prop_power_mw: f64,
+    power_save_pct: f64,
+) -> PaperRow {
+    PaperRow {
+        format,
+        base_area_kum2,
+        prop_area_kum2,
+        config,
+        area_save_pct,
+        base_power_mw,
+        prop_power_mw,
+        power_save_pct,
+    }
+}
+
+/// Table I(a): 16-term adders.
+pub const TABLE1_N16: [PaperRow; 5] = [
+    row("FP32", 8.87, 6.80, "8-2", 23.0, 3.03, 2.65, 13.0),
+    row("BFloat16", 2.92, 2.69, "8-2", 8.0, 1.61, 1.35, 16.0),
+    row("FP8_e4m3", 1.29, 1.23, "8-2", 4.0, 0.83, 0.69, 17.0),
+    row("FP8_e5m2", 1.17, 1.23, "2-4-2", -5.0, 0.62, 0.70, -13.0),
+    row("FP8_e6m1", 1.33, 1.36, "4-2-2", -2.0, 0.49, 0.54, -10.0),
+];
+
+/// Table I(b): 32-term adders.
+pub const TABLE1_N32: [PaperRow; 5] = [
+    row("FP32", 16.24, 14.02, "2-2-2-2-2", 14.0, 6.69, 5.78, 14.0),
+    row("BFloat16", 6.44, 5.50, "8-2-2", 15.0, 3.97, 2.92, 26.0),
+    row("FP8_e4m3", 3.02, 2.51, "8-2-2", 17.0, 1.85, 1.53, 17.0),
+    row("FP8_e5m2", 2.73, 2.44, "8-2-2", 11.0, 1.74, 1.44, 17.0),
+    row("FP8_e6m1", 2.80, 2.48, "8-2-2", 11.0, 0.76, 0.63, 18.0),
+];
+
+/// Table I(c): 64-term adders.
+pub const TABLE1_N64: [PaperRow; 5] = [
+    row("FP32", 32.51, 28.67, "2-2-2-4", 12.0, 13.26, 10.82, 19.0),
+    row("BFloat16", 12.84, 11.73, "2-4-2-2-2", 9.0, 7.30, 7.05, 4.0),
+    row("FP8_e4m3", 5.79, 5.09, "8-4-2", 12.0, 3.62, 3.01, 17.0),
+    row("FP8_e5m2", 5.34, 4.78, "8-8", 11.0, 3.35, 2.78, 17.0),
+    row("FP8_e6m1", 5.39, 4.86, "2-8-4", 10.0, 1.62, 1.35, 17.0),
+];
+
+/// Table I rows for a term count.
+pub fn table1(n: u32) -> Option<&'static [PaperRow; 5]> {
+    match n {
+        16 => Some(&TABLE1_N16),
+        32 => Some(&TABLE1_N32),
+        64 => Some(&TABLE1_N64),
+        _ => None,
+    }
+}
+
+/// Fig. 4 headline numbers (32-term BFloat16): best area config and
+/// saving, best power config and saving.
+pub const FIG4_BEST_AREA: (&str, f64) = ("4-4-2", 15.0);
+pub const FIG4_BEST_POWER: (&str, f64) = ("8-2-2", 26.0);
+
+/// Fig. 5 headline: 2-2-8 clocks 16.6 % faster than the baseline at equal
+/// pipeline depth.
+pub const FIG5_SPEEDUP_CONFIG: (&str, f64) = ("2-2-8", 16.6);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_savings_are_consistent_with_absolute_numbers() {
+        for rows in [&TABLE1_N16, &TABLE1_N32, &TABLE1_N64] {
+            for r in rows.iter() {
+                let area_save = 100.0 * (1.0 - r.prop_area_kum2 / r.base_area_kum2);
+                // The paper rounds to whole percent; allow 1.5 % slack.
+                assert!(
+                    (area_save - r.area_save_pct).abs() < 1.6,
+                    "{}: {} vs {}",
+                    r.format,
+                    area_save,
+                    r.area_save_pct
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(table1(32).is_some());
+        assert!(table1(8).is_none());
+    }
+}

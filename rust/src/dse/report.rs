@@ -1,0 +1,236 @@
+//! Paper-style report rendering: Fig. 4, Fig. 5 and Table I with
+//! paper-vs-measured columns (the reproduction contract is the *shape* —
+//! who wins, by roughly what factor — not absolute 28-nm numbers).
+
+use super::explore::{best_proposed, sweep_format, SweepOptions};
+use super::paper;
+use crate::coordinator::Coordinator;
+use crate::formats::{FpFormat, PAPER_FORMATS};
+use crate::hw::datapath::{build_adder, DatapathParams};
+use crate::hw::design::DesignPoint;
+use crate::hw::pipeline::{min_clock_ns, paper_stages, pipeline};
+use crate::hw::gates;
+use crate::arith::tree::{enumerate_configs, RadixConfig};
+use crate::arith::AccSpec;
+use crate::util::table::Table;
+use crate::workload::bert::power_trace;
+use crate::workload::Trace;
+use std::sync::Arc;
+
+/// Fig. 4: area and power of all 32-term BFloat16 configurations relative
+/// to the baseline.
+pub fn fig4(trace_vectors: usize, coord: &Coordinator) -> (Table, Vec<DesignPoint>) {
+    let fmt = crate::formats::BF16;
+    let trace = Arc::new(power_trace(fmt, 32, trace_vectors, 0xF16));
+    let points = sweep_format(fmt, 32, &SweepOptions::default(), Some(trace), coord);
+    let base = points[0].clone();
+    let mut t = Table::new(vec![
+        "config",
+        "area µm²",
+        "area Δ",
+        "power mW",
+        "power Δ",
+        "met 1GHz",
+    ]);
+    for p in &points {
+        let pw = p.power_mw.unwrap_or(0.0);
+        let bpw = base.power_mw.unwrap_or(1.0);
+        t.row(vec![
+            p.config.to_string(),
+            format!("{:.0}", p.area_um2),
+            format!("{:+.1}%", 100.0 * (p.area_um2 - base.area_um2) / base.area_um2),
+            format!("{pw:.2}"),
+            format!("{:+.1}%", 100.0 * (pw - bpw) / bpw),
+            if p.feasible { "yes".into() } else { format!("min {:.2} ns", p.clock_ns) },
+        ]);
+    }
+    (t, points)
+}
+
+/// Summarise Fig. 4 against the paper's headline (best-config savings).
+pub fn fig4_headline(points: &[DesignPoint]) -> String {
+    let base = &points[0];
+    let best_area = best_proposed(points, |p| p.area_um2);
+    let best_power = best_proposed(points, |p| p.power_mw.unwrap_or(f64::MAX));
+    let area_save = 100.0 * (1.0 - best_area.area_um2 / base.area_um2);
+    let power_save = 100.0
+        * (1.0 - best_power.power_mw.unwrap_or(0.0) / base.power_mw.unwrap_or(1.0));
+    format!(
+        "best area   : {} saves {:.1}%  (paper: {} saves {:.0}%)\n\
+         best power  : {} saves {:.1}%  (paper: {} saves {:.0}%)",
+        best_area.config,
+        area_save,
+        paper::FIG4_BEST_AREA.0,
+        paper::FIG4_BEST_AREA.1,
+        best_power.config,
+        power_save,
+        paper::FIG4_BEST_POWER.0,
+        paper::FIG4_BEST_POWER.1,
+    )
+}
+
+/// Fig. 5: area-vs-clock Pareto for 32-term BFloat16 at 1–4 stages.
+/// Returns one row per (config, stages, clock target) that met timing.
+pub fn fig5(coord: &Coordinator) -> Table {
+    let fmt = crate::formats::BF16;
+    let n = 32;
+    let clocks: Vec<f64> = (0..=14).map(|i| 0.8 + 0.2 * i as f64).collect();
+    let clocks_for_jobs = clocks.clone();
+    let mut configs = enumerate_configs(n);
+    configs.sort_by_key(|c| (c.levels(), c.to_string()));
+    let jobs: Vec<RadixConfig> = configs;
+    let rows = coord.run("fig5 sweep", jobs, move |cfg: RadixConfig| {
+        let params = DatapathParams::new(fmt, n, AccSpec::hw_default(fmt, n as usize));
+        let adder = build_adder(params, &cfg);
+        let mut out = Vec::new();
+        for stages in 1..=4u32 {
+            let minclk = min_clock_ns(&adder, stages);
+            for &t in &clocks_for_jobs {
+                if t >= minclk {
+                    if let Some(p) = pipeline(&adder, stages, t) {
+                        out.push((
+                            cfg.to_string(),
+                            stages,
+                            t,
+                            gates::ge_to_um2(p.total_area),
+                            minclk,
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut t = Table::new(vec!["clock ns", "best config", "stages", "area µm²", "min clk"]);
+    // For each clock target report the area-minimal design (paper Fig. 5's
+    // "most area efficient designs per clock target").
+    let flat: Vec<_> = rows.into_iter().flatten().collect();
+    let mut clocks_sorted = clocks.clone();
+    clocks_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for &c in &clocks_sorted {
+        if let Some(bestrow) = flat
+            .iter()
+            .filter(|r| (r.2 - c).abs() < 1e-9)
+            .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+        {
+            t.row(vec![
+                format!("{c:.1}"),
+                bestrow.0.clone(),
+                bestrow.1.to_string(),
+                format!("{:.0}", bestrow.3),
+                format!("{:.2}", bestrow.4),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 5 headline: fastest configuration at the paper's stage count vs
+/// the baseline's fastest clock at the same depth.
+pub fn fig5_speed_headline(coord: &Coordinator) -> String {
+    let fmt = crate::formats::BF16;
+    let n = 32;
+    let stages = paper_stages(fmt, n);
+    let mut configs = enumerate_configs(n);
+    configs.sort_by_key(|c| (c.levels(), c.to_string()));
+    let rows = coord.run("fig5 speed", configs, move |cfg: RadixConfig| {
+        let params = DatapathParams::new(fmt, n, AccSpec::hw_default(fmt, n as usize));
+        let adder = build_adder(params, &cfg);
+        (cfg.to_string(), cfg.is_baseline(), min_clock_ns(&adder, stages))
+    });
+    let base = rows.iter().find(|r| r.1).unwrap().2;
+    let fastest = rows
+        .iter()
+        .filter(|r| !r.1)
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .unwrap();
+    format!(
+        "fastest proposed @{stages} stages: {} at {:.2} ns vs baseline {:.2} ns \
+         ({:+.1}% clock; paper: {} is {:.1}% faster)",
+        fastest.0,
+        fastest.2,
+        base,
+        100.0 * (base - fastest.2) / base,
+        paper::FIG5_SPEEDUP_CONFIG.0,
+        paper::FIG5_SPEEDUP_CONFIG.1,
+    )
+}
+
+/// One measured Table I row.
+pub struct Table1Row {
+    pub format: FpFormat,
+    pub base: DesignPoint,
+    pub best_area: DesignPoint,
+    pub best_power: DesignPoint,
+}
+
+/// Table I for one term count: sweep all five formats with workload power.
+pub fn table1(n: u32, trace_vectors: usize, coord: &Coordinator) -> (Table, Vec<Table1Row>) {
+    let mut rows = Vec::new();
+    for fmt in PAPER_FORMATS {
+        let trace: Arc<Trace> =
+            Arc::new(power_trace(fmt, n as usize, trace_vectors, 0x7AB1 ^ n as u64));
+        let points = sweep_format(fmt, n, &SweepOptions::default(), Some(trace), coord);
+        let base = points[0].clone();
+        let best_area = best_proposed(&points, |p| p.area_um2).clone();
+        let best_power = best_proposed(&points, |p| p.power_mw.unwrap_or(f64::MAX)).clone();
+        rows.push(Table1Row { format: fmt, base, best_area, best_power });
+    }
+    let paper_rows = paper::table1(n);
+    let mut t = Table::new(vec![
+        "format",
+        "base µm²",
+        "best µm² (cfg)",
+        "save",
+        "paper save",
+        "base mW",
+        "best mW (cfg)",
+        "save",
+        "paper save",
+    ]);
+    for (i, r) in rows.iter().enumerate() {
+        let area_save = 100.0 * (1.0 - r.best_area.area_um2 / r.base.area_um2);
+        let power_save = 100.0
+            * (1.0 - r.best_power.power_mw.unwrap_or(0.0) / r.base.power_mw.unwrap_or(1.0));
+        let (psa, psp) = paper_rows
+            .map(|rows| (rows[i].area_save_pct, rows[i].power_save_pct))
+            .unwrap_or((f64::NAN, f64::NAN));
+        t.row(vec![
+            r.format.name.to_string(),
+            format!("{:.0}", r.base.area_um2),
+            format!("{:.0} ({})", r.best_area.area_um2, r.best_area.config),
+            format!("{area_save:+.0}%"),
+            format!("{psa:+.0}%"),
+            format!("{:.2}", r.base.power_mw.unwrap_or(0.0)),
+            format!("{:.2} ({})", r.best_power.power_mw.unwrap_or(0.0), r.best_power.config),
+            format!("{power_save:+.0}%"),
+            format!("{psp:+.0}%"),
+        ]);
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_produces_all_configs_and_headline() {
+        let coord = Coordinator::new(4);
+        let (table, points) = fig4(64, &coord);
+        assert_eq!(points.len(), 16);
+        let rendered = table.render();
+        assert!(rendered.contains("8-2-2"));
+        let headline = fig4_headline(&points);
+        assert!(headline.contains("paper"));
+    }
+
+    #[test]
+    fn table1_small_smoke() {
+        // N=8 is not a paper row but exercises the full path quickly.
+        let coord = Coordinator::new(4);
+        let (table, rows) = table1(8, 32, &coord);
+        assert_eq!(rows.len(), 5);
+        assert!(table.render().contains("FP8_e4m3"));
+    }
+}

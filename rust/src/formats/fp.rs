@@ -1,0 +1,344 @@
+//! Encoded floating-point values and decode/encode/convert helpers.
+
+use super::{FpFormat, SpecialsMode};
+
+/// Classification of a decoded value.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FpClass {
+    /// ±0 (raw exponent 0; denormals are flushed to zero — see module docs).
+    Zero,
+    /// A normal number `(-1)^s · 1.m · 2^(e-bias)`.
+    Normal,
+    /// ±Infinity (only in [`SpecialsMode::Ieee`] formats).
+    Inf,
+    /// Not-a-number.
+    Nan,
+}
+
+/// A floating-point value: raw bits plus its format.
+///
+/// `bits` holds the sign/exponent/mantissa fields packed MSB-first in the
+/// low `format.width()` bits, exactly as the hardware would see them.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Fp {
+    pub bits: u64,
+    pub format: FpFormat,
+}
+
+impl Fp {
+    /// Wrap raw bits (the upper bits beyond `format.width()` must be zero).
+    #[inline]
+    pub fn from_bits(bits: u64, format: FpFormat) -> Self {
+        debug_assert_eq!(bits >> format.width(), 0, "stray bits above the format width");
+        Fp { bits, format }
+    }
+
+    /// Positive zero.
+    #[inline]
+    pub fn zero(format: FpFormat) -> Self {
+        Fp { bits: 0, format }
+    }
+
+    /// The sign bit.
+    #[inline]
+    pub fn sign(&self) -> bool {
+        (self.bits >> (self.format.ebits + self.format.mbits)) & 1 == 1
+    }
+
+    /// Raw (biased) exponent field.
+    #[inline]
+    pub fn raw_exp(&self) -> i32 {
+        ((self.bits >> self.format.mbits) & self.format.exp_mask()) as i32
+    }
+
+    /// Mantissa field (without the hidden bit).
+    #[inline]
+    pub fn mant(&self) -> u64 {
+        self.bits & self.format.mant_mask()
+    }
+
+    /// Classify the value under the format's special-value rules.
+    pub fn class(&self) -> FpClass {
+        let e = self.raw_exp();
+        let m = self.mant();
+        match self.format.specials {
+            SpecialsMode::Ieee => {
+                if e == (self.format.exp_mask() as i32) {
+                    if m == 0 {
+                        FpClass::Inf
+                    } else {
+                        FpClass::Nan
+                    }
+                } else if e == 0 {
+                    FpClass::Zero // denormals flushed
+                } else {
+                    FpClass::Normal
+                }
+            }
+            SpecialsMode::NoInf => {
+                if e == (self.format.exp_mask() as i32) && m == self.format.mant_mask() {
+                    FpClass::Nan
+                } else if e == 0 {
+                    FpClass::Zero
+                } else {
+                    FpClass::Normal
+                }
+            }
+        }
+    }
+
+    /// Signed significand `(-1)^s · 1.m` as an integer scaled by `2^mbits`.
+    ///
+    /// Zero for [`FpClass::Zero`]; callers must handle Inf/NaN separately.
+    #[inline]
+    pub fn signed_sig(&self) -> i64 {
+        match self.class() {
+            FpClass::Zero => 0,
+            _ => {
+                let mag = ((1u64 << self.format.mbits) | self.mant()) as i64;
+                if self.sign() {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+        }
+    }
+
+    /// Exact conversion to `f64` (every paper format fits losslessly).
+    pub fn to_f64(&self) -> f64 {
+        match self.class() {
+            FpClass::Zero => {
+                if self.sign() {
+                    -0.0
+                } else {
+                    0.0
+                }
+            }
+            FpClass::Inf => {
+                if self.sign() {
+                    f64::NEG_INFINITY
+                } else {
+                    f64::INFINITY
+                }
+            }
+            FpClass::Nan => f64::NAN,
+            FpClass::Normal => {
+                let sig = self.signed_sig() as f64; // (-1)^s · 1.m · 2^mbits
+                let scale = self.raw_exp() - self.format.bias() - self.format.mbits as i32;
+                sig * pow2(scale)
+            }
+        }
+    }
+
+    /// Round an `f64` into the format (round-to-nearest-even, FTZ on
+    /// underflow, saturation per [`SpecialsMode`] on overflow).
+    pub fn from_f64(x: f64, format: FpFormat) -> Self {
+        if x.is_nan() {
+            return Self::nan(format);
+        }
+        let sign = x.is_sign_negative();
+        if x == 0.0 {
+            return Self::encode_sign_zero(sign, format);
+        }
+        if x.is_infinite() {
+            return Self::overflow(sign, format);
+        }
+        let mag = x.abs();
+        // Decompose: mag = frac · 2^exp2 with frac ∈ [1, 2)
+        let exp2 = mag.log2().floor() as i32;
+        // Guard against log2 edge cases by renormalizing explicitly.
+        let mut e2 = exp2;
+        let mut frac = mag * pow2(-e2);
+        if frac >= 2.0 {
+            frac *= 0.5;
+            e2 += 1;
+        } else if frac < 1.0 {
+            frac *= 2.0;
+            e2 -= 1;
+        }
+        debug_assert!((1.0..2.0).contains(&frac));
+        // Round mantissa to mbits (RNE) using the f64 representation.
+        let scaled = frac * pow2(format.mbits as i32); // in [2^mbits, 2^(mbits+1))
+        let mut mant = round_half_even(scaled);
+        let mut raw_e = e2 + format.bias();
+        if mant == (1u64 << (format.mbits + 1)) {
+            mant >>= 1;
+            raw_e += 1;
+        }
+        mant &= format.mant_mask();
+        if raw_e <= 0 {
+            return Self::encode_sign_zero(sign, format); // FTZ underflow
+        }
+        if raw_e > format.max_normal_exp()
+            || (raw_e == format.max_normal_exp() && mant > format.max_finite_mant())
+        {
+            return Self::overflow(sign, format);
+        }
+        Self::pack(sign, raw_e, mant, format)
+    }
+
+    /// The canonical NaN of the format.
+    pub fn nan(format: FpFormat) -> Self {
+        match format.specials {
+            SpecialsMode::Ieee => Self::pack(false, format.exp_mask() as i32, 1 << (format.mbits - 1).max(0), format),
+            SpecialsMode::NoInf => Self::pack(false, format.exp_mask() as i32, format.mant_mask(), format),
+        }
+    }
+
+    /// ±Infinity for IEEE formats; the saturated maximum finite value for
+    /// NoInf formats (OCP overflow behaviour).
+    pub fn overflow(sign: bool, format: FpFormat) -> Self {
+        match format.specials {
+            SpecialsMode::Ieee => Self::pack(sign, format.exp_mask() as i32, 0, format),
+            SpecialsMode::NoInf => {
+                Self::pack(sign, format.max_normal_exp(), format.max_finite_mant(), format)
+            }
+        }
+    }
+
+    /// Pack fields into bits.
+    #[inline]
+    pub fn pack(sign: bool, raw_exp: i32, mant: u64, format: FpFormat) -> Self {
+        debug_assert!(raw_exp >= 0 && raw_exp <= format.exp_mask() as i32);
+        debug_assert!(mant <= format.mant_mask());
+        let bits = ((sign as u64) << (format.ebits + format.mbits))
+            | ((raw_exp as u64) << format.mbits)
+            | mant;
+        Fp { bits, format }
+    }
+
+    fn encode_sign_zero(sign: bool, format: FpFormat) -> Self {
+        Self::pack(sign, 0, 0, format)
+    }
+
+    /// True if this is a finite value (zero or normal).
+    #[inline]
+    pub fn is_finite(&self) -> bool {
+        matches!(self.class(), FpClass::Zero | FpClass::Normal)
+    }
+}
+
+impl std::fmt::Debug for Fp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}({:#x} = {})", self.format.name, self.bits, self.to_f64())
+    }
+}
+
+/// Exact powers of two as f64 (handles the full exponent range we need).
+#[inline]
+pub fn pow2(e: i32) -> f64 {
+    // f64 covers 2^±1074 comfortably for every paper format.
+    f64::from_bits(if e >= -1022 && e <= 1023 {
+        (((e + 1023) as u64) << 52) as u64
+    } else {
+        return (2f64).powi(e);
+    })
+}
+
+/// Round a positive f64 to the nearest integer, ties to even.
+fn round_half_even(x: f64) -> u64 {
+    let floor = x.floor();
+    let frac = x - floor;
+    let f = floor as u64;
+    if frac > 0.5 {
+        f + 1
+    } else if frac < 0.5 {
+        f
+    } else if f % 2 == 0 {
+        f
+    } else {
+        f + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BF16, FP32, FP8_E4M3, FP8_E5M2, FP8_E6M1, PAPER_FORMATS};
+    use super::*;
+
+    #[test]
+    fn fp32_roundtrip_matches_native() {
+        // Every finite f32 we can feasibly sample must round-trip exactly
+        // through our FP32 codec (FTZ aside).
+        let samples = [
+            0.0f32, -0.0, 1.0, -1.0, 1.5, 0.1, 3.14159, -2.71828, 1e-30, 1e30, 123456.789,
+            f32::MAX, f32::MIN_POSITIVE,
+        ];
+        for &x in &samples {
+            let fp = Fp::from_f64(x as f64, FP32);
+            let back = fp.to_f64() as f32;
+            assert_eq!(back.to_bits(), x.to_bits(), "mismatch for {x}");
+        }
+    }
+
+    #[test]
+    fn fp32_bits_match_native_layout() {
+        let x = 3.5f32;
+        let fp = Fp::from_f64(x as f64, FP32);
+        assert_eq!(fp.bits as u32, x.to_bits());
+    }
+
+    #[test]
+    fn bf16_is_truncated_fp32_space() {
+        let fp = Fp::from_f64(1.0, BF16);
+        assert_eq!(fp.raw_exp(), 127);
+        assert_eq!(fp.mant(), 0);
+        assert_eq!(fp.to_f64(), 1.0);
+    }
+
+    #[test]
+    fn denormals_flush_to_zero() {
+        for fmt in PAPER_FORMATS {
+            // Smallest positive normal divided by 2 is subnormal -> FTZ.
+            let min_normal = pow2(1 - fmt.bias());
+            let fp = Fp::from_f64(min_normal / 2.0, fmt);
+            assert_eq!(fp.class(), FpClass::Zero, "{fmt}");
+            // A raw subnormal pattern decodes as zero.
+            let sub = Fp::pack(false, 0, fmt.mant_mask(), fmt);
+            assert_eq!(sub.class(), FpClass::Zero, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn ieee_specials() {
+        let inf = Fp::overflow(false, FP32);
+        assert_eq!(inf.class(), FpClass::Inf);
+        assert_eq!(inf.to_f64(), f64::INFINITY);
+        let nan = Fp::nan(FP8_E5M2);
+        assert_eq!(nan.class(), FpClass::Nan);
+    }
+
+    #[test]
+    fn noinf_saturates() {
+        // e4m3 overflow saturates to 448 (S.1111.110).
+        let sat = Fp::overflow(false, FP8_E4M3);
+        assert_eq!(sat.class(), FpClass::Normal);
+        assert_eq!(sat.to_f64(), 448.0);
+        let nan = Fp::nan(FP8_E4M3);
+        assert_eq!(nan.class(), FpClass::Nan);
+        // e6m1: max finite is 1.0 · 2^(63-31) = 2^32 (mantissa 0 at top exp,
+        // since mantissa all-ones (=1) is NaN).
+        let sat6 = Fp::overflow(false, FP8_E6M1);
+        assert_eq!(sat6.to_f64(), pow2(32));
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // BF16 mantissa has 7 bits; 1 + 2^-8 is exactly halfway between
+        // 1.0 (mant 0, even) and 1 + 2^-7 (mant 1, odd) -> rounds to 1.0.
+        let fp = Fp::from_f64(1.0 + pow2(-8), BF16);
+        assert_eq!(fp.to_f64(), 1.0);
+        // 1 + 3·2^-8 is halfway between mant 1 and mant 2 -> rounds to 2 (even).
+        let fp = Fp::from_f64(1.0 + 3.0 * pow2(-8), BF16);
+        assert_eq!(fp.mant(), 2);
+    }
+
+    #[test]
+    fn signed_sig() {
+        let fp = Fp::from_f64(-1.5, FP32);
+        assert_eq!(fp.signed_sig(), -(3i64 << 22));
+        let fp = Fp::from_f64(1.0, BF16);
+        assert_eq!(fp.signed_sig(), 1 << 7);
+    }
+}

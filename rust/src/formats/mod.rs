@@ -1,0 +1,193 @@
+//! Floating-point format definitions (paper Fig. 3).
+//!
+//! A format is parametric in exponent and mantissa width; the five concrete
+//! formats evaluated by the paper are provided as constants:
+//! FP32 (e8m23), BFloat16 (e8m7), FP8_e4m3, FP8_e5m2 and the corner-case
+//! FP8_e6m1 (large exponent range relative to the mantissa).
+//!
+//! Semantics notes (documented deviations, matching common fused-adder HLS
+//! practice and the paper's "corner cases … can be also encoded or skipped"):
+//!
+//! * **Denormals are flushed to zero** at decode (FTZ) and at encode (FTZ on
+//!   underflow). Exponent raw value 0 therefore always means ±0.
+//! * **Specials** follow the format's [`SpecialsMode`]:
+//!   [`SpecialsMode::Ieee`] (FP32/BF16/e5m2) reserves the all-ones exponent
+//!   for Inf/NaN; [`SpecialsMode::NoInf`] (e4m3, e6m1) reserves only the
+//!   single all-ones pattern `S.1..1.1..1` for NaN (OCP-style) and has no
+//!   infinities — overflow saturates to the largest finite value.
+
+mod fp;
+pub use fp::{Fp, FpClass};
+
+/// A binary floating-point format `(-1)^s · 1.m · 2^(e - bias)`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Exponent field width in bits (2..=11 supported).
+    pub ebits: u32,
+    /// Mantissa (fraction) field width in bits (1..=52 supported).
+    pub mbits: u32,
+    /// How the format encodes Inf/NaN.
+    pub specials: SpecialsMode,
+    /// Short human-readable name ("FP32", "FP8_e4m3", ...).
+    pub name: &'static str,
+}
+
+/// How a format encodes non-finite values.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum SpecialsMode {
+    /// IEEE-754 style: exponent all-ones is Inf (mantissa 0) or NaN.
+    Ieee,
+    /// OCP FP8 e4m3 style: only `exp=all-ones, mant=all-ones` is NaN;
+    /// there is no Inf and overflow saturates to the maximum finite value.
+    NoInf,
+}
+
+impl FpFormat {
+    pub const fn new(name: &'static str, ebits: u32, mbits: u32, specials: SpecialsMode) -> Self {
+        FpFormat { ebits, mbits, specials, name }
+    }
+
+    /// Exponent bias `2^(ebits-1) - 1`.
+    #[inline]
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Total encoded width in bits (sign + exponent + mantissa).
+    #[inline]
+    pub const fn width(&self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// Largest raw (biased) exponent value that encodes a *normal* number.
+    #[inline]
+    pub const fn max_normal_exp(&self) -> i32 {
+        match self.specials {
+            // all-ones exponent reserved for Inf/NaN
+            SpecialsMode::Ieee => (1 << self.ebits) - 2,
+            // all-ones exponent is normal except the single NaN pattern
+            SpecialsMode::NoInf => (1 << self.ebits) - 1,
+        }
+    }
+
+    /// Mantissa of the largest finite value (used for overflow saturation
+    /// in [`SpecialsMode::NoInf`] formats, where the all-ones mantissa at
+    /// the top exponent is NaN).
+    #[inline]
+    pub const fn max_finite_mant(&self) -> u64 {
+        match self.specials {
+            SpecialsMode::Ieee => (1 << self.mbits) - 1,
+            SpecialsMode::NoInf => (1 << self.mbits) - 2,
+        }
+    }
+
+    /// Number of representable raw exponent values for normal numbers
+    /// (1 ..= max_normal_exp), i.e. the worst-case alignment distance + 1.
+    #[inline]
+    pub const fn exp_range(&self) -> u32 {
+        self.max_normal_exp() as u32
+    }
+
+    /// Significand width including the hidden bit (`1.m`).
+    #[inline]
+    pub const fn sig_bits(&self) -> u32 {
+        self.mbits + 1
+    }
+
+    /// Bit mask for the mantissa field.
+    #[inline]
+    pub const fn mant_mask(&self) -> u64 {
+        (1u64 << self.mbits) - 1
+    }
+
+    /// Bit mask for the exponent field.
+    #[inline]
+    pub const fn exp_mask(&self) -> u64 {
+        (1u64 << self.ebits) - 1
+    }
+}
+
+impl std::fmt::Debug for FpFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}(e{}m{})", self.name, self.ebits, self.mbits)
+    }
+}
+
+impl std::fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name)
+    }
+}
+
+/// IEEE-754 binary32.
+pub const FP32: FpFormat = FpFormat::new("FP32", 8, 23, SpecialsMode::Ieee);
+/// Google brain-float 16.
+pub const BF16: FpFormat = FpFormat::new("BFloat16", 8, 7, SpecialsMode::Ieee);
+/// OCP FP8 E4M3 (no Inf, single NaN).
+pub const FP8_E4M3: FpFormat = FpFormat::new("FP8_e4m3", 4, 3, SpecialsMode::NoInf);
+/// OCP FP8 E5M2 (IEEE-style specials).
+pub const FP8_E5M2: FpFormat = FpFormat::new("FP8_e5m2", 5, 2, SpecialsMode::Ieee);
+/// The paper's corner-case format: 6-bit exponent, 1-bit mantissa.
+pub const FP8_E6M1: FpFormat = FpFormat::new("FP8_e6m1", 6, 1, SpecialsMode::NoInf);
+
+/// The five formats evaluated in the paper (Fig. 3 + Table I).
+pub const PAPER_FORMATS: [FpFormat; 5] = [FP32, BF16, FP8_E4M3, FP8_E5M2, FP8_E6M1];
+
+/// Look a paper format up by (case-insensitive) name.
+pub fn format_by_name(name: &str) -> Option<FpFormat> {
+    let lower = name.to_ascii_lowercase();
+    PAPER_FORMATS
+        .into_iter()
+        .find(|f| f.name.to_ascii_lowercase() == lower || matches_alias(&lower, f))
+}
+
+fn matches_alias(lower: &str, f: &FpFormat) -> bool {
+    match f.name {
+        "FP32" => lower == "f32" || lower == "fp32" || lower == "float32",
+        "BFloat16" => lower == "bf16" || lower == "bfloat16",
+        "FP8_e4m3" => lower == "e4m3" || lower == "fp8e4m3",
+        "FP8_e5m2" => lower == "e5m2" || lower == "fp8e5m2",
+        "FP8_e6m1" => lower == "e6m1" || lower == "fp8e6m1",
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_formats_match_fig3() {
+        // Fig. 3: FP32 = 1/8/23, BF16 = 1/8/7, FP8 variants 1/4/3, 1/5/2, 1/6/1.
+        assert_eq!((FP32.ebits, FP32.mbits, FP32.width()), (8, 23, 32));
+        assert_eq!((BF16.ebits, BF16.mbits, BF16.width()), (8, 7, 16));
+        assert_eq!((FP8_E4M3.ebits, FP8_E4M3.mbits, FP8_E4M3.width()), (4, 3, 8));
+        assert_eq!((FP8_E5M2.ebits, FP8_E5M2.mbits, FP8_E5M2.width()), (5, 2, 8));
+        assert_eq!((FP8_E6M1.ebits, FP8_E6M1.mbits, FP8_E6M1.width()), (6, 1, 8));
+    }
+
+    #[test]
+    fn biases() {
+        assert_eq!(FP32.bias(), 127);
+        assert_eq!(BF16.bias(), 127);
+        assert_eq!(FP8_E4M3.bias(), 7);
+        assert_eq!(FP8_E5M2.bias(), 15);
+        assert_eq!(FP8_E6M1.bias(), 31);
+    }
+
+    #[test]
+    fn max_normal_exponents() {
+        assert_eq!(FP32.max_normal_exp(), 254); // 255 reserved
+        assert_eq!(FP8_E4M3.max_normal_exp(), 15); // NoInf keeps all-ones
+        assert_eq!(FP8_E5M2.max_normal_exp(), 30);
+        assert_eq!(FP8_E6M1.max_normal_exp(), 63);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(format_by_name("bf16").unwrap().name, "BFloat16");
+        assert_eq!(format_by_name("FP32").unwrap().name, "FP32");
+        assert_eq!(format_by_name("e4m3").unwrap().name, "FP8_e4m3");
+        assert!(format_by_name("fp64").is_none());
+    }
+}

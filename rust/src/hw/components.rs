@@ -1,0 +1,179 @@
+//! Parameterized datapath component cost models (unit-gate units).
+//!
+//! Every function returns a [`Comp`] — area in GE and propagation delay in
+//! τ — for one *schedulable* component. Big structures (barrel shifters,
+//! CSA trees, max trees, prefix adders) are decomposed by the netlist
+//! builders into per-stage components so the pipeline scheduler can place
+//! register cuts inside them, which is exactly the freedom HLS has.
+
+use super::gates::*;
+
+/// Area/delay of one component instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Comp {
+    pub area: f64,
+    pub delay: f64,
+}
+
+impl Comp {
+    pub const fn new(area: f64, delay: f64) -> Self {
+        Comp { area, delay }
+    }
+}
+
+/// w-bit 2:1 multiplexer row.
+pub fn mux2(w: u32) -> Comp {
+    Comp::new(A_MUX2 * w as f64, D_MUX2)
+}
+
+/// w-bit XOR row (conditional inversion for sign handling).
+pub fn xor_row(w: u32) -> Comp {
+    Comp::new(A_XOR2 * w as f64, D_XOR2)
+}
+
+/// w-bit magnitude comparator (parallel-prefix style): delay grows with
+/// log(w), area linear with a prefix-merge overhead.
+pub fn comparator(w: u32) -> Comp {
+    let levels = clog2(w.max(2)) as f64;
+    Comp::new(4.5 * w as f64 + 1.5 * w as f64 * levels / 2.0, D_XOR2 + levels * D_AND2)
+}
+
+/// w-bit maximum unit: comparator + select mux (one `max` node of the
+/// exponent tree in Fig. 1 / eq. 8).
+pub fn max2(w: u32) -> Comp {
+    let c = comparator(w);
+    let m = mux2(w);
+    Comp::new(c.area + m.area, c.delay + m.delay)
+}
+
+/// w-bit subtractor (`λ − e`, always ≥ 0 by construction): a parallel-prefix
+/// adder with inverted operand.
+pub fn subtractor(w: u32) -> Comp {
+    let a = prefix_adder(w);
+    Comp::new(a.area + A_INV * w as f64, a.delay + D_INV)
+}
+
+/// w-bit parallel-prefix (Sklansky-ish) adder: pre/post-processing linear,
+/// prefix network w/2 cells per level.
+pub fn prefix_adder(w: u32) -> Comp {
+    let levels = clog2(w.max(2)) as f64;
+    let pre = 2.0 * w as f64; // p/g generation
+    let prefix = 0.75 * w as f64 * levels / 2.0; // sparse (Brent-Kung-ish) tree
+    let post = A_XOR2 * w as f64; // sum XOR
+    Comp::new(pre + prefix + post, D_XOR2 + levels * D_AND2 + D_XOR2)
+}
+
+/// One stage of a logarithmic barrel shifter on a w-bit bus: a mux row plus
+/// the sticky-OR gates collecting the bits shifted out at this stage.
+pub fn shift_stage(w: u32, sticky: bool) -> Comp {
+    let base = mux2(w);
+    if sticky {
+        // Sticky rails are modeled numerically but the paper's HLS C++
+        // uses plain `>>` (truncation without sticky), so the hardware
+        // model prices the bare mux row. Kept as a parameter so sticky-
+        // collecting designs can be costed in ablations.
+        base
+    } else {
+        base
+    }
+}
+
+/// Number of mux stages a right-shifter needs: shift distances up to
+/// `max_shift`, but anything ≥ datapath width saturates to the sticky/fill
+/// path, so stages are bounded by the bus width too.
+pub fn shifter_stages(max_shift: u32, w: u32) -> u32 {
+    let s = max_shift.min(w);
+    if s == 0 {
+        return 0;
+    }
+    clog2(s + 1)
+}
+
+/// w-bit 3:2 carry-save compressor row (one CSA level for one operand trio).
+pub fn csa_row(w: u32) -> Comp {
+    Comp::new(A_FA * w as f64, D_FA_SUM)
+}
+
+/// Number of 3:2 compressor levels to reduce `n` operands to 2 (Wallace).
+pub fn csa_levels(n: u32) -> u32 {
+    let mut rows = n;
+    let mut levels = 0;
+    while rows > 2 {
+        rows = rows - (rows / 3); // each full trio becomes 2
+        levels += 1;
+    }
+    levels
+}
+
+/// w-bit leading-zero counter.
+pub fn lzc(w: u32) -> Comp {
+    let levels = clog2(w.max(2)) as f64;
+    Comp::new(3.0 * w as f64, levels * (D_NAND2 + D_MUX2) * 0.75)
+}
+
+/// w-bit incrementer (rounding +1 on the mantissa): half-adder chain with
+/// fast carry (treated as prefix).
+pub fn incrementer(w: u32) -> Comp {
+    let levels = clog2(w.max(2)) as f64;
+    Comp::new(A_HA * w as f64, levels * D_AND2 + D_XOR2)
+}
+
+/// Unpack stage per input term: field extraction, hidden-bit insertion and
+/// two's-complement conditional inversion of the significand.
+pub fn unpack(sig_w: u32) -> Comp {
+    Comp::new(A_XOR2 * sig_w as f64 + 2.0, D_XOR2 + D_AND2)
+}
+
+/// Final pack stage: sign/exponent/mantissa field assembly with special
+/// handling (overflow/underflow muxes).
+pub fn pack(width: u32) -> Comp {
+    Comp::new(A_MUX2 * width as f64 * 2.0, 2.0 * D_MUX2)
+}
+
+/// Pipeline register of `bits` (area only; timing handled as stage budget).
+pub fn register_area(bits: u32) -> f64 {
+    A_DFF * bits as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_scale_with_width() {
+        assert!(max2(8).area > max2(4).area);
+        assert!(prefix_adder(32).delay > prefix_adder(8).delay);
+        assert!(subtractor(8).area > prefix_adder(8).area);
+    }
+
+    #[test]
+    fn csa_levels_match_wallace() {
+        assert_eq!(csa_levels(2), 0);
+        assert_eq!(csa_levels(3), 1);
+        assert_eq!(csa_levels(4), 2);
+        assert_eq!(csa_levels(8), 4); // 8→6→4→3→2
+        assert_eq!(csa_levels(32), 8);
+    }
+
+    #[test]
+    fn shifter_stage_count_saturates_at_width() {
+        // BF16 exponent range 253, but a 21-bit bus only needs 5 stages
+        // (shifts ≥ 21 all collapse to the sticky path, handled by compare).
+        assert_eq!(shifter_stages(253, 21), 5);
+        assert_eq!(shifter_stages(7, 64), 3);
+        assert_eq!(shifter_stages(0, 8), 0);
+    }
+
+    #[test]
+    fn register_area_is_linear() {
+        assert_eq!(register_area(10), 45.0);
+    }
+}
+
+/// The compact (slower, smaller) implementation variant of an adder-like
+/// component — ripple/carry-skip instead of parallel-prefix. HLS selects it
+/// when the schedule leaves slack (Catapult's implementation selection);
+/// the pipeline scheduler applies the same downgrade under slack.
+pub fn compact_variant(fast: Comp) -> Comp {
+    Comp::new(fast.area * 0.45, fast.delay * 2.2)
+}

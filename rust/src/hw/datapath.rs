@@ -1,0 +1,432 @@
+//! Netlist builders for complete multi-term adders: the baseline radix-N
+//! architecture (Fig. 1) and mixed-radix `⊙` operator trees (Fig. 2),
+//! sharing one normalization/rounding tail (paper §IV-A).
+//!
+//! Components are decomposed to scheduler granularity (individual shifter
+//! stages, CSA levels, max-tree levels, prefix-adder instances) so the
+//! pipeline scheduler can cut anywhere HLS could.
+//!
+//! Structural notes the models encode:
+//!
+//! * a radix-2 `⊙` node needs only **one** shifter: `max(λi,λj)` minus the
+//!   max is zero, so the smaller-exponent operand is swapped into the
+//!   single shift path (comparator + swap muxes);
+//! * fraction widths grow by `clog2(r)` per tree level (carry headroom);
+//! * shifter depth saturates at the datapath width — shifts beyond it
+//!   collapse into the sticky bit, which is what bounds the hardware even
+//!   though the exponent range is much larger;
+//! * the baseline is exactly the single radix-N node of the same generator
+//!   (the paper's observation in §III-C).
+
+use super::components as comp;
+use super::gates::clog2;
+use super::netlist::{Netlist, NodeId};
+use crate::arith::tree::RadixConfig;
+use crate::arith::AccSpec;
+use crate::formats::FpFormat;
+
+/// Add a multi-level component as a chain of `levels` schedulable
+/// sub-nodes (evenly split area/delay). HLS can retime through the prefix
+/// levels of adders, comparators and LZCs, so the pipeline scheduler must
+/// be able to cut inside them; the inter-level bus width is `bus_bits`.
+fn add_chain(
+    nl: &mut Netlist,
+    tag: &str,
+    region: &str,
+    total: comp::Comp,
+    levels: u32,
+    bus_bits: u32,
+    feeds: &[(NodeId, u32)],
+) -> NodeId {
+    let k = levels.max(1);
+    let sub = comp::Comp::new(total.area / k as f64, total.delay / k as f64);
+    let compact = comp::compact_variant(sub);
+    let mut prev: Option<NodeId> = None;
+    for i in 0..k {
+        let id = nl.add_with_alt(format!("{tag}.p{i}"), sub, compact);
+        nl.set_region(id, format!("{region}.p{i}"));
+        if let Some(p) = prev {
+            nl.connect(p, id, bus_bits);
+        } else {
+            for &(src, bits) in feeds {
+                nl.connect(src, id, bits);
+            }
+        }
+        prev = Some(id);
+    }
+    prev.unwrap()
+}
+
+/// A partial alignment state inside the netlist: where its exponent and
+/// fraction buses come from, and the fraction width.
+#[derive(Clone, Copy, Debug)]
+pub struct BusPair {
+    pub exp: NodeId,
+    pub frac: NodeId,
+    pub frac_w: u32,
+}
+
+/// Build parameters shared by all adder netlists.
+#[derive(Clone, Copy, Debug)]
+pub struct DatapathParams {
+    pub fmt: FpFormat,
+    pub n_terms: u32,
+    /// Guard (fractional extension) bits — [`AccSpec::f`] of the numeric
+    /// model, bounding the alignment window exactly as in the simulator.
+    pub guard: u32,
+}
+
+impl DatapathParams {
+    pub fn new(fmt: FpFormat, n_terms: u32, spec: AccSpec) -> Self {
+        DatapathParams { fmt, n_terms, guard: spec.f }
+    }
+
+    /// Leaf fraction width: signed significand plus guard bits.
+    pub fn leaf_frac_w(&self) -> u32 {
+        self.fmt.sig_bits() + 1 + self.guard
+    }
+
+    /// Worst-case alignment distance (full normal exponent range).
+    pub fn max_shift(&self) -> u32 {
+        (self.fmt.max_normal_exp() - 1) as u32
+    }
+}
+
+/// Complete adder netlist plus handles used by diagnostics.
+pub struct AdderNetlist {
+    pub nl: Netlist,
+    pub params: DatapathParams,
+    pub config: RadixConfig,
+}
+
+/// Build the full adder netlist for a mixed-radix configuration (the
+/// baseline is `RadixConfig::baseline(n)`), including unpack and the shared
+/// normalize/round tail.
+pub fn build_adder(params: DatapathParams, config: &RadixConfig) -> AdderNetlist {
+    assert_eq!(config.terms(), params.n_terms, "config width mismatch");
+    let mut nl = Netlist::new();
+    let fmt = params.fmt;
+
+    // Primary inputs + unpack (field split, hidden bit, 2's complement).
+    let mut level: Vec<BusPair> = (0..params.n_terms)
+        .map(|i| {
+            let input = nl.input(format!("in.{i}"));
+            let unp = nl.add(format!("unpack.{i}"), comp::unpack(fmt.sig_bits()));
+            nl.set_region(unp, "unpack");
+            nl.connect(input, unp, fmt.width());
+            BusPair { exp: unp, frac: unp, frac_w: params.leaf_frac_w() }
+        })
+        .collect();
+
+    // Operator levels.
+    for (li, &r) in config.radices().iter().enumerate() {
+        let mut next = Vec::with_capacity(level.len() / r as usize);
+        for (gi, group) in level.chunks(r as usize).enumerate() {
+            let tag = format!("L{li}.g{gi}");
+            let out = if r == 2 {
+                radix2_node(&mut nl, &params, &tag, group[0], group[1])
+            } else {
+                radix_r_node(&mut nl, &params, &tag, group)
+            };
+            next.push(out);
+        }
+        level = next;
+    }
+    debug_assert_eq!(level.len(), 1);
+
+    // Shared normalization/rounding tail.
+    normalize_tail(&mut nl, &params, level[0]);
+
+    let mut out = AdderNetlist { nl, params, config: config.clone() };
+    out.nl.schedule_asap();
+    out
+}
+
+/// Radix-2 `⊙` node with the swap + single-shifter structure.
+fn radix2_node(
+    nl: &mut Netlist,
+    p: &DatapathParams,
+    tag: &str,
+    a: BusPair,
+    b: BusPair,
+) -> BusPair {
+    let e = p.fmt.ebits;
+    let w_in = a.frac_w.max(b.frac_w);
+    let w_out = w_in + 1;
+
+    // λi − λj: ONE subtractor provides both |diff| (after conditional
+    // inversion) and the swap control (its sign) — the comparator is free.
+    let diff_raw = add_chain(
+        nl,
+        &format!("op2.{tag}.diff"),
+        &format!("op2.{tag}.diff"),
+        comp::subtractor(e),
+        clog2(e.max(2)),
+        2 * e,
+        &[(a.exp, e), (b.exp, e)],
+    );
+    let diff = nl.add(format!("op2.{tag}.absdiff"), comp::xor_row(e));
+    nl.connect(diff_raw, diff, e);
+    let cmp = diff_raw; // sign bit drives the muxes
+    let emax = nl.add(format!("op2.{tag}.emax"), comp::mux2(e));
+    nl.connect(cmp, emax, 1);
+    nl.connect(a.exp, emax, e);
+    nl.connect(b.exp, emax, e);
+
+    // Swap muxes route the smaller-exponent fraction into the shifter.
+    let swap = nl.add(format!("op2.{tag}.swap"), comp::mux2(2 * w_in));
+    nl.connect(cmp, swap, 1);
+    nl.connect(a.frac, swap, a.frac_w);
+    nl.connect(b.frac, swap, b.frac_w);
+
+    // One logarithmic right-shifter (arithmetic, sticky-collecting).
+    let stages = comp::shifter_stages(p.max_shift(), w_in);
+    let mut prev = swap;
+    for s in 0..stages {
+        let st = nl.add(format!("op2.{tag}.shift.s{s}"), comp::shift_stage(w_in, true));
+        nl.connect(prev, st, w_in);
+        if s == 0 {
+            nl.connect(diff, st, clog2(p.max_shift() + 1));
+        }
+        prev = st;
+    }
+
+    // Plain two-operand addition (o_i + o_j); the prefix levels are
+    // individually schedulable (internal carry state is ~2w wide).
+    let add = add_chain(
+        nl,
+        &format!("op2.{tag}.add"),
+        &format!("op2.{tag}.add"),
+        comp::prefix_adder(w_out),
+        clog2(w_out.max(2)),
+        2 * w_out,
+        &[(prev, w_in), (swap, w_in)],
+    );
+    BusPair { exp: emax, frac: add, frac_w: w_out }
+}
+
+/// Radix-r (r ≥ 3) `⊙` node: max tree, per-input subtract + shift, CSA
+/// compression, final CPA. Structurally the baseline of Fig. 1 over its
+/// `r` inputs.
+fn radix_r_node(
+    nl: &mut Netlist,
+    p: &DatapathParams,
+    tag: &str,
+    inputs: &[BusPair],
+) -> BusPair {
+    let e = p.fmt.ebits;
+    let r = inputs.len() as u32;
+    let w_in = inputs.iter().map(|b| b.frac_w).max().unwrap();
+    let w_out = w_in + clog2(r);
+
+    // Max-exponent tree: ceil(log2 r) levels of max2 units.
+    let mut frontier: Vec<NodeId> = inputs.iter().map(|b| b.exp).collect();
+    let mut lvl = 0;
+    while frontier.len() > 1 {
+        let mut next = Vec::with_capacity(frontier.len().div_ceil(2));
+        for pair in frontier.chunks(2) {
+            if pair.len() == 2 {
+                let mx = nl.add_with_alt(
+                    format!("opr.{tag}.max.l{lvl}"),
+                    comp::max2(e),
+                    comp::compact_variant(comp::max2(e)),
+                );
+                nl.set_region(mx, format!("opr.{tag}.max.l{lvl}"));
+                nl.connect(pair[0], mx, e);
+                nl.connect(pair[1], mx, e);
+                next.push(mx);
+            } else {
+                next.push(pair[0]);
+            }
+        }
+        frontier = next;
+        lvl += 1;
+    }
+    let emax = frontier[0];
+
+    // Per-input alignment: subtract + logarithmic shifter.
+    let stages = comp::shifter_stages(p.max_shift(), w_in);
+    let mut aligned = Vec::with_capacity(inputs.len());
+    for (i, inp) in inputs.iter().enumerate() {
+        let sub = add_chain(
+            nl,
+            &format!("opr.{tag}.sub.{i}"),
+            &format!("opr.{tag}.sub"),
+            comp::subtractor(e),
+            clog2(e.max(2)),
+            2 * e,
+            &[(emax, e), (inp.exp, e)],
+        );
+        let mut prev = inp.frac;
+        for s in 0..stages {
+            let st = nl.add(format!("opr.{tag}.shift.{i}.s{s}"), comp::shift_stage(w_in, true));
+            nl.set_region(st, format!("opr.{tag}.shift.s{s}"));
+            nl.connect(prev, st, w_in);
+            if s == 0 {
+                nl.connect(sub, st, clog2(p.max_shift() + 1));
+            }
+            prev = st;
+        }
+        aligned.push(prev);
+    }
+
+    // CSA reduction to two operands (Wallace levels), then the CPA.
+    // `ops` is a multiset of operand buses: duplicates mean several buses
+    // (sum + carry vectors) leave the same scheduling node.
+    let mut ops = aligned;
+    let mut level_idx = 0;
+    while ops.len() > 2 {
+        let k = ops.len();
+        let trios = (k / 3) as u32;
+        // One scheduling node models all the level's 3:2 compressors.
+        let mut row_cost = comp::csa_row(w_out);
+        row_cost.area *= trios as f64;
+        let row = nl.add(format!("opr.{tag}.csa.l{level_idx}"), row_cost);
+        let mut next = Vec::with_capacity(k - trios as usize);
+        for (i, &op) in ops.iter().enumerate() {
+            if (i as u32) < 3 * trios {
+                nl.connect(op, row, w_out);
+            } else {
+                next.push(op); // leftover operand passes through
+            }
+        }
+        // sum + carry buses per trio continue to the next level.
+        for _ in 0..2 * trios {
+            next.push(row);
+        }
+        ops = next;
+        level_idx += 1;
+    }
+    // Duplicate feed edges are deliberate: sum + carry buses both cross
+    // any pipeline cut between the last CSA level and the CPA.
+    let feeds: Vec<(NodeId, u32)> = ops.iter().map(|&o| (o, w_out)).collect();
+    let cpa = add_chain(
+        nl,
+        &format!("opr.{tag}.cpa"),
+        &format!("opr.{tag}.cpa"),
+        comp::prefix_adder(w_out),
+        clog2(w_out.max(2)),
+        2 * w_out,
+        &feeds,
+    );
+    BusPair { exp: emax, frac: cpa, frac_w: w_out }
+}
+
+/// Shared normalize + round tail: LZC, left shift, RNE increment, pack,
+/// exponent adjust.
+fn normalize_tail(nl: &mut Netlist, p: &DatapathParams, root: BusPair) {
+    let w = root.frac_w;
+    let fmt = p.fmt;
+    // Sign/magnitude recovery of the two's-complement sum.
+    let abs = nl.add("norm.abs", comp::xor_row(w));
+    nl.connect(root.frac, abs, w);
+    let lzc = add_chain(nl, "norm.lzc", "norm.lzc", comp::lzc(w), clog2(w.max(2)), w, &[(abs, w)]);
+    // Left normalization shifter.
+    let stages = comp::shifter_stages(w, w);
+    let mut prev = abs;
+    for s in 0..stages {
+        let st = nl.add(format!("norm.shift.s{s}"), comp::shift_stage(w, false));
+        nl.connect(prev, st, w);
+        if s == 0 {
+            nl.connect(lzc, st, clog2(w + 1));
+        }
+        prev = st;
+    }
+    // Exponent adjust: λ + msb-position − guard.
+    let eadj = add_chain(
+        nl,
+        "norm.eadj",
+        "norm.eadj",
+        comp::subtractor(fmt.ebits + 2),
+        clog2(fmt.ebits.max(2)),
+        2 * (fmt.ebits + 2),
+        &[(root.exp, fmt.ebits), (lzc, clog2(w + 1))],
+    );
+    // RNE rounding increment on the mantissa.
+    let rnd = add_chain(
+        nl,
+        "norm.round",
+        "norm.round",
+        comp::incrementer(fmt.mbits + 2),
+        clog2((fmt.mbits + 2).max(2)),
+        fmt.mbits + 2,
+        &[(prev, fmt.mbits + 2)],
+    );
+    // Final field assembly with overflow/underflow handling.
+    let pk = nl.add("norm.pack", comp::pack(fmt.width()));
+    nl.connect(rnd, pk, fmt.mbits + 1);
+    nl.connect(eadj, pk, fmt.ebits + 2);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{BF16, FP32};
+
+    fn params(fmt: FpFormat, n: u32) -> DatapathParams {
+        DatapathParams::new(fmt, n, AccSpec::hw_default(fmt, n as usize))
+    }
+
+    #[test]
+    fn baseline_netlist_builds_and_schedules() {
+        let p = params(BF16, 32);
+        let adder = build_adder(p, &RadixConfig::baseline(32));
+        assert!(adder.nl.area() > 0.0);
+        assert!(adder.nl.critical_path() > 0.0);
+        // 32 shifters worth of mux stages + one CSA tree must exist.
+        assert!(adder.nl.area_of("opr") > adder.nl.area_of("norm"));
+    }
+
+    #[test]
+    fn tree_configs_build_for_all_radix_mixes() {
+        let p = params(BF16, 32);
+        for cfg in ["2-2-2-2-2", "8-2-2", "4-4-2", "2-2-8", "16-2", "4-8", "32"] {
+            let c: RadixConfig = cfg.parse().unwrap();
+            let adder = build_adder(p, &c);
+            assert!(adder.nl.area() > 0.0, "{cfg}");
+        }
+    }
+
+    #[test]
+    fn radix2_nodes_use_single_shifter() {
+        // A 2-2-...-2 tree has N-1 nodes, each with ONE shifter chain; the
+        // baseline has N parallel shifters. Compare stage-node counts.
+        let p = params(BF16, 16);
+        let bin = build_adder(p, &RadixConfig::binary(16).unwrap());
+        let base = build_adder(p, &RadixConfig::baseline(16));
+        let count = |nl: &Netlist, pat: &str| {
+            nl.nodes.iter().filter(|n| n.kind.contains(pat) && n.kind.contains("shift.")).count()
+        };
+        let bin_shift_stages = count(&bin.nl, "op2");
+        let base_shift_stages = count(&base.nl, "opr");
+        assert!(
+            bin_shift_stages < base_shift_stages,
+            "binary tree {bin_shift_stages} stages vs baseline {base_shift_stages}"
+        );
+    }
+
+    #[test]
+    fn wider_formats_cost_more() {
+        let bf = build_adder(params(BF16, 16), &RadixConfig::baseline(16));
+        let fp = build_adder(params(FP32, 16), &RadixConfig::baseline(16));
+        assert!(fp.nl.area() > 2.0 * bf.nl.area());
+    }
+
+    #[test]
+    fn fraction_widths_grow_with_levels() {
+        let p = params(BF16, 8);
+        // Leaf width 9+16? = sig(8)+1+guard; after three radix-2 levels +3.
+        let leaf = p.leaf_frac_w();
+        let cfg = RadixConfig::binary(8).unwrap();
+        let adder = build_adder(p, &cfg);
+        // The final CPA before normalize must be wider than the leaf.
+        let norm_abs_width_proxy = adder
+            .nl
+            .nodes
+            .iter()
+            .find(|n| n.kind == "norm.abs")
+            .map(|n| n.area / super::super::gates::A_XOR2)
+            .unwrap();
+        assert!(norm_abs_width_proxy as u32 > leaf);
+    }
+}

@@ -1,0 +1,113 @@
+//! One-stop design evaluation: build the netlist, pipeline it at the
+//! paper's operating point, and (optionally) run a workload trace through
+//! the activity simulator — producing the `(area µm², power mW)` pairs the
+//! paper's tables and figures report.
+
+use super::datapath::{build_adder, DatapathParams};
+use super::gates;
+use super::pipeline::{min_clock_ns, paper_stages, pipeline, PipelineResult};
+use super::power::ActivitySim;
+use crate::arith::tree::RadixConfig;
+use crate::arith::AccSpec;
+use crate::formats::{Fp, FpFormat};
+
+/// Evaluated design point.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub config: RadixConfig,
+    pub format: FpFormat,
+    pub n_terms: u32,
+    pub stages: u32,
+    pub clock_ns: f64,
+    /// Total area (combinational + pipeline registers) in µm².
+    pub area_um2: f64,
+    /// Register bits the schedule needs.
+    pub reg_bits: u64,
+    /// Combinational critical path in ns.
+    pub comb_delay_ns: f64,
+    /// Average power in mW at the evaluation clock (None until a trace ran).
+    pub power_mw: Option<f64>,
+    /// Whether the design met the clock at the requested depth.
+    pub feasible: bool,
+}
+
+/// Evaluate one configuration at the paper's operating point (1 GHz, the
+/// §IV pipeline-depth policy), without power (area/timing only).
+pub fn evaluate_area(fmt: FpFormat, n: u32, config: &RadixConfig, clock_ns: f64) -> DesignPoint {
+    let stages = paper_stages(fmt, n);
+    evaluate_area_at(fmt, n, config, clock_ns, stages)
+}
+
+/// Evaluate at an explicit stage count. When the requested clock is
+/// infeasible at that depth the design is marked infeasible and costed at
+/// its minimum feasible clock instead (HLS would relax timing the same way).
+pub fn evaluate_area_at(
+    fmt: FpFormat,
+    n: u32,
+    config: &RadixConfig,
+    clock_ns: f64,
+    stages: u32,
+) -> DesignPoint {
+    let params = DatapathParams::new(fmt, n, AccSpec::hw_default(fmt, n as usize));
+    let adder = build_adder(params, config);
+    let (pipe, feasible, clock) = match pipeline(&adder, stages, clock_ns) {
+        Some(p) => (p, true, clock_ns),
+        None => {
+            let t = min_clock_ns(&adder, stages) * 1.001;
+            let p = pipeline(&adder, stages, t).expect("min clock must be feasible");
+            (p, false, t)
+        }
+    };
+    DesignPoint {
+        config: config.clone(),
+        format: fmt,
+        n_terms: n,
+        stages,
+        clock_ns: clock,
+        area_um2: gates::ge_to_um2(pipe.total_area),
+        reg_bits: pipe.reg_bits,
+        comb_delay_ns: gates::tau_to_ns(pipe.comb_delay),
+        power_mw: None,
+        feasible,
+    }
+}
+
+/// Run a workload trace (vectors of `n` finite terms) through the activity
+/// simulator and attach average power at `1/clock_ns` GHz.
+pub fn attach_power(point: &mut DesignPoint, trace: &[Vec<Fp>]) {
+    let params =
+        DatapathParams::new(point.format, point.n_terms, AccSpec::hw_default(point.format, point.n_terms as usize));
+    let adder = build_adder(params, &point.config);
+    let pipe: Option<PipelineResult> = pipeline(&adder, point.stages, point.clock_ns);
+    let mut sim = ActivitySim::new(params, &point.config);
+    for vec in trace {
+        sim.step(vec);
+    }
+    let ghz = 1.0 / point.clock_ns;
+    point.power_mw = Some(sim.power_mw(ghz, pipe.as_ref()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::BF16;
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn evaluate_baseline_32term_bf16() {
+        let p = evaluate_area(BF16, 32, &RadixConfig::baseline(32), 1.0);
+        assert!(p.area_um2 > 1000.0, "area {}", p.area_um2);
+        assert!(p.reg_bits > 0);
+        assert_eq!(p.stages, 4);
+    }
+
+    #[test]
+    fn power_attaches_and_is_positive() {
+        let mut p = evaluate_area(BF16, 32, &"8-2-2".parse().unwrap(), 1.0);
+        let mut rng = XorShift::new(0xF00D);
+        let trace: Vec<Vec<Fp>> =
+            (0..100).map(|_| (0..32).map(|_| rng.gen_fp_normal(BF16)).collect()).collect();
+        attach_power(&mut p, &trace);
+        assert!(p.power_mw.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Hardware cost models: the substitution for the paper's Catapult-HLS →
+//! Oasys → PowerPro flow (see DESIGN.md §Substitutions).
+//!
+//! * [`gates`] — unit-gate technology constants + 28-nm calibration;
+//! * [`components`] — parameterized cost models of every datapath block;
+//! * [`netlist`] — the scheduled component DAG;
+//! * [`datapath`] — netlist builders for baseline and mixed-radix adders;
+//! * [`pipeline`] — register-minimal stage cutting (the HLS scheduler);
+//! * [`power`] — switching-activity power from real operand traces;
+//! * [`design`] — one-stop evaluation of a configuration (area/power/clock).
+
+pub mod components;
+pub mod datapath;
+pub mod design;
+pub mod gates;
+pub mod netlist;
+pub mod pipeline;
+pub mod power;

@@ -1,0 +1,191 @@
+//! Structural netlist: a DAG of schedulable components connected by buses.
+//!
+//! The netlist is the single source of truth for area (sum of node areas),
+//! combinational delay (longest path) and pipelining (register bits on
+//! edges crossing stage cuts — see [`super::pipeline`]).
+
+use super::components::Comp;
+
+/// Node index.
+pub type NodeId = usize;
+
+/// One schedulable component instance.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Human-readable kind, e.g. `"max2.L1"`, `"shift.s3"`, `"csa.row2"`.
+    pub kind: String,
+    pub area: f64,
+    pub delay: f64,
+    /// ASAP start time (filled by [`Netlist::schedule_asap`]).
+    pub start: f64,
+    /// Optional compact (slower, smaller) implementation the scheduler may
+    /// select when the node has slack — HLS implementation selection.
+    pub alt: Option<Comp>,
+    /// Scheduling region: nodes sharing a region are symmetric lanes of one
+    /// unrolled HLS expression and must be assigned to the same pipeline
+    /// stage (empty string = the node is its own region).
+    pub region: String,
+}
+
+/// A directed bus between two components.
+#[derive(Clone, Copy, Debug)]
+pub struct Edge {
+    pub from: NodeId,
+    pub to: NodeId,
+    /// Bus width in bits (register cost if a pipeline cut lands here).
+    pub bits: u32,
+}
+
+/// The datapath graph.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    scheduled: bool,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Netlist::default()
+    }
+
+    /// Add a component; returns its id.
+    pub fn add(&mut self, kind: impl Into<String>, comp: Comp) -> NodeId {
+        self.scheduled = false;
+        self.nodes.push(Node {
+            kind: kind.into(),
+            area: comp.area,
+            delay: comp.delay,
+            start: 0.0,
+            alt: None,
+            region: String::new(),
+        });
+        self.nodes.len() - 1
+    }
+
+    /// Assign the scheduling region of the most recently added node.
+    pub fn set_region(&mut self, id: NodeId, region: impl Into<String>) {
+        self.nodes[id].region = region.into();
+    }
+
+    /// Add a component that also has a compact (slower, smaller) variant.
+    pub fn add_with_alt(&mut self, kind: impl Into<String>, fast: Comp, compact: Comp) -> NodeId {
+        let id = self.add(kind, fast);
+        debug_assert!(compact.area <= fast.area && compact.delay >= fast.delay);
+        self.nodes[id].alt = Some(compact);
+        id
+    }
+
+    /// Add a zero-area/zero-delay source node (primary input).
+    pub fn input(&mut self, kind: impl Into<String>) -> NodeId {
+        self.add(kind, Comp::new(0.0, 0.0))
+    }
+
+    /// Connect `from → to` with a `bits`-wide bus.
+    pub fn connect(&mut self, from: NodeId, to: NodeId, bits: u32) {
+        debug_assert!(from < self.nodes.len() && to < self.nodes.len());
+        debug_assert!(from != to, "self-loop");
+        self.scheduled = false;
+        self.edges.push(Edge { from, to, bits });
+    }
+
+    /// Total combinational area in GE.
+    pub fn area(&self) -> f64 {
+        self.nodes.iter().map(|n| n.area).sum()
+    }
+
+    /// ASAP schedule: every node starts when its slowest predecessor
+    /// finishes. Returns the critical-path delay in τ.
+    pub fn schedule_asap(&mut self) -> f64 {
+        // Topological order via Kahn (the builders only create forward
+        // edges, but don't rely on it).
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (ei, e) in self.edges.iter().enumerate() {
+            indeg[e.to] += 1;
+            succ[e.from].push(ei);
+        }
+        for node in &mut self.nodes {
+            node.start = 0.0;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0usize;
+        while let Some(u) = queue.pop() {
+            seen += 1;
+            let finish = self.nodes[u].start + self.nodes[u].delay;
+            for &ei in &succ[u] {
+                let v = self.edges[ei].to;
+                if finish > self.nodes[v].start {
+                    self.nodes[v].start = finish;
+                }
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        assert_eq!(seen, n, "netlist contains a cycle");
+        self.scheduled = true;
+        self.critical_path()
+    }
+
+    /// Longest finish time over all nodes (requires a prior schedule).
+    pub fn critical_path(&self) -> f64 {
+        debug_assert!(self.scheduled || self.nodes.is_empty());
+        self.nodes.iter().map(|n| n.start + n.delay).fold(0.0, f64::max)
+    }
+
+    /// Largest single-component delay (lower bound on any stage budget).
+    pub fn max_node_delay(&self) -> f64 {
+        self.nodes.iter().map(|n| n.delay).fold(0.0, f64::max)
+    }
+
+    /// Sum of node areas whose kind starts with `prefix` (diagnostics).
+    pub fn area_of(&self, prefix: &str) -> f64 {
+        self.nodes.iter().filter(|n| n.kind.starts_with(prefix)).map(|n| n.area).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asap_longest_path() {
+        let mut nl = Netlist::new();
+        let a = nl.input("in.a");
+        let b = nl.input("in.b");
+        let m = nl.add("mul", Comp::new(10.0, 5.0));
+        let s = nl.add("add", Comp::new(4.0, 2.0));
+        nl.connect(a, m, 8);
+        nl.connect(b, m, 8);
+        nl.connect(m, s, 16);
+        nl.connect(b, s, 16);
+        let d = nl.schedule_asap();
+        assert_eq!(d, 7.0);
+        assert_eq!(nl.nodes[s].start, 5.0);
+        assert_eq!(nl.area(), 14.0);
+    }
+
+    #[test]
+    fn area_of_prefix() {
+        let mut nl = Netlist::new();
+        nl.add("shift.s0", Comp::new(5.0, 1.0));
+        nl.add("shift.s1", Comp::new(5.0, 1.0));
+        nl.add("csa.row0", Comp::new(7.0, 1.0));
+        assert_eq!(nl.area_of("shift"), 10.0);
+        assert_eq!(nl.area_of("csa"), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        let mut nl = Netlist::new();
+        let a = nl.add("a", Comp::new(1.0, 1.0));
+        let b = nl.add("b", Comp::new(1.0, 1.0));
+        nl.connect(a, b, 1);
+        nl.connect(b, a, 1);
+        nl.schedule_asap();
+    }
+}

@@ -1,0 +1,523 @@
+//! Pipeline-stage scheduling: assign every component of a netlist to one of
+//! `k` stages under a clock budget, minimizing pipeline-register bits — the
+//! HLS freedom the paper credits for the proposed designs' efficiency
+//! ("allows HLS to schedule intermediate alignment and addition steps to
+//! pipeline stages with better flexibility", §IV-A).
+//!
+//! Model (retiming-style): a stage assignment `s(v)` must be monotone along
+//! edges, and within every stage the longest combinational path must fit
+//! the stage budget (clock period minus register overhead). An edge
+//! spanning `g` stages pays `g · bits` register bits.
+//!
+//! **Scheduling regions.** HLS schedules the symmetric lanes of one
+//! unrolled expression identically — it cannot stagger lane 7 of a 32-wide
+//! alignment array into a different stage than lane 3. Nodes sharing a
+//! [`region`](crate::hw::netlist::Node::region) therefore collapse into one
+//! super-node before scheduling. This is where the paper's modularity
+//! argument becomes concrete: a monolithic radix-N operator yields a few
+//! very wide regions (whole 32-lane shifter stages move together, dragging
+//! hundreds of register bits to whatever boundary they land on), while a
+//! tree of small `⊙` operators yields many narrow regions the scheduler
+//! can place independently.
+//!
+//! After stage assignment an implementation-selection pass (Catapult-style)
+//! downgrades adder-like regions with slack to compact (smaller, slower)
+//! variants; feasibility is re-validated exactly after every move.
+
+use super::components::register_area;
+use super::datapath::AdderNetlist;
+use super::gates::{self, clog2 as _clog2};
+use super::netlist::Netlist;
+use std::collections::HashMap;
+
+/// Result of pipelining a netlist.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    pub stages: u32,
+    /// Total pipeline register bits over all stage boundaries.
+    pub reg_bits: u64,
+    /// Register area in GE.
+    pub reg_area: f64,
+    /// Combinational area after implementation selection, in GE.
+    pub comb_area: f64,
+    /// Combinational + register area in GE.
+    pub total_area: f64,
+    /// Critical combinational delay in τ (whole netlist, unpipelined).
+    pub comb_delay: f64,
+    /// Stage of every *node* (expanded from the region assignment).
+    pub assignment: Vec<u32>,
+}
+
+/// Region-collapsed scheduling graph.
+struct Regions {
+    /// Topological order of region ids.
+    order: Vec<usize>,
+    preds: Vec<Vec<(usize, u32)>>,
+    succs: Vec<Vec<(usize, u32)>>,
+    delay: Vec<f64>,
+    area: Vec<f64>,
+    /// Compact variant (delay, area) when every member offers one.
+    alt: Vec<Option<(f64, f64)>>,
+    /// Region id of every node.
+    node_region: Vec<usize>,
+}
+
+fn build_regions(nl: &Netlist) -> Regions {
+    let n = nl.nodes.len();
+    let mut ids: HashMap<&str, usize> = HashMap::new();
+    let mut node_region = vec![usize::MAX; n];
+    let mut delay = Vec::new();
+    let mut area = Vec::new();
+    let mut alt: Vec<Option<(f64, f64)>> = Vec::new();
+    for (i, node) in nl.nodes.iter().enumerate() {
+        let rid = if node.region.is_empty() {
+            delay.push(node.delay);
+            area.push(node.area);
+            alt.push(node.alt.map(|a| (a.delay, a.area)));
+            delay.len() - 1
+        } else {
+            match ids.get(node.region.as_str()) {
+                Some(&r) => {
+                    delay[r] = f64::max(delay[r], node.delay);
+                    area[r] += node.area;
+                    alt[r] = match (alt[r], node.alt) {
+                        (Some((d, a)), Some(na)) => Some((d.max(na.delay), a + na.area)),
+                        _ => None,
+                    };
+                    r
+                }
+                None => {
+                    delay.push(node.delay);
+                    area.push(node.area);
+                    alt.push(node.alt.map(|a| (a.delay, a.area)));
+                    let r = delay.len() - 1;
+                    ids.insert(node.region.as_str(), r);
+                    r
+                }
+            }
+        };
+        node_region[i] = rid;
+    }
+    let m = delay.len();
+    let mut preds: Vec<Vec<(usize, u32)>> = vec![Vec::new(); m];
+    let mut succs: Vec<Vec<(usize, u32)>> = vec![Vec::new(); m];
+    let mut indeg = vec![0usize; m];
+    for e in &nl.edges {
+        let (ru, rv) = (node_region[e.from], node_region[e.to]);
+        debug_assert_ne!(ru, rv, "edge inside a scheduling region");
+        preds[rv].push((ru, e.bits));
+        succs[ru].push((rv, e.bits));
+        indeg[rv] += 1;
+    }
+    let mut queue: Vec<usize> = (0..m).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(m);
+    while let Some(u) = queue.pop() {
+        order.push(u);
+        for &(v, _) in &succs[u] {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    assert_eq!(order.len(), m, "region graph contains a cycle");
+    Regions { order, preds, succs, delay, area, alt, node_region }
+}
+
+/// Greedy minimal-stage (ASAP) packing on the region graph.
+fn asap_stages(g: &Regions, budget: f64) -> Option<(Vec<u32>, u32)> {
+    let m = g.delay.len();
+    let mut stage = vec![0u32; m];
+    let mut arrive = vec![0f64; m];
+    let mut k_used = 1u32;
+    for &v in &g.order {
+        let d = g.delay[v];
+        if d > budget {
+            return None;
+        }
+        let mut s = 0u32;
+        for &(u, _) in &g.preds[v] {
+            s = s.max(stage[u]);
+        }
+        let mut a = 0f64;
+        for &(u, _) in &g.preds[v] {
+            if stage[u] == s {
+                a = a.max(arrive[u] + g.delay[u]);
+            }
+        }
+        if a + d > budget {
+            s += 1;
+            a = 0.0;
+        }
+        stage[v] = s;
+        arrive[v] = a;
+        k_used = k_used.max(s + 1);
+    }
+    Some((stage, k_used))
+}
+
+/// ALAP stages for a fixed depth `k` (ASAP on the reverse graph).
+fn alap_stages(g: &Regions, budget: f64, k: u32) -> Option<Vec<u32>> {
+    let m = g.delay.len();
+    let mut rstage = vec![0u32; m];
+    let mut rarrive = vec![0f64; m];
+    for &v in g.order.iter().rev() {
+        let d = g.delay[v];
+        if d > budget {
+            return None;
+        }
+        let mut s = 0u32;
+        for &(u, _) in &g.succs[v] {
+            s = s.max(rstage[u]);
+        }
+        let mut a = 0f64;
+        for &(u, _) in &g.succs[v] {
+            if rstage[u] == s {
+                a = a.max(rarrive[u] + g.delay[u]);
+            }
+        }
+        if a + d > budget {
+            s += 1;
+            a = 0.0;
+        }
+        rstage[v] = s;
+        rarrive[v] = a;
+        if s >= k {
+            return None;
+        }
+    }
+    Some(rstage.iter().map(|&rs| k - 1 - rs).collect())
+}
+
+/// Exact feasibility of a stage assignment with the given region delays.
+fn validate(g: &Regions, stage: &[u32], delays: &[f64], budget: f64) -> bool {
+    let mut arrive = vec![0f64; g.delay.len()];
+    for &v in &g.order {
+        let mut a = 0f64;
+        for &(u, _) in &g.preds[v] {
+            if stage[u] > stage[v] {
+                return false;
+            }
+            if stage[u] == stage[v] {
+                a = a.max(arrive[u] + delays[u]);
+            }
+        }
+        if a + delays[v] > budget + 1e-9 {
+            return false;
+        }
+        arrive[v] = a;
+    }
+    true
+}
+
+fn reg_bits(g: &Regions, stage: &[u32]) -> u64 {
+    let mut bits = 0u64;
+    for (v, preds) in g.preds.iter().enumerate() {
+        for &(u, b) in preds {
+            bits += (stage[v] - stage[u]) as u64 * b as u64;
+        }
+    }
+    bits
+}
+
+/// Pipeline `adder` into exactly `stages` stages at clock `clock_ns`.
+/// Returns `None` when infeasible.
+pub fn pipeline(adder: &AdderNetlist, stages: u32, clock_ns: f64) -> Option<PipelineResult> {
+    let nl = &adder.nl;
+    let budget = gates::ns_to_stage_budget(clock_ns);
+    if budget <= 0.0 {
+        return None;
+    }
+    let g = build_regions(nl);
+    let (asap, k_min) = asap_stages(&g, budget)?;
+    if k_min > stages {
+        return None;
+    }
+    let comb_delay = nl.critical_path();
+    let m = g.delay.len();
+    let mut stage = if stages == 1 { vec![0u32; m] } else { asap.clone() };
+    let alap =
+        if stages == 1 { vec![0u32; m] } else { alap_stages(&g, budget, stages)? };
+
+    // Initial assignment: cost-aware greedy in topo order. Sink regions are
+    // pinned to the last stage: a k-stage design registers its output at
+    // stage k-1 (anything else would be a shallower pipeline in disguise).
+    if stages > 1 {
+        for &v in &g.order {
+            if g.succs[v].is_empty() {
+                stage[v] = stages - 1;
+                continue;
+            }
+            let lo = g.preds[v].iter().map(|&(u, _)| stage[u]).max().unwrap_or(0).max(asap[v]);
+            let hi = alap[v];
+            if lo >= hi {
+                stage[v] = lo.min(hi);
+                continue;
+            }
+            let mut best = lo;
+            let mut best_cost = u64::MAX;
+            for s in lo..=hi {
+                let cost: u64 = g.preds[v]
+                    .iter()
+                    .map(|&(u, b)| (s - stage[u]) as u64 * b as u64)
+                    .sum();
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = s;
+                }
+            }
+            stage[v] = best;
+        }
+        if !validate(&g, &stage, &g.delay, budget) {
+            stage = asap.clone();
+        }
+
+        // Coordinate-descent refinement over single-region moves.
+        for _ in 0..3 {
+            let mut improved = false;
+            for &v in &g.order {
+                if g.succs[v].is_empty() {
+                    continue; // sinks stay pinned to the last stage
+                }
+                let lo = g.preds[v].iter().map(|&(u, _)| stage[u]).max().unwrap_or(0);
+                let hi = g.succs[v]
+                    .iter()
+                    .map(|&(u, _)| stage[u])
+                    .min()
+                    .unwrap_or(stages - 1)
+                    .min(alap[v]);
+                if lo >= hi {
+                    continue;
+                }
+                let here = stage[v];
+                let incident = |s: u32| -> u64 {
+                    let inn: u64 = g.preds[v]
+                        .iter()
+                        .map(|&(u, b)| (s - stage[u]) as u64 * b as u64)
+                        .sum();
+                    let out: u64 = g.succs[v]
+                        .iter()
+                        .map(|&(u, b)| (stage[u] - s) as u64 * b as u64)
+                        .sum();
+                    inn + out
+                };
+                let base_cost = incident(here);
+                let (mut best_s, mut best_cost) = (here, base_cost);
+                for s in lo..=hi {
+                    if s != here && incident(s) < best_cost {
+                        best_cost = incident(s);
+                        best_s = s;
+                    }
+                }
+                if best_s != here {
+                    let old = stage[v];
+                    stage[v] = best_s;
+                    if validate(&g, &stage, &g.delay, budget) {
+                        improved = true;
+                    } else {
+                        stage[v] = old;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    // Implementation selection under slack: downgrade regions with compact
+    // variants (largest saving first) while the schedule still validates.
+    let mut delays = g.delay.clone();
+    let mut areas = g.area.clone();
+    let mut candidates: Vec<usize> = (0..m).filter(|&v| g.alt[v].is_some()).collect();
+    candidates.sort_by(|&a, &b| {
+        let sa = g.area[a] - g.alt[a].unwrap().1;
+        let sb = g.area[b] - g.alt[b].unwrap().1;
+        sb.partial_cmp(&sa).unwrap()
+    });
+    for v in candidates {
+        let (alt_d, alt_a) = g.alt[v].unwrap();
+        let old = delays[v];
+        delays[v] = alt_d;
+        if validate(&g, &stage, &delays, budget) {
+            areas[v] = alt_a;
+        } else {
+            delays[v] = old;
+        }
+    }
+
+    let bits = reg_bits(&g, &stage);
+    let reg_area = register_area(bits.min(u32::MAX as u64) as u32);
+    let comb_area: f64 = areas.iter().sum();
+    let assignment = g.node_region.iter().map(|&r| stage[r]).collect();
+    Some(PipelineResult {
+        stages,
+        reg_bits: bits,
+        reg_area,
+        comb_area,
+        total_area: comb_area + reg_area,
+        comb_delay,
+        assignment,
+    })
+}
+
+/// Minimum feasible clock period (ns) for `stages` stages (binary search on
+/// the ASAP region packing).
+pub fn min_clock_ns(adder: &AdderNetlist, stages: u32) -> f64 {
+    let nl = &adder.nl;
+    let g = build_regions(nl);
+    let feasible = |clock_ns: f64| -> bool {
+        let budget = gates::ns_to_stage_budget(clock_ns);
+        if budget <= 0.0 {
+            return false;
+        }
+        match asap_stages(&g, budget) {
+            Some((_, k)) => k <= stages,
+            None => false,
+        }
+    };
+    let total = nl.critical_path();
+    let mut lo = gates::tau_to_ns(nl.max_node_delay() + gates::D_DFF) * 0.5;
+    let mut hi = gates::tau_to_ns(total + gates::D_DFF) * 1.05;
+    while !feasible(hi) {
+        hi *= 1.5;
+        if hi > 1e3 {
+            return f64::INFINITY;
+        }
+    }
+    for _ in 0..40 {
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// The paper's pipeline-depth policy (§IV): `log2(N)` stages for FP32,
+/// one fewer for the 16-bit and 8-bit formats.
+pub fn paper_stages(fmt: crate::formats::FpFormat, n_terms: u32) -> u32 {
+    let log_n = _clog2(n_terms);
+    if fmt.mbits > 10 {
+        log_n
+    } else {
+        (log_n - 1).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::tree::RadixConfig;
+    use crate::arith::AccSpec;
+    use crate::formats::{BF16, FP32};
+    use crate::hw::datapath::{build_adder, DatapathParams};
+
+    fn adder(cfg: &str) -> AdderNetlist {
+        let c: RadixConfig = cfg.parse().unwrap();
+        let p = DatapathParams::new(BF16, c.terms(), AccSpec::hw_default(BF16, c.terms() as usize));
+        build_adder(p, &c)
+    }
+
+    #[test]
+    fn single_stage_needs_full_path_budget() {
+        let a = adder("8-2-2");
+        let d_ns = a.nl.critical_path() * gates::NS_PER_TAU;
+        let overhead = gates::D_DFF * gates::NS_PER_TAU;
+        assert!(pipeline(&a, 1, d_ns * 0.8 + overhead).is_none());
+        assert!(pipeline(&a, 1, d_ns * 1.2 + overhead).is_some());
+    }
+
+    #[test]
+    fn more_stages_enable_faster_clocks() {
+        let a = adder("8-2-2");
+        let c1 = min_clock_ns(&a, 1);
+        let c2 = min_clock_ns(&a, 2);
+        let c4 = min_clock_ns(&a, 4);
+        assert!(c2 < c1, "2 stages {c2} vs 1 stage {c1}");
+        assert!(c4 < c2, "4 stages {c4} vs 2 stages {c2}");
+    }
+
+    #[test]
+    fn register_bits_are_positive_and_grow_with_stages() {
+        let a = adder("8-2-2");
+        let t = min_clock_ns(&a, 2) * 1.05;
+        let p2 = pipeline(&a, 2, t).unwrap();
+        let p4 = pipeline(&a, 4, t).unwrap();
+        assert!(p2.reg_bits > 0);
+        assert!(p4.reg_bits > p2.reg_bits);
+        assert!(p4.total_area > p4.comb_area);
+    }
+
+    #[test]
+    fn assignments_are_monotone_and_within_range() {
+        let a = adder("4-4-2");
+        let t = min_clock_ns(&a, 3) * 1.02;
+        let p = pipeline(&a, 3, t).unwrap();
+        for e in &a.nl.edges {
+            assert!(p.assignment[e.from] <= p.assignment[e.to]);
+        }
+        assert!(p.assignment.iter().all(|&s| s < 3));
+    }
+
+    #[test]
+    fn lanes_of_one_region_share_a_stage() {
+        let a = adder("32");
+        let t = min_clock_ns(&a, 4) * 1.02;
+        let p = pipeline(&a, 4, t).unwrap();
+        // All 32 lanes of the baseline's first shifter stage share a region
+        // and therefore a stage.
+        let stages: Vec<u32> = a
+            .nl
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.kind.starts_with("opr.") && n.kind.contains("shift.") && n.kind.ends_with(".s0"))
+            .map(|(i, _)| p.assignment[i])
+            .collect();
+        assert!(stages.len() >= 32);
+        assert!(stages.windows(2).all(|w| w[0] == w[1]), "{stages:?}");
+    }
+
+    #[test]
+    fn tree_cuts_are_cheaper_than_baseline_cuts() {
+        // The modularity claim: at a tight shared clock the tree pays fewer
+        // register bits than the radix-N baseline.
+        let tree = adder("8-2-2");
+        let base = adder("32");
+        let stages = 4;
+        let t = min_clock_ns(&base, stages).max(min_clock_ns(&tree, stages)) * 1.02;
+        let pt = pipeline(&tree, stages, t).unwrap();
+        let pb = pipeline(&base, stages, t).unwrap();
+        assert!(
+            pt.reg_bits < pb.reg_bits,
+            "tree {} bits vs baseline {} bits",
+            pt.reg_bits,
+            pb.reg_bits
+        );
+    }
+
+    #[test]
+    fn implementation_selection_reduces_area_under_slack() {
+        let a = adder("4-4-2");
+        let tight = min_clock_ns(&a, 3) * 1.01;
+        let relaxed = tight * 2.0;
+        let p_tight = pipeline(&a, 3, tight).unwrap();
+        let p_relax = pipeline(&a, 3, relaxed).unwrap();
+        assert!(
+            p_relax.comb_area < p_tight.comb_area,
+            "relaxed {} vs tight {}",
+            p_relax.comb_area,
+            p_tight.comb_area
+        );
+    }
+
+    #[test]
+    fn paper_stage_policy() {
+        assert_eq!(paper_stages(FP32, 32), 5);
+        assert_eq!(paper_stages(BF16, 32), 4);
+        assert_eq!(paper_stages(BF16, 16), 3);
+    }
+}

@@ -1,0 +1,42 @@
+//! # online-fp-add
+//!
+//! Production-grade reproduction of *"Online Alignment and Addition in
+//! Multi-Term Floating-Point Adders"* (Alexandridis & Dimitrakopoulos, 2024).
+//!
+//! The crate is organised in four tiers:
+//!
+//! * [`formats`] + [`arith`] — bit-accurate models of every algorithm in the
+//!   paper: the serial baseline (Algorithm 2), the online fused recurrence
+//!   (Algorithm 3, eq. 7), the associative align-and-add operator `⊙`
+//!   (eq. 8) and arbitrary mixed-radix operator trees (eq. 9, Fig. 2).
+//! * [`hw`] — structural hardware cost models (unit-gate area/delay,
+//!   pipeline-stage scheduling, switching-activity power) that regenerate
+//!   the paper's evaluation (Fig. 4, Fig. 5, Table I).
+//! * [`dse`] + [`workload`] — design-space exploration across formats,
+//!   term counts and radix configurations, driven by realistic
+//!   BERT-style matmul operand traces (the paper's power methodology).
+//! * [`coordinator`] + [`runtime`] — a leader/worker experiment
+//!   orchestrator and a PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`); python never runs on this path.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod arith;
+pub mod bench_util;
+pub mod coordinator;
+pub mod dse;
+pub mod formats;
+pub mod hw;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use arith::{
+    baseline::baseline_sum,
+    online::online_sum,
+    operator::{op_combine, AlignAcc},
+    tree::{tree_sum, RadixConfig},
+    AccSpec,
+};
+pub use formats::{Fp, FpClass, FpFormat};

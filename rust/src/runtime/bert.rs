@@ -1,0 +1,89 @@
+//! Typed wrapper around the `bert_layer` artifact: one BERT-style encoder
+//! layer (the paper's power-estimation workload), executed via PJRT.
+
+use super::{literal_f32_2d, Runtime};
+use crate::util::prng::XorShift;
+use anyhow::Result;
+
+/// Geometry baked into the artifact at AOT time.
+pub const SEQ: usize = 128;
+pub const DMODEL: usize = 256;
+pub const DFF: usize = 1024;
+
+/// Row-major weight matrices for one encoder layer.
+pub struct BertWeights {
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+}
+
+impl BertWeights {
+    /// Xavier-style random initialisation from a seed (deterministic).
+    pub fn random(seed: u64) -> Self {
+        let mut rng = XorShift::new(seed);
+        let mut mk = |rows: usize, cols: usize| -> Vec<f32> {
+            let scale = (2.0 / (rows + cols) as f64).sqrt();
+            (0..rows * cols).map(|_| (rng.gauss() * scale) as f32).collect()
+        };
+        BertWeights {
+            wq: mk(DMODEL, DMODEL),
+            wk: mk(DMODEL, DMODEL),
+            wv: mk(DMODEL, DMODEL),
+            wo: mk(DMODEL, DMODEL),
+            w1: mk(DMODEL, DFF),
+            w2: mk(DFF, DMODEL),
+        }
+    }
+}
+
+/// All activations the artifact returns (row-major, shapes in comments).
+pub struct BertActivations {
+    pub q: Vec<f32>,    // (SEQ, DMODEL)
+    pub k: Vec<f32>,    // (SEQ, DMODEL)
+    pub v: Vec<f32>,    // (SEQ, DMODEL)
+    pub attn: Vec<f32>, // (SEQ, SEQ)
+    pub ctx: Vec<f32>,  // (SEQ, DMODEL)
+    pub h: Vec<f32>,    // (SEQ, DMODEL)
+    pub g: Vec<f32>,    // (SEQ, DFF)
+    pub out: Vec<f32>,  // (SEQ, DMODEL)
+}
+
+/// A compiled BERT-layer executable.
+pub struct BertLayerExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BertLayerExe {
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        Ok(BertLayerExe { exe: rt.load("bert_layer")? })
+    }
+
+    /// Run the layer on `(SEQ, DMODEL)` activations.
+    pub fn run(&self, rt: &Runtime, x: &[f32], w: &BertWeights) -> Result<BertActivations> {
+        assert_eq!(x.len(), SEQ * DMODEL);
+        let inputs = [
+            literal_f32_2d(x, SEQ, DMODEL)?,
+            literal_f32_2d(&w.wq, DMODEL, DMODEL)?,
+            literal_f32_2d(&w.wk, DMODEL, DMODEL)?,
+            literal_f32_2d(&w.wv, DMODEL, DMODEL)?,
+            literal_f32_2d(&w.wo, DMODEL, DMODEL)?,
+            literal_f32_2d(&w.w1, DMODEL, DFF)?,
+            literal_f32_2d(&w.w2, DFF, DMODEL)?,
+        ];
+        let out = rt.execute(&self.exe, &inputs)?;
+        anyhow::ensure!(out.len() == 8, "expected 8 outputs, got {}", out.len());
+        Ok(BertActivations {
+            q: out[0].to_vec::<f32>()?,
+            k: out[1].to_vec::<f32>()?,
+            v: out[2].to_vec::<f32>()?,
+            attn: out[3].to_vec::<f32>()?,
+            ctx: out[4].to_vec::<f32>()?,
+            h: out[5].to_vec::<f32>()?,
+            g: out[6].to_vec::<f32>()?,
+            out: out[7].to_vec::<f32>()?,
+        })
+    }
+}

@@ -1,0 +1,99 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from Rust.
+//!
+//! This is the only place python output crosses into the request path — as
+//! *compiled artifacts*, never as a python process. HLO **text** is the
+//! interchange format (jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! The typed wrappers ([`OnlineReduceExe`], [`BertLayerExe`]) hide literal
+//! plumbing and pad partial batches with identity (zero) terms, mirroring
+//! unused hardware lanes.
+
+mod bert;
+mod reduce;
+
+pub use bert::{BertLayerExe, BertWeights};
+pub use reduce::{OnlineReduceExe, ReduceOut};
+
+/// (SEQ, DMODEL, DFF) geometry of the BERT-layer artifact.
+pub fn bert_dims() -> (usize, usize) {
+    (bert::SEQ, bert::DMODEL)
+}
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Locate the artifact directory: `$ONLINE_FP_ADD_ARTIFACTS`, then
+    /// `./artifacts`, then `../artifacts` (for running inside `rust/`).
+    pub fn default_artifact_dir() -> PathBuf {
+        if let Ok(dir) = std::env::var("ONLINE_FP_ADD_ARTIFACTS") {
+            return PathBuf::from(dir);
+        }
+        for cand in ["artifacts", "../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.is_dir() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load and compile one artifact by stem name (e.g. `"bert_layer"`).
+    pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))
+    }
+
+    /// Execute a compiled artifact and return the flattened output tuple.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// device output is a tuple literal we decompose here.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs).context("executing artifact")?;
+        let out = result[0][0].to_literal_sync().context("fetching result literal")?;
+        out.to_tuple().context("decomposing output tuple")
+    }
+}
+
+/// Build a 2-D `i32` literal from row-major data.
+pub fn literal_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Build a 2-D `f32` literal from row-major data.
+pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}

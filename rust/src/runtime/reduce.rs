@@ -1,0 +1,64 @@
+//! Typed wrapper around the `online_reduce_*` artifacts: the L1 Pallas
+//! online align-and-add reduction, executed via PJRT.
+
+use super::{literal_i32_2d, Runtime};
+use anyhow::Result;
+
+/// Output of one reduction batch: per-row `(λ, acc)` states.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReduceOut {
+    pub lambda: Vec<i32>,
+    pub acc: Vec<i64>,
+}
+
+/// A compiled online-reduction executable with fixed `(batch, n_terms)`
+/// geometry (baked in at AOT time — see `python/compile/aot.py`).
+pub struct OnlineReduceExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub n_terms: usize,
+    /// Guard (fractional-extension) bits of the artifact's accumulator
+    /// frame — must match the Rust-side `AccSpec` when cross-checking.
+    pub guard: u32,
+}
+
+impl OnlineReduceExe {
+    /// Load an artifact by name, e.g. `"online_reduce_bf16_n32"`.
+    pub fn load(rt: &Runtime, name: &str, batch: usize, n_terms: usize, guard: u32) -> Result<Self> {
+        Ok(OnlineReduceExe { exe: rt.load(name)?, batch, n_terms, guard })
+    }
+
+    /// The BF16 32-term artifact with its baked geometry.
+    pub fn load_bf16_n32(rt: &Runtime) -> Result<Self> {
+        // Frame.hw_default(8, 7, 32): f = 8 + 5 + 3 = 16.
+        Self::load(rt, "online_reduce_bf16_n32", 64, 32, 16)
+    }
+
+    /// The FP32 16-term artifact with its baked geometry.
+    pub fn load_fp32_n16(rt: &Runtime) -> Result<Self> {
+        // Frame.hw_default(8, 23, 16): f = 24 + 4 + 3 = 31.
+        Self::load(rt, "online_reduce_fp32_n16", 64, 16, 31)
+    }
+
+    /// Reduce up to `batch` rows of `(e, m)` terms. Short batches are padded
+    /// with zero rows (identity leaves); only the live rows are returned.
+    pub fn run(&self, rt: &Runtime, e: &[i32], m: &[i32]) -> Result<ReduceOut> {
+        assert_eq!(e.len(), m.len());
+        assert_eq!(e.len() % self.n_terms, 0, "inputs must be whole rows");
+        let rows = e.len() / self.n_terms;
+        assert!(rows <= self.batch, "at most {} rows per execution", self.batch);
+        let mut e_pad = e.to_vec();
+        let mut m_pad = m.to_vec();
+        e_pad.resize(self.batch * self.n_terms, 0);
+        m_pad.resize(self.batch * self.n_terms, 0);
+        let le = literal_i32_2d(&e_pad, self.batch, self.n_terms)?;
+        let lm = literal_i32_2d(&m_pad, self.batch, self.n_terms)?;
+        let out = rt.execute(&self.exe, &[le, lm])?;
+        anyhow::ensure!(out.len() == 2, "expected (lambda, acc) tuple, got {} elems", out.len());
+        let mut lambda = out[0].to_vec::<i32>()?;
+        let mut acc = out[1].to_vec::<i64>()?;
+        lambda.truncate(rows);
+        acc.truncate(rows);
+        Ok(ReduceOut { lambda, acc })
+    }
+}

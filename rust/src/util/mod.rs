@@ -1,0 +1,11 @@
+//! Small self-contained utilities: deterministic PRNG, CLI parsing, table
+//! rendering, statistics and a property-testing engine.
+//!
+//! These exist because the offline build environment only vendors the `xla`
+//! crate's dependency closure — no `rand`, `clap`, `serde` or `proptest`.
+
+pub mod cli;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,163 @@
+//! Deterministic xorshift* PRNG with floating-point sampling helpers.
+//!
+//! Everything in this crate that needs randomness (tests, workload
+//! generation, property testing) goes through this generator so every run
+//! is reproducible from a seed.
+
+use crate::formats::{Fp, FpFormat};
+
+/// xorshift64* — tiny, fast, good enough for workload sampling (not crypto).
+#[derive(Clone, Debug)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point and decorrelate small seeds.
+        XorShift { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Modulo bias is negligible for our n << 2^64 use cases.
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform float in `[0, 1)`.
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box-Muller (one value per call).
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.unit_f64().max(1e-300);
+        let u2 = self.unit_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// A random *finite* value of the format: uniform sign/mantissa bits and
+    /// uniform raw exponent over the normal range. This stresses alignment
+    /// across the full exponent range (the corner Table I's FP8_e6m1 row
+    /// probes) far harder than gaussian data does.
+    pub fn gen_fp_normal(&mut self, fmt: FpFormat) -> Fp {
+        let sign = self.next_u64() & 1 == 1;
+        let e = self.range_i64(1, fmt.max_normal_exp() as i64) as i32;
+        let mut m = self.next_u64() & fmt.mant_mask();
+        // Keep NoInf formats away from their NaN pattern.
+        if e == fmt.max_normal_exp() && m > fmt.max_finite_mant() {
+            m = fmt.max_finite_mant();
+        }
+        Fp::pack(sign, e, m, fmt)
+    }
+
+    /// A random finite value with gaussian magnitude distribution (matmul
+    /// activation statistics; used by the workload generators).
+    pub fn gen_fp_gauss(&mut self, fmt: FpFormat, sigma: f64) -> Fp {
+        Fp::from_f64(self.gauss() * sigma, fmt)
+    }
+
+    /// A random value that may be zero with probability `p_zero`.
+    pub fn gen_fp_sparse(&mut self, fmt: FpFormat, p_zero: f64) -> Fp {
+        if self.unit_f64() < p_zero {
+            Fp::zero(fmt)
+        } else {
+            self.gen_fp_normal(fmt)
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FpClass, BF16, PAPER_FORMATS};
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn gen_fp_is_always_finite() {
+        let mut rng = XorShift::new(1);
+        for fmt in PAPER_FORMATS {
+            for _ in 0..2000 {
+                let x = rng.gen_fp_normal(fmt);
+                assert!(
+                    matches!(x.class(), FpClass::Normal),
+                    "{fmt}: {x:?} not normal"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unit_f64_in_range_and_mixed() {
+        let mut rng = XorShift::new(9);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let u = rng.unit_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        // Mean of 1000 uniforms should be near 0.5.
+        assert!((sum / 1000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn sparse_generates_zeros() {
+        let mut rng = XorShift::new(5);
+        let zeros = (0..1000)
+            .filter(|_| rng.gen_fp_sparse(BF16, 0.3).class() == FpClass::Zero)
+            .count();
+        assert!((200..400).contains(&zeros));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = XorShift::new(11);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,140 @@
+//! A miniature property-testing engine (the offline environment has no
+//! `proptest`): run a property over many seeded random cases and, on
+//! failure, greedily shrink the failing input before reporting.
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this offline
+//! image; the same snippet runs as a unit test below):
+//! ```no_run
+//! use online_fp_add::util::proptest::{check, Gen};
+//! check("sum is commutative", 200, |g: &mut Gen| {
+//!     let a = g.rng.range_i64(-100, 100);
+//!     let b = g.rng.range_i64(-100, 100);
+//!     if a + b != b + a { return Err(format!("{a} {b}")); }
+//!     Ok(())
+//! });
+//! ```
+
+use super::prng::XorShift;
+
+/// Per-case context handed to a property.
+pub struct Gen {
+    pub rng: XorShift,
+    pub case: u64,
+}
+
+/// Run `prop` over `cases` seeded cases; panic with the first failing case
+/// (re-runnable via its reported seed) if any returns `Err`.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check_seeded(name, cases, 0xC0FFEE, &mut prop);
+}
+
+/// Like [`check`] with an explicit base seed.
+pub fn check_seeded<F>(name: &str, cases: u64, base_seed: u64, prop: &mut F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: XorShift::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}): {msg}\n\
+                 rerun: check_seeded({name:?}, 1, {seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Shrinkable vector property: run over random `Vec<T>` inputs and shrink a
+/// failing vector by removing chunks, then single elements, reporting the
+/// smallest still-failing input.
+pub fn check_vec<T, GenF, PropF>(
+    name: &str,
+    cases: u64,
+    mut generate: GenF,
+    mut prop: PropF,
+) where
+    T: Clone + std::fmt::Debug,
+    GenF: FnMut(&mut XorShift) -> Vec<T>,
+    PropF: FnMut(&[T]) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xBEEF ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = XorShift::new(seed);
+        let input = generate(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink: drop halves, then quarters, ..., then singles.
+            let mut best = input.clone();
+            let mut chunk = best.len() / 2;
+            while chunk >= 1 {
+                let mut i = 0;
+                while i + chunk <= best.len() {
+                    let mut candidate = best.clone();
+                    candidate.drain(i..i + chunk);
+                    if prop(&candidate).is_err() {
+                        best = candidate; // keep the smaller failing input
+                    } else {
+                        i += chunk;
+                    }
+                }
+                chunk /= 2;
+            }
+            let final_msg = prop(&best).err().unwrap_or(first_msg);
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x});\n\
+                 shrunk to {} elements: {best:?}\nerror: {final_msg}",
+                best.len()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("addition commutes", 100, |g| {
+            let (a, b) = (g.rng.range_i64(-9, 9), g.rng.range_i64(-9, 9));
+            (a + b == b + a).then_some(()).ok_or_else(|| "no".into())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always fails\"")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_minimal_counterexample() {
+        // Property: "no vector contains 7". Generator plants a single 7 in
+        // noise; the shrinker must reduce to exactly [7].
+        let result = std::panic::catch_unwind(|| {
+            check_vec(
+                "no sevens",
+                5,
+                |rng| {
+                    let mut v: Vec<i64> = (0..20).map(|_| rng.range_i64(0, 6)).collect();
+                    let pos = rng.below(v.len() as u64) as usize;
+                    v[pos] = 7;
+                    v
+                },
+                |v| {
+                    if v.contains(&7) {
+                        Err("contains 7".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk to 1 elements"), "{msg}");
+        assert!(msg.contains("[7]"), "{msg}");
+    }
+}

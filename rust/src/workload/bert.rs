@@ -1,0 +1,155 @@
+//! Native BERT-style encoder layer (f32) mirroring the L2 JAX model, plus
+//! the standard trace bundle used by the power experiments.
+//!
+//! Two execution paths produce identical operand statistics: this native
+//! implementation (used by benches so they run without artifacts) and the
+//! PJRT artifact (`examples/bert_e2e.rs`, the end-to-end driver). Both feed
+//! [`super::matmul::partial_product_trace`].
+
+use super::glue::{GlueConfig, GlueCorpus};
+use super::matmul::{matmul_f32, partial_product_trace};
+use super::trace::Trace;
+use crate::formats::FpFormat;
+use crate::util::prng::XorShift;
+
+/// The layer's matmuls, exposed as (name, A, B, (m, k, n)) operand sets.
+pub struct BertTrace {
+    pub matmuls: Vec<(String, Vec<f32>, Vec<f32>, (usize, usize, usize))>,
+}
+
+/// Layer geometry (matches the AOT artifact defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct BertDims {
+    pub seq: usize,
+    pub d: usize,
+    pub ff: usize,
+}
+
+impl Default for BertDims {
+    fn default() -> Self {
+        BertDims { seq: 128, d: 256, ff: 1024 }
+    }
+}
+
+fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
+}
+
+/// Run one encoder layer on embedded GLUE-like input and collect every
+/// matmul's operand matrices.
+pub fn bert_layer_trace(dims: BertDims, seed: u64) -> BertTrace {
+    let corpus = GlueCorpus::new(
+        GlueConfig { seq: dims.seq, d_model: dims.d, ..Default::default() },
+        seed,
+    );
+    let mut rng = XorShift::new(seed ^ 0xBE27);
+    let x = corpus.embed_sentence(&mut rng);
+    let (s, d, ff) = (dims.seq, dims.d, dims.ff);
+    let mut mk = |rows: usize, cols: usize| -> Vec<f32> {
+        let scale = (2.0 / (rows + cols) as f64).sqrt();
+        (0..rows * cols).map(|_| (rng.gauss() * scale) as f32).collect()
+    };
+    let (wq, wk, wv, wo) = (mk(d, d), mk(d, d), mk(d, d), mk(d, d));
+    let (w1, w2) = (mk(d, ff), mk(ff, d));
+
+    let q = matmul_f32(&x, &wq, s, d, d);
+    let k = matmul_f32(&x, &wk, s, d, d);
+    let v = matmul_f32(&x, &wv, s, d, d);
+    // scores = q @ k^T / sqrt(d)
+    let mut kt = vec![0f32; d * s];
+    for i in 0..s {
+        for j in 0..d {
+            kt[j * s + i] = k[i * d + j];
+        }
+    }
+    let mut scores = matmul_f32(&q, &kt, s, d, s);
+    let inv = 1.0 / (d as f32).sqrt();
+    for v in scores.iter_mut() {
+        *v *= inv;
+    }
+    softmax_rows(&mut scores, s, s);
+    let ctx = matmul_f32(&scores, &v, s, s, d);
+    let mut h = matmul_f32(&ctx, &wo, s, d, d);
+    for (hv, xv) in h.iter_mut().zip(&x) {
+        *hv += xv;
+    }
+    let mut g = matmul_f32(&h, &w1, s, d, ff);
+    for v in g.iter_mut() {
+        *v = gelu(*v);
+    }
+
+    BertTrace {
+        matmuls: vec![
+            ("q_proj".into(), x.clone(), wq, (s, d, d)),
+            ("scores".into(), q, kt, (s, d, s)),
+            ("ctx".into(), scores, v, (s, s, d)),
+            ("out_proj".into(), ctx, wo, (s, d, d)),
+            ("ffn1".into(), h, w1, (s, d, ff)),
+            ("ffn2".into(), g, w2, (s, ff, d)),
+        ],
+    }
+}
+
+/// The standard power-estimation trace: partial products pooled evenly from
+/// every matmul of the layer, rounded into `fmt`, `n_terms` lanes.
+pub fn power_trace(fmt: FpFormat, n_terms: usize, vectors: usize, seed: u64) -> Trace {
+    let bundle = bert_layer_trace(BertDims::default(), seed);
+    let per = vectors.div_ceil(bundle.matmuls.len());
+    let mut out = Trace::new(fmt, n_terms);
+    for (i, (_, a, b, shape)) in bundle.matmuls.iter().enumerate() {
+        let t = partial_product_trace(a, b, *shape, fmt, n_terms, per, seed ^ (i as u64) << 8);
+        out.vectors.extend(t.vectors);
+        if out.len() >= vectors {
+            break;
+        }
+    }
+    out.vectors.truncate(vectors);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::BF16;
+
+    #[test]
+    fn trace_bundle_covers_all_matmuls() {
+        let dims = BertDims { seq: 16, d: 32, ff: 64 };
+        let t = bert_layer_trace(dims, 1);
+        assert_eq!(t.matmuls.len(), 6);
+        for (name, a, b, (m, k, n)) in &t.matmuls {
+            assert_eq!(a.len(), m * k, "{name}");
+            assert_eq!(b.len(), k * n, "{name}");
+            assert!(a.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn power_trace_is_deterministic_and_realistic() {
+        let t1 = power_trace(BF16, 32, 128, 42);
+        let t2 = power_trace(BF16, 32, 128, 42);
+        assert_eq!(t1.len(), 128);
+        assert_eq!(
+            t1.vectors[5].iter().map(|f| f.bits).collect::<Vec<_>>(),
+            t2.vectors[5].iter().map(|f| f.bits).collect::<Vec<_>>()
+        );
+        // Realistic matmul data has a nonzero exponent spread and some
+        // (padding/underflow) zeros.
+        assert!(t1.mean_exponent_spread() > 2.0);
+    }
+}

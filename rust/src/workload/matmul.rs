@@ -1,0 +1,123 @@
+//! Matrix multiplication kernels and partial-product trace extraction.
+//!
+//! An `(M, K) × (K, N)` matmul computed with `n_terms`-wide fused adders
+//! presents each output element's K products in ⌈K/n⌉ chunks of `n` lanes.
+//! [`partial_product_trace`] reconstructs exactly those lane vectors
+//! (products rounded to the adder's format, zero-padded tail), which is
+//! what the switching-activity power model consumes.
+
+use super::trace::Trace;
+use crate::formats::{Fp, FpFormat};
+use crate::util::prng::XorShift;
+
+/// Plain row-major f32 matmul (the reference workload kernel).
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * n..(l + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Extract multi-term adder input vectors from one matmul: for sampled
+/// output elements `(i, j)`, the K partial products `a[i,l]·b[l,j]` rounded
+/// into `fmt`, chunked into `n_terms` lanes. At most `max_vectors` vectors
+/// are collected (sampled deterministically from `seed`).
+pub fn partial_product_trace(
+    a: &[f32],
+    b: &[f32],
+    (m, k, n): (usize, usize, usize),
+    fmt: FpFormat,
+    n_terms: usize,
+    max_vectors: usize,
+    seed: u64,
+) -> Trace {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut trace = Trace::new(fmt, n_terms);
+    let mut rng = XorShift::new(seed ^ 0x7ACE);
+    let chunks_per_elem = k.div_ceil(n_terms);
+    while trace.len() < max_vectors {
+        let i = rng.below(m as u64) as usize;
+        let j = rng.below(n as u64) as usize;
+        for c in 0..chunks_per_elem {
+            if trace.len() >= max_vectors {
+                break;
+            }
+            let mut vec = Vec::with_capacity(n_terms);
+            for lane in 0..n_terms {
+                let l = c * n_terms + lane;
+                let p = if l < k { (a[i * k + l] as f64) * (b[l * n + j] as f64) } else { 0.0 };
+                vec.push(Fp::from_f64(p, fmt).finite_or_saturated());
+            }
+            trace.push(vec);
+        }
+    }
+    trace
+}
+
+impl Fp {
+    /// Power traces must contain finite values only: NoInf formats saturate
+    /// already, IEEE Inf is clamped to the max finite value (a rounding
+    /// mode real accumulators configure for trace capture).
+    pub fn finite_or_saturated(self) -> Fp {
+        match self.class() {
+            crate::formats::FpClass::Inf => {
+                Fp::pack(self.sign(), self.format.max_normal_exp(), self.format.max_finite_mant(), self.format)
+            }
+            crate::formats::FpClass::Nan => Fp::zero(self.format),
+            _ => self,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FpClass, BF16, FP8_E4M3};
+
+    #[test]
+    fn matmul_reference() {
+        // [[1,2],[3,4]] x [[1,0],[0,1]] = same matrix
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let eye = [1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul_f32(&a, &eye, 2, 2, 2), a.to_vec());
+    }
+
+    #[test]
+    fn trace_has_requested_geometry() {
+        let mut rng = XorShift::new(1);
+        let a: Vec<f32> = (0..16 * 40).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..40 * 8).map(|_| rng.gauss() as f32).collect();
+        let t = partial_product_trace(&a, &b, (16, 40, 8), BF16, 32, 100, 5);
+        assert_eq!(t.len(), 100);
+        assert!(t.vectors.iter().all(|v| v.len() == 32));
+        // K=40 with 32 lanes: second chunk has 40-32=8 live + 24 zeros, so
+        // global sparsity must be visible.
+        assert!(t.zero_fraction() > 0.2);
+    }
+
+    #[test]
+    fn products_are_finite_in_small_formats() {
+        let a = vec![400.0f32; 8 * 8];
+        let b = vec![400.0f32; 8 * 8];
+        let t = partial_product_trace(&a, &b, (8, 8, 8), FP8_E4M3, 8, 50, 2);
+        for v in &t.vectors {
+            for x in v {
+                assert!(matches!(x.class(), FpClass::Zero | FpClass::Normal));
+            }
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Workload generation: the operand traces that drive power estimation.
+//!
+//! The paper estimates power by running its multi-term adders inside matrix
+//! multiplication kernels of a BERT transformer on GLUE inputs (§IV). This
+//! module reproduces that pipeline: a synthetic GLUE-like token corpus
+//! ([`glue`]), a BERT-style encoder layer ([`bert`] natively, or the PJRT
+//! artifact via [`crate::runtime`]), and extraction of the N-term
+//! partial-product vectors every output element feeds through the adder
+//! ([`matmul`]).
+
+pub mod bert;
+pub mod glue;
+pub mod matmul;
+pub mod trace;
+
+pub use matmul::partial_product_trace;
+pub use trace::Trace;

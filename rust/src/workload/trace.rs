@@ -1,0 +1,90 @@
+//! Operand trace container + statistics.
+
+use crate::formats::{Fp, FpClass, FpFormat};
+
+/// A workload trace: each entry is one adder invocation — the `n_terms`
+/// finite values presented to the input lanes in one cycle.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub format: FpFormat,
+    pub n_terms: usize,
+    pub vectors: Vec<Vec<Fp>>,
+}
+
+impl Trace {
+    pub fn new(format: FpFormat, n_terms: usize) -> Self {
+        Trace { format, n_terms, vectors: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: Vec<Fp>) {
+        debug_assert_eq!(v.len(), self.n_terms);
+        debug_assert!(v.iter().all(|t| matches!(t.class(), FpClass::Zero | FpClass::Normal)));
+        self.vectors.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+
+    /// Fraction of zero operands (sparsity seen by the adder lanes).
+    pub fn zero_fraction(&self) -> f64 {
+        let total = self.len() * self.n_terms;
+        if total == 0 {
+            return 0.0;
+        }
+        let zeros: usize = self
+            .vectors
+            .iter()
+            .map(|v| v.iter().filter(|t| t.class() == FpClass::Zero).count())
+            .sum();
+        zeros as f64 / total as f64
+    }
+
+    /// Mean intra-vector exponent spread (max − min over live lanes) — the
+    /// quantity that decides how hard alignment works.
+    pub fn mean_exponent_spread(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for v in &self.vectors {
+            let exps: Vec<i32> = v
+                .iter()
+                .filter(|t| t.class() == FpClass::Normal)
+                .map(|t| t.raw_exp())
+                .collect();
+            if exps.len() >= 2 {
+                sum += (exps.iter().max().unwrap() - exps.iter().min().unwrap()) as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::BF16;
+
+    #[test]
+    fn stats() {
+        let mut t = Trace::new(BF16, 4);
+        t.push(vec![
+            Fp::from_f64(1.0, BF16),
+            Fp::from_f64(256.0, BF16),
+            Fp::zero(BF16),
+            Fp::from_f64(-2.0, BF16),
+        ]);
+        assert_eq!(t.len(), 1);
+        assert!((t.zero_fraction() - 0.25).abs() < 1e-12);
+        // exponents: 127, 135, 128 -> spread 8
+        assert!((t.mean_exponent_spread() - 8.0).abs() < 1e-12);
+    }
+}

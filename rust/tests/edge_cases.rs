@@ -1,0 +1,198 @@
+//! Edge-case tests: special values, overflow/underflow, cancellation,
+//! extreme exponent spreads (the FP8_e6m1 corner Table I probes), and API
+//! misuse contracts.
+
+use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::exact::exact_rounded_sum;
+use online_fp_add::arith::tree::RadixConfig;
+use online_fp_add::formats::{
+    format_by_name, Fp, FpClass, BF16, FP32, FP8_E4M3, FP8_E5M2, FP8_E6M1, PAPER_FORMATS,
+};
+
+fn adder(fmt: online_fp_add::formats::FpFormat, n: usize) -> MultiTermAdder {
+    MultiTermAdder::exact(fmt, n, Architecture::Tree(RadixConfig::binary(n as u32).unwrap()))
+}
+
+#[test]
+fn empty_input_is_positive_zero() {
+    for fmt in PAPER_FORMATS {
+        let a = MultiTermAdder::exact(fmt, 16, Architecture::Baseline);
+        let r = a.add(&[]);
+        assert_eq!(r.class(), FpClass::Zero, "{fmt}");
+        assert!(!r.sign(), "{fmt}");
+    }
+}
+
+#[test]
+fn single_term_passes_through_unchanged() {
+    for fmt in PAPER_FORMATS {
+        let a = adder(fmt, 16);
+        for bits in [0u64, 1 << (fmt.width() - 1)] {
+            let z = Fp::from_bits(bits, fmt);
+            assert_eq!(a.add(&[z]).class(), FpClass::Zero);
+        }
+        let x = Fp::pack(false, fmt.max_normal_exp(), 0, fmt);
+        assert_eq!(a.add(&[x]).bits, x.bits, "{fmt}");
+        let tiny = Fp::pack(true, 1, 0, fmt);
+        assert_eq!(a.add(&[tiny]).bits, tiny.bits, "{fmt}");
+    }
+}
+
+#[test]
+fn perfect_cancellation_across_architectures() {
+    for fmt in PAPER_FORMATS {
+        for arch in [
+            Architecture::Baseline,
+            Architecture::Online,
+            Architecture::Tree("4-2".parse().unwrap()),
+        ] {
+            let a = MultiTermAdder::exact(fmt, 8, arch);
+            let x = Fp::pack(false, fmt.bias() as i32, fmt.max_finite_mant() / 2, fmt);
+            let nx = Fp::pack(true, x.raw_exp(), x.mant(), fmt);
+            let r = a.add(&[x, nx, x, nx, x, nx, x, nx]);
+            assert_eq!(r.class(), FpClass::Zero, "{fmt}");
+            assert!(!r.sign(), "cancellation yields +0 ({fmt})");
+        }
+    }
+}
+
+#[test]
+fn overflow_behaviour_per_format() {
+    // IEEE formats overflow to Inf, NoInf formats saturate to max finite.
+    for fmt in [FP32, BF16, FP8_E5M2] {
+        let a = adder(fmt, 4);
+        let big = Fp::pack(false, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
+        let r = a.add(&[big, big, big, big]);
+        assert_eq!(r.class(), FpClass::Inf, "{fmt}");
+        assert!(!r.sign());
+    }
+    for fmt in [FP8_E4M3, FP8_E6M1] {
+        let a = adder(fmt, 4);
+        let big = Fp::pack(true, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
+        let r = a.add(&[big, big, big, big]);
+        assert_eq!(r.class(), FpClass::Normal, "{fmt} saturates");
+        assert_eq!(r.raw_exp(), fmt.max_normal_exp(), "{fmt}");
+        assert!(r.sign());
+    }
+}
+
+#[test]
+fn near_overflow_rounding_carry() {
+    // A sum whose rounding carry crosses into the overflow region.
+    let fmt = BF16;
+    let a = adder(fmt, 2);
+    let max = Fp::pack(false, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
+    // max + (ulp/2 of max) rounds up -> Inf.
+    let half_ulp = Fp::pack(false, fmt.max_normal_exp() - 8, 0, fmt);
+    let r = a.add(&[max, half_ulp]);
+    assert_eq!(r.class(), FpClass::Inf);
+}
+
+#[test]
+fn underflow_flushes_with_sign() {
+    let fmt = FP32;
+    let a = MultiTermAdder::exact(fmt, 2, Architecture::Baseline);
+    let tiny = Fp::pack(false, 1, 0, fmt); // +2^-126
+    let minus_1p5_tiny = Fp::pack(true, 1, 1 << 22, fmt); // -1.5·2^-126
+    let r = a.add(&[tiny, minus_1p5_tiny]);
+    assert_eq!(r.class(), FpClass::Zero);
+    assert!(r.sign(), "FTZ keeps the sign of the underflowed result");
+}
+
+#[test]
+fn e6m1_extreme_exponent_spread() {
+    // The paper's corner-case format: 6-bit exponent, 1-bit mantissa —
+    // alignment distances up to 62 dwarf the 2-bit significand.
+    let fmt = FP8_E6M1;
+    let a = adder(fmt, 16);
+    let mut terms = vec![Fp::pack(false, 63, 0, fmt)]; // 2^32
+    for e in 1..=15 {
+        terms.push(Fp::pack(false, e, 1, fmt)); // tiny terms, all absorbed
+    }
+    let r = a.add(&terms);
+    // Correct rounding: the tiny terms are below half an ULP of 2^32 in
+    // aggregate? Σ 1.5·2^(e-31) for e=1..15 ≈ 2^-15 — far below ulp(2^32)=2^31.
+    assert_eq!(r.bits, terms[0].bits, "tiny terms fully absorbed");
+    // And the exact oracle agrees.
+    assert_eq!(exact_rounded_sum(&terms, fmt).bits, terms[0].bits);
+}
+
+#[test]
+fn e6m1_sticky_breaks_rne_tie() {
+    let fmt = FP8_E6M1;
+    let a = adder(fmt, 4);
+    // 1.0·2^10 + 1.0·2^1: the small term is exactly at... build a tie case:
+    // big = 1.0·2^k (mant 0); half-ulp term = 1.0·2^(k-2) (ulp(big)=2^(k-1-31)).
+    let big = Fp::pack(false, 40, 0, fmt);
+    let half_ulp = Fp::pack(false, 38, 0, fmt);
+    // Exactly halfway -> ties to even -> stays at big (mant 0 is even).
+    assert_eq!(a.add(&[big, half_ulp]).bits, big.bits);
+    // Halfway plus a speck -> rounds up.
+    let speck = Fp::pack(false, 20, 0, fmt);
+    let r = a.add(&[big, half_ulp, speck]);
+    assert_eq!(r.mant(), 1);
+    assert_eq!(r.raw_exp(), 40);
+}
+
+#[test]
+fn nan_and_inf_screening_in_every_architecture() {
+    let fmt = FP8_E5M2;
+    for arch in [
+        Architecture::Baseline,
+        Architecture::Online,
+        Architecture::Exact,
+        Architecture::Tree("2-2".parse().unwrap()),
+    ] {
+        let a = MultiTermAdder::exact(fmt, 4, arch);
+        let one = Fp::from_f64(1.0, fmt);
+        let nan = Fp::nan(fmt);
+        let inf = Fp::overflow(false, fmt);
+        let ninf = Fp::overflow(true, fmt);
+        assert_eq!(a.add(&[nan, one, one, one]).class(), FpClass::Nan);
+        assert_eq!(a.add(&[inf, ninf, one, one]).class(), FpClass::Nan);
+        assert_eq!(a.add(&[inf, inf, one, one]).class(), FpClass::Inf);
+    }
+}
+
+#[test]
+fn format_lookup_rejects_unknown() {
+    assert!(format_by_name("fp4").is_none());
+    assert!(format_by_name("").is_none());
+}
+
+#[test]
+#[should_panic(expected = "input lanes")]
+fn too_many_terms_panics() {
+    let a = MultiTermAdder::exact(BF16, 4, Architecture::Baseline);
+    let one = Fp::from_f64(1.0, BF16);
+    let _ = a.add(&[one; 5]);
+}
+
+#[test]
+fn radix_config_validation() {
+    assert!("0-4".parse::<RadixConfig>().is_err());
+    assert!("4-x".parse::<RadixConfig>().is_err());
+    assert!(RadixConfig::binary(12).is_err());
+    assert!(RadixConfig::new(vec![]).is_err());
+    // 4096-term cap.
+    assert!(RadixConfig::new(vec![64, 64, 2]).is_err());
+}
+
+#[test]
+fn zeros_never_perturb_lambda_or_sum() {
+    // Interleave zeros everywhere; result must equal the dense sum.
+    let fmt = BF16;
+    let dense: Vec<Fp> = [1.5, -2.25, 1024.0, 0.0078125]
+        .iter()
+        .map(|&x| Fp::from_f64(x, fmt))
+        .collect();
+    let mut sparse = Vec::new();
+    for t in &dense {
+        sparse.push(Fp::zero(fmt));
+        sparse.push(*t);
+        sparse.push(Fp::from_bits(1 << (fmt.width() - 1), fmt)); // -0
+    }
+    let a_dense = MultiTermAdder::exact(fmt, 16, Architecture::Online);
+    let a_sparse = MultiTermAdder::exact(fmt, 16, Architecture::Online);
+    assert_eq!(a_dense.add(&dense).bits, a_sparse.add(&sparse).bits);
+}

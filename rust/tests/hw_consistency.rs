@@ -1,0 +1,120 @@
+//! Cross-model consistency: the hardware models must agree with the
+//! bit-accurate arithmetic and obey basic monotonicity laws.
+
+use online_fp_add::arith::tree::{enumerate_configs, tree_sum};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, BF16, FP32, FP8_E5M2, PAPER_FORMATS};
+use online_fp_add::hw::datapath::{build_adder, DatapathParams};
+use online_fp_add::hw::design::{attach_power, evaluate_area};
+use online_fp_add::hw::pipeline::{min_clock_ns, pipeline};
+use online_fp_add::hw::power::ActivitySim;
+use online_fp_add::util::prng::XorShift;
+use online_fp_add::workload::bert::power_trace;
+
+#[test]
+fn activity_sim_matches_arith_for_every_config_and_format() {
+    let mut rng = XorShift::new(0xCC);
+    for fmt in [BF16, FP8_E5M2] {
+        let n = 16u32;
+        let spec = AccSpec::hw_default(fmt, n as usize);
+        let params = DatapathParams::new(fmt, n, spec);
+        for cfg in enumerate_configs(n) {
+            let mut sim = ActivitySim::new(params, &cfg);
+            for _ in 0..20 {
+                let ts: Vec<Fp> =
+                    (0..n).map(|_| rng.gen_fp_sparse(fmt, 0.1)).collect();
+                sim.step(&ts);
+                let want = tree_sum(&ts, &cfg, spec);
+                let (lam, acc) = sim.last_state();
+                assert_eq!(lam, want.lambda as i64, "{fmt} {cfg}");
+                assert_eq!(acc, want.acc.to_i128(), "{fmt} {cfg}");
+            }
+        }
+    }
+}
+
+#[test]
+fn activity_sim_handles_fp32_64_terms() {
+    // The widest paper configuration (i128 accumulator path).
+    let mut rng = XorShift::new(0xCD);
+    let spec = AccSpec::hw_default(FP32, 64);
+    let params = DatapathParams::new(FP32, 64, spec);
+    let cfg = "8-4-2".parse().unwrap();
+    let mut sim = ActivitySim::new(params, &cfg);
+    for _ in 0..10 {
+        let ts: Vec<Fp> = (0..64).map(|_| rng.gen_fp_sparse(FP32, 0.05)).collect();
+        sim.step(&ts);
+        let want = tree_sum(&ts, &cfg, spec);
+        assert_eq!(sim.last_state().0, want.lambda as i64);
+        assert_eq!(sim.last_state().1, want.acc.to_i128());
+    }
+}
+
+#[test]
+fn min_clock_is_monotone_in_stage_count() {
+    for cfg in ["16", "8-2", "2-2-2-2"] {
+        let c = cfg.parse().unwrap();
+        let params = DatapathParams::new(BF16, 16, AccSpec::hw_default(BF16, 16));
+        let adder = build_adder(params, &c);
+        let mut prev = f64::INFINITY;
+        for k in 1..=5u32 {
+            let t = min_clock_ns(&adder, k);
+            assert!(t <= prev + 1e-9, "{cfg}: stages {k} clock {t} > {prev}");
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn relaxing_the_clock_never_increases_registers() {
+    let params = DatapathParams::new(BF16, 32, AccSpec::hw_default(BF16, 32));
+    let adder = build_adder(params, &"8-2-2".parse().unwrap());
+    let base = min_clock_ns(&adder, 3);
+    let mut prev_bits = u64::MAX;
+    for mult in [1.01, 1.3, 1.8, 2.5] {
+        let p = pipeline(&adder, 3, base * mult).unwrap();
+        assert!(p.reg_bits <= prev_bits, "clock {mult}x: {} > {prev_bits}", p.reg_bits);
+        prev_bits = p.reg_bits;
+    }
+}
+
+#[test]
+fn area_grows_with_precision_and_terms() {
+    let mut prev = 0.0;
+    for fmt in [online_fp_add::formats::FP8_E4M3, BF16, FP32] {
+        let p = evaluate_area(fmt, 16, &online_fp_add::arith::tree::RadixConfig::baseline(16), 1.0);
+        assert!(p.area_um2 > prev, "{fmt}");
+        prev = p.area_um2;
+    }
+    let a16 = evaluate_area(BF16, 16, &online_fp_add::arith::tree::RadixConfig::baseline(16), 1.0);
+    let a64 = evaluate_area(BF16, 64, &online_fp_add::arith::tree::RadixConfig::baseline(64), 1.0);
+    assert!(a64.area_um2 > 3.0 * a16.area_um2);
+}
+
+#[test]
+fn every_paper_format_evaluates_with_power() {
+    for fmt in PAPER_FORMATS {
+        let trace = power_trace(fmt, 16, 48, 9);
+        let mut p = evaluate_area(fmt, 16, &"4-4".parse().unwrap(), 1.0);
+        attach_power(&mut p, &trace.vectors);
+        let mw = p.power_mw.unwrap();
+        assert!(mw > 0.0 && mw < 100.0, "{fmt}: {mw} mW");
+    }
+}
+
+#[test]
+fn idle_trace_draws_less_power_than_busy_trace() {
+    let params = DatapathParams::new(BF16, 16, AccSpec::hw_default(BF16, 16));
+    let cfg = "4-4".parse().unwrap();
+    let mut rng = XorShift::new(4);
+    let busy: Vec<Vec<Fp>> =
+        (0..200).map(|_| (0..16).map(|_| rng.gen_fp_normal(BF16)).collect()).collect();
+    let idle: Vec<Vec<Fp>> = (0..200).map(|_| vec![Fp::zero(BF16); 16]).collect();
+    let mut sim_busy = ActivitySim::new(params, &cfg);
+    let mut sim_idle = ActivitySim::new(params, &cfg);
+    for (b, i) in busy.iter().zip(&idle) {
+        sim_busy.step(b);
+        sim_idle.step(i);
+    }
+    assert!(sim_idle.power_mw(1.0, None) < 0.2 * sim_busy.power_mw(1.0, None));
+}

@@ -1,0 +1,176 @@
+//! Integration tests across the three layers: the AOT-compiled JAX/Pallas
+//! artifacts executed via PJRT must agree with the Rust bit-accurate models
+//! — bit-for-bit on the `(λ, acc)` alignment state.
+//!
+//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`; the
+//! tests are skipped (with a loud message) when artifacts are missing so
+//! plain `cargo test` still works in a fresh checkout.
+
+use online_fp_add::arith::tree::{tree_sum, RadixConfig};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::coordinator::batcher::{Batcher, BatcherConfig};
+use online_fp_add::formats::{Fp, BF16, FP32};
+use online_fp_add::runtime::{BertLayerExe, BertWeights, OnlineReduceExe, Runtime};
+use online_fp_add::util::prng::XorShift;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_artifact_dir();
+    if !dir.join("online_reduce_bf16_n32.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("PJRT CPU client"))
+}
+
+/// Terms of one row as the kernel sees them: (e, m) int32 pairs.
+fn encode_row(rng: &mut XorShift, fmt: online_fp_add::formats::FpFormat, n: usize) -> (Vec<i32>, Vec<i32>, Vec<Fp>) {
+    let mut e = Vec::with_capacity(n);
+    let mut m = Vec::with_capacity(n);
+    let mut fps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let fp = rng.gen_fp_sparse(fmt, 0.1);
+        e.push(fp.raw_exp());
+        m.push(fp.signed_sig() as i32);
+        fps.push(fp);
+    }
+    (e, m, fps)
+}
+
+#[test]
+fn pallas_reduce_bf16_matches_rust_tree_bitexact() {
+    let Some(rt) = runtime() else { return };
+    let exe = OnlineReduceExe::load_bf16_n32(&rt).expect("load artifact");
+    let spec = AccSpec::truncated(exe.guard);
+    let cfg = RadixConfig::binary(32).unwrap();
+    let mut rng = XorShift::new(0x517E);
+
+    for round in 0..4 {
+        let mut e_all = Vec::new();
+        let mut m_all = Vec::new();
+        let mut rows = Vec::new();
+        for _ in 0..exe.batch {
+            let (e, m, fps) = encode_row(&mut rng, BF16, exe.n_terms);
+            e_all.extend_from_slice(&e);
+            m_all.extend_from_slice(&m);
+            rows.push(fps);
+        }
+        let out = exe.run(&rt, &e_all, &m_all).expect("execute");
+        for (i, fps) in rows.iter().enumerate() {
+            let state = tree_sum(fps, &cfg, spec);
+            assert_eq!(out.lambda[i], state.lambda, "row {i} round {round}: λ mismatch");
+            assert_eq!(
+                out.acc[i],
+                state.acc.to_i128() as i64,
+                "row {i} round {round}: acc mismatch"
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_reduce_fp32_matches_rust_tree_bitexact() {
+    let Some(rt) = runtime() else { return };
+    let exe = OnlineReduceExe::load_fp32_n16(&rt).expect("load artifact");
+    let spec = AccSpec::truncated(exe.guard);
+    let cfg = RadixConfig::binary(16).unwrap();
+    let mut rng = XorShift::new(0xF32);
+
+    let mut e_all = Vec::new();
+    let mut m_all = Vec::new();
+    let mut rows = Vec::new();
+    for _ in 0..exe.batch {
+        let (e, m, fps) = encode_row(&mut rng, FP32, exe.n_terms);
+        e_all.extend_from_slice(&e);
+        m_all.extend_from_slice(&m);
+        rows.push(fps);
+    }
+    let out = exe.run(&rt, &e_all, &m_all).expect("execute");
+    for (i, fps) in rows.iter().enumerate() {
+        let state = tree_sum(fps, &cfg, spec);
+        assert_eq!(out.lambda[i], state.lambda, "row {i}");
+        assert_eq!(out.acc[i], state.acc.to_i128() as i64, "row {i}");
+    }
+}
+
+#[test]
+fn partial_batches_are_padded_with_identity() {
+    let Some(rt) = runtime() else { return };
+    let exe = OnlineReduceExe::load_bf16_n32(&rt).expect("load artifact");
+    let mut rng = XorShift::new(1);
+    let (e, m, _) = encode_row(&mut rng, BF16, exe.n_terms);
+    let out = exe.run(&rt, &e, &m).expect("execute");
+    assert_eq!(out.lambda.len(), 1);
+    assert_eq!(out.acc.len(), 1);
+}
+
+#[test]
+fn bert_layer_runs_and_is_sane() {
+    let Some(rt) = runtime() else { return };
+    let exe = BertLayerExe::load(&rt).expect("load bert artifact");
+    let w = BertWeights::random(42);
+    let mut rng = XorShift::new(7);
+    let x: Vec<f32> = (0..online_fp_add::runtime::bert_dims().0 * online_fp_add::runtime::bert_dims().1)
+        .map(|_| (rng.gauss() * 0.5) as f32)
+        .collect();
+    let acts = exe.run(&rt, &x, &w).expect("execute bert layer");
+    let (seq, _d) = online_fp_add::runtime::bert_dims();
+    // softmax rows sum to 1
+    for row in 0..seq {
+        let s: f32 = acts.attn[row * seq..(row + 1) * seq].iter().sum();
+        assert!((s - 1.0).abs() < 1e-3, "attn row {row} sums to {s}");
+    }
+    assert!(acts.out.iter().all(|v| v.is_finite()));
+    // Output must not be identically the input (the layer did something).
+    let diff: f32 = acts.out.iter().zip(&x).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1.0);
+}
+
+#[test]
+fn batcher_over_pjrt_serves_concurrent_requests_bitexactly() {
+    if runtime().is_none() {
+        return;
+    }
+    let n_terms = 32;
+    let guard = 16;
+    let spec = AccSpec::truncated(guard);
+
+    // PJRT executables are not Send: build the runtime + executable on the
+    // dispatcher thread itself via spawn_with.
+    let batcher = Batcher::spawn_with(
+        BatcherConfig { n_terms, linger: std::time::Duration::from_millis(1), ..Default::default() },
+        move || {
+            let rt = Runtime::new(Runtime::default_artifact_dir()).expect("PJRT client");
+            let exe = OnlineReduceExe::load_bf16_n32(&rt).expect("load artifact");
+            move |rows: &[(Vec<i32>, Vec<i32>)]| {
+                let mut e_all = Vec::new();
+                let mut m_all = Vec::new();
+                for (e, m) in rows {
+                    e_all.extend_from_slice(e);
+                    m_all.extend_from_slice(m);
+                }
+                let out = exe.run(&rt, &e_all, &m_all).expect("pjrt execute");
+                out.lambda.into_iter().zip(out.acc).collect::<Vec<_>>()
+            }
+        },
+    );
+    let handle = batcher.handle();
+
+    let workers: Vec<_> = (0..48u64)
+        .map(|i| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut rng = XorShift::new(0xB000 + i);
+                let (e, m, fps) = encode_row(&mut rng, BF16, n_terms);
+                let resp = h.reduce(e, m).expect("batched reduce");
+                let want = tree_sum(&fps, &RadixConfig::binary(32).unwrap(), spec);
+                assert_eq!(resp.lambda, want.lambda);
+                assert_eq!(resp.acc, want.acc.to_i128() as i64);
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+    assert_eq!(batcher.metrics().requests.get(), 48);
+    assert!(batcher.metrics().batches.get() <= 48);
+}
