@@ -1,4 +1,4 @@
-//! End-to-end driver (EXPERIMENTS.md §E2E): every layer of the stack
+//! End-to-end driver (DESIGN.md §E2E): every layer of the stack
 //! composes on a real workload.
 //!
 //! 1. **L2 via PJRT** — load the AOT-compiled `bert_layer` artifact and run

@@ -1,6 +1,6 @@
 //! Diagnostic probe: area/register breakdown of 32-term BFloat16 adders at
 //! the paper's 1 GHz operating point for every radix configuration.
-//! Useful when calibrating the hardware model (EXPERIMENTS.md §Calibration).
+//! Useful when calibrating the hardware model (DESIGN.md §Calibration).
 
 use online_fp_add::arith::tree::{enumerate_configs, RadixConfig};
 use online_fp_add::arith::AccSpec;

@@ -1,4 +1,4 @@
-//! Bench: hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//! Bench: hot-path microbenchmarks (DESIGN.md §Perf).
 //!
 //! * bit-accurate `⊙` tree evaluation throughput (terms/s),
 //! * the online serial recurrence and the baseline,

@@ -1,0 +1,61 @@
+//! Bench: streaming engine ingest throughput (terms/s) vs thread count and
+//! chunk size, on the standard BERT partial-product trace.
+//!
+//! Besides the human-readable report, results land in `BENCH_stream.json`
+//! (via `bench_util::write_json`) so the perf trajectory is tracked
+//! machine-readably from PR to PR.
+//!
+//! Run: `cargo bench --bench stream`
+
+use online_fp_add::arith::AccSpec;
+use online_fp_add::bench_util::{bench, header, write_json, BenchRecord};
+use online_fp_add::formats::BF16;
+use online_fp_add::stream::{EngineConfig, StreamEngine};
+use online_fp_add::workload::bert::power_trace;
+use std::path::Path;
+
+const N_TERMS: usize = 32;
+
+fn main() {
+    header("stream engine ingest throughput (BF16, 32-lane BERT trace)");
+    let trace = power_trace(BF16, N_TERMS, 1024, 0xBE);
+    let rows = &trace.vectors;
+    let terms_per_replay = (rows.len() * N_TERMS) as f64;
+    let spec = AccSpec::exact(BF16);
+
+    let mut records = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        for &chunk in &[16usize, 64, 256] {
+            let engine = StreamEngine::new(EngineConfig {
+                threads,
+                chunk,
+                spec,
+                queue_depth: 8192,
+                ..Default::default()
+            });
+            let mut epoch = 0u64;
+            let r = bench(&format!("ingest threads={threads} chunk={chunk}"), 0.6, || {
+                // Fresh stream per replay; drain keeps the map from growing.
+                epoch += 1;
+                let id = format!("run-{epoch}");
+                for row in rows {
+                    engine.ingest_blocking(&id, row.clone()).expect("engine alive");
+                }
+                engine.quiesce();
+                engine.drain(&id);
+            });
+            let tput = r.throughput(terms_per_replay);
+            println!("{}   [{:.1} M terms/s]", r.line(), tput / 1e6);
+            records.push(
+                BenchRecord::new(r)
+                    .param("threads", threads as f64)
+                    .param("chunk", chunk as f64)
+                    .param("terms_per_s", tput),
+            );
+        }
+    }
+
+    let path = Path::new("BENCH_stream.json");
+    write_json(path, "stream", &records).expect("write BENCH_stream.json");
+    println!("\nwrote {} ({} records)", path.display(), records.len());
+}

@@ -119,8 +119,7 @@ pub fn tree_sum(terms: &[Fp], config: &RadixConfig, spec: AccSpec) -> AlignAcc {
     );
     // Allocation-free fast path for hardware-sized adders (N ≤ 64): a
     // stack buffer reduced in place level by level. The per-level Vec
-    // allocations dominated the profile before this — see EXPERIMENTS.md
-    // §Perf.
+    // allocations dominated the profile before this — see DESIGN.md §Perf.
     if terms.len() <= 64 {
         let mut buf = [AlignAcc::IDENTITY; 64];
         for (slot, t) in buf.iter_mut().zip(terms) {
@@ -133,7 +132,11 @@ pub fn tree_sum(terms: &[Fp], config: &RadixConfig, spec: AccSpec) -> AlignAcc {
     reduce_in_place(&mut buf, live, config, spec)
 }
 
-fn reduce_in_place(
+/// Level-by-level in-place reduction over pre-built leaves. `pub(crate)` so
+/// the native artifact executor ([`crate::runtime`]) reduces with *this*
+/// exact code path — its bit-equivalence to `tree_sum` is by construction,
+/// not by a parallel implementation.
+pub(crate) fn reduce_in_place(
     buf: &mut [AlignAcc],
     mut live: usize,
     config: &RadixConfig,

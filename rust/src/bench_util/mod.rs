@@ -92,6 +92,97 @@ pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One machine-readable benchmark record: a [`BenchResult`] plus labeled
+/// numeric parameters (thread count, chunk size, throughput, ...).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub result: BenchResult,
+    pub params: Vec<(String, f64)>,
+}
+
+impl BenchRecord {
+    pub fn new(result: BenchResult) -> Self {
+        BenchRecord { result, params: Vec::new() }
+    }
+
+    /// Attach one labeled numeric parameter (builder style). At
+    /// serialization time, any key that collides with the record's own
+    /// fields (`name`, `iters`, `median_s`, `mean_s`, `stddev_s`) or with
+    /// an earlier param is prefixed with `param_` until unique, so the
+    /// emitted JSON never contains duplicate keys.
+    pub fn param<S: Into<String>>(mut self, key: S, value: f64) -> Self {
+        self.params.push((key.into(), value));
+        self
+    }
+}
+
+/// Keys owned by the record itself; user params colliding with these are
+/// prefixed on output.
+const RESERVED_KEYS: [&str; 5] = ["name", "iters", "median_s", "mean_s", "stddev_s"];
+
+/// Serialize bench records to a JSON file (`BENCH_<suite>.json` by
+/// convention) so the perf trajectory is machine-trackable across PRs.
+/// Hand-rolled emitter — the offline environment has no serde.
+pub fn write_json(
+    path: &std::path::Path,
+    suite: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"suite\": {},\n", json_str(suite)));
+    out.push_str("  \"records\": [\n");
+    for (i, rec) in records.iter().enumerate() {
+        let r = &rec.result;
+        out.push_str("    {");
+        out.push_str(&format!("\"name\": {}, ", json_str(&r.name)));
+        out.push_str(&format!("\"iters\": {}, ", r.iters));
+        out.push_str(&format!("\"median_s\": {}, ", json_num(r.median_s)));
+        out.push_str(&format!("\"mean_s\": {}, ", json_num(r.mean_s)));
+        out.push_str(&format!("\"stddev_s\": {}", json_num(r.stddev_s)));
+        let mut seen: std::collections::HashSet<String> =
+            RESERVED_KEYS.iter().map(|k| k.to_string()).collect();
+        for (k, v) in &rec.params {
+            let mut key = k.clone();
+            while !seen.insert(key.clone()) {
+                key = format!("param_{key}");
+            }
+            out.push_str(&format!(", {}: {}", json_str(&key), json_num(*v)));
+        }
+        out.push_str(if i + 1 < records.len() { "},\n" } else { "}\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: Rust's `f64` Display never emits exponent notation and
+/// round-trips, which is exactly JSON-safe; non-finite becomes `null`.
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,6 +195,33 @@ mod tests {
         assert!(r.median_s > 0.0);
         assert!(r.iters >= 10);
         assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn json_report_is_wellformed() {
+        let rec = BenchRecord::new(BenchResult {
+            name: "ingest \"q\"".into(),
+            iters: 7,
+            median_s: 0.25,
+            mean_s: 0.3,
+            stddev_s: f64::NAN,
+        })
+        .param("threads", 4.0)
+        .param("terms_per_s", 1.5e6)
+        .param("iters", 9.0) // collides with a record field → prefixed
+        .param("threads", 8.0); // collides with an earlier param → prefixed
+        let path = std::env::temp_dir().join("ofa-bench-json-test.json");
+        write_json(&path, "unit", &[rec]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"suite\": \"unit\""), "{text}");
+        assert!(text.contains("\\\"q\\\""), "escaped quotes: {text}");
+        assert!(text.contains("\"stddev_s\": null"), "{text}");
+        assert!(text.contains("\"threads\": 4"), "{text}");
+        assert!(text.contains("\"median_s\": 0.25"), "{text}");
+        assert!(text.contains("\"param_iters\": 9"), "reserved key prefixed: {text}");
+        assert_eq!(text.matches("\"iters\"").count(), 1, "no duplicate keys: {text}");
+        assert!(text.contains("\"param_threads\": 8"), "repeated param prefixed: {text}");
+        assert_eq!(text.matches("\"threads\"").count(), 1, "no duplicate keys: {text}");
     }
 
     #[test]

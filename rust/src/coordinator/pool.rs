@@ -75,8 +75,10 @@ impl ThreadPool {
         self.in_flight.load(Ordering::SeqCst)
     }
 
-    /// Parallel map preserving input order. Panics in `f` surface as a
-    /// panic here (with the item index), not as a hung receiver.
+    /// Parallel map preserving input order. A panic in `f` resumes on the
+    /// caller with the worker's **original payload** (so the root cause —
+    /// message, custom payload type, everything — survives the thread hop),
+    /// never as a hung receiver; the failing item index goes to stderr.
     pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -100,7 +102,10 @@ impl ThreadPool {
             let (i, r) = rx.recv().expect("worker alive");
             match r {
                 Ok(v) => out[i] = Some(v),
-                Err(_) => panic!("par_map job {i} panicked"),
+                Err(payload) => {
+                    eprintln!("par_map job {i} panicked; resuming its panic on the caller");
+                    std::panic::resume_unwind(payload);
+                }
             }
         }
         out.into_iter().map(|o| o.expect("all indices filled")).collect()
@@ -143,8 +148,8 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "par_map job")]
-    fn panicking_job_is_reported() {
+    #[should_panic(expected = "boom")]
+    fn panicking_job_propagates_its_message() {
         let pool = ThreadPool::new(2);
         let _ = pool.par_map(vec![1, 2, 3], |x| {
             if x == 2 {
@@ -152,6 +157,20 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn panic_payload_is_propagated_verbatim() {
+        // Non-string payloads (e.g. structured job errors) must survive the
+        // worker→caller hop intact, not be replaced by a synthesized string.
+        #[derive(Debug, PartialEq)]
+        struct JobFault(u32);
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let _ = pool.par_map(vec![0u32], |_| -> u32 { std::panic::panic_any(JobFault(42)) });
+        }))
+        .expect_err("par_map must propagate the panic");
+        assert_eq!(caught.downcast_ref::<JobFault>(), Some(&JobFault(42)));
     }
 
     #[test]

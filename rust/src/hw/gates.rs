@@ -4,7 +4,7 @@
 //! NAND/NOR is 1 gate-equivalent (GE) of area and 1 τ of delay; everything
 //! else is expressed in those units. Absolute µm² / ns / mW come from three
 //! global calibration constants chosen once against the paper's 28-nm
-//! numbers (see `EXPERIMENTS.md` §Calibration) — *relative* results, which
+//! numbers (see `DESIGN.md` §Calibration) — *relative* results, which
 //! are what the reproduction compares, do not depend on them.
 
 /// Area of one gate-equivalent in µm² (28-nm standard cell, routed).

@@ -3,7 +3,7 @@
 //! Production-grade reproduction of *"Online Alignment and Addition in
 //! Multi-Term Floating-Point Adders"* (Alexandridis & Dimitrakopoulos, 2024).
 //!
-//! The crate is organised in four tiers:
+//! The crate is organised in five tiers:
 //!
 //! * [`formats`] + [`arith`] — bit-accurate models of every algorithm in the
 //!   paper: the serial baseline (Algorithm 2), the online fused recurrence
@@ -16,11 +16,15 @@
 //!   term counts and radix configurations, driven by realistic
 //!   BERT-style matmul operand traces (the paper's power methodology).
 //! * [`coordinator`] + [`runtime`] — a leader/worker experiment
-//!   orchestrator and a PJRT runtime that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`); python never runs on this path.
+//!   orchestrator and the artifact runtime executing the AOT-lowered
+//!   kernels (`artifacts/*.hlo.txt`); python never runs on this path.
+//! * [`stream`] — the serving tier: a sharded streaming align-and-add
+//!   reduction engine that exploits the associativity of `⊙` (eq. 10) to
+//!   split live traffic across chunks, threads and arrival orders with
+//!   bit-identical results in exact mode.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the crate map and the experiment index (including
+//! the perf and calibration notes the code comments cite).
 
 pub mod arith;
 pub mod bench_util;
@@ -29,6 +33,7 @@ pub mod dse;
 pub mod formats;
 pub mod hw;
 pub mod runtime;
+pub mod stream;
 pub mod util;
 pub mod workload;
 
@@ -40,3 +45,4 @@ pub use arith::{
     AccSpec,
 };
 pub use formats::{Fp, FpClass, FpFormat};
+pub use stream::{EngineConfig, Snapshot, StreamEngine, StreamService};

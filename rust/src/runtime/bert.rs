@@ -1,9 +1,11 @@
 //! Typed wrapper around the `bert_layer` artifact: one BERT-style encoder
-//! layer (the paper's power-estimation workload), executed via PJRT.
+//! layer (the paper's power-estimation workload), executed by the native
+//! interpreter via the same f32 kernels as [`crate::workload::bert`].
 
-use super::{literal_f32_2d, Runtime};
+use super::{LoadedArtifact, Result, Runtime, RuntimeError};
 use crate::util::prng::XorShift;
-use anyhow::Result;
+use crate::workload::bert::{gelu, softmax_rows};
+use crate::workload::matmul::matmul_f32;
 
 /// Geometry baked into the artifact at AOT time.
 pub const SEQ: usize = 128;
@@ -51,39 +53,76 @@ pub struct BertActivations {
     pub out: Vec<f32>,  // (SEQ, DMODEL)
 }
 
-/// A compiled BERT-layer executable.
+/// A loaded BERT-layer executable.
 pub struct BertLayerExe {
-    exe: xla::PjRtLoadedExecutable,
+    exe: LoadedArtifact,
 }
 
 impl BertLayerExe {
     pub fn load(rt: &Runtime) -> Result<Self> {
-        Ok(BertLayerExe { exe: rt.load("bert_layer")? })
+        let exe = rt.load("bert_layer")?;
+        exe.expect_kind(super::ArtifactKind::BertLayer)?;
+        Ok(BertLayerExe { exe })
     }
 
     /// Run the layer on `(SEQ, DMODEL)` activations.
     pub fn run(&self, rt: &Runtime, x: &[f32], w: &BertWeights) -> Result<BertActivations> {
-        assert_eq!(x.len(), SEQ * DMODEL);
-        let inputs = [
-            literal_f32_2d(x, SEQ, DMODEL)?,
-            literal_f32_2d(&w.wq, DMODEL, DMODEL)?,
-            literal_f32_2d(&w.wk, DMODEL, DMODEL)?,
-            literal_f32_2d(&w.wv, DMODEL, DMODEL)?,
-            literal_f32_2d(&w.wo, DMODEL, DMODEL)?,
-            literal_f32_2d(&w.w1, DMODEL, DFF)?,
-            literal_f32_2d(&w.w2, DFF, DMODEL)?,
-        ];
-        let out = rt.execute(&self.exe, &inputs)?;
-        anyhow::ensure!(out.len() == 8, "expected 8 outputs, got {}", out.len());
-        Ok(BertActivations {
-            q: out[0].to_vec::<f32>()?,
-            k: out[1].to_vec::<f32>()?,
-            v: out[2].to_vec::<f32>()?,
-            attn: out[3].to_vec::<f32>()?,
-            ctx: out[4].to_vec::<f32>()?,
-            h: out[5].to_vec::<f32>()?,
-            g: out[6].to_vec::<f32>()?,
-            out: out[7].to_vec::<f32>()?,
-        })
+        let _ = rt; // execution is native; the runtime only gates loading
+        if x.len() != SEQ * DMODEL {
+            return Err(RuntimeError::msg(format!(
+                "artifact {} expects ({SEQ}, {DMODEL}) activations, got {} values",
+                self.exe.name,
+                x.len()
+            )));
+        }
+        // Shape-check every operand (as the PJRT literal layer used to):
+        // a wrong-sized matrix must be an Err, not a panic or wrong math.
+        for (name, len, want) in [
+            ("wq", w.wq.len(), DMODEL * DMODEL),
+            ("wk", w.wk.len(), DMODEL * DMODEL),
+            ("wv", w.wv.len(), DMODEL * DMODEL),
+            ("wo", w.wo.len(), DMODEL * DMODEL),
+            ("w1", w.w1.len(), DMODEL * DFF),
+            ("w2", w.w2.len(), DFF * DMODEL),
+        ] {
+            if len != want {
+                return Err(RuntimeError::msg(format!(
+                    "artifact {}: weight {name} has {len} values, expected {want}",
+                    self.exe.name
+                )));
+            }
+        }
+        let (s, d, ff) = (SEQ, DMODEL, DFF);
+        let q = matmul_f32(x, &w.wq, s, d, d);
+        let k = matmul_f32(x, &w.wk, s, d, d);
+        let v = matmul_f32(x, &w.wv, s, d, d);
+        // attn = softmax(q @ k^T / sqrt(d)), row-wise.
+        let mut kt = vec![0f32; d * s];
+        for i in 0..s {
+            for j in 0..d {
+                kt[j * s + i] = k[i * d + j];
+            }
+        }
+        let mut attn = matmul_f32(&q, &kt, s, d, s);
+        let inv = 1.0 / (d as f32).sqrt();
+        for a in attn.iter_mut() {
+            *a *= inv;
+        }
+        softmax_rows(&mut attn, s, s);
+        let ctx = matmul_f32(&attn, &v, s, s, d);
+        // h = ctx @ wo + x (residual), g = gelu(h @ w1), out = g @ w2 + h.
+        let mut h = matmul_f32(&ctx, &w.wo, s, d, d);
+        for (hv, xv) in h.iter_mut().zip(x) {
+            *hv += xv;
+        }
+        let mut g = matmul_f32(&h, &w.w1, s, d, ff);
+        for gv in g.iter_mut() {
+            *gv = gelu(*gv);
+        }
+        let mut out = matmul_f32(&g, &w.w2, s, ff, d);
+        for (ov, hv) in out.iter_mut().zip(&h) {
+            *ov += hv;
+        }
+        Ok(BertActivations { q, k, v, attn, ctx, h, g, out })
     }
 }

@@ -1,40 +1,88 @@
-//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`) and execute them from Rust.
+//! Artifact runtime: execute the AOT-compiled reduction / BERT-layer
+//! artifacts (`artifacts/*.hlo.txt`) behind a typed, PJRT-shaped API.
 //!
-//! This is the only place python output crosses into the request path — as
-//! *compiled artifacts*, never as a python process. HLO **text** is the
-//! interchange format (jax ≥ 0.5 emits protos with 64-bit instruction ids
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! The offline build image carries no `xla`/PJRT shared libraries, so this
+//! module ships a **native interpreter** for the artifact set instead of a
+//! PJRT client: each artifact name maps to a bit-accurate Rust executor
+//! (the `⊙`-tree models of [`crate::arith`] for the `online_reduce_*`
+//! kernels, the f32 encoder layer of [`crate::workload::bert`] for
+//! `bert_layer`). The API mirrors the PJRT wrappers exactly — load by
+//! artifact stem, fixed batch geometry, identity padding of partial
+//! batches — so the integration tests, the dynamic batcher and the
+//! examples are byte-for-byte the same code they would be against a real
+//! PJRT backend, and the artifact files still gate execution (no file, no
+//! executable).
 //!
-//! The typed wrappers ([`OnlineReduceExe`], [`BertLayerExe`]) hide literal
-//! plumbing and pad partial batches with identity (zero) terms, mirroring
-//! unused hardware lanes.
+//! The typed wrappers ([`OnlineReduceExe`], [`BertLayerExe`]) hide the
+//! dispatch plumbing and pad partial batches with identity (zero) terms,
+//! mirroring unused hardware lanes.
 
 mod bert;
 mod reduce;
 
-pub use bert::{BertLayerExe, BertWeights};
+pub use bert::{BertActivations, BertLayerExe, BertWeights};
 pub use reduce::{OnlineReduceExe, ReduceOut};
 
-/// (SEQ, DMODEL, DFF) geometry of the BERT-layer artifact.
+/// (SEQ, DMODEL) geometry of the BERT-layer artifact.
 pub fn bert_dims() -> (usize, usize) {
     (bert::SEQ, bert::DMODEL)
 }
 
-use anyhow::{Context, Result};
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-/// A PJRT CPU client plus the artifact directory.
+/// Runtime error: a message chain, `{:#}`-formats like `anyhow` did.
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn msg<S: Into<String>>(s: S) -> Self {
+        RuntimeError(s.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Which native executor an artifact name resolves to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum ArtifactKind {
+    OnlineReduce,
+    BertLayer,
+}
+
+/// A "compiled" artifact: the resolved executor plus its source path.
+pub struct LoadedArtifact {
+    kind: ArtifactKind,
+    pub name: String,
+}
+
+/// The artifact runtime: an executor registry rooted at an artifact
+/// directory (the native stand-in for a PJRT CPU client).
 pub struct Runtime {
-    client: xla::PjRtClient,
     artifact_dir: PathBuf,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
+    /// Open a runtime rooted at an artifact directory. Fails when the
+    /// directory does not exist — the same failure mode as a PJRT client
+    /// with no plugin, which the fault-injection tests rely on.
     pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+        let dir = artifact_dir.as_ref();
+        if !dir.is_dir() {
+            return Err(RuntimeError::msg(format!(
+                "artifact directory {} not found (run `make artifacts`)",
+                dir.display()
+            )));
+        }
+        Ok(Runtime { artifact_dir: dir.to_path_buf() })
     }
 
     /// Locate the artifact directory: `$ONLINE_FP_ADD_ARTIFACTS`, then
@@ -52,48 +100,74 @@ impl Runtime {
         PathBuf::from("artifacts")
     }
 
+    /// Backend identifier (mirrors `PjRtClient::platform_name`).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "native-interpreter".to_string()
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    /// Load and compile one artifact by stem name (e.g. `"bert_layer"`).
-    pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+    /// Load one artifact by stem name (e.g. `"bert_layer"`): the
+    /// `<name>.hlo.txt` file must exist and the name must map to a known
+    /// executor.
+    pub fn load(&self, name: &str) -> Result<LoadedArtifact> {
         let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))
-    }
-
-    /// Execute a compiled artifact and return the flattened output tuple.
-    ///
-    /// All artifacts are lowered with `return_tuple=True`, so the single
-    /// device output is a tuple literal we decompose here.
-    pub fn execute(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let result = exe.execute::<xla::Literal>(inputs).context("executing artifact")?;
-        let out = result[0][0].to_literal_sync().context("fetching result literal")?;
-        out.to_tuple().context("decomposing output tuple")
+        if !path.is_file() {
+            return Err(RuntimeError::msg(format!(
+                "artifact {name} not found: missing {}",
+                path.display()
+            )));
+        }
+        let kind = if name.starts_with("online_reduce") {
+            ArtifactKind::OnlineReduce
+        } else if name == "bert_layer" {
+            ArtifactKind::BertLayer
+        } else {
+            return Err(RuntimeError::msg(format!(
+                "artifact {name} has no registered native executor"
+            )));
+        };
+        Ok(LoadedArtifact { kind, name: name.to_string() })
     }
 }
 
-/// Build a 2-D `i32` literal from row-major data.
-pub fn literal_i32_2d(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+impl LoadedArtifact {
+    fn expect_kind(&self, kind: ArtifactKind) -> Result<()> {
+        if self.kind == kind {
+            Ok(())
+        } else {
+            Err(RuntimeError::msg(format!(
+                "artifact {} is a {:?}, not a {kind:?}",
+                self.name, self.kind
+            )))
+        }
+    }
 }
 
-/// Build a 2-D `f32` literal from row-major data.
-pub fn literal_f32_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    debug_assert_eq!(data.len(), rows * cols);
-    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_directory_is_an_error() {
+        let err = Runtime::new("/nonexistent/artifacts").err().expect("must fail");
+        assert!(format!("{err:#}").contains("/nonexistent/artifacts"));
+    }
+
+    #[test]
+    fn missing_artifact_names_the_artifact() {
+        // The repo root always exists; artifacts generally do not.
+        let dir = std::env::temp_dir();
+        let rt = Runtime::new(&dir).expect("temp dir exists");
+        let err = rt.load("no_such_artifact").err().expect("must fail");
+        assert!(format!("{err}").contains("no_such_artifact"), "{err}");
+    }
+
+    #[test]
+    fn unknown_executor_is_rejected_even_with_a_file() {
+        let dir = std::env::temp_dir().join("ofa-artifact-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("mystery.hlo.txt"), "HloModule mystery").unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        let err = rt.load("mystery").err().expect("no executor registered");
+        assert!(format!("{err}").contains("mystery"));
+    }
 }

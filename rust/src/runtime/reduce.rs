@@ -1,8 +1,17 @@
-//! Typed wrapper around the `online_reduce_*` artifacts: the L1 Pallas
-//! online align-and-add reduction, executed via PJRT.
+//! Typed wrapper around the `online_reduce_*` artifacts: the online
+//! align-and-add reduction with a fixed `(batch, n_terms)` geometry,
+//! executed by the native interpreter.
+//!
+//! The executor reproduces the Pallas kernel's semantics exactly: each row's
+//! `(e, m)` pairs become `⊙` leaves and are reduced by the balanced binary
+//! tree the kernel lowers to, in the truncated accumulator frame with
+//! `guard` fractional-extension bits — so results are bit-identical to
+//! `tree_sum(_, RadixConfig::binary(n), AccSpec::truncated(guard))`.
 
-use super::{literal_i32_2d, Runtime};
-use anyhow::Result;
+use super::{LoadedArtifact, Result, Runtime, RuntimeError};
+use crate::arith::operator::AlignAcc;
+use crate::arith::tree::{reduce_in_place, RadixConfig};
+use crate::arith::{AccSpec, WideInt};
 
 /// Output of one reduction batch: per-row `(λ, acc)` states.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -11,10 +20,12 @@ pub struct ReduceOut {
     pub acc: Vec<i64>,
 }
 
-/// A compiled online-reduction executable with fixed `(batch, n_terms)`
+/// A loaded online-reduction executable with fixed `(batch, n_terms)`
 /// geometry (baked in at AOT time — see `python/compile/aot.py`).
 pub struct OnlineReduceExe {
-    exe: xla::PjRtLoadedExecutable,
+    exe: LoadedArtifact,
+    /// The balanced binary tree the kernel lowers to.
+    cfg: RadixConfig,
     pub batch: usize,
     pub n_terms: usize,
     /// Guard (fractional-extension) bits of the artifact's accumulator
@@ -24,8 +35,19 @@ pub struct OnlineReduceExe {
 
 impl OnlineReduceExe {
     /// Load an artifact by name, e.g. `"online_reduce_bf16_n32"`.
-    pub fn load(rt: &Runtime, name: &str, batch: usize, n_terms: usize, guard: u32) -> Result<Self> {
-        Ok(OnlineReduceExe { exe: rt.load(name)?, batch, n_terms, guard })
+    pub fn load(
+        rt: &Runtime,
+        name: &str,
+        batch: usize,
+        n_terms: usize,
+        guard: u32,
+    ) -> Result<Self> {
+        let cfg = RadixConfig::binary(n_terms as u32).map_err(|e| {
+            RuntimeError::msg(format!("artifact {name}: unsupported geometry: {e}"))
+        })?;
+        let exe = rt.load(name)?;
+        exe.expect_kind(super::ArtifactKind::OnlineReduce)?;
+        Ok(OnlineReduceExe { exe, cfg, batch, n_terms, guard })
     }
 
     /// The BF16 32-term artifact with its baked geometry.
@@ -40,25 +62,74 @@ impl OnlineReduceExe {
         Self::load(rt, "online_reduce_fp32_n16", 64, 16, 31)
     }
 
-    /// Reduce up to `batch` rows of `(e, m)` terms. Short batches are padded
-    /// with zero rows (identity leaves); only the live rows are returned.
+    /// Reduce up to `batch` rows of `(e, m)` terms. Short batches are
+    /// accepted (the hardware pads its unused lanes with identity rows;
+    /// the native executor simply computes the live rows) and exactly the
+    /// live rows are returned.
     pub fn run(&self, rt: &Runtime, e: &[i32], m: &[i32]) -> Result<ReduceOut> {
+        let _ = rt; // execution is native; the runtime only gates loading
         assert_eq!(e.len(), m.len());
         assert_eq!(e.len() % self.n_terms, 0, "inputs must be whole rows");
         let rows = e.len() / self.n_terms;
-        assert!(rows <= self.batch, "at most {} rows per execution", self.batch);
-        let mut e_pad = e.to_vec();
-        let mut m_pad = m.to_vec();
-        e_pad.resize(self.batch * self.n_terms, 0);
-        m_pad.resize(self.batch * self.n_terms, 0);
-        let le = literal_i32_2d(&e_pad, self.batch, self.n_terms)?;
-        let lm = literal_i32_2d(&m_pad, self.batch, self.n_terms)?;
-        let out = rt.execute(&self.exe, &[le, lm])?;
-        anyhow::ensure!(out.len() == 2, "expected (lambda, acc) tuple, got {} elems", out.len());
-        let mut lambda = out[0].to_vec::<i32>()?;
-        let mut acc = out[1].to_vec::<i64>()?;
-        lambda.truncate(rows);
-        acc.truncate(rows);
+        if rows > self.batch {
+            return Err(RuntimeError::msg(format!(
+                "artifact {} executes at most {} rows, got {rows}",
+                self.exe.name, self.batch
+            )));
+        }
+        let spec = AccSpec::truncated(self.guard);
+        let mut lambda = Vec::with_capacity(rows);
+        let mut acc = Vec::with_capacity(rows);
+        let mut buf = vec![AlignAcc::IDENTITY; self.n_terms];
+        for r in 0..rows {
+            let base = r * self.n_terms;
+            for (lane, slot) in buf.iter_mut().enumerate() {
+                *slot = leaf_from_fields(e[base + lane], m[base + lane], spec);
+            }
+            // The same reduction code path as `tree_sum` — bit-equivalence
+            // to the model is by construction.
+            let state = reduce_in_place(&mut buf, self.n_terms, &self.cfg, spec);
+            lambda.push(state.lambda);
+            acc.push(state.acc.to_i128() as i64);
+        }
         Ok(ReduceOut { lambda, acc })
+    }
+}
+
+/// Lift one `(e, m)` lane into the operator domain, matching
+/// [`AlignAcc::leaf`]: a zero significand is the identity (a zero operand
+/// contributes neither to the max-exponent tree nor to the fraction sum).
+fn leaf_from_fields(e: i32, m: i32, spec: AccSpec) -> AlignAcc {
+    if m == 0 {
+        return AlignAcc::IDENTITY;
+    }
+    AlignAcc { lambda: e, acc: WideInt::from_i64_shl(m as i64, spec.f), sticky: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::tree::tree_sum;
+    use crate::formats::{Fp, BF16};
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn native_executor_leaves_match_tree_sum_bitexact() {
+        // The executor shares reduce_in_place with tree_sum, so the only
+        // thing left to check is that (e, m) field lifting matches
+        // AlignAcc::leaf on real encoded terms.
+        let spec = AccSpec::truncated(16);
+        let cfg = RadixConfig::binary(32).unwrap();
+        let mut rng = XorShift::new(0x2E0);
+        let mut buf = vec![AlignAcc::IDENTITY; 32];
+        for _ in 0..200 {
+            let terms: Vec<Fp> = (0..32).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+            for (slot, t) in buf.iter_mut().zip(&terms) {
+                *slot = leaf_from_fields(t.raw_exp(), t.signed_sig() as i32, spec);
+            }
+            let got = reduce_in_place(&mut buf, 32, &cfg, spec);
+            let want = tree_sum(&terms, &cfg, spec);
+            assert_eq!(got, want);
+        }
     }
 }

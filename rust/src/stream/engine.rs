@@ -1,0 +1,437 @@
+//! The streaming reduction engine: record batches in, merged `AlignAcc`
+//! stream states out.
+//!
+//! Workers are long-running jobs on a [`ThreadPool`] draining one bounded
+//! queue (the `batcher` backpressure idiom): `try_send` rejects with
+//! `Overloaded` when the queue is full, so producers shed load instead of
+//! buffering unboundedly. Each worker chops a batch into `chunk`-sized
+//! segments ([`segment::reduce_chunk`]) and merges them into the shared
+//! [`ShardMap`] under that stream's stripe lock. With an exact [`AccSpec`]
+//! the final per-stream `(λ, acc, sticky)` is **bit-identical** for every
+//! chunk size, thread count and arrival order (eq. 10) — which is what
+//! makes this fan-out safe. Truncated specs still work (λ is exact, sticky
+//! is monotone) but their dropped low bits depend on merge completion
+//! order, so multi-threaded replay is not bit-reproducible; use
+//! [`super::segment::SegmentAssembler`] on a single consumer when a
+//! truncated datapath must replay deterministically.
+
+use super::segment::{reduce_chunk, Segment};
+use super::shard::{ShardMap, Snapshot};
+use crate::arith::AccSpec;
+use crate::coordinator::batcher::SubmitError;
+use crate::coordinator::metrics::{Counter, LatencyHistogram};
+use crate::coordinator::pool::ThreadPool;
+use crate::formats::{Fp, BF16};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+/// Engine geometry and datapath knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Worker threads reducing and merging batches.
+    pub threads: usize,
+    /// Terms per segment (the chunk size of the chunked reduction).
+    pub chunk: usize,
+    /// Bounded ingest-queue depth (backpressure threshold), in batches.
+    pub queue_depth: usize,
+    /// Lock stripes of the shard map.
+    pub stripes: usize,
+    /// Accumulator datapath; exact specs give order/chunking/thread-count
+    /// invariant results.
+    pub spec: AccSpec,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: ThreadPool::default_size(),
+            chunk: 64,
+            queue_depth: 4096,
+            stripes: 16,
+            spec: AccSpec::exact(BF16),
+        }
+    }
+}
+
+/// Shared engine counters (same style as `BatcherMetrics`).
+#[derive(Default, Debug)]
+pub struct EngineMetrics {
+    /// Batches accepted into the queue.
+    pub batches: Counter,
+    /// Terms accepted into the queue.
+    pub ingested_terms: Counter,
+    /// Segments produced by chunked reduction.
+    pub segments: Counter,
+    /// Segment→stream merges applied to the shard map.
+    pub merges: Counter,
+    /// Batches rejected by backpressure.
+    pub rejected: Counter,
+    /// Streams finalized (drained).
+    pub drains: Counter,
+    /// Queue→merge completion latency per batch.
+    pub ingest_latency: LatencyHistogram,
+}
+
+struct WorkItem {
+    stream: String,
+    terms: Vec<Fp>,
+    submitted: Instant,
+}
+
+/// Monotone ingest progress: `done` converges on `accepted` (rejected and
+/// panicked batches count as done), so a [`StreamEngine::quiesce`] caller
+/// waits only for the batches accepted *before* its call — it stays live
+/// under sustained ingest from other clients.
+#[derive(Default)]
+struct Progress {
+    accepted: u64,
+    done: u64,
+}
+
+type ProgressSync = (Mutex<Progress>, Condvar);
+
+/// Poison-tolerant lock: a panicked worker must never turn `quiesce` into
+/// a deadlock or a poison panic cascade.
+fn lock_progress(p: &ProgressSync) -> MutexGuard<'_, Progress> {
+    p.0.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn note_done(p: &ProgressSync) {
+    lock_progress(p).done += 1;
+    p.1.notify_all();
+}
+
+/// Multi-threaded streaming align-and-add engine.
+pub struct StreamEngine {
+    cfg: EngineConfig,
+    shards: Arc<ShardMap>,
+    metrics: Arc<EngineMetrics>,
+    tx: Option<SyncSender<WorkItem>>,
+    progress: Arc<ProgressSync>,
+    pool: ThreadPool,
+}
+
+impl StreamEngine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        let pool = ThreadPool::new(cfg.threads.max(1));
+        let shards = Arc::new(ShardMap::new(cfg.stripes, cfg.spec));
+        let metrics = Arc::new(EngineMetrics::default());
+        let progress = Arc::new((Mutex::new(Progress::default()), Condvar::new()));
+        let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        for _ in 0..pool.size() {
+            let rx = Arc::clone(&rx);
+            let shards = Arc::clone(&shards);
+            let metrics = Arc::clone(&metrics);
+            let progress = Arc::clone(&progress);
+            let chunk = cfg.chunk.max(1);
+            let spec = cfg.spec;
+            pool.submit(move || worker_loop(&rx, &shards, &metrics, &progress, chunk, spec));
+        }
+        StreamEngine { cfg, shards, metrics, tx: Some(tx), progress, pool }
+    }
+
+    pub fn config(&self) -> EngineConfig {
+        self.cfg
+    }
+
+    pub fn metrics(&self) -> &EngineMetrics {
+        &self.metrics
+    }
+
+    pub fn shards(&self) -> &ShardMap {
+        &self.shards
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Queue one record batch for `stream`. Rejects with
+    /// [`SubmitError::Overloaded`] when the bounded queue is full.
+    pub fn ingest(&self, stream: &str, terms: Vec<Fp>) -> Result<usize, SubmitError> {
+        self.ingest_inner(stream, terms, false)
+    }
+
+    /// Queue one record batch, blocking while the queue is full (the replay
+    /// path: traces are fed as fast as the engine drains them).
+    pub fn ingest_blocking(&self, stream: &str, terms: Vec<Fp>) -> Result<usize, SubmitError> {
+        self.ingest_inner(stream, terms, true)
+    }
+
+    /// The one place the progress accounting lives: `note_accepted` must be
+    /// balanced by exactly one worker `note_done` (on success) or the error
+    /// path below — otherwise `quiesce` wedges.
+    fn ingest_inner(
+        &self,
+        stream: &str,
+        terms: Vec<Fp>,
+        blocking: bool,
+    ) -> Result<usize, SubmitError> {
+        let n = terms.len();
+        self.note_accepted();
+        let item =
+            WorkItem { stream: stream.to_string(), terms, submitted: Instant::now() };
+        let tx = self.tx.as_ref().expect("engine alive");
+        let sent = if blocking {
+            tx.send(item).map_err(|_| SubmitError::Closed)
+        } else {
+            match tx.try_send(item) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.rejected.inc();
+                    Err(SubmitError::Overloaded)
+                }
+                Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            }
+        };
+        match sent {
+            Ok(()) => {
+                self.metrics.batches.inc();
+                self.metrics.ingested_terms.add(n as u64);
+                Ok(n)
+            }
+            Err(e) => {
+                note_done(&self.progress);
+                Err(e)
+            }
+        }
+    }
+
+    /// Block until every batch accepted **before this call** has been
+    /// reduced and merged. A watermark wait, not a drain-to-empty: under
+    /// sustained ingest from other clients this still returns as soon as
+    /// the pre-call backlog clears.
+    pub fn quiesce(&self) {
+        let cvar = &self.progress.1;
+        let mut g = lock_progress(&self.progress);
+        let target = g.accepted;
+        while g.done < target {
+            g = cvar.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Checkpoint one stream (None if it was never ingested or was
+    /// drained). Does not wait for queued work — call [`Self::quiesce`]
+    /// first for a consistent point-in-time read.
+    pub fn snapshot(&self, stream: &str) -> Option<Snapshot> {
+        self.shards.snapshot(stream)
+    }
+
+    /// Finalize one stream: remove it and return its last checkpoint.
+    pub fn drain(&self, stream: &str) -> Option<Snapshot> {
+        let snap = self.shards.drain(stream);
+        if snap.is_some() {
+            self.metrics.drains.inc();
+        }
+        snap
+    }
+
+    fn note_accepted(&self) {
+        lock_progress(&self.progress).accepted += 1;
+    }
+}
+
+impl Drop for StreamEngine {
+    fn drop(&mut self) {
+        // Close the queue; workers drain what was accepted, then exit, then
+        // the pool's own Drop joins them.
+        drop(self.tx.take());
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<WorkItem>>,
+    shards: &ShardMap,
+    metrics: &EngineMetrics,
+    progress: &ProgressSync,
+    chunk: usize,
+    spec: AccSpec,
+) {
+    loop {
+        let item = {
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.recv()
+        };
+        let item = match item {
+            Ok(item) => item,
+            Err(_) => return, // engine dropped and queue drained
+        };
+        // A panicking batch must neither kill the worker nor leak the
+        // progress accounting (which would wedge quiesce forever): contain
+        // it, count the batch done, keep serving.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            // Chunked reduction outside any lock; only the merge serializes
+            // on the stream's stripe.
+            let mut segments = 0u64;
+            let mut merged = Segment::EMPTY;
+            for c in item.terms.chunks(chunk) {
+                let seg = reduce_chunk(c, spec);
+                segments += 1;
+                // Batch-local pre-merge: one stripe-lock acquisition per
+                // batch rather than per segment (associativity again).
+                merged = merged.merge(&seg, spec);
+            }
+            if !item.terms.is_empty() {
+                shards.merge(&item.stream, merged);
+                metrics.merges.inc();
+            }
+            metrics.segments.add(segments);
+        }));
+        if outcome.is_err() {
+            eprintln!(
+                "stream worker: batch for stream {:?} panicked; its terms are lost",
+                item.stream
+            );
+        }
+        metrics.ingest_latency.observe(item.submitted.elapsed());
+        note_done(progress);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::tree::{tree_sum, RadixConfig};
+    use crate::util::prng::XorShift;
+
+    fn config(threads: usize, chunk: usize) -> EngineConfig {
+        EngineConfig { threads, chunk, ..Default::default() }
+    }
+
+    fn rows(rng: &mut XorShift, n_rows: usize, width: usize) -> Vec<Vec<Fp>> {
+        (0..n_rows)
+            .map(|_| (0..width).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect())
+            .collect()
+    }
+
+    fn reference(rows: &[Vec<Fp>], spec: AccSpec) -> crate::arith::operator::AlignAcc {
+        let flat: Vec<Fp> = rows.iter().flatten().copied().collect();
+        tree_sum(&flat, &RadixConfig::baseline(flat.len() as u32), spec)
+    }
+
+    #[test]
+    fn single_stream_matches_tree_reference() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xE16);
+        let data = rows(&mut rng, 40, 32);
+        let engine = StreamEngine::new(config(4, 16));
+        for r in &data {
+            engine.ingest_blocking("s", r.clone()).unwrap();
+        }
+        engine.quiesce();
+        let snap = engine.snapshot("s").unwrap();
+        assert_eq!(snap.state(), reference(&data, spec));
+        assert_eq!(snap.terms, 40 * 32);
+        assert_eq!(engine.metrics().batches.get(), 40);
+        assert_eq!(engine.metrics().ingested_terms.get(), 40 * 32);
+    }
+
+    #[test]
+    fn result_is_invariant_to_threads_chunk_and_order() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x1237);
+        let data = rows(&mut rng, 30, 32);
+        let want = reference(&data, spec);
+        for threads in [1usize, 2, 8] {
+            for chunk in [1usize, 7, 64] {
+                let mut shuffled = data.clone();
+                rng.shuffle(&mut shuffled);
+                let engine = StreamEngine::new(config(threads, chunk));
+                for r in &shuffled {
+                    engine.ingest_blocking("s", r.clone()).unwrap();
+                }
+                engine.quiesce();
+                let snap = engine.snapshot("s").unwrap();
+                assert_eq!(snap.state(), want, "threads={threads} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn streams_do_not_interfere() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x9);
+        let a = rows(&mut rng, 12, 16);
+        let b = rows(&mut rng, 9, 16);
+        let engine = StreamEngine::new(config(4, 8));
+        for (i, r) in a.iter().chain(b.iter()).enumerate() {
+            let id = if i < a.len() { "a" } else { "b" };
+            engine.ingest_blocking(id, r.clone()).unwrap();
+        }
+        engine.quiesce();
+        assert_eq!(engine.snapshot("a").unwrap().state(), reference(&a, spec));
+        assert_eq!(engine.snapshot("b").unwrap().state(), reference(&b, spec));
+        assert_eq!(engine.shards().len(), 2);
+    }
+
+    #[test]
+    fn drain_finalizes_and_removes() {
+        let mut rng = XorShift::new(0xD);
+        let data = rows(&mut rng, 4, 8);
+        let engine = StreamEngine::new(config(2, 4));
+        for r in &data {
+            engine.ingest_blocking("s", r.clone()).unwrap();
+        }
+        engine.quiesce();
+        let snap = engine.drain("s").unwrap();
+        assert_eq!(snap.terms, 32);
+        assert!(engine.snapshot("s").is_none());
+        assert!(engine.drain("s").is_none());
+        assert_eq!(engine.metrics().drains.get(), 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_saturated() {
+        // A zero-worker engine is impossible (threads >= 1), so saturate by
+        // queueing more than queue_depth while workers chew a huge batch.
+        let cfg = EngineConfig { threads: 1, chunk: 1, queue_depth: 1, ..Default::default() };
+        let engine = StreamEngine::new(cfg);
+        let mut rng = XorShift::new(0xBB);
+        let big: Vec<Fp> = (0..200_000).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+        let small: Vec<Fp> = big[..4].to_vec();
+        // Keep the single worker busy, then overfill the depth-1 queue.
+        engine.ingest_blocking("s", big).unwrap();
+        let mut overloaded = false;
+        for _ in 0..1000 {
+            match engine.ingest("s", small.clone()) {
+                Ok(_) => {}
+                Err(SubmitError::Overloaded) => {
+                    overloaded = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(overloaded, "bounded queue must reject past its depth");
+        assert!(engine.metrics().rejected.get() >= 1);
+        engine.quiesce(); // everything accepted still completes
+    }
+
+    #[test]
+    fn quiesce_on_idle_engine_returns_immediately() {
+        let engine = StreamEngine::new(config(2, 8));
+        engine.quiesce();
+        assert!(engine.shards().is_empty());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn worker_panic_does_not_wedge_quiesce() {
+        // An Inf term bypasses the service-level screen and trips the
+        // debug assertion in AlignAcc::leaf, panicking the worker
+        // mid-batch. The engine must count the batch done (quiesce stays
+        // live) and keep serving later batches.
+        let engine = StreamEngine::new(config(2, 8));
+        let inf = Fp::overflow(false, BF16);
+        engine.ingest_blocking("bad", vec![inf]).unwrap();
+        engine.quiesce(); // must return despite the panicked batch
+        let one = Fp::from_f64(1.0, BF16);
+        engine.ingest_blocking("good", vec![one, one]).unwrap();
+        engine.quiesce();
+        assert_eq!(engine.snapshot("good").unwrap().terms, 2);
+        assert!(engine.snapshot("bad").is_none(), "panicked batch merged nothing");
+    }
+}

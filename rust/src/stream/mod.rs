@@ -1,0 +1,40 @@
+//! Streaming align-and-add reduction: the serving tier.
+//!
+//! Everything below rides on one fact from the paper: the fused
+//! align-and-add operator `⊙` (eq. 8) is **associative** (eq. 10), so a
+//! multi-term sum splits across any parenthesisation — and therefore
+//! across chunks ([`segment`]), across threads and shards ([`shard`],
+//! [`engine`]), and across *time*: a stream's partial state is a complete,
+//! mergeable summary of every term it has absorbed, never a rounded
+//! intermediate. Related streaming-summation work (exponent-indexed
+//! accumulators, chunk-parallel reproducible sums) frames long-running FP
+//! aggregation exactly this way; here the mergeable state is the paper's
+//! own `[λ; o]` vector.
+//!
+//! Layering, bottom up:
+//!
+//! * [`segment`] — chunked reduction of term slices into [`segment::Segment`]
+//!   partial states; out-of-order reassembly ([`segment::SegmentAssembler`]).
+//! * [`shard`] — striped-lock map from stream id to merged state, with
+//!   copyable [`shard::Snapshot`] checkpoints and cross-shard merge.
+//! * [`engine`] — a multi-threaded ingest pipeline on
+//!   [`crate::coordinator::pool::ThreadPool`] with bounded-queue
+//!   backpressure and [`crate::coordinator::metrics`] counters.
+//! * [`service`] — the request/response front-end (`Ingest` / `Query` /
+//!   `Checkpoint` / `Drain`), rounding once per query via
+//!   [`crate::arith::normalize`].
+//!
+//! With an exact [`crate::arith::AccSpec`], replaying the same traffic with
+//! any chunk size, thread count and arrival order yields bit-identical
+//! `(λ, acc, sticky)` per stream — demonstrated in
+//! `tests/stream_invariants.rs` and `examples/stream_serve.rs`.
+
+pub mod engine;
+pub mod segment;
+pub mod service;
+pub mod shard;
+
+pub use engine::{EngineConfig, EngineMetrics, StreamEngine};
+pub use segment::{reduce_chunk, segment_terms, Segment, SegmentAssembler};
+pub use service::{IngestError, Request, Response, StreamService};
+pub use shard::{ShardMap, Snapshot};

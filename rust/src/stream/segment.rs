@@ -1,0 +1,231 @@
+//! Chunked reduction: slices of terms become [`Segment`]s (an `AlignAcc`
+//! plus its term count), and segments arriving **out of order** are merged
+//! back into one state.
+//!
+//! This is the paper's associativity result (eq. 10) put to work for
+//! streaming: because `⊙` is associative — and, in an exact accumulator
+//! frame, commutative on the states it produces — a long sum can be split
+//! at *any* chunk boundaries, reduced independently, and the partial states
+//! merged in *any* arrival order without changing a single bit of the final
+//! `(λ, acc, sticky)` state. Truncated frames keep associativity of the
+//! merge but are sensitive to merge *order* in the dropped low bits; the
+//! [`SegmentAssembler`] reorders segments by sequence number before merging
+//! when the spec is not exact, giving a **single consumer** run-to-run
+//! reproducibility either way. (The multi-threaded
+//! [`crate::stream::StreamEngine`] merges in completion order and is
+//! bit-deterministic only under exact specs — for deterministic truncated
+//! replay, feed segments through an assembler instead.)
+
+use crate::arith::operator::{op_combine, AlignAcc};
+use crate::arith::AccSpec;
+use crate::formats::Fp;
+use std::collections::BTreeMap;
+
+/// One reduced chunk of a stream: the merged `[λ; o]` state of `terms`
+/// input values. `Copy`, 64 bytes — cheap to ship between threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub state: AlignAcc,
+    pub terms: u64,
+}
+
+impl Segment {
+    /// The empty segment (identity of the merge).
+    pub const EMPTY: Segment = Segment { state: AlignAcc::IDENTITY, terms: 0 };
+
+    /// Merge two segments with `⊙`.
+    pub fn merge(&self, other: &Segment, spec: AccSpec) -> Segment {
+        Segment {
+            state: op_combine(&self.state, &other.state, spec),
+            terms: self.terms + other.terms,
+        }
+    }
+}
+
+/// Reduce one chunk of finite terms into a segment (a serial `⊙` fold —
+/// in an exact spec this is bit-identical to any tree over the same terms).
+///
+/// Like [`crate::arith::tree::tree_sum`], callers screen Inf/NaN first
+/// (see [`crate::arith::adder`] for the screening rules).
+pub fn reduce_chunk(terms: &[Fp], spec: AccSpec) -> Segment {
+    let mut state = AlignAcc::IDENTITY;
+    for t in terms {
+        let leaf = AlignAcc::leaf(*t, spec);
+        state = op_combine(&state, &leaf, spec);
+    }
+    Segment { state, terms: terms.len() as u64 }
+}
+
+/// Split `terms` at `chunk`-sized boundaries and reduce each chunk.
+pub fn segment_terms(terms: &[Fp], chunk: usize, spec: AccSpec) -> Vec<Segment> {
+    debug_assert!(chunk >= 1);
+    terms.chunks(chunk.max(1)).map(|c| reduce_chunk(c, spec)).collect()
+}
+
+/// Reassembles a stream of sequence-numbered segments into one state,
+/// tolerating out-of-order arrival.
+///
+/// * **Exact spec** — segments merge immediately on arrival; order cannot
+///   change the result (eq. 10), so nothing is ever buffered.
+/// * **Truncated spec** — segments are parked until their predecessors have
+///   arrived and merged strictly in sequence order, making the dropped-bit
+///   pattern (and therefore the final state) independent of arrival order.
+pub struct SegmentAssembler {
+    spec: AccSpec,
+    merged: Segment,
+    next_seq: u64,
+    pending: BTreeMap<u64, Segment>,
+    seen: std::collections::BTreeSet<u64>,
+    merges: u64,
+}
+
+impl SegmentAssembler {
+    pub fn new(spec: AccSpec) -> Self {
+        SegmentAssembler {
+            spec,
+            merged: Segment::EMPTY,
+            next_seq: 0,
+            pending: BTreeMap::new(),
+            seen: std::collections::BTreeSet::new(),
+            merges: 0,
+        }
+    }
+
+    /// Offer segment number `seq` (0-based, each number exactly once).
+    ///
+    /// Re-offering a sequence number is a caller bug (a retry would
+    /// double-count the segment's terms in the sum) and panics loudly in
+    /// both modes, release builds included.
+    pub fn offer(&mut self, seq: u64, seg: Segment) {
+        assert!(self.seen.insert(seq), "segment {seq} offered twice");
+        if self.spec.exact {
+            self.merged = self.merged.merge(&seg, self.spec);
+            self.merges += 1;
+            self.next_seq = self.next_seq.max(seq + 1);
+            return;
+        }
+        self.pending.insert(seq, seg);
+        while let Some(seg) = self.pending.remove(&self.next_seq) {
+            self.merged = self.merged.merge(&seg, self.spec);
+            self.merges += 1;
+            self.next_seq += 1;
+        }
+    }
+
+    /// The merged state over every segment consumed so far (for truncated
+    /// specs: over the contiguous prefix that has fully arrived).
+    pub fn state(&self) -> Segment {
+        self.merged
+    }
+
+    /// Segments parked waiting for a predecessor (always 0 in exact mode).
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Total segments merged into the state.
+    pub fn merges(&self) -> u64 {
+        self.merges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::tree::{tree_sum, RadixConfig};
+    use crate::formats::{Fp, BF16};
+    use crate::util::prng::XorShift;
+
+    fn random_terms(rng: &mut XorShift, n: usize) -> Vec<Fp> {
+        (0..n).map(|_| rng.gen_fp_sparse(BF16, 0.15)).collect()
+    }
+
+    #[test]
+    fn chunked_fold_matches_tree_sum_exact() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x5E6);
+        for n in [2usize, 5, 32, 100] {
+            let terms = random_terms(&mut rng, n);
+            let reference = tree_sum(&terms, &RadixConfig::baseline(n as u32), spec);
+            for chunk in [1usize, 3, 8, 64] {
+                let merged = segment_terms(&terms, chunk, spec)
+                    .iter()
+                    .fold(Segment::EMPTY, |a, s| a.merge(s, spec));
+                assert_eq!(merged.state, reference, "n={n} chunk={chunk}");
+                assert_eq!(merged.terms, n as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_assembler_ignores_arrival_order() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xA55);
+        let terms = random_terms(&mut rng, 64);
+        let segs = segment_terms(&terms, 7, spec);
+        let mut in_order = SegmentAssembler::new(spec);
+        for (i, s) in segs.iter().enumerate() {
+            in_order.offer(i as u64, *s);
+        }
+        let mut order: Vec<usize> = (0..segs.len()).collect();
+        rng.shuffle(&mut order);
+        let mut shuffled = SegmentAssembler::new(spec);
+        for &i in &order {
+            shuffled.offer(i as u64, segs[i]);
+        }
+        assert_eq!(shuffled.state(), in_order.state());
+        assert_eq!(shuffled.pending(), 0);
+    }
+
+    #[test]
+    fn truncated_assembler_reorders_before_merging() {
+        // With a narrow guard the merge order changes dropped bits, so the
+        // assembler must produce the in-sequence result from any arrival
+        // order — and hold incomplete suffixes back.
+        let spec = AccSpec::truncated(3);
+        let mut rng = XorShift::new(0x7D0);
+        let terms = random_terms(&mut rng, 48);
+        let segs = segment_terms(&terms, 5, spec);
+        let mut reference = Segment::EMPTY;
+        for s in &segs {
+            reference = reference.merge(s, spec);
+        }
+        let mut order: Vec<usize> = (0..segs.len()).collect();
+        rng.shuffle(&mut order);
+        let mut asm = SegmentAssembler::new(spec);
+        for &i in &order {
+            asm.offer(i as u64, segs[i]);
+        }
+        assert_eq!(asm.state(), reference);
+        assert_eq!(asm.merges(), segs.len() as u64);
+        assert_eq!(asm.pending(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "offered twice")]
+    fn duplicate_sequence_numbers_are_a_loud_error() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xD0);
+        let seg = reduce_chunk(&random_terms(&mut rng, 4), spec);
+        let mut asm = SegmentAssembler::new(spec);
+        asm.offer(0, seg);
+        asm.offer(0, seg); // a retry must not silently double-count
+    }
+
+    #[test]
+    fn truncated_assembler_parks_gapped_segments() {
+        let spec = AccSpec::truncated(4);
+        let mut rng = XorShift::new(0x9A9);
+        let terms = random_terms(&mut rng, 30);
+        let segs = segment_terms(&terms, 10, spec);
+        let mut asm = SegmentAssembler::new(spec);
+        asm.offer(2, segs[2]);
+        assert_eq!(asm.pending(), 1);
+        assert_eq!(asm.state().terms, 0);
+        asm.offer(0, segs[0]);
+        assert_eq!(asm.state().terms, 10);
+        asm.offer(1, segs[1]);
+        assert_eq!(asm.pending(), 0);
+        assert_eq!(asm.state().terms, 30);
+    }
+}

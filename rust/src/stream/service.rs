@@ -1,0 +1,313 @@
+//! Request/response front-end over the [`StreamEngine`]: the serving
+//! surface that turns traces into live traffic.
+//!
+//! Four verbs, mirroring what a reduction service owes its clients:
+//!
+//! * [`Request::Ingest`] — append a record batch to a named stream
+//!   (non-finite values are saturated like the trace capture path does);
+//! * [`Request::Query`] — the stream's current sum, **rounded once** into
+//!   the service format via [`normalize_round`] (the paper's fused-add
+//!   contract: one rounding over the whole history, not per batch);
+//! * [`Request::Checkpoint`] — the tiny copyable `(λ, acc, sticky, terms)`
+//!   state, exact and mergeable;
+//! * [`Request::Drain`] — finalize: remove the stream, return checkpoint
+//!   and rounded value.
+
+use super::engine::{EngineConfig, StreamEngine};
+use super::shard::Snapshot;
+use crate::arith::normalize::normalize_round;
+use crate::arith::AccSpec;
+use crate::coordinator::batcher::SubmitError;
+use crate::formats::{Fp, FpFormat};
+use crate::workload::Trace;
+
+/// One client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Ingest { stream: String, terms: Vec<Fp> },
+    Query { stream: String },
+    Checkpoint { stream: String },
+    Drain { stream: String },
+}
+
+/// Why an ingest was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IngestError {
+    /// A term's format differs from the service format; accepting it would
+    /// interpret its exponent in the wrong bias range and silently corrupt
+    /// the stream, so the whole batch is rejected (checked in release
+    /// builds, not just debug).
+    FormatMismatch,
+    /// Backpressure: the bounded queue is full.
+    Overloaded,
+    /// Engine shut down.
+    Closed,
+}
+
+impl From<SubmitError> for IngestError {
+    fn from(e: SubmitError) -> Self {
+        match e {
+            SubmitError::Overloaded => IngestError::Overloaded,
+            SubmitError::Closed => IngestError::Closed,
+        }
+    }
+}
+
+/// The service's answer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Batch accepted (`terms` values queued).
+    Accepted { terms: usize },
+    /// Batch refused: a term's format differs from the service format.
+    FormatMismatch,
+    /// Backpressure: the bounded queue is full, retry or shed load.
+    Overloaded,
+    /// Engine shut down.
+    Closed,
+    /// Stream does not exist (never ingested, or already drained).
+    UnknownStream,
+    /// Query result: the once-rounded sum plus the checkpoint it came from.
+    Value { value: Fp, snapshot: Snapshot },
+    /// Checkpoint result.
+    Checkpointed(Snapshot),
+    /// Drain result: final value and checkpoint; the stream is gone.
+    Drained { value: Fp, snapshot: Snapshot },
+}
+
+/// A running streaming align-and-add service in one format.
+pub struct StreamService {
+    engine: StreamEngine,
+    format: FpFormat,
+}
+
+impl StreamService {
+    /// A service with an explicit engine configuration. The config's
+    /// [`AccSpec`] decides the rounding contract: with
+    /// [`AccSpec::exact`]`(format)` every query is the correctly-rounded
+    /// sum of the stream's entire history.
+    pub fn new(format: FpFormat, cfg: EngineConfig) -> Self {
+        StreamService { engine: StreamEngine::new(cfg), format }
+    }
+
+    /// An exact-datapath service with default engine geometry.
+    pub fn exact(format: FpFormat) -> Self {
+        let cfg = EngineConfig { spec: AccSpec::exact(format), ..Default::default() };
+        Self::new(format, cfg)
+    }
+
+    pub fn format(&self) -> FpFormat {
+        self.format
+    }
+
+    pub fn engine(&self) -> &StreamEngine {
+        &self.engine
+    }
+
+    /// Dispatch one request.
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ingest { stream, terms } => match self.ingest(&stream, terms) {
+                Ok(n) => Response::Accepted { terms: n },
+                Err(IngestError::FormatMismatch) => Response::FormatMismatch,
+                Err(IngestError::Overloaded) => Response::Overloaded,
+                Err(IngestError::Closed) => Response::Closed,
+            },
+            Request::Query { stream } => match self.query(&stream) {
+                Some((value, snapshot)) => Response::Value { value, snapshot },
+                None => Response::UnknownStream,
+            },
+            Request::Checkpoint { stream } => match self.checkpoint(&stream) {
+                Some(snap) => Response::Checkpointed(snap),
+                None => Response::UnknownStream,
+            },
+            Request::Drain { stream } => match self.drain(&stream) {
+                Some((value, snapshot)) => Response::Drained { value, snapshot },
+                None => Response::UnknownStream,
+            },
+        }
+    }
+
+    /// Append a batch (non-blocking; `Overloaded` under backpressure).
+    /// Terms must be in the service format; Inf/NaN lanes are
+    /// saturated/zeroed ([`Fp::finite_or_saturated`]) before they reach
+    /// the datapath, mirroring trace capture.
+    pub fn ingest(&self, stream: &str, terms: Vec<Fp>) -> Result<usize, IngestError> {
+        let terms = screen(terms, self.format)?;
+        self.engine.ingest(stream, terms).map_err(IngestError::from)
+    }
+
+    /// Append a batch, blocking while the queue is full (trace replay).
+    pub fn ingest_blocking(&self, stream: &str, terms: Vec<Fp>) -> Result<usize, IngestError> {
+        let terms = screen(terms, self.format)?;
+        self.engine.ingest_blocking(stream, terms).map_err(IngestError::from)
+    }
+
+    /// The stream's sum so far, rounded once into the service format, with
+    /// the checkpoint it was rounded from. Waits for queued batches first.
+    pub fn query(&self, stream: &str) -> Option<(Fp, Snapshot)> {
+        self.engine.quiesce();
+        let snap = self.engine.snapshot(stream)?;
+        Some((self.round(&snap), snap))
+    }
+
+    /// The stream's exact mergeable state. Waits for queued batches first.
+    pub fn checkpoint(&self, stream: &str) -> Option<Snapshot> {
+        self.engine.quiesce();
+        self.engine.snapshot(stream)
+    }
+
+    /// Finalize a stream: wait, remove, and return `(value, checkpoint)`.
+    pub fn drain(&self, stream: &str) -> Option<(Fp, Snapshot)> {
+        self.engine.quiesce();
+        let snap = self.engine.drain(stream)?;
+        Some((self.round(&snap), snap))
+    }
+
+    /// Replay a workload trace as live traffic: row `i` goes to stream
+    /// `"{prefix}-{i % streams}"`. Returns total terms ingested. This is
+    /// how the BERT partial-product traces become serving load
+    /// (`examples/stream_serve.rs`).
+    pub fn replay_trace(&self, prefix: &str, trace: &Trace, streams: usize) -> u64 {
+        let streams = streams.max(1);
+        let mut total = 0u64;
+        for (i, row) in trace.vectors.iter().enumerate() {
+            let id = format!("{prefix}-{}", i % streams);
+            if let Ok(n) = self.ingest_blocking(&id, row.clone()) {
+                total += n as u64;
+            }
+        }
+        total
+    }
+
+    fn round(&self, snap: &Snapshot) -> Fp {
+        normalize_round(&snap.state(), self.engine.config().spec, self.format)
+    }
+}
+
+fn screen(mut terms: Vec<Fp>, format: FpFormat) -> Result<Vec<Fp>, IngestError> {
+    for t in terms.iter_mut() {
+        if t.format != format {
+            return Err(IngestError::FormatMismatch);
+        }
+        *t = t.finite_or_saturated();
+    }
+    Ok(terms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact::exact_rounded_sum;
+    use crate::formats::{FpClass, BF16};
+    use crate::util::prng::XorShift;
+
+    fn service() -> StreamService {
+        StreamService::exact(BF16)
+    }
+
+    #[test]
+    fn query_is_the_correctly_rounded_sum_of_the_history() {
+        let svc = service();
+        let mut rng = XorShift::new(0x51C);
+        let mut all = Vec::new();
+        for _ in 0..16 {
+            let batch: Vec<Fp> = (0..24).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+            all.extend_from_slice(&batch);
+            svc.ingest_blocking("q", batch).unwrap();
+        }
+        let (value, snap) = svc.query("q").unwrap();
+        assert_eq!(value.bits, exact_rounded_sum(&all, BF16).bits);
+        assert_eq!(snap.terms, all.len() as u64);
+        // Query is read-only: asking again gives the same answer.
+        assert_eq!(svc.query("q").unwrap().0.bits, value.bits);
+    }
+
+    #[test]
+    fn request_response_roundtrip() {
+        let svc = service();
+        let one = Fp::from_f64(1.0, BF16);
+        let r = svc.handle(Request::Ingest {
+            stream: "r".into(),
+            terms: vec![one; 3],
+        });
+        assert_eq!(r, Response::Accepted { terms: 3 });
+        match svc.handle(Request::Query { stream: "r".into() }) {
+            Response::Value { value, snapshot } => {
+                assert_eq!(value.to_f64(), 3.0);
+                assert_eq!(snapshot.terms, 3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match svc.handle(Request::Drain { stream: "r".into() }) {
+            Response::Drained { value, .. } => assert_eq!(value.to_f64(), 3.0),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(
+            svc.handle(Request::Query { stream: "r".into() }),
+            Response::UnknownStream
+        );
+    }
+
+    #[test]
+    fn checkpoint_restores_into_a_fresh_service() {
+        let svc = service();
+        let mut rng = XorShift::new(0xC4E);
+        let batch: Vec<Fp> = (0..40).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+        svc.ingest_blocking("s", batch.clone()).unwrap();
+        let snap = svc.checkpoint("s").unwrap();
+        // Restore: merge the checkpoint into a brand-new engine's shard map
+        // and continue ingesting there.
+        let svc2 = service();
+        svc2.engine().shards().merge("s", snap.segment());
+        let more: Vec<Fp> = (0..8).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+        svc2.ingest_blocking("s", more.clone()).unwrap();
+        let (value, snap2) = svc2.query("s").unwrap();
+        let mut all = batch;
+        all.extend_from_slice(&more);
+        assert_eq!(value.bits, exact_rounded_sum(&all, BF16).bits);
+        assert_eq!(snap2.terms, 48);
+    }
+
+    #[test]
+    fn foreign_format_batches_are_rejected_not_corrupting() {
+        let svc = service(); // BF16
+        let fp32 = Fp::from_f64(1.0, crate::formats::FP32);
+        assert_eq!(
+            svc.ingest_blocking("s", vec![fp32]),
+            Err(IngestError::FormatMismatch)
+        );
+        assert_eq!(
+            svc.handle(Request::Ingest { stream: "s".into(), terms: vec![fp32] }),
+            Response::FormatMismatch
+        );
+        // Nothing was created: the stream never existed.
+        assert!(svc.query("s").is_none());
+    }
+
+    #[test]
+    fn non_finite_lanes_are_screened() {
+        let svc = service();
+        let inf = Fp::overflow(false, BF16);
+        let nan = Fp::nan(BF16);
+        svc.ingest_blocking("s", vec![inf, nan, Fp::from_f64(2.0, BF16)]).unwrap();
+        let (value, _) = svc.query("s").unwrap();
+        // Inf saturates to max-finite, NaN drops to zero: result is finite.
+        assert!(matches!(value.class(), FpClass::Normal));
+    }
+
+    #[test]
+    fn replay_fans_rows_out_over_streams() {
+        let trace = crate::workload::bert::power_trace(BF16, 16, 30, 0xBEEF);
+        let svc = service();
+        let total = svc.replay_trace("bert", &trace, 4);
+        assert_eq!(total, 30 * 16);
+        let mut ids = svc.engine().shards().stream_ids();
+        ids.sort();
+        assert_eq!(ids, vec!["bert-0", "bert-1", "bert-2", "bert-3"]);
+        let terms: u64 = ids
+            .iter()
+            .map(|id| svc.query(id).unwrap().1.terms)
+            .sum();
+        assert_eq!(terms, total);
+    }
+}

@@ -1,0 +1,240 @@
+//! Sharded stream state: a striped-lock map from stream id to its merged
+//! [`Segment`] state, with tiny copyable snapshots and cross-shard merge.
+//!
+//! Striping bounds contention: a stream id hashes to one of `stripes`
+//! mutex-guarded tables, so concurrent merges to *different* streams almost
+//! never serialize, while merges to the *same* stream are ordered by its
+//! stripe lock (which is all exact-mode `⊙` needs — any order, same bits).
+
+use super::segment::Segment;
+use crate::arith::operator::AlignAcc;
+use crate::arith::{AccSpec, WideInt};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+type Stripe = Mutex<HashMap<String, StreamState>>;
+
+/// Poison-tolerant stripe lock: a panic elsewhere must not cascade into
+/// every later merge/snapshot (states are assigned whole, never torn).
+fn lock(stripe: &Stripe) -> MutexGuard<'_, HashMap<String, StreamState>> {
+    stripe.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A copyable checkpoint of one stream: the full `(λ, acc, sticky)`
+/// alignment state plus how many terms it covers. 64 bytes, `Copy` — cheap
+/// to hand to clients, persist, or merge back in later.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Snapshot {
+    pub lambda: i32,
+    pub acc: WideInt,
+    pub sticky: bool,
+    pub terms: u64,
+    /// How many segment merges produced this state.
+    pub segments: u64,
+}
+
+impl Snapshot {
+    /// The alignment state this checkpoint captures.
+    pub fn state(&self) -> AlignAcc {
+        AlignAcc { lambda: self.lambda, acc: self.acc, sticky: self.sticky }
+    }
+
+    /// Re-enter the operator domain as a segment (for restore/merge).
+    pub fn segment(&self) -> Segment {
+        Segment { state: self.state(), terms: self.terms }
+    }
+}
+
+/// Per-stream accumulated state.
+#[derive(Clone, Copy, Debug)]
+struct StreamState {
+    seg: Segment,
+    segments: u64,
+}
+
+/// Striped-lock map from stream id to merged stream state.
+pub struct ShardMap {
+    stripes: Vec<Stripe>,
+    spec: AccSpec,
+}
+
+impl ShardMap {
+    /// `stripes` is rounded up to at least 1.
+    pub fn new(stripes: usize, spec: AccSpec) -> Self {
+        let stripes = stripes.max(1);
+        ShardMap { stripes: (0..stripes).map(|_| Mutex::new(HashMap::new())).collect(), spec }
+    }
+
+    pub fn spec(&self) -> AccSpec {
+        self.spec
+    }
+
+    pub fn stripes(&self) -> usize {
+        self.stripes.len()
+    }
+
+    fn stripe_for(&self, id: &str) -> &Stripe {
+        let mut h = DefaultHasher::new();
+        id.hash(&mut h);
+        &self.stripes[(h.finish() as usize) % self.stripes.len()]
+    }
+
+    /// Merge one segment into `id`'s state (creating the stream on first
+    /// touch). Returns the stream's new term count.
+    pub fn merge(&self, id: &str, seg: Segment) -> u64 {
+        let mut table = lock(self.stripe_for(id));
+        match table.get_mut(id) {
+            Some(st) => {
+                st.seg = st.seg.merge(&seg, self.spec);
+                st.segments += 1;
+                st.seg.terms
+            }
+            None => {
+                table.insert(id.to_string(), StreamState { seg, segments: 1 });
+                seg.terms
+            }
+        }
+    }
+
+    /// Copy out `id`'s current checkpoint, if the stream exists.
+    pub fn snapshot(&self, id: &str) -> Option<Snapshot> {
+        let table = lock(self.stripe_for(id));
+        table.get(id).map(snapshot_of)
+    }
+
+    /// Remove `id` and return its final checkpoint.
+    pub fn drain(&self, id: &str) -> Option<Snapshot> {
+        let mut table = lock(self.stripe_for(id));
+        table.remove(id).map(|st| snapshot_of(&st))
+    }
+
+    /// Number of live streams.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| lock(s).len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All live stream ids (unordered).
+    pub fn stream_ids(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            out.extend(lock(stripe).keys().cloned());
+        }
+        out
+    }
+
+    /// Cross-shard merge: fold every stream of `other` into this map
+    /// (matching stream ids combine with `⊙`). This is how per-worker or
+    /// per-node shard maps collapse into a global one — associativity makes
+    /// the grouping immaterial in exact mode.
+    ///
+    /// Each source stripe is copied out (states are `Copy`) before any
+    /// destination lock is taken, so two maps merging from each other
+    /// concurrently cannot ABBA-deadlock; concurrent writes to `other`
+    /// land either before or after the per-stripe copy.
+    pub fn merge_from(&self, other: &ShardMap) {
+        debug_assert_eq!(self.spec, other.spec, "shard maps must share an AccSpec");
+        for stripe in &other.stripes {
+            let entries: Vec<(String, StreamState)> = {
+                let table = lock(stripe);
+                table.iter().map(|(id, st)| (id.clone(), *st)).collect()
+            };
+            for (id, st) in entries {
+                let mut mine = lock(self.stripe_for(&id));
+                match mine.get_mut(&id) {
+                    Some(dst) => {
+                        dst.seg = dst.seg.merge(&st.seg, self.spec);
+                        dst.segments += st.segments;
+                    }
+                    None => {
+                        mine.insert(id, st);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn snapshot_of(st: &StreamState) -> Snapshot {
+    Snapshot {
+        lambda: st.seg.state.lambda,
+        acc: st.seg.state.acc,
+        sticky: st.seg.state.sticky,
+        terms: st.seg.terms,
+        segments: st.segments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::segment::reduce_chunk;
+    use super::*;
+    use crate::formats::{Fp, BF16};
+    use crate::util::prng::XorShift;
+
+    fn seg(rng: &mut XorShift, n: usize, spec: AccSpec) -> Segment {
+        let terms: Vec<Fp> = (0..n).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+        reduce_chunk(&terms, spec)
+    }
+
+    #[test]
+    fn merge_snapshot_drain_roundtrip() {
+        let spec = AccSpec::exact(BF16);
+        let map = ShardMap::new(4, spec);
+        let mut rng = XorShift::new(1);
+        let (a, b) = (seg(&mut rng, 8, spec), seg(&mut rng, 8, spec));
+        assert_eq!(map.merge("s", a), 8);
+        assert_eq!(map.merge("s", b), 16);
+        let snap = map.snapshot("s").unwrap();
+        assert_eq!(snap.segment(), a.merge(&b, spec));
+        assert_eq!(snap.segments, 2);
+        assert_eq!(map.len(), 1);
+        assert_eq!(map.drain("s").unwrap(), snap);
+        assert!(map.is_empty());
+        assert!(map.snapshot("s").is_none());
+    }
+
+    #[test]
+    fn streams_are_isolated_across_stripes() {
+        let spec = AccSpec::exact(BF16);
+        let map = ShardMap::new(3, spec);
+        let mut rng = XorShift::new(2);
+        let segs: Vec<Segment> = (0..20).map(|_| seg(&mut rng, 4, spec)).collect();
+        for (i, s) in segs.iter().enumerate() {
+            map.merge(&format!("stream-{i}"), *s);
+        }
+        assert_eq!(map.len(), 20);
+        let mut ids = map.stream_ids();
+        ids.sort();
+        assert_eq!(ids.len(), 20);
+        for (i, s) in segs.iter().enumerate() {
+            assert_eq!(map.snapshot(&format!("stream-{i}")).unwrap().segment(), *s);
+        }
+    }
+
+    #[test]
+    fn cross_shard_merge_equals_single_map() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(3);
+        let segs: Vec<Segment> = (0..12).map(|_| seg(&mut rng, 16, spec)).collect();
+        // One global map vs two worker-local maps merged afterwards.
+        let global = ShardMap::new(4, spec);
+        let (left, right) = (ShardMap::new(2, spec), ShardMap::new(8, spec));
+        for (i, s) in segs.iter().enumerate() {
+            let id = format!("s{}", i % 3);
+            global.merge(&id, *s);
+            let _ = if i % 2 == 0 { left.merge(&id, *s) } else { right.merge(&id, *s) };
+        }
+        left.merge_from(&right);
+        for id in ["s0", "s1", "s2"] {
+            let (g, l) = (global.snapshot(id).unwrap(), left.snapshot(id).unwrap());
+            assert_eq!(g.state(), l.state(), "{id}");
+            assert_eq!(g.terms, l.terms, "{id}");
+        }
+    }
+}

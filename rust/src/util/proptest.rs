@@ -2,8 +2,8 @@
 //! `proptest`): run a property over many seeded random cases and, on
 //! failure, greedily shrink the failing input before reporting.
 //!
-//! Usage (`no_run`: doctest binaries lack the xla rpath in this offline
-//! image; the same snippet runs as a unit test below):
+//! Usage (`no_run`: keeps doctest wall time near zero; the same snippet
+//! runs as a unit test below):
 //! ```no_run
 //! use online_fp_add::util::proptest::{check, Gen};
 //! check("sum is commutative", 200, |g: &mut Gen| {

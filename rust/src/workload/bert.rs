@@ -31,7 +31,10 @@ impl Default for BertDims {
     }
 }
 
-fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+/// Row-wise softmax, shared by this trace generator and the native
+/// `bert_layer` executor in [`crate::runtime`] (one implementation, so the
+/// two paths cannot drift numerically).
+pub(crate) fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
     for r in 0..rows {
         let row = &mut x[r * cols..(r + 1) * cols];
         let max = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
@@ -46,7 +49,8 @@ fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
     }
 }
 
-fn gelu(x: f32) -> f32 {
+/// Tanh-approximation GELU (shared with [`crate::runtime`], see above).
+pub(crate) fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f32).tanh())
 }
 

@@ -1,0 +1,228 @@
+//! The streaming invariant, property-tested end to end: for an exact
+//! `AccSpec`, **any** chunking of a term sequence into segments and **any**
+//! merge order of those segments is bit-identical to the `⊙`-tree reference
+//! (`tree_sum`) and — after one rounding — to the Kulisch exact reference
+//! (`arith::exact`). Truncated specs keep λ agreement and sticky
+//! monotonicity even where dropped low bits become order-dependent.
+//!
+//! The engine-level acceptance check lives here too: replaying the same
+//! trace with chunk sizes {1, 7, 64}, 1–8 threads and shuffled arrival
+//! yields bit-identical `(λ, acc, sticky)` per stream.
+
+use online_fp_add::arith::exact::exact_rounded_sum;
+use online_fp_add::arith::normalize::normalize_round;
+use online_fp_add::arith::tree::{tree_sum, RadixConfig};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, FpFormat, BF16, FP32, FP8_E5M2, PAPER_FORMATS};
+use online_fp_add::stream::{
+    reduce_chunk, EngineConfig, Segment, SegmentAssembler, StreamEngine, StreamService,
+};
+use online_fp_add::util::proptest::check;
+use online_fp_add::util::prng::XorShift;
+use online_fp_add::workload::bert::power_trace;
+
+/// Random finite terms stressing the streaming edge cases: zeros, denormal
+/// bit patterns (flushed to zero by decode, but present as raw inputs),
+/// and runs of identical values (all-identity chunks included).
+fn gen_terms(rng: &mut XorShift, fmt: FpFormat, n: usize) -> Vec<Fp> {
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        match rng.below(8) {
+            0 => out.push(Fp::zero(fmt)),
+            1 => {
+                // Subnormal pattern: raw exponent 0, nonzero mantissa.
+                let m = if fmt.mant_mask() == 0 { 0 } else { 1 + rng.below(fmt.mant_mask()) };
+                out.push(Fp::pack(rng.below(2) == 1, 0, m, fmt));
+            }
+            2 => {
+                // A run of identical values — whole chunks of the same term.
+                let v = rng.gen_fp_normal(fmt);
+                let run = (1 + rng.below(8) as usize).min(n - out.len());
+                out.extend(std::iter::repeat(v).take(run));
+            }
+            _ => out.push(rng.gen_fp_normal(fmt)),
+        }
+    }
+    out
+}
+
+/// Split `terms` at random boundaries (chunk lengths 1..=17).
+fn random_segments(rng: &mut XorShift, terms: &[Fp], spec: AccSpec) -> Vec<Segment> {
+    let mut segs = Vec::new();
+    let mut i = 0;
+    while i < terms.len() {
+        let len = (1 + rng.below(17) as usize).min(terms.len() - i);
+        segs.push(reduce_chunk(&terms[i..i + len], spec));
+        i += len;
+    }
+    segs
+}
+
+fn random_fmt(rng: &mut XorShift) -> FpFormat {
+    PAPER_FORMATS[rng.below(PAPER_FORMATS.len() as u64) as usize]
+}
+
+#[test]
+fn prop_any_chunking_any_merge_order_is_bitexact_in_exact_mode() {
+    check("stream chunking ⊙ invariance", 250, |g| {
+        let fmt = random_fmt(&mut g.rng);
+        let spec = AccSpec::exact(fmt);
+        let n = 2 + g.rng.below(250) as usize;
+        let terms = gen_terms(&mut g.rng, fmt, n);
+        let reference = tree_sum(&terms, &RadixConfig::baseline(n as u32), spec);
+
+        let mut segs = random_segments(&mut g.rng, &terms, spec);
+        g.rng.shuffle(&mut segs);
+        let merged = segs.iter().fold(Segment::EMPTY, |a, s| a.merge(s, spec));
+        if merged.state != reference {
+            return Err(format!(
+                "{fmt} n={n}: merged {:?} != reference {:?}",
+                merged.state, reference
+            ));
+        }
+        if merged.terms != n as u64 {
+            return Err(format!("term count {} != {n}", merged.terms));
+        }
+        // One rounding of the merged state == the correctly-rounded sum.
+        let rounded = normalize_round(&merged.state, spec, fmt);
+        let oracle = exact_rounded_sum(&terms, fmt);
+        if rounded.bits != oracle.bits {
+            return Err(format!("{fmt}: rounded {rounded:?} != oracle {oracle:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_out_of_order_assembly_is_bitexact_in_exact_mode() {
+    check("out-of-order assembly", 200, |g| {
+        let fmt = random_fmt(&mut g.rng);
+        let spec = AccSpec::exact(fmt);
+        let n = 2 + g.rng.below(150) as usize;
+        let terms = gen_terms(&mut g.rng, fmt, n);
+        let reference = tree_sum(&terms, &RadixConfig::baseline(n as u32), spec);
+
+        let segs = random_segments(&mut g.rng, &terms, spec);
+        let mut order: Vec<usize> = (0..segs.len()).collect();
+        g.rng.shuffle(&mut order);
+        let mut asm = SegmentAssembler::new(spec);
+        for &i in &order {
+            asm.offer(i as u64, segs[i]);
+        }
+        if asm.state().state != reference {
+            return Err(format!("{fmt} n={n}: assembler diverged from tree_sum"));
+        }
+        if asm.pending() != 0 {
+            return Err(format!("{} segments stuck pending in exact mode", asm.pending()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_specs_agree_on_lambda_and_sticky_monotonicity() {
+    check("truncated λ agreement + sticky monotonicity", 200, |g| {
+        let fmt = random_fmt(&mut g.rng);
+        let spec = AccSpec::truncated(1 + g.rng.below(6) as u32);
+        let n = 2 + g.rng.below(120) as usize;
+        let terms = gen_terms(&mut g.rng, fmt, n);
+        let reference = tree_sum(&terms, &RadixConfig::baseline(n as u32), spec);
+
+        let mut segs = random_segments(&mut g.rng, &terms, spec);
+        g.rng.shuffle(&mut segs);
+        let mut merged = Segment::EMPTY;
+        let mut sticky_seen = false;
+        for s in &segs {
+            sticky_seen |= s.state.sticky;
+            merged = merged.merge(s, spec);
+            // Monotone: once any absorbed segment carried sticky, the
+            // running merge must keep reporting it.
+            if sticky_seen && !merged.state.sticky {
+                return Err(format!("{fmt} n={n}: sticky bit was lost by a merge"));
+            }
+        }
+        // λ is a pure max — order and chunking can never change it.
+        if merged.state.lambda != reference.lambda {
+            return Err(format!(
+                "{fmt} n={n}: λ {} != reference λ {}",
+                merged.state.lambda, reference.lambda
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_service_query_equals_exact_reference() {
+    // End to end through the service: batches of arbitrary size, query is
+    // the correctly-rounded sum of everything ingested.
+    check("service query == exact reference", 25, |g| {
+        let fmt = [BF16, FP32, FP8_E5M2][g.rng.below(3) as usize];
+        let svc = StreamService::exact(fmt);
+        let mut all = Vec::new();
+        for _ in 0..(1 + g.rng.below(10)) {
+            let batch = gen_terms(&mut g.rng, fmt, 1 + g.rng.below(60) as usize);
+            all.extend_from_slice(&batch);
+            svc.ingest_blocking("p", batch).map_err(|e| format!("{e:?}"))?;
+        }
+        let (value, snap) = svc.query("p").ok_or("stream missing")?;
+        if snap.terms != all.len() as u64 {
+            return Err(format!("terms {} != {}", snap.terms, all.len()));
+        }
+        let oracle = exact_rounded_sum(&all, fmt);
+        if value.bits != oracle.bits {
+            return Err(format!("{fmt}: {value:?} != {oracle:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance: the engine is order/chunking/thread-count invariant on a
+/// real BERT partial-product trace.
+#[test]
+fn engine_invariant_over_chunk_threads_and_arrival_on_bert_trace() {
+    let spec = AccSpec::exact(BF16);
+    let trace = power_trace(BF16, 32, 72, 0x5EED);
+    let streams = 4usize;
+
+    // Reference per stream: one ⊙ tree over that stream's flattened terms.
+    let mut per_stream: Vec<Vec<Fp>> = vec![Vec::new(); streams];
+    for (i, row) in trace.vectors.iter().enumerate() {
+        per_stream[i % streams].extend_from_slice(row);
+    }
+    let references: Vec<_> = per_stream
+        .iter()
+        .map(|ts| tree_sum(ts, &RadixConfig::baseline(ts.len() as u32), spec))
+        .collect();
+
+    let mut rng = XorShift::new(0x0DDE);
+    for threads in [1usize, 2, 4, 8] {
+        for chunk in [1usize, 7, 64] {
+            // Shuffled arrival: rows land in a different global order each
+            // run, and therefore in a different order per stream.
+            let mut order: Vec<usize> = (0..trace.vectors.len()).collect();
+            rng.shuffle(&mut order);
+            let engine = StreamEngine::new(EngineConfig {
+                threads,
+                chunk,
+                spec,
+                ..Default::default()
+            });
+            for &i in &order {
+                engine
+                    .ingest_blocking(&format!("bert-{}", i % streams), trace.vectors[i].clone())
+                    .unwrap();
+            }
+            engine.quiesce();
+            for (s, want) in references.iter().enumerate() {
+                let snap = engine.snapshot(&format!("bert-{s}")).unwrap();
+                assert_eq!(
+                    snap.state(),
+                    *want,
+                    "stream {s} diverged at threads={threads} chunk={chunk}"
+                );
+                assert_eq!(snap.terms, per_stream[s].len() as u64);
+            }
+        }
+    }
+}
