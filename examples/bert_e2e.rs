@@ -117,7 +117,9 @@ fn main() {
                 scope.spawn(move || {
                     let mut bad = 0usize;
                     for v in vecs.iter().skip(c).step_by(clients) {
-                        let e: Vec<i32> = v.iter().map(|t| t.raw_exp()).collect();
+                        // (effective exponent, signed significand) lanes —
+                        // subnormals travel as (1, ±mantissa).
+                        let e: Vec<i32> = v.iter().map(|t| t.eff_exp()).collect();
                         let m: Vec<i32> = v.iter().map(|t| t.signed_sig() as i32).collect();
                         let resp = h.reduce(e, m).expect("batched reduce");
                         let want = tree_sum(v, &RadixConfig::binary(N_TERMS as u32).unwrap(), spec);

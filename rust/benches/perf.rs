@@ -6,18 +6,26 @@
 //! * dynamic-batcher round-trip under concurrency,
 //! * PJRT artifact execution latency (when artifacts are present).
 //!
+//! Besides the human-readable report, results land in `BENCH_perf.json`
+//! (via `bench_util::write_json`) so the perf trajectory is tracked
+//! machine-readably from PR to PR. `BENCH_SMOKE=1` shrinks the targets for
+//! the CI smoke step.
+//!
 //! Run: `cargo bench --bench perf`
 
 use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
 use online_fp_add::arith::tree::RadixConfig;
 use online_fp_add::arith::AccSpec;
-use online_fp_add::bench_util::{bench, black_box, header};
+use online_fp_add::bench_util::{
+    bench, black_box, header, suite_label, target_seconds, write_json, BenchRecord,
+};
 use online_fp_add::coordinator::batcher::{Batcher, BatcherConfig};
 use online_fp_add::formats::{Fp, BF16, FP32};
 use online_fp_add::hw::datapath::DatapathParams;
 use online_fp_add::hw::power::ActivitySim;
 use online_fp_add::runtime::{OnlineReduceExe, Runtime};
 use online_fp_add::util::prng::XorShift;
+use std::path::Path;
 
 fn trace(n: usize, vectors: usize, seed: u64) -> Vec<Vec<Fp>> {
     let mut rng = XorShift::new(seed);
@@ -25,47 +33,66 @@ fn trace(n: usize, vectors: usize, seed: u64) -> Vec<Vec<Fp>> {
 }
 
 fn main() {
+    let mut records: Vec<BenchRecord> = Vec::new();
+
     header("arithmetic hot paths (bit-accurate, 32-term BF16)");
     let vecs = trace(32, 256, 1);
     let spec = AccSpec::hw_default(BF16, 32);
     let cfg: RadixConfig = "8-2-2".parse().unwrap();
-    let r = bench("tree_sum 8-2-2 (256 vecs)", 1.0, || {
+    let r = bench("tree_sum 8-2-2 (256 vecs)", target_seconds(1.0), || {
         for v in &vecs {
             black_box(online_fp_add::arith::tree::tree_sum(v, &cfg, spec));
         }
     });
     println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
-    let r = bench("baseline_sum (256 vecs)", 1.0, || {
+    records.push(BenchRecord::new(r.clone()).param("terms_per_s", r.throughput(256.0 * 32.0)));
+    let r = bench("baseline_sum (256 vecs)", target_seconds(1.0), || {
         for v in &vecs {
             black_box(online_fp_add::arith::baseline::baseline_sum(v, spec));
         }
     });
     println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
-    let r = bench("online_sum (256 vecs)", 1.0, || {
+    records.push(BenchRecord::new(r.clone()).param("terms_per_s", r.throughput(256.0 * 32.0)));
+    let r = bench("online_sum (256 vecs)", target_seconds(1.0), || {
         for v in &vecs {
             black_box(online_fp_add::arith::online::online_sum(v, spec));
         }
     });
     println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
+    records.push(BenchRecord::new(r.clone()).param("terms_per_s", r.throughput(256.0 * 32.0)));
 
     header("full fused adders (incl. normalize/round)");
     let adder = MultiTermAdder::hw(FP32, 32, Architecture::Tree("8-2-2".parse().unwrap()));
     let mut rng = XorShift::new(2);
     let fp32vecs: Vec<Vec<Fp>> =
         (0..256).map(|_| (0..32).map(|_| rng.gen_fp_gauss(FP32, 4.0)).collect()).collect();
-    let r = bench("MultiTermAdder FP32 8-2-2 (256 adds)", 1.0, || {
+    let r = bench("MultiTermAdder FP32 8-2-2 (256 adds)", target_seconds(1.0), || {
         for v in &fp32vecs {
             black_box(adder.add(v));
         }
     });
     println!("{}   [{:.2} M adds/s]", r.line(), r.throughput(256.0) / 1e6);
+    records.push(BenchRecord::new(r.clone()).param("adds_per_s", r.throughput(256.0)));
+
+    header("differential oracle (reference sum + round, 16-term FP32)");
+    let oracle_vecs: Vec<Vec<Fp>> = {
+        let mut rng = XorShift::new(4);
+        (0..256).map(|_| (0..16).map(|_| rng.gen_fp_full(FP32)).collect()).collect()
+    };
+    let r = bench("oracle reference_sum (256 vecs)", target_seconds(0.5), || {
+        for v in &oracle_vecs {
+            black_box(online_fp_add::arith::oracle::reference_sum(v, FP32));
+        }
+    });
+    println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 16.0) / 1e6);
+    records.push(BenchRecord::new(r.clone()).param("terms_per_s", r.throughput(256.0 * 16.0)));
 
     header("switching-activity power simulation (32-term BF16)");
     let params = DatapathParams::new(BF16, 32, spec);
     for cfgs in ["32", "8-2-2"] {
         let c: RadixConfig = cfgs.parse().unwrap();
         let mut sim = ActivitySim::new(params, &c);
-        let r = bench(&format!("ActivitySim {cfgs} (256 vecs)"), 1.0, || {
+        let r = bench(&format!("ActivitySim {cfgs} (256 vecs)"), target_seconds(1.0), || {
             for v in &vecs {
                 sim.step(v);
             }
@@ -74,6 +101,9 @@ fn main() {
             "{}   [{:.1} M term-events/s]",
             r.line(),
             r.throughput(256.0 * 32.0) / 1e6
+        );
+        records.push(
+            BenchRecord::new(r.clone()).param("term_events_per_s", r.throughput(256.0 * 32.0)),
         );
     }
 
@@ -87,7 +117,7 @@ fn main() {
         },
     );
     let handle = batcher.handle();
-    let r = bench("batched reduce round-trip x512", 2.0, || {
+    let r = bench("batched reduce round-trip x512", target_seconds(2.0), || {
         let threads: Vec<_> = (0..16)
             .map(|t| {
                 let h = handle.clone();
@@ -106,6 +136,7 @@ fn main() {
     });
     println!("{}   [{:.0} k req/s]", r.line(), r.throughput(512.0) / 1e3);
     println!("batcher metrics: mean fill {:.1}", batcher.metrics().mean_batch_fill());
+    records.push(BenchRecord::new(r.clone()).param("req_per_s", r.throughput(512.0)));
 
     header("PJRT artifact execution (needs `make artifacts`)");
     let dir = Runtime::default_artifact_dir();
@@ -115,11 +146,17 @@ fn main() {
         let mut rng = XorShift::new(3);
         let e: Vec<i32> = (0..64 * 32).map(|_| rng.range_i64(1, 254) as i32).collect();
         let m: Vec<i32> = (0..64 * 32).map(|_| rng.range_i64(-255, 255) as i32).collect();
-        let r = bench("online_reduce_bf16_n32 (batch 64)", 2.0, || {
+        let r = bench("online_reduce_bf16_n32 (batch 64)", target_seconds(2.0), || {
             black_box(exe.run(&rt, &e, &m).unwrap());
         });
         println!("{}   [{:.0} k rows/s]", r.line(), r.throughput(64.0) / 1e3);
+        records.push(BenchRecord::new(r.clone()).param("rows_per_s", r.throughput(64.0)));
     } else {
         println!("SKIP: artifacts missing");
     }
+
+    let path = Path::new("BENCH_perf.json");
+    let suite = suite_label("perf");
+    write_json(path, &suite, &records).expect("write BENCH_perf.json");
+    println!("\nwrote {} (suite {suite}, {} records)", path.display(), records.len());
 }

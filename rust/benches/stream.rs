@@ -8,7 +8,9 @@
 //! Run: `cargo bench --bench stream`
 
 use online_fp_add::arith::AccSpec;
-use online_fp_add::bench_util::{bench, header, write_json, BenchRecord};
+use online_fp_add::bench_util::{
+    bench, header, smoke, suite_label, target_seconds, write_json, BenchRecord,
+};
 use online_fp_add::formats::BF16;
 use online_fp_add::stream::{EngineConfig, StreamEngine};
 use online_fp_add::workload::bert::power_trace;
@@ -18,7 +20,8 @@ const N_TERMS: usize = 32;
 
 fn main() {
     header("stream engine ingest throughput (BF16, 32-lane BERT trace)");
-    let trace = power_trace(BF16, N_TERMS, 1024, 0xBE);
+    let rows_n = if smoke() { 128 } else { 1024 };
+    let trace = power_trace(BF16, N_TERMS, rows_n, 0xBE);
     let rows = &trace.vectors;
     let terms_per_replay = (rows.len() * N_TERMS) as f64;
     let spec = AccSpec::exact(BF16);
@@ -34,7 +37,7 @@ fn main() {
                 ..Default::default()
             });
             let mut epoch = 0u64;
-            let r = bench(&format!("ingest threads={threads} chunk={chunk}"), 0.6, || {
+            let r = bench(&format!("ingest threads={threads} chunk={chunk}"), target_seconds(0.6), || {
                 // Fresh stream per replay; drain keeps the map from growing.
                 epoch += 1;
                 let id = format!("run-{epoch}");
@@ -56,6 +59,7 @@ fn main() {
     }
 
     let path = Path::new("BENCH_stream.json");
-    write_json(path, "stream", &records).expect("write BENCH_stream.json");
-    println!("\nwrote {} ({} records)", path.display(), records.len());
+    let suite = suite_label("stream");
+    write_json(path, &suite, &records).expect("write BENCH_stream.json");
+    println!("\nwrote {} (suite {suite}, {} records)", path.display(), records.len());
 }

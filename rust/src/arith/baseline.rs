@@ -16,11 +16,16 @@ use crate::formats::{Fp, FpClass};
 /// depends on the fully-resolved maximum — which is precisely the serial
 /// dependency the paper's online formulation removes.
 pub fn baseline_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
-    // Loop 1 (lines 1-3): maximum exponent.
-    let mut lambda = 0i32; // λ_0: below every normal exponent
+    // Loop 1 (lines 1-3): maximum effective exponent. Zeros are skipped so
+    // they contribute nothing (they must not lift λ to a subnormal's
+    // effective exponent 1); subnormals participate at eff_exp() == 1 —
+    // the λ-convention of [`AlignAcc::leaf`].
+    let mut lambda = 0i32; // λ_0: below every live effective exponent
     for t in terms {
-        debug_assert!(matches!(t.class(), FpClass::Zero | FpClass::Normal));
-        lambda = lambda.max(t.raw_exp());
+        debug_assert!(t.is_finite());
+        if t.class() != FpClass::Zero {
+            lambda = lambda.max(t.eff_exp());
+        }
     }
     // Loop 2 (lines 4-7): align each fraction to λ_N and accumulate.
     if spec.narrow {
@@ -32,7 +37,7 @@ pub fn baseline_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
                 continue;
             }
             let m = (t.signed_sig() as i128) << spec.f;
-            let d = ((lambda - t.raw_exp()) as u32).min(127);
+            let d = ((lambda - t.eff_exp()) as u32).min(127);
             acc += m >> d;
             sticky |= (m as u128) & ((1u128 << d) - 1) != 0;
         }
@@ -46,7 +51,7 @@ pub fn baseline_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
             continue;
         }
         let m = WideInt::from_i64(t.signed_sig()).shl(spec.f);
-        let (am, dropped) = m.shr_sticky((lambda - t.raw_exp()) as u32);
+        let (am, dropped) = m.shr_sticky((lambda - t.eff_exp()) as u32);
         debug_assert!(!(spec.exact && dropped), "exact datapath must never drop bits");
         acc = acc.add(&am);
         sticky |= dropped;

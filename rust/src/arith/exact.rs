@@ -17,18 +17,22 @@ use crate::formats::{Fp, FpClass, FpFormat};
 /// Exact sum of finite terms in a global fixed-point window.
 ///
 /// The returned state uses the frame `λ = f = exp_range`, in which a term
-/// with raw exponent `e` contributes `m << e` — no data-dependent shifts,
-/// no bit ever dropped.
+/// with effective exponent `e` ([`Fp::eff_exp`]: the raw exponent for
+/// normals, 1 for subnormals) contributes `m << e` — no data-dependent
+/// shifts, no bit ever dropped. Because every finite value is an integer
+/// multiple of the subnormal LSB `2^(1-bias-mbits)` (= bit 1 of this
+/// window), bit 0 of the accumulator is always clear and sums that land in
+/// the subnormal range are exact.
 pub fn exact_sum(terms: &[Fp], fmt: FpFormat) -> AlignAcc {
     let k = fmt.exp_range() as i32; // frame constant: λ = f = k
     let mut acc = WideInt::ZERO;
     for t in terms {
-        debug_assert!(matches!(t.class(), FpClass::Zero | FpClass::Normal));
+        debug_assert!(t.is_finite());
         if t.class() == FpClass::Zero {
             continue;
         }
         let m = WideInt::from_i64(t.signed_sig());
-        acc = acc.add(&m.shl(t.raw_exp() as u32));
+        acc = acc.add(&m.shl(t.eff_exp() as u32));
     }
     AlignAcc { lambda: k, acc, sticky: false }
 }
@@ -84,7 +88,7 @@ mod tests {
                 let ts: Vec<Fp> = (0..64).map(|_| rng.gen_fp_normal(fmt)).collect();
                 let mut acc: i128 = 0;
                 for t in &ts {
-                    acc += (t.signed_sig() as i128) << t.raw_exp();
+                    acc += (t.signed_sig() as i128) << t.eff_exp();
                 }
                 let state = exact_sum(&ts, fmt);
                 assert_eq!(state.acc.to_i128(), acc, "{fmt}");

@@ -23,6 +23,7 @@ pub mod exact;
 pub mod normalize;
 pub mod online;
 pub mod operator;
+pub mod oracle;
 pub mod tree;
 pub mod wide;
 
@@ -49,8 +50,15 @@ impl AccSpec {
     /// mode all algorithms in this crate agree bit-exactly and the rounded
     /// result is the correctly-rounded sum of the inputs.
     pub fn exact(format: FpFormat) -> Self {
-        // Worst-case alignment distance is max_normal_exp - 1; one extra bit
-        // of margin keeps the reasoning simple.
+        // Alignment-distance bound under gradual underflow: every nonzero
+        // term enters the λ domain at its *effective* exponent
+        // ([`crate::formats::Fp::eff_exp`]), which is pinned to 1 for
+        // subnormals — raw exponent 0 never participates. λ therefore
+        // ranges over [1, max_normal_exp] exactly as it did under FTZ, the
+        // worst-case alignment distance is max_normal_exp − 1, and
+        // f = exp_range = max_normal_exp keeps one bit of margin: a
+        // subnormal leaf (LSB at bit f) aligned across the whole range
+        // still has its lowest live bit at f − (max_normal_exp − 1) ≥ 1.
         let f = format.exp_range();
         AccSpec { f, exact: true, narrow: f + format.sig_bits() + 16 <= 120 }
     }
@@ -74,6 +82,12 @@ impl AccSpec {
     /// Total accumulator bits needed for `n_terms` of `format` (significand,
     /// sign, carry headroom and the `f` extension), as the hardware model
     /// sees it.
+    ///
+    /// Gradual underflow does not widen this window: subnormal operands
+    /// have a *smaller* significand magnitude (hidden bit 0) at the same
+    /// effective exponent 1 a minimal normal occupies, so both the
+    /// alignment range `f` covers and the per-term magnitude bound are
+    /// unchanged from the FTZ datapath.
     pub fn acc_width(&self, format: FpFormat, n_terms: usize) -> u32 {
         let log_n = usize::BITS - (n_terms.max(2) - 1).leading_zeros();
         format.sig_bits() + 1 + log_n + 1 + self.f

@@ -8,43 +8,85 @@
 //! normalize/round netlist as well.
 
 use super::operator::AlignAcc;
-use super::AccSpec;
+use super::{AccSpec, WideInt};
 use crate::formats::{Fp, FpFormat, SpecialsMode};
 
 /// Normalize and round an alignment-and-addition result to `fmt` (RNE).
 ///
 /// Semantics notes:
 /// * exact cancellation yields `+0` (IEEE default-rounding sign rule);
-/// * underflow flushes to a signed zero (FTZ, consistent with decode);
+/// * results below the normal range **denormalize gradually**: the
+///   mantissa is extracted at the fixed subnormal LSB `2^(1-bias-mbits)`
+///   and rounded (RNE) there, instead of flushing to zero — in
+///   [`AccSpec::exact`] mode such results are in fact always exact, since
+///   every term is an integer multiple of the subnormal LSB;
 /// * overflow saturates per the format's [`SpecialsMode`];
-/// * in truncated mode the sticky flag only participates in tie-breaking.
-///   For a *negative* accumulator the dropped (floored) bits make the
-///   stored magnitude an over-estimate of the true magnitude by < 1 LSB,
-///   so rounding may differ from the infinitely-precise result by one ULP
-///   in rare cases — the standard accepted behaviour of fixed-width
-///   alignment datapaths (and impossible in [`AccSpec::exact`] mode, where
-///   sticky is always false and the result is correctly rounded).
+/// * in truncated mode the sticky flag is applied **sign-aware**: the
+///   alignment shifts floor in two's complement, so a *negative*
+///   accumulator with `k` bit-dropping operands stores a magnitude that
+///   over-estimates the true magnitude by ε ∈ (0, k) accumulator LSBs.
+///   Rounding that raw magnitude moves *away* from the infinitely-precise
+///   result whenever the guard bit reads 1 only because of the
+///   over-estimate; subtracting one LSB from the magnitude first (sticky
+///   still set) turns the common single-drop case (ε < 1) back into an
+///   exact floor-with-remainder in sign-magnitude form, so guard/sticky
+///   RNE below rounds it faithfully. With several dropping operands the
+///   residual over-estimate is < (k−1) LSB — the same order as the
+///   truncated datapath's inherent alignment error, absorbed by the guard
+///   bits of the hw-default geometry ([`AccSpec::hw_default`]); the
+///   differential oracle tracks the observed worst-case ULP deviation.
+///   Exact specs never set sticky and are unaffected (the result is
+///   correctly rounded).
 pub fn normalize_round(state: &AlignAcc, spec: AccSpec, fmt: FpFormat) -> Fp {
     if state.acc.is_zero() {
-        // True zero or a totally-cancelled sum; sticky-only residue
-        // underflows to zero under FTZ either way.
+        // True zero or a totally-cancelled sum; a sticky-only residue is
+        // below every representable magnitude and rounds to zero too.
         return Fp::zero(fmt);
     }
     let sign = state.acc.is_negative();
-    let p = state.acc.abs_msb().expect("nonzero accumulator") as i64;
+    let mut mag = state.acc.abs();
+    if sign && state.sticky {
+        // Sign-aware sticky correction (see doc comment above): true value
+        // = acc + ε with ε ∈ (0, 1) LSB, so |true| = |acc| − ε. Work on
+        // |acc| − 1 with sticky kept set: a floor of the true magnitude.
+        mag = mag.wrapping_add(&WideInt::from_i64(-1));
+        if mag.is_zero() {
+            // |true sum| < 1 accumulator LSB: rounds to the signed zero.
+            return Fp::pack(sign, 0, 0, fmt);
+        }
+    }
+    let p = mag.abs_msb().expect("nonzero accumulator") as i64;
 
-    // Value = |acc| · 2^(λ − bias − mbits − f); leading one at position p
+    // Value = mag · 2^(λ − bias − mbits − f); leading one at position p
     // means result raw exponent r = λ + p − mbits − f.
     let mbits = fmt.mbits as i64;
     let mut r = state.lambda as i64 + p - mbits - spec.f as i64;
 
-    // Extract mantissa (mbits bits below the leading one), guard and sticky.
-    let lo = p - mbits;
-    let mut mant = state.acc.abs_extract(lo, fmt.mbits);
-    let guard = state.acc.abs_bit(lo - 1);
-    let sticky = state.acc.abs_any_below(lo - 1) || state.sticky;
+    if r <= 0 {
+        // Gradual underflow: the leading one sits at or below the top of
+        // the subnormal window [2^(1-bias-mbits), 2^(1-bias)). Subnormal
+        // mantissa bit k (k = 0 the LSB, weight 2^(1-bias-mbits+k)) is
+        // accumulator bit f + 1 − λ + k in this frame.
+        let lo = spec.f as i64 + 1 - state.lambda as i64;
+        let mut mant = mag.abs_extract(lo, fmt.mbits);
+        let guard = mag.abs_bit(lo - 1);
+        let sticky = mag.abs_any_below(lo - 1) || state.sticky;
+        if guard && (sticky || (mant & 1) == 1) {
+            mant += 1;
+            if mant == (1u64 << fmt.mbits) {
+                // Rounded up into the smallest normal 1.0 · 2^(1-bias).
+                return Fp::pack(sign, 1, 0, fmt);
+            }
+        }
+        return Fp::pack(sign, 0, mant, fmt);
+    }
 
-    // Round to nearest, ties to even.
+    // Normal range: extract mantissa (mbits bits below the leading one),
+    // guard and sticky, then round to nearest, ties to even.
+    let lo = p - mbits;
+    let mut mant = mag.abs_extract(lo, fmt.mbits);
+    let guard = mag.abs_bit(lo - 1);
+    let sticky = mag.abs_any_below(lo - 1) || state.sticky;
     if guard && (sticky || (mant & 1) == 1) {
         mant += 1;
         if mant == (1u64 << fmt.mbits) {
@@ -53,10 +95,6 @@ pub fn normalize_round(state: &AlignAcc, spec: AccSpec, fmt: FpFormat) -> Fp {
         }
     }
 
-    if r <= 0 {
-        // Underflow: flush to signed zero.
-        return Fp::pack(sign, 0, 0, fmt);
-    }
     if r > fmt.max_normal_exp() as i64
         || (r == fmt.max_normal_exp() as i64
             && fmt.specials == SpecialsMode::NoInf
@@ -129,21 +167,81 @@ mod tests {
     }
 
     #[test]
-    fn underflow_flushes_to_zero() {
-        // Two minimal normals of opposite sign at distance: result below
-        // the normal range flushes to zero.
+    fn underflow_denormalizes_gradually() {
+        // Two minimal normals of opposite sign at distance: the result
+        // -0.5·2^-126 is exactly the subnormal with the top mantissa bit.
         let tiny = Fp::pack(false, 1, 0, FP32); // 2^-126
         let tiny_neg_half = Fp::pack(true, 1, 1 << 22, FP32); // -1.5 * 2^-126
         let spec = AccSpec::exact(FP32);
         let r = normalize_round(&baseline_sum(&[tiny, tiny_neg_half], spec), spec, FP32);
-        assert_eq!(r.class(), FpClass::Zero);
-        assert!(r.sign(), "result of -0.5*2^-126 keeps its sign through FTZ");
+        assert_eq!(r.class(), FpClass::Subnormal);
+        assert!(r.sign());
+        assert_eq!((r.raw_exp(), r.mant()), (0, 1 << 22), "-0.5·2^-126 exactly");
+        assert_eq!(r.to_f64() as f32, -(0.5 * f32::MIN_POSITIVE as f64) as f32);
+    }
+
+    #[test]
+    fn subnormal_inputs_sum_exactly() {
+        // Sum of subnormals staying subnormal, and crossing up into the
+        // normal range — both exact under gradual underflow.
+        let spec = AccSpec::exact(FP32);
+        let s1 = Fp::pack(false, 0, 3, FP32); // 3·2^-149
+        let s2 = Fp::pack(false, 0, 5, FP32); // 5·2^-149
+        let r = normalize_round(&baseline_sum(&[s1, s2], spec), spec, FP32);
+        assert_eq!((r.class(), r.raw_exp(), r.mant()), (FpClass::Subnormal, 0, 8));
+        // Largest subnormal + smallest subnormal = smallest normal.
+        let top = Fp::pack(false, 0, (1 << 23) - 1, FP32);
+        let lsb = Fp::pack(false, 0, 1, FP32);
+        let r = normalize_round(&baseline_sum(&[top, lsb], spec), spec, FP32);
+        assert_eq!((r.class(), r.raw_exp(), r.mant()), (FpClass::Normal, 1, 0));
+    }
+
+    #[test]
+    fn truncated_negative_sticky_rounds_toward_the_true_sum() {
+        // Regression for the two's-complement floor bug: with guard f = 2,
+        // the BF16 sum (−1.0) + (−2^-8) + (+2^-30) stores acc = −514 with
+        // sticky set (the +2^-30 term shifted out entirely). The true sum
+        // −(1 + 2^-8) + 2^-30 is just above the RNE midpoint −(1 + 2^-8),
+        // so the correctly-rounded result is −1.0. Rounding the raw
+        // magnitude 514 reads guard = 1 and sticky = 1 and rounded *up* to
+        // −(1 + 2^-7) — 1 ULP in the wrong direction. The sign-aware
+        // correction (|acc| − 1 = 513 with sticky) rounds to −1.0.
+        let spec = AccSpec::truncated(2);
+        let ts: Vec<Fp> = [-1.0, -(2f64).powi(-8), (2f64).powi(-30)]
+            .iter()
+            .map(|&x| Fp::from_f64(x, BF16))
+            .collect();
+        let state = baseline_sum(&ts, spec);
+        assert!(state.sticky);
+        assert_eq!(state.acc.to_i128(), -514);
+        let r = normalize_round(&state, spec, BF16);
+        assert_eq!(r.to_f64(), -1.0);
+    }
+
+    #[test]
+    fn truncated_negative_sticky_on_power_of_two_magnitude() {
+        // The correction crosses a binade: acc = −512 (= −1.0) with sticky
+        // means the true value is in (−1.0, −1.0 + 2^-9·…); |acc| − 1 = 511
+        // renormalizes one position down and rounds back up to −1.0 — the
+        // nearest representable — rather than sticking at an unreachable
+        // over-estimate.
+        let spec = AccSpec::truncated(2);
+        let ts: Vec<Fp> = [-1.0, (2f64).powi(-30)]
+            .iter()
+            .map(|&x| Fp::from_f64(x, BF16))
+            .collect();
+        let state = baseline_sum(&ts, spec);
+        assert!(state.sticky);
+        assert_eq!(state.acc.to_i128(), -512);
+        let r = normalize_round(&state, spec, BF16);
+        assert_eq!(r.to_f64(), -1.0);
     }
 
     #[test]
     fn fp32_matches_native_two_term_addition() {
         // For two-term sums in exact mode, result == native f32 addition
-        // (both are correctly rounded).
+        // (both are correctly rounded) — including subnormal results.
+        let min_sub = f32::from_bits(1);
         let cases = [
             (1.0f32, 2.5f32),
             (0.1, 0.2),
@@ -151,12 +249,22 @@ mod tests {
             (1e20, 3.0),
             (1.5e-38, 2.5e-38),
             (-7.25, 0.0078125),
+            // Subnormal operands and/or subnormal results:
+            (min_sub, min_sub),
+            (f32::MIN_POSITIVE, -f32::from_bits(0x007f_ffff)),
+            (1.0e-40, 2.0e-40),
+            (-3.0e-39, 1.0e-39),
+            (f32::MIN_POSITIVE, -0.5 * f32::MIN_POSITIVE),
         ];
         let spec = AccSpec::exact(FP32);
         for (a, b) in cases {
             let ts = [Fp::from_f64(a as f64, FP32), Fp::from_f64(b as f64, FP32)];
             let r = normalize_round(&baseline_sum(&ts, spec), spec, FP32);
-            assert_eq!(r.to_f64() as f32, a + b, "{a} + {b}");
+            assert_eq!(
+                (r.to_f64() as f32).to_bits(),
+                (a + b).to_bits(),
+                "{a:e} + {b:e}"
+            );
         }
     }
 }

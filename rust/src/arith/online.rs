@@ -13,13 +13,13 @@
 
 use super::operator::{op_combine, AlignAcc};
 use super::AccSpec;
-use crate::formats::{Fp, FpClass};
+use crate::formats::Fp;
 
 /// Online serial alignment-and-addition over finite terms (Algorithm 3).
 pub fn online_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
     let mut state = AlignAcc::IDENTITY; // (λ_0, o'_0)
     for t in terms {
-        debug_assert!(matches!(t.class(), FpClass::Zero | FpClass::Normal));
+        debug_assert!(t.is_finite());
         // One fused step: λ update, incremental re-alignment of the partial
         // sum, alignment of the incoming term, addition. Expressed via the
         // ⊙ operator with a leaf right-hand side — Algorithm 3 is exactly

@@ -27,30 +27,40 @@ pub struct AlignAcc {
 }
 
 impl AlignAcc {
-    /// Identity element: λ = 0 (below every normal exponent), o = 0.
+    /// Identity element: λ = 0 (below every nonzero term's effective
+    /// exponent — subnormals sit at λ = 1, see [`AlignAcc::leaf`]), o = 0.
     ///
     /// `identity() ⊙ x == x` because the identity's accumulator is zero and
-    /// its λ never exceeds a normal term's exponent — except for the
-    /// all-zero-terms case where it keeps λ at 0, which normalizes to ±0.
+    /// its λ never exceeds a live term's effective exponent — except for
+    /// the all-zero-terms case where it keeps λ at 0, which normalizes
+    /// to ±0.
     pub const IDENTITY: AlignAcc = AlignAcc { lambda: 0, acc: WideInt::ZERO, sticky: false };
 
     /// Lift one finite floating-point term into the operator domain:
-    /// `[e_i; m_i << f]`.
+    /// `[λ_i; m_i << f]` with `λ_i =` [`Fp::eff_exp`]`()`.
+    ///
+    /// **Subnormal λ-convention**: a subnormal term carries raw exponent 0,
+    /// which would collide with [`AlignAcc::IDENTITY`]'s λ = 0. Following
+    /// IEEE gradual underflow, subnormals enter the λ domain at the
+    /// *effective* exponent 1 with hidden bit 0 — `(-1)^s · 0.m · 2^(1-bias)`
+    /// lifts to `[1; (±m) << f]`, exactly where a normal at exponent 1 with
+    /// the same significand bits would land. Every nonzero term therefore
+    /// has λ ∈ [1, max_normal_exp]: raw exponent 0 never reaches the
+    /// max-exponent tree, the identity's λ = 0 stays strictly below every
+    /// live term, and the worst-case alignment distance keeps the bound
+    /// `max_normal_exp − 1` that [`super::AccSpec::exact`] is derived from.
     ///
     /// Zero terms enter as `[0; 0]` (the identity), matching hardware where
     /// a zero operand contributes neither to the max-exponent tree nor to
     /// the fraction sum. Inf/NaN must be filtered by the caller
     /// (see [`crate::arith::adder`]).
     pub fn leaf(term: Fp, spec: AccSpec) -> AlignAcc {
-        debug_assert!(
-            matches!(term.class(), FpClass::Zero | FpClass::Normal),
-            "leaf() requires a finite term"
-        );
+        debug_assert!(term.is_finite(), "leaf() requires a finite term");
         if term.class() == FpClass::Zero {
             return AlignAcc::IDENTITY;
         }
         AlignAcc {
-            lambda: term.raw_exp(),
+            lambda: term.eff_exp(),
             acc: WideInt::from_i64_shl(term.signed_sig(), spec.f),
             sticky: false,
         }
@@ -196,5 +206,26 @@ mod tests {
         let spec = AccSpec::exact(BF16);
         let r = op_combine(&leaf(0.5, spec), &leaf(4.0, spec), spec);
         assert_eq!(r.lambda, Fp::from_f64(4.0, BF16).raw_exp());
+    }
+
+    #[test]
+    fn subnormal_leaf_uses_effective_exponent_one() {
+        let spec = AccSpec::exact(BF16);
+        // 0.0000001·2^-126 — the smallest positive BF16 subnormal.
+        let sub = Fp::pack(false, 0, 1, BF16);
+        let l = AlignAcc::leaf(sub, spec);
+        assert_eq!(l.lambda, 1, "subnormal λ-convention");
+        assert!(!l.is_identity());
+        // It lands exactly where a hypothetical normal-frame significand m=1
+        // at exponent 1 would: acc = 1 << f.
+        assert_eq!(l.acc, crate::arith::WideInt::from_i64_shl(1, spec.f));
+        // And the identity is still neutral against it.
+        assert_eq!(op_combine(&AlignAcc::IDENTITY, &l, spec), l);
+        // A normal at exponent 1 with hidden bit aligns against it with
+        // distance 0 — no bits can drop in exact mode.
+        let tiny_normal = Fp::pack(true, 1, 0, BF16);
+        let r = op_combine(&l, &AlignAcc::leaf(tiny_normal, spec), spec);
+        assert_eq!(r.lambda, 1);
+        assert!(!r.sticky);
     }
 }

@@ -1,0 +1,507 @@
+//! Differential rounding oracle: an *independent* software reference for
+//! the correctly-rounded multi-term sum, plus an adversarial fuzzing
+//! harness that diffs every algorithm family against it.
+//!
+//! The reference deliberately shares no arithmetic with the datapath
+//! models: where the `⊙` algorithms track a two's-complement [`super::WideInt`]
+//! in a λ-aligned frame, the reference decodes raw bit patterns itself,
+//! accumulates positive and negative magnitudes in two unsigned big-integer
+//! windows (sign-magnitude, limb arithmetic written from scratch), takes
+//! one exact difference, and re-derives RNE rounding — gradual underflow,
+//! normal range and overflow — from first principles. Agreement between two
+//! structurally different implementations is the evidence the differential
+//! test provides; a bug must be introduced twice, in two representations,
+//! to slip through.
+//!
+//! [`run_oracle`] fuzzes adversarial operand distributions (uniform
+//! full-range, subnormal-dense, cancellation-heavy, mixed-sign
+//! near-overflow) through baseline / online / Kulisch / mixed-radix-tree
+//! architectures under exact [`AccSpec`]s (narrow and wide paths) and
+//! reports every bit mismatch, plus a faithfulness bound for the
+//! hardware-default truncated datapath. The `repro oracle` CLI subcommand
+//! and `tests/oracle_differential.rs` drive it; see DESIGN.md §Oracle.
+
+use super::adder::{Architecture, MultiTermAdder};
+use super::tree::enumerate_configs;
+use super::AccSpec;
+use crate::formats::{Fp, FpClass, FpFormat, SpecialsMode};
+use crate::util::prng::XorShift;
+use std::cmp::Ordering;
+
+/// Limbs of the reference magnitude window. 512 bits cover the widest
+/// format window (FP32: effective exponent ≤ 254 plus a 24-bit significand
+/// is < 2^279 per term, < 2^291 for 4096 terms) with ample slack.
+const REF_LIMBS: usize = 8;
+
+/// An unsigned little-endian magnitude in the global fixed-point window
+/// `value = mag · 2^(-bias - mbits)`.
+type Mag = [u64; REF_LIMBS];
+
+/// `mag += m << sh` (with `m < 2^25`, `sh < 7·64`); carries propagate.
+fn mag_add_shifted(mag: &mut Mag, m: u64, sh: u32) {
+    debug_assert!((sh as usize) < (REF_LIMBS - 1) * 64);
+    let (limb, bit) = ((sh / 64) as usize, sh % 64);
+    let lo = m << bit;
+    let hi = if bit == 0 { 0 } else { m >> (64 - bit) };
+    let (s, c) = mag[limb].overflowing_add(lo);
+    mag[limb] = s;
+    let mut carry = c as u64;
+    let mut add = hi;
+    let mut i = limb + 1;
+    while (carry > 0 || add > 0) && i < REF_LIMBS {
+        let (s1, c1) = mag[i].overflowing_add(add);
+        let (s2, c2) = s1.overflowing_add(carry);
+        mag[i] = s2;
+        carry = (c1 as u64) + (c2 as u64);
+        add = 0;
+        i += 1;
+    }
+    debug_assert!(carry == 0, "reference window overflow");
+}
+
+fn mag_cmp(a: &Mag, b: &Mag) -> Ordering {
+    for i in (0..REF_LIMBS).rev() {
+        if a[i] != b[i] {
+            return a[i].cmp(&b[i]);
+        }
+    }
+    Ordering::Equal
+}
+
+/// `a - b`; requires `a >= b`.
+fn mag_sub(a: &Mag, b: &Mag) -> Mag {
+    let mut out = [0u64; REF_LIMBS];
+    let mut borrow = 0u64;
+    for i in 0..REF_LIMBS {
+        let (d1, b1) = a[i].overflowing_sub(b[i]);
+        let (d2, b2) = d1.overflowing_sub(borrow);
+        out[i] = d2;
+        borrow = (b1 as u64) + (b2 as u64);
+    }
+    debug_assert_eq!(borrow, 0, "mag_sub requires a >= b");
+    out
+}
+
+/// Position of the most significant set bit, or `None` if zero.
+fn mag_msb(mag: &Mag) -> Option<i64> {
+    for i in (0..REF_LIMBS).rev() {
+        if mag[i] != 0 {
+            return Some(i as i64 * 64 + 63 - mag[i].leading_zeros() as i64);
+        }
+    }
+    None
+}
+
+/// Bit `pos` (0 when out of range, including negative positions).
+fn mag_bit(mag: &Mag, pos: i64) -> bool {
+    if pos < 0 || pos >= (REF_LIMBS * 64) as i64 {
+        return false;
+    }
+    (mag[(pos / 64) as usize] >> (pos % 64)) & 1 == 1
+}
+
+/// Any set bit strictly below `pos`.
+fn mag_any_below(mag: &Mag, pos: i64) -> bool {
+    if pos <= 0 {
+        return false;
+    }
+    let pos = (pos as usize).min(REF_LIMBS * 64);
+    let (limb, bit) = (pos / 64, pos % 64);
+    if mag[..limb].iter().any(|&l| l != 0) {
+        return true;
+    }
+    bit > 0 && limb < REF_LIMBS && (mag[limb] & ((1u64 << bit) - 1)) != 0
+}
+
+/// Bits `[lo, lo+len)` as a `u64` (`len <= 64`); out-of-range bits read 0.
+fn mag_extract(mag: &Mag, lo: i64, len: u32) -> u64 {
+    debug_assert!(len <= 64);
+    let mut out = 0u64;
+    for k in 0..len {
+        if mag_bit(mag, lo + k as i64) {
+            out |= 1u64 << k;
+        }
+    }
+    out
+}
+
+/// Round a sign-magnitude window value to `fmt` (RNE, gradual underflow,
+/// overflow per [`SpecialsMode`]). Written independently of
+/// [`super::normalize::normalize_round`].
+fn ref_round(sign: bool, mag: &Mag, fmt: FpFormat) -> Fp {
+    let Some(p) = mag_msb(mag) else {
+        return Fp::zero(fmt);
+    };
+    let mbits = fmt.mbits as i64;
+    let (mut r, mut mant, guard, sticky) = if p - mbits >= 1 {
+        // Normal window: mantissa below the leading one.
+        (
+            p - mbits,
+            mag_extract(mag, p - mbits, fmt.mbits),
+            mag_bit(mag, p - mbits - 1),
+            mag_any_below(mag, p - mbits - 1),
+        )
+    } else {
+        // Subnormal window: the mantissa LSB 2^(1-bias-mbits) is bit 1 of
+        // the global frame. (Bit 0 is provably always clear — every term
+        // is an integer multiple of the subnormal LSB — so subnormal
+        // results are exact; the guard bit is still read for robustness.)
+        (0, mag_extract(mag, 1, fmt.mbits), mag_bit(mag, 0), false)
+    };
+    if guard && (sticky || (mant & 1) == 1) {
+        mant += 1;
+        if mant == (1u64 << fmt.mbits) {
+            mant = 0;
+            r += 1;
+        }
+    }
+    if r > fmt.max_normal_exp() as i64
+        || (r == fmt.max_normal_exp() as i64
+            && fmt.specials == SpecialsMode::NoInf
+            && mant > fmt.max_finite_mant())
+    {
+        return Fp::overflow(sign, fmt);
+    }
+    Fp::pack(sign, r as i32, mant, fmt)
+}
+
+/// The ground-truth correctly-rounded sum of finite terms: exact
+/// sign-magnitude accumulation over the whole exponent range, then one RNE
+/// rounding. Decodes raw bit patterns directly (no shared decode helpers).
+pub fn reference_sum(terms: &[Fp], fmt: FpFormat) -> Fp {
+    let mut pos = [0u64; REF_LIMBS];
+    let mut neg = [0u64; REF_LIMBS];
+    for t in terms {
+        debug_assert_eq!(t.format, fmt, "term format mismatch");
+        debug_assert!(t.is_finite(), "reference_sum takes finite terms only");
+        let w = t.format;
+        let sign = (t.bits >> (w.ebits + w.mbits)) & 1 == 1;
+        let e = ((t.bits >> w.mbits) & w.exp_mask()) as u32;
+        let m = t.bits & w.mant_mask();
+        // Gradual underflow: raw exponent 0 means effective exponent 1
+        // with no hidden bit.
+        let (sig, eff) = if e == 0 { (m, 1) } else { (m | (1u64 << w.mbits), e) };
+        if sig == 0 {
+            continue; // ±0 contributes nothing
+        }
+        mag_add_shifted(if sign { &mut neg } else { &mut pos }, sig, eff);
+    }
+    match mag_cmp(&pos, &neg) {
+        Ordering::Greater => ref_round(false, &mag_sub(&pos, &neg), fmt),
+        Ordering::Less => ref_round(true, &mag_sub(&neg, &pos), fmt),
+        // Exact cancellation rounds to +0 (IEEE default-rounding rule).
+        Ordering::Equal => Fp::zero(fmt),
+    }
+}
+
+/// Adversarial operand distributions the oracle fuzzes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Distribution {
+    /// Uniform over every finite bit pattern (zeros, subnormals, normals).
+    Uniform,
+    /// Mostly subnormals plus small normals hugging the underflow boundary.
+    SubnormalDense,
+    /// Pairs `x, -x ± 1 ulp`: heavy cancellation, residues deep below the
+    /// operand magnitudes (often subnormal).
+    Cancellation,
+    /// Mixed-sign values within two binades of the overflow boundary.
+    NearOverflow,
+}
+
+/// All distributions, in fuzzing rotation order.
+pub const DISTRIBUTIONS: [Distribution; 4] = [
+    Distribution::Uniform,
+    Distribution::SubnormalDense,
+    Distribution::Cancellation,
+    Distribution::NearOverflow,
+];
+
+impl Distribution {
+    pub fn name(self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::SubnormalDense => "subnormal-dense",
+            Distribution::Cancellation => "cancellation",
+            Distribution::NearOverflow => "near-overflow",
+        }
+    }
+
+    /// One fuzzed operand vector of `n` finite terms.
+    pub fn gen_vector(self, rng: &mut XorShift, fmt: FpFormat, n: usize) -> Vec<Fp> {
+        match self {
+            Distribution::Uniform => (0..n).map(|_| rng.gen_fp_full(fmt)).collect(),
+            Distribution::SubnormalDense => (0..n)
+                .map(|_| {
+                    if rng.below(10) < 7 {
+                        rng.gen_fp_subnormal(fmt)
+                    } else {
+                        let hi = (fmt.max_normal_exp() as i64).min(3);
+                        let e = rng.range_i64(1, hi) as i32;
+                        let m = rng.next_u64() & fmt.mant_mask();
+                        Fp::pack(rng.below(2) == 1, e, m, fmt)
+                    }
+                })
+                .collect(),
+            Distribution::Cancellation => {
+                let sign_bit = 1u64 << (fmt.width() - 1);
+                let top = ((fmt.max_normal_exp() as u64) << fmt.mbits) | fmt.max_finite_mant();
+                let mut out = Vec::with_capacity(n);
+                while out.len() + 1 < n {
+                    let x = rng.gen_fp_full(fmt);
+                    out.push(x);
+                    // The negation, half the time nudged by ±1 on the
+                    // magnitude ordinal (clamped into the finite range) so
+                    // the pair cancels to a ±1-ulp residue.
+                    let neg = x.bits ^ sign_bit;
+                    let mut mag = neg & !sign_bit;
+                    if rng.below(2) == 0 {
+                        mag = if rng.below(2) == 0 {
+                            mag.saturating_sub(1)
+                        } else {
+                            (mag + 1).min(top)
+                        };
+                    }
+                    out.push(Fp::from_bits((neg & sign_bit) | mag, fmt));
+                }
+                while out.len() < n {
+                    out.push(Fp::zero(fmt));
+                }
+                out
+            }
+            Distribution::NearOverflow => (0..n)
+                .map(|_| {
+                    let lo = (fmt.max_normal_exp() as i64 - 2).max(1);
+                    let e = rng.range_i64(lo, fmt.max_normal_exp() as i64) as i32;
+                    let mut m = rng.next_u64() & fmt.mant_mask();
+                    if e == fmt.max_normal_exp() && m > fmt.max_finite_mant() {
+                        m = fmt.max_finite_mant();
+                    }
+                    Fp::pack(rng.below(2) == 1, e, m, fmt)
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Fuzzing-run geometry.
+#[derive(Clone, Copy, Debug)]
+pub struct OracleConfig {
+    /// Fuzzed vectors per format.
+    pub vectors: usize,
+    /// Terms per vector (power of two ≥ 4, so every tree config applies).
+    pub terms: usize,
+    /// Base PRNG seed (per-format streams are derived from it).
+    pub seed: u64,
+}
+
+impl Default for OracleConfig {
+    fn default() -> Self {
+        OracleConfig { vectors: 2000, terms: 16, seed: 0x0D1F_F0DD }
+    }
+}
+
+/// One bit-level disagreement between an exact-mode adder and the
+/// reference — enough context to replay it by hand.
+#[derive(Clone, Debug)]
+pub struct Mismatch {
+    pub format: FpFormat,
+    pub distribution: Distribution,
+    /// Architecture / accumulator-path label, e.g. `"tree-4-4/wide"`.
+    pub arch: String,
+    pub expected_bits: u64,
+    pub got_bits: u64,
+    pub term_bits: Vec<u64>,
+}
+
+/// Result of one per-format oracle run.
+#[derive(Clone, Debug)]
+pub struct OracleReport {
+    pub format: FpFormat,
+    pub vectors: usize,
+    /// Exact-mode (architecture × accumulator-path) result comparisons.
+    pub exact_checks: u64,
+    /// Every exact-mode bit mismatch (must be empty).
+    pub mismatches: Vec<Mismatch>,
+    /// Truncated-datapath comparisons that met the faithfulness filter.
+    pub truncated_checks: u64,
+    /// Worst observed truncated-datapath deviation, in result ULPs.
+    pub truncated_max_ulp: i64,
+}
+
+/// Fuzz `fmt` against the reference: every vector runs through baseline,
+/// online, the Kulisch window and a rotating mixed-radix tree, each under
+/// the exact spec (and, where the format permits, both the narrow-i128 and
+/// wide-`WideInt` accumulator paths); results must match the reference bit
+/// for bit. The hardware-default truncated spec is tracked as a
+/// faithfulness bound on the side.
+pub fn run_oracle(fmt: FpFormat, cfg: &OracleConfig) -> OracleReport {
+    assert!(
+        cfg.terms.is_power_of_two() && cfg.terms >= 4,
+        "terms must be a power of two >= 4"
+    );
+    let n = cfg.terms;
+    let mut rng = XorShift::new(
+        cfg.seed ^ ((fmt.ebits as u64) << 32) ^ ((fmt.mbits as u64) << 40),
+    );
+    let exact = AccSpec::exact(fmt);
+    // Where the exact spec fits the i128 fast path, also exercise the
+    // 384-bit wide path; otherwise one spec covers both labels.
+    let mut specs: Vec<(&'static str, AccSpec)> = vec![(
+        if exact.narrow { "narrow" } else { "wide" },
+        exact,
+    )];
+    if exact.narrow {
+        specs.push(("wide", AccSpec { narrow: false, ..exact }));
+    }
+    // Architectures and display labels are fixed for the whole run; only
+    // the tree config rotates, so format each tree label once up front
+    // rather than per vector.
+    let fixed_archs: [(&str, Architecture); 3] = [
+        ("baseline", Architecture::Baseline),
+        ("online", Architecture::Online),
+        ("kulisch", Architecture::Exact),
+    ];
+    let tree_archs: Vec<(String, Architecture)> = enumerate_configs(n as u32)
+        .into_iter()
+        .map(|c| (format!("tree-{c}"), Architecture::Tree(c)))
+        .collect();
+    let hw = AccSpec::hw_default(fmt, n);
+    let mut report = OracleReport {
+        format: fmt,
+        vectors: cfg.vectors,
+        exact_checks: 0,
+        mismatches: Vec::new(),
+        truncated_checks: 0,
+        truncated_max_ulp: 0,
+    };
+    for v in 0..cfg.vectors {
+        let dist = DISTRIBUTIONS[v % DISTRIBUTIONS.len()];
+        let terms = dist.gen_vector(&mut rng, fmt, n);
+        let expected = reference_sum(&terms, fmt);
+        let (tree_label, tree_arch) = &tree_archs[v % tree_archs.len()];
+        let archs = fixed_archs
+            .iter()
+            .map(|(l, a)| (*l, a))
+            .chain(std::iter::once((tree_label.as_str(), tree_arch)));
+        for (label, arch) in archs {
+            for (spec_label, spec) in &specs {
+                let adder = MultiTermAdder { format: fmt, n_terms: n, spec: *spec, arch: arch.clone() };
+                let got = adder.add(&terms);
+                report.exact_checks += 1;
+                if got.bits != expected.bits {
+                    report.mismatches.push(Mismatch {
+                        format: fmt,
+                        distribution: dist,
+                        arch: format!("{label}/{spec_label}"),
+                        expected_bits: expected.bits,
+                        got_bits: got.bits,
+                        term_bits: terms.iter().map(|t| t.bits).collect(),
+                    });
+                }
+            }
+        }
+        // Truncated-datapath faithfulness bound (same filter as the
+        // property tests: deep cancellation amplifies the absolute guard
+        // error into arbitrarily many result ULPs, so it is excluded).
+        let adder = MultiTermAdder { format: fmt, n_terms: n, spec: hw, arch: tree_arch.clone() };
+        let got = adder.add(&terms);
+        if got.class() == FpClass::Normal
+            && expected.class() == FpClass::Normal
+            && got.sign() == expected.sign()
+        {
+            let emax = terms
+                .iter()
+                .filter(|t| t.class() == FpClass::Normal)
+                .map(|t| t.raw_exp())
+                .max()
+                .unwrap_or(0);
+            if emax - expected.raw_exp() <= 2 {
+                let diff = (got.bits as i64 - expected.bits as i64).abs();
+                report.truncated_checks += 1;
+                report.truncated_max_ulp = report.truncated_max_ulp.max(diff);
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::exact::exact_rounded_sum;
+    use crate::formats::{BF16, FP32, FP8_E4M3, PAPER_FORMATS};
+
+    #[test]
+    fn reference_agrees_with_kulisch_oracle_on_all_distributions() {
+        // Two independent implementations (sign-magnitude limb reference
+        // vs WideInt Kulisch window + normalize_round) must agree bit for
+        // bit over every distribution and format.
+        let mut rng = XorShift::new(0x0_D1FF);
+        for fmt in PAPER_FORMATS {
+            for dist in DISTRIBUTIONS {
+                for _ in 0..100 {
+                    let terms = dist.gen_vector(&mut rng, fmt, 16);
+                    let a = reference_sum(&terms, fmt);
+                    let b = exact_rounded_sum(&terms, fmt);
+                    assert_eq!(
+                        a.bits, b.bits,
+                        "{fmt} {}: {a:?} vs {b:?} over {:x?}",
+                        dist.name(),
+                        terms.iter().map(|t| t.bits).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reference_matches_native_f32_two_term() {
+        let mut rng = XorShift::new(0x2F32);
+        for _ in 0..2000 {
+            let a = rng.gen_fp_full(FP32);
+            let b = rng.gen_fp_full(FP32);
+            let native = (a.to_f64() as f32) + (b.to_f64() as f32);
+            // Both-zero operands: the reference returns +0 for an all-zero
+            // sum; IEEE keeps -0 for (-0) + (-0). Skip that one case.
+            if a.class() == FpClass::Zero && b.class() == FpClass::Zero {
+                continue;
+            }
+            let r = reference_sum(&[a, b], FP32);
+            assert_eq!(
+                (r.to_f64() as f32).to_bits(),
+                native.to_bits(),
+                "{a:?} + {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reference_handles_signed_zero_and_empty() {
+        let z = Fp::zero(BF16);
+        let nz = Fp::from_bits(1 << (BF16.width() - 1), BF16);
+        assert_eq!(reference_sum(&[], BF16).bits, 0);
+        assert_eq!(reference_sum(&[z, nz, nz], BF16).bits, 0);
+        let one = Fp::from_f64(1.0, BF16);
+        let none = Fp::from_f64(-1.0, BF16);
+        assert_eq!(reference_sum(&[one, none], BF16).bits, 0, "cancellation -> +0");
+    }
+
+    #[test]
+    fn reference_saturates_noinf_formats() {
+        let big = Fp::pack(false, FP8_E4M3.max_normal_exp(), FP8_E4M3.max_finite_mant(), FP8_E4M3);
+        let r = reference_sum(&[big, big, big], FP8_E4M3);
+        assert_eq!(r.to_f64(), 448.0, "e4m3 overflow saturates");
+    }
+
+    #[test]
+    fn small_oracle_run_is_clean() {
+        let cfg = OracleConfig { vectors: 200, terms: 8, seed: 0x5EED };
+        for fmt in [BF16, FP8_E4M3] {
+            let rep = run_oracle(fmt, &cfg);
+            assert!(rep.mismatches.is_empty(), "{fmt}: {:?}", rep.mismatches.first());
+            assert!(rep.exact_checks >= 200 * 4, "{fmt}");
+            assert!(rep.truncated_checks > 0, "{fmt}");
+            assert!(rep.truncated_max_ulp <= 2, "{fmt}: {}", rep.truncated_max_ulp);
+        }
+    }
+}

@@ -144,6 +144,14 @@ pub(crate) fn reduce_in_place(
 ) -> AlignAcc {
     for &r in &config.radices {
         let r = r as usize;
+        // `tree_sum` guarantees divisibility via its width assert, but
+        // `runtime` and `stream` call this directly: a non-divisible level
+        // would silently drop the trailing partial states from the sum.
+        debug_assert_eq!(
+            live % r,
+            0,
+            "level radix {r} does not divide {live} live states (pad with identity leaves)"
+        );
         let groups = live / r;
         for g in 0..groups {
             buf[g] = op_combine_many(&buf[g * r..(g + 1) * r], spec);
@@ -251,5 +259,21 @@ mod tests {
         let spec = AccSpec::exact(BF16);
         let ts = vec![Fp::zero(BF16); 7];
         tree_sum(&ts, &RadixConfig::baseline(8), spec);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "does not divide")]
+    fn reduce_in_place_rejects_non_divisible_live_count() {
+        // Direct callers (runtime, stream) must pad to the config width;
+        // 7 live states under a radix-4 level would silently drop 3 terms.
+        use super::super::operator::AlignAcc;
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xBAD);
+        let mut buf: Vec<AlignAcc> = (0..7)
+            .map(|_| AlignAcc::leaf(rng.gen_fp_normal(BF16), spec))
+            .collect();
+        let cfg: RadixConfig = "4-2".parse().unwrap();
+        let _ = reduce_in_place(&mut buf, 7, &cfg, spec);
     }
 }

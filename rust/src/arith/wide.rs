@@ -235,11 +235,21 @@ impl WideInt {
         out
     }
 
-    /// Unchecked narrow load: low two limbs as `i128`. Only valid when the
-    /// value is known to fit (the `AccSpec::narrow` invariant).
+    /// Narrow load: low two limbs as `i128`. Only valid when the value is
+    /// known to fit (the `AccSpec::narrow` invariant); a debug assertion
+    /// checks that limbs 2.. are pure sign fill so a mis-set
+    /// `AccSpec::narrow` fails loudly in tests instead of corrupting sums.
     #[inline]
     pub fn to_i128_narrow(&self) -> i128 {
-        (self.limbs[0] as u128 | ((self.limbs[1] as u128) << 64)) as i128
+        let v = (self.limbs[0] as u128 | ((self.limbs[1] as u128) << 64)) as i128;
+        debug_assert!(
+            {
+                let fill = if v < 0 { u64::MAX } else { 0 };
+                self.limbs[2..].iter().all(|&l| l == fill)
+            },
+            "to_i128_narrow on a value wider than i128 (AccSpec::narrow mis-set?)"
+        );
+        v
     }
 
     /// Sign-extend an `i128` (inverse of [`Self::to_i128_narrow`]).
@@ -399,6 +409,22 @@ mod tests {
         let b = a.neg();
         assert_eq!(b.abs_msb(), Some(103));
         assert_eq!(b.abs_extract(100, 4), 0b1011);
+    }
+
+    #[test]
+    fn narrow_load_roundtrips_narrow_values() {
+        for v in [0i128, 1, -1, i64::MAX as i128 + 12345, -(1i128 << 100)] {
+            assert_eq!(WideInt::from_i128(v).to_i128_narrow(), v);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "to_i128_narrow")]
+    fn narrow_load_rejects_wide_values() {
+        // A value with live bits above limb 1 violates the narrow
+        // invariant and must fail loudly rather than silently truncate.
+        let _ = w(1).shl(200).to_i128_narrow();
     }
 
     #[test]

@@ -92,6 +92,38 @@ pub fn header(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// True when `BENCH_SMOKE` is enabled in the environment (any value other
+/// than empty, `0` or `false`): CI smoke mode, where suites shrink their
+/// workloads/targets so every `BENCH_*.json` is emitted in seconds.
+/// Smoke-mode suites write their records under a `<suite>-smoke` label so
+/// the trajectory never mixes smoke figures with full-length runs.
+pub fn smoke() -> bool {
+    match std::env::var("BENCH_SMOKE") {
+        Ok(v) => !(v.is_empty() || v == "0" || v.eq_ignore_ascii_case("false")),
+        Err(_) => false,
+    }
+}
+
+/// The JSON suite label for the current mode: `name` for full runs,
+/// `name-smoke` under [`smoke`] mode.
+pub fn suite_label(name: &str) -> String {
+    if smoke() {
+        format!("{name}-smoke")
+    } else {
+        name.to_string()
+    }
+}
+
+/// A bench target time scaled for the current mode: `full` seconds
+/// locally, a fast fraction under smoke mode.
+pub fn target_seconds(full: f64) -> f64 {
+    if smoke() {
+        (full * 0.1).max(0.05)
+    } else {
+        full
+    }
+}
+
 /// One machine-readable benchmark record: a [`BenchResult`] plus labeled
 /// numeric parameters (thread count, chunk size, throughput, ...).
 #[derive(Debug, Clone)]

@@ -5,8 +5,11 @@ use super::{FpFormat, SpecialsMode};
 /// Classification of a decoded value.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum FpClass {
-    /// ±0 (raw exponent 0; denormals are flushed to zero — see module docs).
+    /// ±0 (raw exponent 0, mantissa 0).
     Zero,
+    /// A subnormal number `(-1)^s · 0.m · 2^(1-bias)` (raw exponent 0,
+    /// nonzero mantissa): gradual underflow, IEEE-754 semantics.
+    Subnormal,
     /// A normal number `(-1)^s · 1.m · 2^(e-bias)`.
     Normal,
     /// ±Infinity (only in [`SpecialsMode::Ieee`] formats).
@@ -57,6 +60,21 @@ impl Fp {
         self.bits & self.format.mant_mask()
     }
 
+    /// Effective (biased) exponent for alignment: the raw exponent for
+    /// normals, and 1 for subnormals and zeros — the IEEE gradual-underflow
+    /// convention `(-1)^s · 0.m · 2^(1-bias)`, under which raw exponent 0
+    /// never enters the alignment (λ) domain. See
+    /// [`crate::arith::operator`] for how the `⊙` datapath relies on this.
+    #[inline]
+    pub fn eff_exp(&self) -> i32 {
+        let e = self.raw_exp();
+        if e == 0 {
+            1
+        } else {
+            e
+        }
+    }
+
     /// Classify the value under the format's special-value rules.
     pub fn class(&self) -> FpClass {
         let e = self.raw_exp();
@@ -70,7 +88,11 @@ impl Fp {
                         FpClass::Nan
                     }
                 } else if e == 0 {
-                    FpClass::Zero // denormals flushed
+                    if m == 0 {
+                        FpClass::Zero
+                    } else {
+                        FpClass::Subnormal
+                    }
                 } else {
                     FpClass::Normal
                 }
@@ -79,7 +101,11 @@ impl Fp {
                 if e == (self.format.exp_mask() as i32) && m == self.format.mant_mask() {
                     FpClass::Nan
                 } else if e == 0 {
-                    FpClass::Zero
+                    if m == 0 {
+                        FpClass::Zero
+                    } else {
+                        FpClass::Subnormal
+                    }
                 } else {
                     FpClass::Normal
                 }
@@ -87,13 +113,24 @@ impl Fp {
         }
     }
 
-    /// Signed significand `(-1)^s · 1.m` as an integer scaled by `2^mbits`.
+    /// Signed significand as an integer scaled by `2^mbits`: `(-1)^s · 1.m`
+    /// for normals, `(-1)^s · 0.m` (hidden bit 0) for subnormals.
     ///
-    /// Zero for [`FpClass::Zero`]; callers must handle Inf/NaN separately.
+    /// Together with [`Self::eff_exp`] this decodes every finite value as
+    /// `signed_sig · 2^(eff_exp - bias - mbits)`. Zero for
+    /// [`FpClass::Zero`]; callers must handle Inf/NaN separately.
     #[inline]
     pub fn signed_sig(&self) -> i64 {
         match self.class() {
             FpClass::Zero => 0,
+            FpClass::Subnormal => {
+                let mag = self.mant() as i64;
+                if self.sign() {
+                    -mag
+                } else {
+                    mag
+                }
+            }
             _ => {
                 let mag = ((1u64 << self.format.mbits) | self.mant()) as i64;
                 if self.sign() {
@@ -123,16 +160,19 @@ impl Fp {
                 }
             }
             FpClass::Nan => f64::NAN,
-            FpClass::Normal => {
-                let sig = self.signed_sig() as f64; // (-1)^s · 1.m · 2^mbits
-                let scale = self.raw_exp() - self.format.bias() - self.format.mbits as i32;
+            FpClass::Normal | FpClass::Subnormal => {
+                // (-1)^s · 1.m · 2^mbits (normal) or (-1)^s · 0.m · 2^mbits
+                // (subnormal, at the effective exponent 1 - bias).
+                let sig = self.signed_sig() as f64;
+                let scale = self.eff_exp() - self.format.bias() - self.format.mbits as i32;
                 sig * pow2(scale)
             }
         }
     }
 
-    /// Round an `f64` into the format (round-to-nearest-even, FTZ on
-    /// underflow, saturation per [`SpecialsMode`] on overflow).
+    /// Round an `f64` into the format (round-to-nearest-even, gradual
+    /// underflow into the subnormal range, saturation per [`SpecialsMode`]
+    /// on overflow).
     pub fn from_f64(x: f64, format: FpFormat) -> Self {
         if x.is_nan() {
             return Self::nan(format);
@@ -158,6 +198,21 @@ impl Fp {
             e2 -= 1;
         }
         debug_assert!((1.0..2.0).contains(&frac));
+        if e2 + format.bias() <= 0 {
+            // Gradual underflow: round in the subnormal frame, whose
+            // mantissa LSB has the fixed weight 2^(1 - bias - mbits)
+            // regardless of the value's own binade.
+            let scaled = mag * pow2(format.mbits as i32 + format.bias() - 1);
+            let mant = round_half_even(scaled);
+            if mant == 0 {
+                return Self::encode_sign_zero(sign, format);
+            }
+            if mant >= (1u64 << format.mbits) {
+                // Rounded up into the smallest normal 1.0 · 2^(1-bias).
+                return Self::pack(sign, 1, 0, format);
+            }
+            return Self::pack(sign, 0, mant, format);
+        }
         // Round mantissa to mbits (RNE) using the f64 representation.
         let scaled = frac * pow2(format.mbits as i32); // in [2^mbits, 2^(mbits+1))
         let mut mant = round_half_even(scaled);
@@ -167,9 +222,6 @@ impl Fp {
             raw_e += 1;
         }
         mant &= format.mant_mask();
-        if raw_e <= 0 {
-            return Self::encode_sign_zero(sign, format); // FTZ underflow
-        }
         if raw_e > format.max_normal_exp()
             || (raw_e == format.max_normal_exp() && mant > format.max_finite_mant())
         {
@@ -212,10 +264,10 @@ impl Fp {
         Self::pack(sign, 0, 0, format)
     }
 
-    /// True if this is a finite value (zero or normal).
+    /// True if this is a finite value (zero, subnormal or normal).
     #[inline]
     pub fn is_finite(&self) -> bool {
-        matches!(self.class(), FpClass::Zero | FpClass::Normal)
+        matches!(self.class(), FpClass::Zero | FpClass::Subnormal | FpClass::Normal)
     }
 }
 
@@ -260,10 +312,14 @@ mod tests {
     #[test]
     fn fp32_roundtrip_matches_native() {
         // Every finite f32 we can feasibly sample must round-trip exactly
-        // through our FP32 codec (FTZ aside).
+        // through our FP32 codec — including subnormals.
         let samples = [
             0.0f32, -0.0, 1.0, -1.0, 1.5, 0.1, 3.14159, -2.71828, 1e-30, 1e30, 123456.789,
             f32::MAX, f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 2.0,            // subnormal
+            f32::from_bits(1),                  // smallest positive subnormal
+            -f32::from_bits(0x007f_ffff),       // largest negative subnormal
+            1e-42,                              // mid-range subnormal
         ];
         for &x in &samples {
             let fp = Fp::from_f64(x as f64, FP32);
@@ -288,15 +344,53 @@ mod tests {
     }
 
     #[test]
-    fn denormals_flush_to_zero() {
+    fn subnormals_decode_and_encode_gradually() {
         for fmt in PAPER_FORMATS {
-            // Smallest positive normal divided by 2 is subnormal -> FTZ.
+            // Smallest positive normal divided by 2 is the subnormal with
+            // the top mantissa bit set.
             let min_normal = pow2(1 - fmt.bias());
             let fp = Fp::from_f64(min_normal / 2.0, fmt);
-            assert_eq!(fp.class(), FpClass::Zero, "{fmt}");
-            // A raw subnormal pattern decodes as zero.
-            let sub = Fp::pack(false, 0, fmt.mant_mask(), fmt);
-            assert_eq!(sub.class(), FpClass::Zero, "{fmt}");
+            assert_eq!(fp.class(), FpClass::Subnormal, "{fmt}");
+            assert_eq!(fp.raw_exp(), 0, "{fmt}");
+            assert_eq!(fp.mant(), 1 << (fmt.mbits - 1), "{fmt}");
+            assert_eq!(fp.to_f64(), min_normal / 2.0, "{fmt}");
+            // The largest subnormal decodes as (2^mbits - 1)·2^(1-bias-mbits)
+            // and round-trips through the codec.
+            let sub = Fp::pack(true, 0, fmt.mant_mask(), fmt);
+            assert_eq!(sub.class(), FpClass::Subnormal, "{fmt}");
+            assert_eq!(sub.eff_exp(), 1, "{fmt}");
+            assert_eq!(sub.signed_sig(), -(fmt.mant_mask() as i64), "{fmt}");
+            assert_eq!(Fp::from_f64(sub.to_f64(), fmt).bits, sub.bits, "{fmt}");
+            // The smallest subnormal survives too.
+            let tiny = Fp::pack(false, 0, 1, fmt);
+            assert_eq!(tiny.to_f64(), pow2(1 - fmt.bias() - fmt.mbits as i32), "{fmt}");
+            assert_eq!(Fp::from_f64(tiny.to_f64(), fmt).bits, tiny.bits, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn subnormal_encode_rounds_rne_at_the_fixed_lsb() {
+        // FP32 subnormal LSB is 2^-149; 1.5·2^-149 is exactly halfway
+        // between mant 1 and mant 2 -> ties to even -> mant 2.
+        let fp = Fp::from_f64(1.5 * pow2(-149), FP32);
+        assert_eq!((fp.raw_exp(), fp.mant()), (0, 2));
+        // Below half the smallest subnormal rounds to zero (keeping sign).
+        let fp = Fp::from_f64(-0.25 * pow2(-149), FP32);
+        assert_eq!(fp.class(), FpClass::Zero);
+        assert!(fp.sign());
+        // Just below the smallest normal rounds up into the normal range.
+        let fp = Fp::from_f64(pow2(-126) * (1.0 - pow2(-30)), FP32);
+        assert_eq!((fp.raw_exp(), fp.mant()), (1, 0));
+    }
+
+    #[test]
+    fn fp32_subnormals_bit_match_native_f32() {
+        for bits in [1u32, 2, 3, 0x7f_ffff, 0x40_0000, 0x155_555 & 0x7f_ffff] {
+            let native = f32::from_bits(bits);
+            assert!(native.is_subnormal());
+            let fp = Fp::from_f64(native as f64, FP32);
+            assert_eq!(fp.bits as u32, bits, "encode {bits:#x}");
+            assert_eq!(fp.to_f64() as f32, native, "decode {bits:#x}");
         }
     }
 

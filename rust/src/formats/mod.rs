@@ -5,11 +5,22 @@
 //! FP32 (e8m23), BFloat16 (e8m7), FP8_e4m3, FP8_e5m2 and the corner-case
 //! FP8_e6m1 (large exponent range relative to the mantissa).
 //!
-//! Semantics notes (documented deviations, matching common fused-adder HLS
-//! practice and the paper's "corner cases … can be also encoded or skipped"):
+//! Semantics notes (matching IEEE-754 / OCP-FP8 behaviour; the paper's
+//! "corner cases … can be also encoded or skipped" are encoded here):
 //!
-//! * **Denormals are flushed to zero** at decode (FTZ) and at encode (FTZ on
-//!   underflow). Exponent raw value 0 therefore always means ±0.
+//! * **Gradual underflow is fully supported.** Raw exponent 0 with a
+//!   nonzero mantissa decodes as the subnormal `(-1)^s · 0.m · 2^(1-bias)`
+//!   ([`FpClass::Subnormal`]), and [`Fp::from_f64`] rounds into the
+//!   subnormal range (RNE at the fixed LSB `2^(1-bias-mbits)`) instead of
+//!   flushing to zero. For alignment purposes subnormals sit at the
+//!   *effective* exponent 1 with hidden bit 0 ([`Fp::eff_exp`] /
+//!   [`Fp::signed_sig`]), so exponent 0 never enters the λ domain of the
+//!   `⊙` datapath.
+//! * **Zero signs in sums**: the fused adders treat every ±0 operand as the
+//!   additive identity, so an all-zero (or exactly cancelled) sum rounds to
+//!   `+0` — the IEEE default-rounding sign rule for cancellation, applied
+//!   uniformly (a two-operand IEEE adder would return `-0` for
+//!   `(-0) + (-0)`; multi-term fused adders do not track that case).
 //! * **Specials** follow the format's [`SpecialsMode`]:
 //!   [`SpecialsMode::Ieee`] (FP32/BF16/e5m2) reserves the all-ones exponent
 //!   for Inf/NaN; [`SpecialsMode::NoInf`] (e4m3, e6m1) reserves only the
@@ -81,8 +92,9 @@ impl FpFormat {
         }
     }
 
-    /// Number of representable raw exponent values for normal numbers
-    /// (1 ..= max_normal_exp), i.e. the worst-case alignment distance + 1.
+    /// Number of representable *effective* exponent values for finite
+    /// nonzero numbers (1 ..= max_normal_exp — subnormals are pinned at
+    /// effective exponent 1), i.e. the worst-case alignment distance + 1.
     #[inline]
     pub const fn exp_range(&self) -> u32 {
         self.max_normal_exp() as u32

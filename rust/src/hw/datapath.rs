@@ -86,7 +86,12 @@ impl DatapathParams {
         self.fmt.sig_bits() + 1 + self.guard
     }
 
-    /// Worst-case alignment distance (full normal exponent range).
+    /// Worst-case alignment distance: the full effective exponent range
+    /// [1, max_normal_exp]. Gradual underflow does not widen this —
+    /// subnormal operands are pinned at effective exponent 1 (hidden bit
+    /// 0), the same slot a minimal normal occupies, so the shifter and the
+    /// accumulator window ([`AccSpec::acc_width`]) are unchanged from an
+    /// FTZ datapath.
     pub fn max_shift(&self) -> u32 {
         (self.fmt.max_normal_exp() - 1) as u32
     }

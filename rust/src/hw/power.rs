@@ -17,7 +17,7 @@ use super::gates::{self, FJ_PER_GE_TOGGLE, IDLE_ACTIVITY};
 use super::pipeline::PipelineResult;
 use super::{components as comp, datapath};
 use crate::arith::tree::RadixConfig;
-use crate::formats::{Fp, FpClass};
+use crate::formats::Fp;
 
 /// One signal of the value-level datapath mirror.
 struct Signal {
@@ -130,9 +130,13 @@ impl ActivitySim {
         let mut cycle_energy = 0.0;
         // Leaf states + input signal toggles.
         for (i, t) in terms.iter().enumerate() {
-            debug_assert!(matches!(t.class(), FpClass::Zero | FpClass::Normal));
-            let lam = t.raw_exp() as i64;
-            let acc = (t.signed_sig() as i128) << guard;
+            debug_assert!(t.is_finite());
+            // Leaf lift mirrors `AlignAcc::leaf`: zeros are the identity
+            // (λ = 0), every other term — subnormals included — enters at
+            // its effective exponent.
+            let sig = t.signed_sig();
+            let lam = if sig == 0 { 0 } else { t.eff_exp() as i64 };
+            let acc = (sig as i128) << guard;
             self.scratch[0][i] = (lam, acc);
             cycle_energy += observe(&mut self.signals[self.term_signals[i]], t.bits as u128);
         }

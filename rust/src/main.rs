@@ -6,6 +6,7 @@
 //! repro fig5                                  Fig. 5  (area vs clock, 1-4 stages)
 //! repro table1 [--n 16|32|64] [--vectors 512] Table I (all formats; default all N)
 //! repro add    --format bf16 --arch 8-2-2 x y z ...    one fused addition
+//! repro oracle [--format all] [--vectors 2000]         differential oracle
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
@@ -28,6 +29,7 @@ fn main() -> ExitCode {
         "fig5" => cmd_fig5(&args),
         "table1" => cmd_table1(&args),
         "add" => cmd_add(&args),
+        "oracle" => cmd_oracle(&args),
         "sweep" => cmd_sweep(&args),
         "e2e" => cmd_e2e(&args),
         "serve" => cmd_serve(&args),
@@ -54,6 +56,11 @@ commands:
   fig5                                    area-vs-clock Pareto, 1-4 pipeline stages
   table1  [--n 16|32|64] [--vectors 512]  Table I rows with paper-vs-measured savings
   add     --format F --arch A x y z ...   one fused multi-term addition
+  oracle  [--format F|all] [--vectors N] [--terms N] [--seed S]
+                                          differential rounding oracle: fuzz
+                                          adversarial operand distributions
+                                          through every algorithm and diff
+                                          against the independent reference
   sweep   --format F --n N [--clock 1.0]  raw design-space dump for any N
   e2e     [--sentences 4] [--requests 256] PJRT BERT workload + batched serving demo
   serve   [--requests 2048] [--clients 8]  load-test the batched PJRT reduction path
@@ -129,6 +136,68 @@ fn cmd_add(args: &Args) -> Result<(), String> {
         sum.to_f64(),
         sum.bits
     );
+    Ok(())
+}
+
+/// Differential rounding oracle (DESIGN.md §Oracle): fuzz adversarial
+/// operand distributions — uniform full-range, subnormal-dense,
+/// cancellation-heavy, mixed-sign near-overflow — through every algorithm
+/// family under exact accumulator specs and diff bit-for-bit against the
+/// independent sign-magnitude reference. Exits nonzero on any mismatch.
+fn cmd_oracle(args: &Args) -> Result<(), String> {
+    use online_fp_add::arith::oracle::{run_oracle, OracleConfig};
+    use online_fp_add::formats::PAPER_FORMATS;
+
+    let cfg = OracleConfig {
+        vectors: args.get_usize("vectors", 2000)?,
+        terms: args.get_usize("terms", 16)?,
+        seed: args.get_u64("seed", 0x0D1F_F0DD)?,
+    };
+    if !cfg.terms.is_power_of_two() || cfg.terms < 4 {
+        return Err(format!(
+            "--terms {} must be a power of two >= 4 (so every radix tree applies)",
+            cfg.terms
+        ));
+    }
+    let fmts: Vec<online_fp_add::formats::FpFormat> = match args.get("format") {
+        Some(name) if name != "all" => {
+            vec![format_by_name(name).ok_or_else(|| "unknown --format".to_string())?]
+        }
+        _ => PAPER_FORMATS.to_vec(),
+    };
+    let mut table = online_fp_add::util::table::Table::new(vec![
+        "format", "vectors", "exact checks", "mismatches", "trunc checks", "trunc max ulp",
+    ]);
+    let mut bad = 0usize;
+    for fmt in fmts {
+        let rep = run_oracle(fmt, &cfg);
+        for mm in rep.mismatches.iter().take(3) {
+            eprintln!(
+                "MISMATCH {} [{}] {}: expected {:#x}, got {:#x}, terms {:x?}",
+                mm.format,
+                mm.distribution.name(),
+                mm.arch,
+                mm.expected_bits,
+                mm.got_bits,
+                mm.term_bits
+            );
+        }
+        bad += rep.mismatches.len();
+        table.row(vec![
+            fmt.to_string(),
+            rep.vectors.to_string(),
+            rep.exact_checks.to_string(),
+            rep.mismatches.len().to_string(),
+            rep.truncated_checks.to_string(),
+            rep.truncated_max_ulp.to_string(),
+        ]);
+    }
+    println!("Differential rounding oracle — algorithms × formats vs independent reference\n");
+    println!("{}", table.render());
+    if bad > 0 {
+        return Err(format!("{bad} exact-mode mismatches against the reference"));
+    }
+    println!("exact-mode datapaths bit-match the reference on every fuzzed vector ✓");
     Ok(())
 }
 
@@ -214,7 +283,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                         let terms: Vec<online_fp_add::formats::Fp> = (0..n_terms)
                             .map(|_| rng.gen_fp_sparse(online_fp_add::formats::BF16, 0.1))
                             .collect();
-                        let e: Vec<i32> = terms.iter().map(|t| t.raw_exp()).collect();
+                        // (effective exponent, signed significand) fields —
+                        // subnormal lanes travel as (1, ±mantissa).
+                        let e: Vec<i32> = terms.iter().map(|t| t.eff_exp()).collect();
                         let m: Vec<i32> = terms.iter().map(|t| t.signed_sig() as i32).collect();
                         match h.reduce(e, m) {
                             Ok(resp) => {

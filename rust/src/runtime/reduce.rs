@@ -62,7 +62,9 @@ impl OnlineReduceExe {
         Self::load(rt, "online_reduce_fp32_n16", 64, 16, 31)
     }
 
-    /// Reduce up to `batch` rows of `(e, m)` terms. Short batches are
+    /// Reduce up to `batch` rows of `(e, m)` terms — effective exponent
+    /// ([`crate::formats::Fp::eff_exp`]) and signed significand per lane,
+    /// so subnormal operands travel as `(1, ±mantissa)`. Short batches are
     /// accepted (the hardware pads its unused lanes with identity rows;
     /// the native executor simply computes the live rows) and exactly the
     /// live rows are returned.
@@ -99,6 +101,12 @@ impl OnlineReduceExe {
 /// Lift one `(e, m)` lane into the operator domain, matching
 /// [`AlignAcc::leaf`]: a zero significand is the identity (a zero operand
 /// contributes neither to the max-exponent tree nor to the fraction sum).
+///
+/// `e` is the term's *effective* exponent ([`crate::formats::Fp::eff_exp`]):
+/// callers encode subnormal lanes as `(1, ±mantissa)` — hidden bit 0 at
+/// effective exponent 1, the gradual-underflow λ-convention — so a nonzero
+/// `m` with `e == 1` may be either a subnormal or a minimal normal; the
+/// datapath treats both identically.
 fn leaf_from_fields(e: i32, m: i32, spec: AccSpec) -> AlignAcc {
     if m == 0 {
         return AlignAcc::IDENTITY;
@@ -123,9 +131,19 @@ mod tests {
         let mut rng = XorShift::new(0x2E0);
         let mut buf = vec![AlignAcc::IDENTITY; 32];
         for _ in 0..200 {
-            let terms: Vec<Fp> = (0..32).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+            let terms: Vec<Fp> = (0..32)
+                .map(|_| {
+                    // Mix zeros, normals and subnormals: every lane kind
+                    // the (e, m) field encoding must carry.
+                    match rng.below(10) {
+                        0 => Fp::zero(BF16),
+                        1 => rng.gen_fp_subnormal(BF16),
+                        _ => rng.gen_fp_normal(BF16),
+                    }
+                })
+                .collect();
             for (slot, t) in buf.iter_mut().zip(&terms) {
-                *slot = leaf_from_fields(t.raw_exp(), t.signed_sig() as i32, spec);
+                *slot = leaf_from_fields(t.eff_exp(), t.signed_sig() as i32, spec);
             }
             let got = reduce_in_place(&mut buf, 32, &cfg, spec);
             let want = tree_sum(&terms, &cfg, spec);

@@ -7,7 +7,8 @@
 //!   (non-finite values are saturated like the trace capture path does);
 //! * [`Request::Query`] — the stream's current sum, **rounded once** into
 //!   the service format via [`normalize_round`] (the paper's fused-add
-//!   contract: one rounding over the whole history, not per batch);
+//!   contract: one rounding over the whole history, not per batch; sums
+//!   below the normal range denormalize gradually instead of flushing);
 //! * [`Request::Checkpoint`] — the tiny copyable `(λ, acc, sticky, terms)`
 //!   state, exact and mergeable;
 //! * [`Request::Drain`] — finalize: remove the stream, return checkpoint
@@ -293,6 +294,27 @@ mod tests {
         let (value, _) = svc.query("s").unwrap();
         // Inf saturates to max-finite, NaN drops to zero: result is finite.
         assert!(matches!(value.class(), FpClass::Normal));
+    }
+
+    #[test]
+    fn query_denormalizes_gradually_on_underflowed_streams() {
+        use crate::formats::FP32;
+        let svc = StreamService::exact(FP32);
+        let tiny = Fp::pack(false, 1, 0, FP32); // 2^-126
+        let minus_1p5 = Fp::pack(true, 1, 1 << 22, FP32); // -1.5·2^-126
+        svc.ingest_blocking("u", vec![tiny, minus_1p5]).unwrap();
+        let (value, _) = svc.query("u").unwrap();
+        // The round-once query result is the exact subnormal -0.5·2^-126.
+        assert_eq!(value.class(), FpClass::Subnormal);
+        assert!(value.sign());
+        assert_eq!((value.raw_exp(), value.mant()), (0, 1 << 22));
+        // Further subnormal ingests accumulate exactly and climb back into
+        // the normal range: -0.5·2^-126 + 3·(0.5·2^-126) = 2^-126.
+        let half_min = Fp::pack(false, 0, 1 << 22, FP32);
+        svc.ingest_blocking("u", vec![half_min, half_min, half_min]).unwrap();
+        let (value, _) = svc.query("u").unwrap();
+        assert_eq!(value.class(), FpClass::Normal);
+        assert_eq!((value.raw_exp(), value.mant()), (1, 0));
     }
 
     #[test]

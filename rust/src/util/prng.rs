@@ -76,8 +76,35 @@ impl XorShift {
         Fp::pack(sign, e, m, fmt)
     }
 
+    /// A random finite value over the format's *entire* finite space:
+    /// uniform raw exponent over `[0, max_normal_exp]` — raw exponent 0
+    /// yields signed zeros and subnormals — with uniform sign and mantissa
+    /// bits. This is the full-operand-space generator the gradual-underflow
+    /// property tests and the differential oracle fuzz with.
+    pub fn gen_fp_full(&mut self, fmt: FpFormat) -> Fp {
+        let sign = self.next_u64() & 1 == 1;
+        let e = self.range_i64(0, fmt.max_normal_exp() as i64) as i32;
+        let mut m = self.next_u64() & fmt.mant_mask();
+        // Keep NoInf formats away from their NaN pattern.
+        if e == fmt.max_normal_exp() && m > fmt.max_finite_mant() {
+            m = fmt.max_finite_mant();
+        }
+        Fp::pack(sign, e, m, fmt)
+    }
+
+    /// A random subnormal (or, when the mantissa draws 0, signed-zero)
+    /// value: raw exponent 0, uniform sign and mantissa. Dense sampling of
+    /// the gradual-underflow range.
+    pub fn gen_fp_subnormal(&mut self, fmt: FpFormat) -> Fp {
+        let sign = self.next_u64() & 1 == 1;
+        let m = self.next_u64() & fmt.mant_mask();
+        Fp::pack(sign, 0, m, fmt)
+    }
+
     /// A random finite value with gaussian magnitude distribution (matmul
-    /// activation statistics; used by the workload generators).
+    /// activation statistics; used by the workload generators). Magnitudes
+    /// below the subnormal range round to signed zero; small draws land in
+    /// the format's subnormal range (gradual underflow).
     pub fn gen_fp_gauss(&mut self, fmt: FpFormat, sigma: f64) -> Fp {
         Fp::from_f64(self.gauss() * sigma, fmt)
     }
@@ -139,6 +166,41 @@ mod tests {
         }
         // Mean of 1000 uniforms should be near 0.5.
         assert!((sum / 1000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn gen_fp_full_covers_subnormals_zeros_and_normals() {
+        let mut rng = XorShift::new(3);
+        for fmt in PAPER_FORMATS {
+            let mut seen = [false; 3]; // zero-ish, subnormal, normal
+            for _ in 0..4000 {
+                let x = rng.gen_fp_full(fmt);
+                match x.class() {
+                    FpClass::Zero => seen[0] = true,
+                    FpClass::Subnormal => seen[1] = true,
+                    FpClass::Normal => seen[2] = true,
+                    other => panic!("{fmt}: non-finite {other:?}"),
+                }
+            }
+            // Subnormals and normals must both appear; zeros are rare for
+            // wide-mantissa formats (mantissa must draw exactly 0).
+            assert!(seen[1] && seen[2], "{fmt}: coverage {seen:?}");
+        }
+    }
+
+    #[test]
+    fn gen_fp_subnormal_stays_in_the_underflow_range() {
+        let mut rng = XorShift::new(7);
+        for fmt in PAPER_FORMATS {
+            for _ in 0..500 {
+                let x = rng.gen_fp_subnormal(fmt);
+                assert_eq!(x.raw_exp(), 0, "{fmt}");
+                assert!(
+                    matches!(x.class(), FpClass::Zero | FpClass::Subnormal),
+                    "{fmt}: {x:?}"
+                );
+            }
+        }
     }
 
     #[test]

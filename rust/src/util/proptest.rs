@@ -15,11 +15,37 @@
 //! ```
 
 use super::prng::XorShift;
+use crate::formats::{Fp, FpFormat};
 
 /// Per-case context handed to a property.
 pub struct Gen {
     pub rng: XorShift,
     pub case: u64,
+}
+
+impl Gen {
+    /// One operand from the format's **entire** finite space — signed
+    /// zeros, subnormals and normals (see
+    /// [`XorShift::gen_fp_full`]). Gradual-underflow properties must hold
+    /// over this space, not just over normals.
+    pub fn fp_full(&mut self, fmt: FpFormat) -> Fp {
+        self.rng.gen_fp_full(fmt)
+    }
+
+    /// A full-space operand vector of length `n`, with an extra bias
+    /// toward the underflow boundary: each lane is drawn from the full
+    /// space, then with probability ~1/4 replaced by a subnormal/zero.
+    pub fn fp_full_vec(&mut self, fmt: FpFormat, n: usize) -> Vec<Fp> {
+        (0..n)
+            .map(|_| {
+                if self.rng.below(4) == 0 {
+                    self.rng.gen_fp_subnormal(fmt)
+                } else {
+                    self.rng.gen_fp_full(fmt)
+                }
+            })
+            .collect()
+    }
 }
 
 /// Run `prop` over `cases` seeded cases; panic with the first failing case

@@ -116,8 +116,26 @@ mod tests {
         let t = partial_product_trace(&a, &b, (8, 8, 8), FP8_E4M3, 8, 50, 2);
         for v in &t.vectors {
             for x in v {
-                assert!(matches!(x.class(), FpClass::Zero | FpClass::Normal));
+                assert!(x.is_finite(), "{x:?}");
             }
         }
+    }
+
+    #[test]
+    fn tiny_products_land_in_the_subnormal_range() {
+        // 0.05 · 0.05 = 0.0025 sits below e4m3's smallest normal (2^-6)
+        // but above its smallest subnormal (2^-9): under gradual underflow
+        // the trace keeps these lanes live instead of flushing them.
+        let a = vec![0.05f32; 8 * 8];
+        let b = vec![0.05f32; 8 * 8];
+        let t = partial_product_trace(&a, &b, (8, 8, 8), FP8_E4M3, 8, 50, 2);
+        let subnormals = t
+            .vectors
+            .iter()
+            .flatten()
+            .filter(|x| x.class() == FpClass::Subnormal)
+            .count();
+        assert!(subnormals > 0, "expected live subnormal product lanes");
+        assert!(t.vectors.iter().flatten().all(|x| x.is_finite()));
     }
 }

@@ -18,7 +18,7 @@ impl Trace {
 
     pub fn push(&mut self, v: Vec<Fp>) {
         debug_assert_eq!(v.len(), self.n_terms);
-        debug_assert!(v.iter().all(|t| matches!(t.class(), FpClass::Zero | FpClass::Normal)));
+        debug_assert!(v.iter().all(|t| t.is_finite()));
         self.vectors.push(v);
     }
 
@@ -45,15 +45,17 @@ impl Trace {
     }
 
     /// Mean intra-vector exponent spread (max − min over live lanes) — the
-    /// quantity that decides how hard alignment works.
+    /// quantity that decides how hard alignment works. Subnormal lanes
+    /// participate at their effective exponent 1, exactly as the alignment
+    /// datapath sees them.
     pub fn mean_exponent_spread(&self) -> f64 {
         let mut sum = 0.0;
         let mut n = 0usize;
         for v in &self.vectors {
             let exps: Vec<i32> = v
                 .iter()
-                .filter(|t| t.class() == FpClass::Normal)
-                .map(|t| t.raw_exp())
+                .filter(|t| t.class() != FpClass::Zero)
+                .map(|t| t.eff_exp())
                 .collect();
             if exps.len() >= 2 {
                 sum += (exps.iter().max().unwrap() - exps.iter().min().unwrap()) as f64;

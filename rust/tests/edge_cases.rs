@@ -35,6 +35,12 @@ fn single_term_passes_through_unchanged() {
         assert_eq!(a.add(&[x]).bits, x.bits, "{fmt}");
         let tiny = Fp::pack(true, 1, 0, fmt);
         assert_eq!(a.add(&[tiny]).bits, tiny.bits, "{fmt}");
+        // Subnormals pass through unchanged too (gradual underflow): both
+        // the smallest and the largest subnormal of every format.
+        let sub_min = Fp::pack(false, 0, 1, fmt);
+        assert_eq!(a.add(&[sub_min]).bits, sub_min.bits, "{fmt}");
+        let sub_max = Fp::pack(true, 0, fmt.mant_mask(), fmt);
+        assert_eq!(a.add(&[sub_max]).bits, sub_max.bits, "{fmt}");
     }
 }
 
@@ -89,14 +95,40 @@ fn near_overflow_rounding_carry() {
 }
 
 #[test]
-fn underflow_flushes_with_sign() {
+fn underflow_denormalizes_with_sign() {
     let fmt = FP32;
     let a = MultiTermAdder::exact(fmt, 2, Architecture::Baseline);
     let tiny = Fp::pack(false, 1, 0, fmt); // +2^-126
     let minus_1p5_tiny = Fp::pack(true, 1, 1 << 22, fmt); // -1.5·2^-126
     let r = a.add(&[tiny, minus_1p5_tiny]);
-    assert_eq!(r.class(), FpClass::Zero);
-    assert!(r.sign(), "FTZ keeps the sign of the underflowed result");
+    // Gradual underflow: -0.5·2^-126 is exactly representable.
+    assert_eq!(r.class(), FpClass::Subnormal);
+    assert!(r.sign(), "the underflowed result keeps its sign");
+    assert_eq!((r.raw_exp(), r.mant()), (0, 1 << 22));
+}
+
+#[test]
+fn subnormal_operands_participate_in_every_architecture() {
+    // A subnormal-only vector sums exactly in all architectures, and a
+    // subnormal absorbed into a large term still drives sticky/rounding.
+    for fmt in PAPER_FORMATS {
+        for arch in [
+            Architecture::Baseline,
+            Architecture::Online,
+            Architecture::Exact,
+            Architecture::Tree("2-2".parse().unwrap()),
+        ] {
+            let a = MultiTermAdder::exact(fmt, 4, arch.clone());
+            let sub = Fp::pack(false, 0, 1, fmt); // smallest subnormal
+            let r = a.add(&[sub, sub, sub, sub]);
+            // 4·2^(1-bias-mbits) is exactly representable in every paper
+            // format (subnormal for wide mantissas, a small normal for
+            // e5m2/e6m1) — and must not flush to zero.
+            let want = Fp::from_f64(4.0 * sub.to_f64(), fmt);
+            assert!(want.bits != 0, "{fmt}: expected a nonzero sum");
+            assert_eq!(r.bits, want.bits, "{fmt} {arch:?}");
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,87 @@
+//! Differential-oracle acceptance test (DESIGN.md §Oracle): ≥ 10k fuzzed
+//! vectors per format — rotating through uniform full-range,
+//! subnormal-dense, cancellation-heavy and mixed-sign near-overflow
+//! distributions — must produce **zero** exact-mode mismatches between any
+//! algorithm × radix-config × accumulator-path combination and the
+//! independent sign-magnitude reference. Two-term FP32 exact-mode sums must
+//! additionally bit-match native `f32` addition, including subnormal
+//! results.
+
+use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::oracle::{reference_sum, run_oracle, OracleConfig, DISTRIBUTIONS};
+use online_fp_add::formats::{FpClass, FP32, PAPER_FORMATS};
+use online_fp_add::util::prng::XorShift;
+
+#[test]
+fn oracle_runs_clean_over_10k_vectors_per_format() {
+    let cfg = OracleConfig { vectors: 10_000, terms: 16, seed: 0xD1FF_5EED };
+    for fmt in PAPER_FORMATS {
+        let rep = run_oracle(fmt, &cfg);
+        assert_eq!(rep.vectors, 10_000, "{fmt}");
+        assert!(
+            rep.mismatches.is_empty(),
+            "{fmt}: {} exact-mode mismatches, first: {:?}",
+            rep.mismatches.len(),
+            rep.mismatches.first()
+        );
+        // Every vector ran through at least 4 architecture combinations.
+        assert!(rep.exact_checks >= 40_000, "{fmt}: {}", rep.exact_checks);
+        // The truncated hw-default datapath met the faithfulness filter on
+        // a healthy share of vectors and stayed within the documented
+        // bound.
+        assert!(rep.truncated_checks > 0, "{fmt}");
+        assert!(
+            rep.truncated_max_ulp <= 2,
+            "{fmt}: truncated deviation {} ulp",
+            rep.truncated_max_ulp
+        );
+    }
+}
+
+#[test]
+fn two_term_fp32_exact_mode_bit_matches_native_f32_including_subnormals() {
+    let mut rng = XorShift::new(0xF32_ADD);
+    let adder = MultiTermAdder::exact(FP32, 2, Architecture::Online);
+    let mut subnormal_results = 0usize;
+    for _ in 0..20_000 {
+        let a = rng.gen_fp_full(FP32);
+        let b = rng.gen_fp_full(FP32);
+        if a.class() == FpClass::Zero && b.class() == FpClass::Zero {
+            // Multi-term fused adders round all-zero sums to +0; a native
+            // two-operand IEEE add keeps -0 for (-0) + (-0).
+            continue;
+        }
+        let native = (a.to_f64() as f32) + (b.to_f64() as f32);
+        let got = adder.add(&[a, b]);
+        assert_eq!(
+            (got.to_f64() as f32).to_bits(),
+            native.to_bits(),
+            "{a:?} + {b:?}"
+        );
+        if got.class() == FpClass::Subnormal {
+            subnormal_results += 1;
+        }
+    }
+    // The operand space genuinely exercised gradual underflow.
+    assert!(subnormal_results > 0, "no subnormal results sampled");
+}
+
+#[test]
+fn every_distribution_produces_what_it_promises() {
+    let mut rng = XorShift::new(0x0D15);
+    for fmt in PAPER_FORMATS {
+        for dist in DISTRIBUTIONS {
+            let terms = dist.gen_vector(&mut rng, fmt, 64);
+            assert_eq!(terms.len(), 64, "{fmt} {}", dist.name());
+            assert!(
+                terms.iter().all(|t| t.is_finite()),
+                "{fmt} {}: non-finite operand",
+                dist.name()
+            );
+            // The reference accepts every vector without panicking and the
+            // result is in-format.
+            let r = reference_sum(&terms, fmt);
+            assert_eq!(r.format, fmt);
+        }
+    }
+}

@@ -7,7 +7,7 @@ use online_fp_add::arith::baseline::baseline_sum;
 use online_fp_add::arith::exact::exact_rounded_sum;
 use online_fp_add::arith::normalize::normalize_round;
 use online_fp_add::arith::online::online_sum;
-use online_fp_add::arith::operator::{op_combine, AlignAcc};
+use online_fp_add::arith::operator::{op_combine, op_combine_many, AlignAcc};
 use online_fp_add::arith::tree::{enumerate_configs, tree_sum, RadixConfig};
 use online_fp_add::arith::AccSpec;
 use online_fp_add::formats::{Fp, FpClass, FpFormat, BF16, FP32, PAPER_FORMATS};
@@ -26,8 +26,10 @@ fn prop_operator_associativity_random_parenthesisations() {
         let fmt = random_fmt(&mut g.rng);
         let spec = AccSpec::exact(fmt);
         let n = 2 + g.rng.below(14) as usize;
-        let leaves: Vec<AlignAcc> = (0..n)
-            .map(|_| AlignAcc::leaf(g.rng.gen_fp_sparse(fmt, 0.15), spec))
+        let leaves: Vec<AlignAcc> = g
+            .fp_full_vec(fmt, n)
+            .iter()
+            .map(|t| AlignAcc::leaf(*t, spec))
             .collect();
         // Reference: left fold.
         let mut reference = leaves[0];
@@ -55,7 +57,7 @@ fn prop_permutation_invariance_exact() {
         let fmt = random_fmt(&mut g.rng);
         let spec = AccSpec::exact(fmt);
         let n = 1 + g.rng.below(32) as usize;
-        let mut terms: Vec<Fp> = (0..n).map(|_| g.rng.gen_fp_sparse(fmt, 0.1)).collect();
+        let mut terms: Vec<Fp> = g.fp_full_vec(fmt, n);
         let a = baseline_sum(&terms, spec);
         g.rng.shuffle(&mut terms);
         let b = baseline_sum(&terms, spec);
@@ -92,7 +94,7 @@ fn prop_online_equals_baseline_every_format() {
         let fmt = random_fmt(&mut g.rng);
         let spec = AccSpec::exact(fmt);
         let n = 1 + g.rng.below(64) as usize;
-        let terms: Vec<Fp> = (0..n).map(|_| g.rng.gen_fp_sparse(fmt, 0.05)).collect();
+        let terms: Vec<Fp> = g.fp_full_vec(fmt, n);
         let a = baseline_sum(&terms, spec);
         let b = online_sum(&terms, spec);
         if a != b {
@@ -224,25 +226,76 @@ fn prop_shift_composition_on_wideint() {
 
 #[test]
 fn prop_two_term_addition_matches_native_f32() {
-    check("2-term FP32 == native f32 +", 1000, |g| {
+    // Over the FULL operand space — subnormals and signed zeros included —
+    // the exact-mode two-term sum must bit-match native f32 addition, with
+    // no flush-to-zero escape hatch: subnormal results are exact.
+    check("2-term FP32 == native f32 +", 2000, |g| {
         let spec = AccSpec::exact(FP32);
-        let a = g.rng.gen_fp_normal(FP32);
-        let b = g.rng.gen_fp_normal(FP32);
+        let a = g.fp_full(FP32);
+        let b = g.fp_full(FP32);
+        if a.class() == FpClass::Zero && b.class() == FpClass::Zero {
+            // Fused adders round all-zero sums to +0; a native IEEE
+            // two-operand add keeps -0 for (-0) + (-0). Documented
+            // deviation (formats module docs) — skip.
+            return Ok(());
+        }
         let r = normalize_round(&baseline_sum(&[a, b], spec), spec, FP32);
         let native = (a.to_f64() as f32) + (b.to_f64() as f32);
         let got = r.to_f64() as f32;
-        // FTZ: our model flushes subnormal results to zero.
-        let native_ftz = if native.is_subnormal() {
-            if native.is_sign_negative() {
-                -0.0
-            } else {
-                0.0
+        if got.to_bits() != native.to_bits() {
+            return Err(format!("{a:?} + {b:?}: {got:e} vs {native:e}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_identity_is_neutral_over_full_operand_space() {
+    // identity ⊙ x == x for every finite leaf — subnormals (λ = 1, hidden
+    // bit 0) and signed zeros included — in both operand orders and inside
+    // a radix-many node padded with identities.
+    check("identity ⊙ x == x (full space)", 500, |g| {
+        let fmt = random_fmt(&mut g.rng);
+        let spec = AccSpec::exact(fmt);
+        let x = AlignAcc::leaf(g.fp_full(fmt), spec);
+        let l = op_combine(&AlignAcc::IDENTITY, &x, spec);
+        let r = op_combine(&x, &AlignAcc::IDENTITY, spec);
+        if l != x || r != x {
+            return Err(format!("{fmt}: {l:?} / {r:?} != {x:?}"));
+        }
+        let padded = op_combine_many(
+            &[AlignAcc::IDENTITY, x, AlignAcc::IDENTITY, AlignAcc::IDENTITY],
+            spec,
+        );
+        if padded != x {
+            return Err(format!("{fmt}: radix-many padding perturbed {x:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_trees_match_kulisch_over_full_operand_space() {
+    // Exact-mode ⊙-trees == the Kulisch window oracle over the full
+    // operand space, including subnormal-dense vectors, signed zeros, and
+    // results that underflow gradually.
+    check("⊙-tree == Kulisch (full space)", 250, |g| {
+        let fmt = random_fmt(&mut g.rng);
+        let n = [4u32, 8, 16][g.rng.below(3) as usize];
+        let terms = g.fp_full_vec(fmt, n as usize);
+        let oracle = exact_rounded_sum(&terms, fmt);
+        let configs = enumerate_configs(n);
+        let cfg = &configs[g.rng.below(configs.len() as u64) as usize];
+        for arch in [
+            Architecture::Baseline,
+            Architecture::Online,
+            Architecture::Tree(cfg.clone()),
+        ] {
+            let adder = MultiTermAdder::exact(fmt, n as usize, arch.clone());
+            let got = adder.add(&terms);
+            if got.bits != oracle.bits {
+                return Err(format!("{fmt} {arch:?}: {got:?} != {oracle:?}"));
             }
-        } else {
-            native
-        };
-        if got.to_bits() != native_ftz.to_bits() {
-            return Err(format!("{a:?} + {b:?}: {got} vs {native_ftz}"));
         }
         Ok(())
     });
@@ -286,7 +339,7 @@ fn prop_narrow_fast_path_is_bit_identical_to_wide_path() {
         assert!(narrow.narrow);
         let wide = AccSpec { narrow: false, ..narrow };
         let n = [2usize, 4, 8, 16][g.rng.below(4) as usize];
-        let terms: Vec<Fp> = (0..n).map(|_| g.rng.gen_fp_sparse(fmt, 0.1)).collect();
+        let terms: Vec<Fp> = g.fp_full_vec(fmt, n);
         let cfgs = enumerate_configs(n as u32);
         let cfg = &cfgs[g.rng.below(cfgs.len() as u64) as usize];
         let a = tree_sum(&terms, cfg, narrow);

@@ -29,7 +29,9 @@ fn encode_row(rng: &mut XorShift, fmt: online_fp_add::formats::FpFormat, n: usiz
     let mut fps = Vec::with_capacity(n);
     for _ in 0..n {
         let fp = rng.gen_fp_sparse(fmt, 0.1);
-        e.push(fp.raw_exp());
+        // Effective exponent + signed significand: the lane encoding under
+        // the gradual-underflow λ-convention (subnormals -> (1, ±m)).
+        e.push(fp.eff_exp());
         m.push(fp.signed_sig() as i32);
         fps.push(fp);
     }

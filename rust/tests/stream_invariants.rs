@@ -21,9 +21,10 @@ use online_fp_add::util::proptest::check;
 use online_fp_add::util::prng::XorShift;
 use online_fp_add::workload::bert::power_trace;
 
-/// Random finite terms stressing the streaming edge cases: zeros, denormal
-/// bit patterns (flushed to zero by decode, but present as raw inputs),
-/// and runs of identical values (all-identity chunks included).
+/// Random finite terms stressing the streaming edge cases: zeros, subnormal
+/// values (live gradual-underflow operands entering the λ domain at
+/// effective exponent 1), and runs of identical values (all-identity
+/// chunks included).
 fn gen_terms(rng: &mut XorShift, fmt: FpFormat, n: usize) -> Vec<Fp> {
     let mut out = Vec::with_capacity(n);
     while out.len() < n {
