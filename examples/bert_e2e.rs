@@ -122,7 +122,8 @@ fn main() {
                         let e: Vec<i32> = v.iter().map(|t| t.eff_exp()).collect();
                         let m: Vec<i32> = v.iter().map(|t| t.signed_sig() as i32).collect();
                         let resp = h.reduce(e, m).expect("batched reduce");
-                        let want = tree_sum(v, &RadixConfig::binary(N_TERMS as u32).unwrap(), spec);
+                        let want =
+                            tree_sum(v, &RadixConfig::baseline(N_TERMS as u32), spec);
                         if resp.lambda != want.lambda
                             || resp.acc != want.acc.to_i128() as i64
                         {

@@ -89,6 +89,65 @@ def online_reduce(e, m, *, frame: Frame, tile: int = 8):
     )(e, m)
 
 
+def _online_reduce_block_kernel(e_ref, m_ref, lam_ref, acc_ref, *, f: int):
+    """One batch tile: single-λ blockwise reduction (the SoA-kernel lowering).
+
+    The term axis reduces with one row-local max-exponent sweep, then every
+    lane aligns against that single λ and the aligned lanes sum in one pass
+    — the paper's baseline (Fig. 1) corner applied to the whole row. This is
+    the exact semantics of the Rust native interpreter
+    (``rust/src/runtime/reduce.rs``) and of the batched SoA kernel
+    (``rust/src/arith/kernel.rs``): the ``online_reduce_*`` artifacts are
+    exported from this kernel so both sides agree bit-for-bit in truncated
+    frames too. Vector units prefer this form: max, shift and sum are all
+    lane-parallel with no unrolled tree, and no power-of-two term count is
+    required.
+    """
+    m = m_ref[...].astype(jnp.int64)
+    # Dead lanes (m == 0) are identities *regardless of their exponent
+    # field* — mask them to the identity level 0 before the max sweep,
+    # exactly as the Rust SoA kernel does, so padded/stale exponents can
+    # neither lift the row λ nor over-shift the live lanes.
+    lam_n = jnp.where(m == 0, 0, e_ref[...].astype(jnp.int64))
+    acc_n = m << f
+    lam = jnp.max(lam_n, axis=-1)
+    d = jnp.minimum(lam[..., None] - lam_n, MAX_SHIFT)
+    lam_ref[...] = lam.astype(jnp.int32)
+    acc_ref[...] = jnp.sum(jnp.right_shift(acc_n, d), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("frame", "tile"))
+def online_reduce_block(e, m, *, frame: Frame, tile: int = 8):
+    """Batched blockwise (single-λ) align-and-add reduction.
+
+    Same I/O contract as :func:`online_reduce`, but the row reduces against
+    one row-local maximum exponent instead of a balanced ⊙ tree; in frames
+    wide enough never to truncate the two are bit-identical (eq. 10), in
+    truncated frames this one matches the Rust SoA kernel / native
+    interpreter. ``N`` need not be a power of two.
+    """
+    b, n = e.shape
+    assert b % tile == 0, "batch must be a multiple of the tile size"
+    kernel = functools.partial(_online_reduce_block_kernel, f=frame.f)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int64),
+        ],
+        interpret=True,  # CPU-PJRT executable HLO; see module docstring
+    )(e, m)
+
+
 def _dot_products_kernel(a_ref, b_ref, e_ref, m_ref, *, frame: Frame):
     """Quantize elementwise products of two operand tiles onto the frame's
     FP grid and emit (e, m) term pairs — the matmul-side producer feeding

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .kernels.online_align_add import online_dot, online_reduce
+from .kernels.online_align_add import online_dot, online_reduce_block
 from .kernels.ref import Frame
 
 
@@ -63,10 +63,12 @@ def bert_layer_shapes(seq: int = 128, d: int = 256, ff: int = 1024):
 
 
 def online_reduce_graph(frame: Frame, batch: int, n_terms: int):
-    """(fn, example_args) computing the batched online ⊙ reduction."""
+    """(fn, example_args) computing the batched blockwise (single-λ) ⊙
+    reduction — the semantics the Rust native interpreter executes for the
+    ``online_reduce_*`` artifacts (see ``rust/src/runtime/reduce.rs``)."""
 
     def fn(e, m):
-        lam, acc = online_reduce(e, m, frame=frame)
+        lam, acc = online_reduce_block(e, m, frame=frame)
         return lam, acc
 
     args = (

@@ -11,7 +11,12 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref
-from compile.kernels.online_align_add import online_reduce, quantized_products, online_dot
+from compile.kernels.online_align_add import (
+    online_dot,
+    online_reduce,
+    online_reduce_block,
+    quantized_products,
+)
 from compile.kernels.ref import Frame
 
 FRAMES = {
@@ -46,6 +51,28 @@ def test_kernel_matches_tree_oracle_bitexact(fmt, n):
     lam_r, acc_r = ref.tree_ref(e, m, frame)
     np.testing.assert_array_equal(np.asarray(lam_k), np.asarray(lam_r, np.int32))
     np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_r))
+
+
+@pytest.mark.parametrize("fmt", list(FRAMES))
+@pytest.mark.parametrize("n", [2, 8, 24, 32])
+def test_block_kernel_matches_baseline_oracle_bitexact(fmt, n):
+    # The blockwise (single-λ) kernel is the artifact-export semantics the
+    # Rust native interpreter and SoA kernel reproduce; it must bit-match
+    # the pure-jnp baseline oracle, including non-power-of-two term counts.
+    frame = FRAMES[fmt]
+    rng = np.random.default_rng(1042)
+    e, m = random_terms(rng, frame, (16, n))
+    lam_k, acc_k = online_reduce_block(e, m, frame=frame, tile=8)
+    lam_r, acc_r = ref.baseline_ref(e, m, frame)
+    np.testing.assert_array_equal(np.asarray(lam_k), np.asarray(lam_r, np.int32))
+    np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_r))
+    # Dead lanes are identities regardless of their exponent field (the
+    # Rust-side padding convention): stale high exponents on m == 0 lanes
+    # must change nothing.
+    e_stale = np.where(m == 0, (1 << frame.ebits) - 2, e).astype(np.int32)
+    lam_s, acc_s = online_reduce_block(e_stale, m, frame=frame, tile=8)
+    np.testing.assert_array_equal(np.asarray(lam_k), np.asarray(lam_s))
+    np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_s))
 
 
 @pytest.mark.parametrize("fmt", ["bf16", "e5m2"])

@@ -14,6 +14,7 @@
 //! Run: `cargo bench --bench perf`
 
 use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::kernel::ReduceBackend;
 use online_fp_add::arith::tree::RadixConfig;
 use online_fp_add::arith::AccSpec;
 use online_fp_add::bench_util::{
@@ -60,6 +61,85 @@ fn main() {
     });
     println!("{}   [{:.1} M terms/s]", r.line(), r.throughput(256.0 * 32.0) / 1e6);
     records.push(BenchRecord::new(r.clone()).param("terms_per_s", r.throughput(256.0 * 32.0)));
+
+    header("SoA kernel vs scalar ⊙ fold (hot reduction path, exact specs)");
+    // The acceptance series: one record per (backend, format, block size),
+    // names carrying the `reduce scalar` / `reduce kernel` series labels CI
+    // asserts on. 1024-term chunks, full-operand-space terms (maximal
+    // alignment distances — the scalar fold's worst, and most honest, case).
+    let n_reduce = 1024usize;
+    for (fmt, fname) in [(FP32, "FP32"), (BF16, "BF16")] {
+        let spec = AccSpec::exact(fmt);
+        let terms: Vec<Fp> = {
+            let mut rng = XorShift::new(0x5EDC ^ fmt.ebits as u64 ^ ((fmt.mbits as u64) << 8));
+            (0..n_reduce).map(|_| rng.gen_fp_full(fmt)).collect()
+        };
+        let scalar = bench(
+            &format!("reduce scalar {fname} n={n_reduce}"),
+            target_seconds(0.6),
+            || {
+                black_box(online_fp_add::stream::reduce_chunk_with(
+                    ReduceBackend::Scalar,
+                    &terms,
+                    spec,
+                ));
+            },
+        );
+        let scalar_tput = scalar.throughput(n_reduce as f64);
+        println!("{}   [{:.1} M terms/s]", scalar.line(), scalar_tput / 1e6);
+        records.push(
+            BenchRecord::new(scalar.clone())
+                .param("n", n_reduce as f64)
+                .param("terms_per_s", scalar_tput),
+        );
+        for block in [8usize, 64, 256] {
+            let r = bench(
+                &format!("reduce kernel {fname} n={n_reduce} b={block}"),
+                target_seconds(0.6),
+                || {
+                    black_box(online_fp_add::stream::reduce_chunk_with(
+                        ReduceBackend::Kernel { block },
+                        &terms,
+                        spec,
+                    ));
+                },
+            );
+            let tput = r.throughput(n_reduce as f64);
+            println!(
+                "{}   [{:.1} M terms/s, {:.2}x scalar]",
+                r.line(),
+                tput / 1e6,
+                tput / scalar_tput
+            );
+            records.push(
+                BenchRecord::new(r)
+                    .param("n", n_reduce as f64)
+                    .param("block", block as f64)
+                    .param("terms_per_s", tput)
+                    .param("speedup_vs_scalar", tput / scalar_tput),
+            );
+        }
+    }
+
+    header("fused matmul workload (round-once dot products, BF16 16x64x16)");
+    {
+        use online_fp_add::workload::matmul::matmul_fused;
+        let (mm, mk, mn) = (16usize, 64usize, 16usize);
+        let mut rng = XorShift::new(0xFA57);
+        let a: Vec<f32> = (0..mm * mk).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..mk * mn).map(|_| rng.gauss() as f32).collect();
+        let mspec = AccSpec::exact(BF16);
+        for (label, backend) in
+            [("scalar", ReduceBackend::Scalar), ("kernel", ReduceBackend::KERNEL)]
+        {
+            let r = bench(&format!("matmul_fused {label} 16x64x16"), target_seconds(0.5), || {
+                black_box(matmul_fused(&a, &b, (mm, mk, mn), BF16, mspec, backend));
+            });
+            let tput = r.throughput((mm * mn * mk) as f64);
+            println!("{}   [{:.1} M dot-terms/s]", r.line(), tput / 1e6);
+            records.push(BenchRecord::new(r).param("dot_terms_per_s", tput));
+        }
+    }
 
     header("full fused adders (incl. normalize/round)");
     let adder = MultiTermAdder::hw(FP32, 32, Architecture::Tree("8-2-2".parse().unwrap()));

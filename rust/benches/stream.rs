@@ -12,7 +12,7 @@ use online_fp_add::bench_util::{
     bench, header, smoke, suite_label, target_seconds, write_json, BenchRecord,
 };
 use online_fp_add::formats::BF16;
-use online_fp_add::stream::{EngineConfig, StreamEngine};
+use online_fp_add::stream::{EngineConfig, ReduceBackend, StreamEngine};
 use online_fp_add::workload::bert::power_trace;
 use std::path::Path;
 
@@ -53,6 +53,43 @@ fn main() {
                 BenchRecord::new(r)
                     .param("threads", threads as f64)
                     .param("chunk", chunk as f64)
+                    .param("terms_per_s", tput),
+            );
+        }
+    }
+
+    header("chunk-reduction backend (threads=4): scalar fold vs SoA kernel");
+    for backend in [ReduceBackend::Scalar, ReduceBackend::KERNEL] {
+        for &chunk in &[64usize, 256] {
+            let engine = StreamEngine::new(EngineConfig {
+                threads: 4,
+                chunk,
+                spec,
+                backend,
+                queue_depth: 8192,
+                ..Default::default()
+            });
+            let mut epoch = 0u64;
+            let r = bench(
+                &format!("ingest backend={backend} chunk={chunk}"),
+                target_seconds(0.6),
+                || {
+                    epoch += 1;
+                    let id = format!("bk-{epoch}");
+                    for row in rows {
+                        engine.ingest_blocking(&id, row.clone()).expect("engine alive");
+                    }
+                    engine.quiesce();
+                    engine.drain(&id);
+                },
+            );
+            let tput = r.throughput(terms_per_replay);
+            println!("{}   [{:.1} M terms/s]", r.line(), tput / 1e6);
+            records.push(
+                BenchRecord::new(r)
+                    .param("threads", 4.0)
+                    .param("chunk", chunk as f64)
+                    .param("kernel", matches!(backend, ReduceBackend::Kernel { .. }) as u8 as f64)
                     .param("terms_per_s", tput),
             );
         }

@@ -26,15 +26,34 @@ pub enum Architecture {
     Tree(RadixConfig),
     /// The Kulisch-style exact window (order-independent golden reference).
     Exact,
+    /// The batched SoA kernel ([`crate::arith::kernel`]): blockwise
+    /// single-λ alignment, blocks combined with `⊙`. Bit-identical to the
+    /// scalar fold in exact specs; in truncated specs it is the
+    /// `[block; block; …]` parenthesisation.
+    Kernel {
+        /// Lanes per SoA block.
+        block: usize,
+    },
 }
 
 impl Architecture {
-    /// Parse `"baseline"`, `"online"`, `"exact"` or a radix config (`"8-2-2"`).
+    /// Parse `"baseline"`, `"online"`, `"exact"`, `"kernel"` /
+    /// `"kernel:<block>"` or a radix config (`"8-2-2"`).
     pub fn parse(s: &str, _n_terms: u32) -> Result<Self, String> {
         match s.to_ascii_lowercase().as_str() {
             "baseline" | "base" => Ok(Architecture::Baseline),
             "online" | "serial-online" => Ok(Architecture::Online),
             "exact" | "kulisch" => Ok(Architecture::Exact),
+            other if other == "kernel" || other.starts_with("kernel:") => {
+                // One parser for the kernel syntax: delegate to the
+                // ReduceBackend grammar ("kernel" / "kernel:<block>").
+                match other.parse::<super::kernel::ReduceBackend>()? {
+                    super::kernel::ReduceBackend::Kernel { block } => {
+                        Ok(Architecture::Kernel { block })
+                    }
+                    _ => unreachable!("the kernel prefix parses to the kernel backend"),
+                }
+            }
             other => other.parse::<RadixConfig>().map(Architecture::Tree),
         }
     }
@@ -118,6 +137,9 @@ impl MultiTermAdder {
             Architecture::Online => online_sum(lanes, self.spec),
             Architecture::Tree(cfg) => tree_sum(lanes, cfg, self.spec),
             Architecture::Exact => exact_sum(lanes, self.format),
+            Architecture::Kernel { block } => {
+                super::kernel::reduce_terms(lanes, *block, self.spec)
+            }
         }
     }
 

@@ -1,0 +1,432 @@
+//! Batched structure-of-arrays align-and-add kernel: the hot-path backend
+//! behind [`ReduceBackend`] (DESIGN.md §Kernel).
+//!
+//! The scalar reference path folds terms one [`op_combine`] at a time over
+//! AoS [`AlignAcc`] values — one max, one (or two) full-width shifts and a
+//! wide add *per term*. This module exploits the same associativity result
+//! (eq. 10) blockwise instead:
+//!
+//! 1. **Decode** the operands into SoA lanes `(eff_exp[], signed_sig[])`
+//!    ([`decode_soa`]) — one pass, no `AlignAcc`/[`WideInt`] per term;
+//! 2. **Block λ** — a branch-free max sweep finds the block-local maximum
+//!    effective exponent (zero lanes are masked to λ = 0, the identity's
+//!    level, so they never lift the max);
+//! 3. **Align + accumulate** every lane of the block against that single λ
+//!    in a tight loop ([`block_state`]): on narrow [`AccSpec`]s the whole
+//!    block runs in `i128` with the dropped bits OR-folded into one sticky
+//!    mask; on wide specs each lane becomes a single
+//!    [`WideInt::from_i64_shl`] (net shift `f − d`, no 384-bit right-shift
+//!    churn at all) whenever `d ≤ f` — which is *always* the case in exact
+//!    frames;
+//! 4. **Combine** the per-block `[λ; acc; sticky]` partials with the
+//!    existing online operator `⊙` ([`op_combine`]).
+//!
+//! One block is *by construction* the radix-`block` operator
+//! [`super::operator::op_combine_many`] over the same leaves — the paper's baseline (Fig. 1)
+//! corner applied to the block — so a single full-width block is
+//! bit-identical to `tree_sum(_, RadixConfig::baseline(n), spec)` in
+//! **every** spec, and the block-then-combine pipeline is bit-identical to
+//! the scalar `⊙` fold in every **exact** spec (eq. 10: all
+//! parenthesisations agree when no bits drop). With `block == 1` the
+//! pipeline degenerates to exactly the scalar fold, truncated specs
+//! included. Truncated specs with `block > 1` compute the
+//! `[block; block; …]` parenthesisation — a valid `⊙` tree, deterministic
+//! and sticky-monotone, but with a different dropped-bit pattern than the
+//! radix-2 fold, which is why [`ReduceBackend::Auto`] only selects the
+//! kernel for exact frames and keeps the scalar fold as the truncated
+//! reference.
+//!
+//! The kernel-equivalence battery (`tests/kernel_equivalence.rs`), the
+//! differential oracle (which fuzzes [`super::adder::Architecture::Kernel`]
+//! alongside every other architecture) and the stream end-to-end oracle
+//! test pin these guarantees bit-for-bit.
+
+use super::operator::{op_combine, AlignAcc};
+use super::{AccSpec, WideInt};
+use crate::formats::Fp;
+use std::fmt;
+use std::str::FromStr;
+
+/// Default lanes per block: big enough to amortize the per-block combine,
+/// small enough to stay comfortably inside the accumulator carry headroom
+/// and the L1 working set.
+pub const DEFAULT_BLOCK: usize = 64;
+
+/// Decode one term into its SoA lane: the effective exponent
+/// ([`Fp::eff_exp`], masked to 0 for zero terms so they sit at the
+/// identity's λ and never lift a block max) and the signed significand.
+/// The single source of truth for the lane-encoding convention.
+#[inline]
+fn decode_term(t: &Fp) -> (i32, i64) {
+    debug_assert!(t.is_finite(), "kernel lanes must be finite (screen specials first)");
+    let s = t.signed_sig();
+    // Zero lanes carry (0, 0): λ = 0 is the identity level, below every
+    // live term's effective exponent (≥ 1).
+    (if s == 0 { 0 } else { t.eff_exp() }, s)
+}
+
+/// Decode terms into SoA lanes via [`decode_term`]. Buffers are cleared and
+/// refilled (capacity is reused).
+pub fn decode_soa(terms: &[Fp], eff: &mut Vec<i32>, sig: &mut Vec<i64>) {
+    eff.clear();
+    sig.clear();
+    eff.reserve(terms.len());
+    sig.reserve(terms.len());
+    for t in terms {
+        let (e, s) = decode_term(t);
+        eff.push(e);
+        sig.push(s);
+    }
+}
+
+/// Reduce one SoA block against its block-local maximum exponent.
+///
+/// Bit-identical to [`super::operator::op_combine_many`] over the
+/// corresponding [`AlignAcc::leaf`] / identity states, in every spec: one λ for the whole
+/// block, each lane aligned by its own distance, sticky OR'd across the
+/// block. Lanes with `sig == 0` are identities regardless of their `eff`
+/// entry (the [`crate::runtime`] field encoding relies on this).
+pub fn block_state(eff: &[i32], sig: &[i64], spec: AccSpec) -> AlignAcc {
+    debug_assert_eq!(eff.len(), sig.len());
+    // Branch-free block-λ sweep: zero lanes are masked to the identity
+    // level so an arbitrary exponent field on a dead lane cannot lift λ.
+    let mut lambda = 0i32;
+    for (&e, &s) in eff.iter().zip(sig) {
+        let live = if s == 0 { 0 } else { e };
+        lambda = lambda.max(live);
+    }
+    if spec.narrow {
+        // Narrow fast path: the whole block in two-limb arithmetic, one
+        // dropped-bit mask OR-folded across the block.
+        let f = spec.f;
+        let mut acc = 0i128;
+        let mut dropped = 0u128;
+        for (&e, &s) in eff.iter().zip(sig) {
+            let m = (s as i128) << f;
+            // Clamps: d ≥ 128 is pure sign fill either way, and a dead
+            // lane's arbitrary `eff` must not underflow the cast.
+            let d = (lambda - e).clamp(0, 127) as u32;
+            acc += m >> d;
+            dropped |= (m as u128) & ((1u128 << d) - 1);
+        }
+        let sticky = dropped != 0;
+        debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+        return AlignAcc { lambda, acc: WideInt::from_i128(acc), sticky };
+    }
+    // Wide path: `(m << f) >> d` is `m << (f − d)` whenever `d ≤ f` (shift
+    // composition, no dropped bits), so each lane is one cheap
+    // `from_i64_shl` + add — no full-width right shifts. Exact frames have
+    // `f = exp_range ≥ d` always, so they never leave this arm.
+    let f = spec.f as i32;
+    let mut acc = WideInt::ZERO;
+    let mut sticky = false;
+    for (&e, &s) in eff.iter().zip(sig) {
+        if s == 0 {
+            continue;
+        }
+        let d = (lambda - e).max(0);
+        if d <= f {
+            acc = acc.add(&WideInt::from_i64_shl(s, (f - d) as u32));
+        } else {
+            // Truncating wide frame: the net right shift runs on i128 (a
+            // signed significand always fits i64), sticky from the bits it
+            // drops — the same bits `(m << f).shr_sticky(d)` would report.
+            let sh = ((d - f) as u32).min(127);
+            sticky |= (s as u128) & ((1u128 << sh) - 1) != 0;
+            acc = acc.add(&WideInt::from_i128((s as i128) >> sh));
+        }
+    }
+    debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+    AlignAcc { lambda, acc, sticky }
+}
+
+/// The scalar reference: the serial radix-2 `⊙` fold over [`AlignAcc::leaf`]
+/// states — the exact code path every consumer ran before the kernel
+/// existed, kept as [`ReduceBackend::Scalar`]. This *is* the paper's online
+/// recurrence (Algorithm 3), so it delegates to [`super::online::online_sum`]
+/// rather than duplicating the fold.
+pub fn scalar_fold(terms: &[Fp], spec: AccSpec) -> AlignAcc {
+    super::online::online_sum(terms, spec)
+}
+
+/// Batched SoA reduction: decode once, reduce `block`-sized SoA slices with
+/// [`block_state`], combine the per-block partials with `⊙`.
+///
+/// Bit-identical to [`scalar_fold`] in exact specs (any block size) and for
+/// `block == 1` in every spec; see the module docs for the truncated
+/// `block > 1` parenthesisation semantics.
+pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
+    let block = block.max(1);
+    if block <= DEFAULT_BLOCK {
+        // Zero-allocation path for hardware-sized blocks (the default
+        // geometry, any input length): decode each block into stack lanes,
+        // reduce it, chain the partials with ⊙.
+        let mut eff = [0i32; DEFAULT_BLOCK];
+        let mut sig = [0i64; DEFAULT_BLOCK];
+        let mut state = AlignAcc::IDENTITY;
+        for chunk in terms.chunks(block) {
+            for (i, t) in chunk.iter().enumerate() {
+                (eff[i], sig[i]) = decode_term(t);
+            }
+            let part = block_state(&eff[..chunk.len()], &sig[..chunk.len()], spec);
+            state = op_combine(&state, &part, spec);
+        }
+        return state;
+    }
+    // Oversized blocks: one block-sized buffer pair, reused (decode_soa
+    // keeps the capacity) across every block of the input.
+    let mut eff = Vec::new();
+    let mut sig = Vec::new();
+    let mut state = AlignAcc::IDENTITY;
+    for chunk in terms.chunks(block) {
+        decode_soa(chunk, &mut eff, &mut sig);
+        let part = block_state(&eff, &sig, spec);
+        state = op_combine(&state, &part, spec);
+    }
+    state
+}
+
+/// The reduction-backend seam: which implementation folds a slice of terms
+/// into one `[λ; acc; sticky]` state. The scalar fold stays the reference;
+/// the kernel is the hot path.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum ReduceBackend {
+    /// Pick per spec: the kernel for exact frames (bit-identical by
+    /// eq. 10), the scalar fold for truncated frames (preserving the
+    /// radix-2 dropped-bit pattern every pre-kernel consumer produced).
+    #[default]
+    Auto,
+    /// The serial radix-2 `⊙` fold ([`scalar_fold`]) — the reference.
+    Scalar,
+    /// The batched SoA kernel ([`reduce_terms`]) with the given block size.
+    Kernel {
+        /// Lanes per block (clamped to ≥ 1).
+        block: usize,
+    },
+}
+
+impl ReduceBackend {
+    /// The kernel at the default block size.
+    pub const KERNEL: ReduceBackend = ReduceBackend::Kernel { block: DEFAULT_BLOCK };
+
+    /// Resolve [`ReduceBackend::Auto`] against a spec; concrete backends
+    /// pass through unchanged.
+    pub fn resolve(self, spec: AccSpec) -> ReduceBackend {
+        match self {
+            ReduceBackend::Auto => {
+                if spec.exact {
+                    ReduceBackend::KERNEL
+                } else {
+                    ReduceBackend::Scalar
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Fold `terms` into one state with this backend.
+    pub fn reduce(self, terms: &[Fp], spec: AccSpec) -> AlignAcc {
+        match self.resolve(spec) {
+            ReduceBackend::Scalar => scalar_fold(terms, spec),
+            ReduceBackend::Kernel { block } => reduce_terms(terms, block, spec),
+            ReduceBackend::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+}
+
+impl fmt::Display for ReduceBackend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReduceBackend::Auto => write!(f, "auto"),
+            ReduceBackend::Scalar => write!(f, "scalar"),
+            ReduceBackend::Kernel { block } => write!(f, "kernel:{block}"),
+        }
+    }
+}
+
+impl FromStr for ReduceBackend {
+    type Err = String;
+
+    /// Parse `"auto"`, `"scalar"`, `"kernel"` or `"kernel:<block>"`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(ReduceBackend::Auto),
+            "scalar" => Ok(ReduceBackend::Scalar),
+            "kernel" => Ok(ReduceBackend::KERNEL),
+            other => match other.strip_prefix("kernel:") {
+                Some(b) => {
+                    let block: usize =
+                        b.parse().map_err(|e| format!("bad kernel block {b:?}: {e}"))?;
+                    if block == 0 {
+                        return Err("kernel block must be >= 1".into());
+                    }
+                    Ok(ReduceBackend::Kernel { block })
+                }
+                None => Err(format!(
+                    "unknown backend {s:?} (expected auto, scalar, kernel or kernel:<block>)"
+                )),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::operator::op_combine_many;
+    use crate::formats::{BF16, FP32, PAPER_FORMATS};
+    use crate::util::prng::XorShift;
+
+    fn mixed_terms(rng: &mut XorShift, fmt: crate::formats::FpFormat, n: usize) -> Vec<Fp> {
+        (0..n)
+            .map(|_| match rng.below(8) {
+                0 => Fp::zero(fmt),
+                1 | 2 => rng.gen_fp_subnormal(fmt),
+                _ => rng.gen_fp_full(fmt),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_block_is_the_radix_n_operator_in_any_spec() {
+        // One block == op_combine_many over the same leaves, including the
+        // truncated dropped-bit pattern and a dead lane with a stray
+        // exponent field.
+        let mut rng = XorShift::new(0x50A);
+        for fmt in PAPER_FORMATS {
+            for spec in [AccSpec::exact(fmt), AccSpec::truncated(3), AccSpec::truncated(16)] {
+                for _ in 0..50 {
+                    let terms = mixed_terms(&mut rng, fmt, 24);
+                    let leaves: Vec<AlignAcc> =
+                        terms.iter().map(|t| AlignAcc::leaf(*t, spec)).collect();
+                    let want = op_combine_many(&leaves, spec);
+                    let mut eff = Vec::new();
+                    let mut sig = Vec::new();
+                    decode_soa(&terms, &mut eff, &mut sig);
+                    assert_eq!(block_state(&eff, &sig, spec), want, "{fmt} {spec:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_lane_exponent_fields_never_lift_lambda() {
+        // The runtime field encoding pads dead lanes with (e, 0) for
+        // arbitrary e; they must behave as identities.
+        let spec = AccSpec::truncated(16);
+        let eff = [200i32, 5, 300];
+        let sig = [0i64, 3, 0];
+        let st = block_state(&eff, &sig, spec);
+        assert_eq!(st.lambda, 5);
+        assert!(!st.sticky);
+        assert_eq!(st.acc, WideInt::from_i64_shl(3, spec.f));
+    }
+
+    #[test]
+    fn kernel_matches_scalar_fold_exact_all_blocks() {
+        let mut rng = XorShift::new(0x5E0A);
+        for fmt in [BF16, FP32] {
+            let spec = AccSpec::exact(fmt);
+            for n in [1usize, 5, 64, 200] {
+                let terms = mixed_terms(&mut rng, fmt, n);
+                let want = scalar_fold(&terms, spec);
+                for block in [1usize, 3, 8, 64, n] {
+                    assert_eq!(
+                        reduce_terms(&terms, block, spec),
+                        want,
+                        "{fmt} n={n} block={block}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_one_is_the_scalar_fold_even_truncated() {
+        let mut rng = XorShift::new(0xB10C);
+        let spec = AccSpec::truncated(4);
+        for _ in 0..100 {
+            let terms = mixed_terms(&mut rng, BF16, 40);
+            assert_eq!(reduce_terms(&terms, 1, spec), scalar_fold(&terms, spec));
+        }
+    }
+
+    #[test]
+    fn wide_and_narrow_paths_agree_bit_for_bit() {
+        use crate::formats::FP8_E5M2;
+        let mut rng = XorShift::new(0x71DE);
+        let narrow = AccSpec::exact(FP8_E5M2);
+        assert!(narrow.narrow, "e5m2's exact frame fits the i128 fast path");
+        let wide = AccSpec { narrow: false, ..narrow };
+        for _ in 0..100 {
+            let terms = mixed_terms(&mut rng, FP8_E5M2, 96);
+            for block in [1usize, 8, 96] {
+                assert_eq!(
+                    reduce_terms(&terms, block, narrow),
+                    reduce_terms(&terms, block, wide)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_wide_block_matches_radix_operator() {
+        // Forces the d > f arm of the wide path (tiny guard, wide spread).
+        let mut rng = XorShift::new(0xD0F);
+        let spec = AccSpec { narrow: false, ..AccSpec::truncated(2) };
+        for _ in 0..200 {
+            let terms = mixed_terms(&mut rng, FP32, 16);
+            let leaves: Vec<AlignAcc> = terms.iter().map(|t| AlignAcc::leaf(*t, spec)).collect();
+            assert_eq!(block_state_from(&terms, spec), op_combine_many(&leaves, spec));
+        }
+    }
+
+    fn block_state_from(terms: &[Fp], spec: AccSpec) -> AlignAcc {
+        let mut eff = Vec::new();
+        let mut sig = Vec::new();
+        decode_soa(terms, &mut eff, &mut sig);
+        block_state(&eff, &sig, spec)
+    }
+
+    #[test]
+    fn empty_and_all_zero_inputs_are_the_identity() {
+        let spec = AccSpec::exact(BF16);
+        assert!(reduce_terms(&[], 8, spec).is_identity());
+        let zeros = vec![Fp::zero(BF16); 10];
+        assert!(reduce_terms(&zeros, 3, spec).is_identity());
+        assert!(block_state(&[0; 4], &[0; 4], spec).is_identity());
+    }
+
+    #[test]
+    fn backend_parse_roundtrip_and_resolution() {
+        assert_eq!("scalar".parse::<ReduceBackend>().unwrap(), ReduceBackend::Scalar);
+        assert_eq!("kernel".parse::<ReduceBackend>().unwrap(), ReduceBackend::KERNEL);
+        assert_eq!(
+            "kernel:8".parse::<ReduceBackend>().unwrap(),
+            ReduceBackend::Kernel { block: 8 }
+        );
+        assert_eq!("auto".parse::<ReduceBackend>().unwrap(), ReduceBackend::Auto);
+        assert!("kernel:0".parse::<ReduceBackend>().is_err());
+        assert!("simd".parse::<ReduceBackend>().is_err());
+        let exact = AccSpec::exact(BF16);
+        assert_eq!(ReduceBackend::Auto.resolve(exact), ReduceBackend::KERNEL);
+        assert_eq!(
+            ReduceBackend::Auto.resolve(AccSpec::truncated(4)),
+            ReduceBackend::Scalar
+        );
+        assert_eq!(ReduceBackend::KERNEL.to_string(), format!("kernel:{DEFAULT_BLOCK}"));
+    }
+
+    #[test]
+    fn backend_reduce_agrees_across_backends_exact() {
+        let mut rng = XorShift::new(0xACC0);
+        let spec = AccSpec::exact(BF16);
+        for _ in 0..50 {
+            let terms = mixed_terms(&mut rng, BF16, 70);
+            let want = ReduceBackend::Scalar.reduce(&terms, spec);
+            assert_eq!(ReduceBackend::Auto.reduce(&terms, spec), want);
+            assert_eq!(ReduceBackend::KERNEL.reduce(&terms, spec), want);
+            assert_eq!(ReduceBackend::Kernel { block: 7 }.reduce(&terms, spec), want);
+        }
+    }
+}

@@ -20,6 +20,7 @@
 pub mod adder;
 pub mod baseline;
 pub mod exact;
+pub mod kernel;
 pub mod normalize;
 pub mod online;
 pub mod operator;
@@ -28,6 +29,7 @@ pub mod tree;
 pub mod wide;
 
 use crate::formats::FpFormat;
+pub use kernel::ReduceBackend;
 pub use wide::WideInt;
 
 /// Accumulator datapath geometry: how many fractional extension bits `f`

@@ -15,8 +15,9 @@
 //!
 //! [`run_oracle`] fuzzes adversarial operand distributions (uniform
 //! full-range, subnormal-dense, cancellation-heavy, mixed-sign
-//! near-overflow) through baseline / online / Kulisch / mixed-radix-tree
-//! architectures under exact [`AccSpec`]s (narrow and wide paths) and
+//! near-overflow) through baseline / online / Kulisch / SoA-kernel /
+//! mixed-radix-tree architectures under exact [`AccSpec`]s (narrow and
+//! wide paths) and
 //! reports every bit mismatch, plus a faithfulness bound for the
 //! hardware-default truncated datapath. The `repro oracle` CLI subcommand
 //! and `tests/oracle_differential.rs` drive it; see DESIGN.md §Oracle.
@@ -355,11 +356,14 @@ pub fn run_oracle(fmt: FpFormat, cfg: &OracleConfig) -> OracleReport {
     }
     // Architectures and display labels are fixed for the whole run; only
     // the tree config rotates, so format each tree label once up front
-    // rather than per vector.
-    let fixed_archs: [(&str, Architecture); 3] = [
+    // rather than per vector. The SoA kernel runs at a deliberately awkward
+    // block size (the vector length never divides evenly) so the
+    // partial-tail block path is fuzzed too.
+    let fixed_archs: [(&str, Architecture); 4] = [
         ("baseline", Architecture::Baseline),
         ("online", Architecture::Online),
         ("kulisch", Architecture::Exact),
+        ("kernel-b5", Architecture::Kernel { block: 5 }),
     ];
     let tree_archs: Vec<(String, Architecture)> = enumerate_configs(n as u32)
         .into_iter()

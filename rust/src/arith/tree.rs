@@ -132,10 +132,10 @@ pub fn tree_sum(terms: &[Fp], config: &RadixConfig, spec: AccSpec) -> AlignAcc {
     reduce_in_place(&mut buf, live, config, spec)
 }
 
-/// Level-by-level in-place reduction over pre-built leaves. `pub(crate)` so
-/// the native artifact executor ([`crate::runtime`]) reduces with *this*
-/// exact code path — its bit-equivalence to `tree_sum` is by construction,
-/// not by a parallel implementation.
+/// Level-by-level in-place reduction over pre-built leaves. (The native
+/// artifact executor used to share this code path; it now reduces each row
+/// as one [`crate::arith::kernel::block_state`] block, whose
+/// bit-equivalence to the baseline single-level tree is by construction.)
 pub(crate) fn reduce_in_place(
     buf: &mut [AlignAcc],
     mut live: usize,

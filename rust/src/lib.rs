@@ -39,6 +39,7 @@ pub mod workload;
 
 pub use arith::{
     baseline::baseline_sum,
+    kernel::ReduceBackend,
     online::online_sum,
     operator::{op_combine, AlignAcc},
     tree::{tree_sum, RadixConfig},

@@ -7,6 +7,7 @@
 //! repro table1 [--n 16|32|64] [--vectors 512] Table I (all formats; default all N)
 //! repro add    --format bf16 --arch 8-2-2 x y z ...    one fused addition
 //! repro oracle [--format all] [--vectors 2000]         differential oracle
+//! repro kernel [--format all] [--n 1024] [--blocks 1,8,64]  SoA-kernel check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
@@ -30,6 +31,7 @@ fn main() -> ExitCode {
         "table1" => cmd_table1(&args),
         "add" => cmd_add(&args),
         "oracle" => cmd_oracle(&args),
+        "kernel" => cmd_kernel(&args),
         "sweep" => cmd_sweep(&args),
         "e2e" => cmd_e2e(&args),
         "serve" => cmd_serve(&args),
@@ -61,6 +63,12 @@ commands:
                                           adversarial operand distributions
                                           through every algorithm and diff
                                           against the independent reference
+  kernel  [--format F|all] [--n 1024] [--blocks 1,8,64,256] [--vectors 64]
+                                          SoA-kernel equivalence + throughput:
+                                          assert the batched kernel's
+                                          [λ; acc; sticky] state bit-matches
+                                          the scalar ⊙ fold per block size,
+                                          and report the measured speedup
   sweep   --format F --n N [--clock 1.0]  raw design-space dump for any N
   e2e     [--sentences 4] [--requests 256] PJRT BERT workload + batched serving demo
   serve   [--requests 2048] [--clients 8]  load-test the batched PJRT reduction path
@@ -201,6 +209,82 @@ fn cmd_oracle(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// SoA-kernel equivalence + throughput check (DESIGN.md §Kernel): fuzz the
+/// oracle's adversarial operand distributions through the batched kernel at
+/// several block sizes and through the scalar `⊙` fold, assert the
+/// `[λ; acc; sticky]` states are bit-identical (exact specs), and report
+/// the measured throughput of both backends. Exits nonzero on any mismatch.
+fn cmd_kernel(args: &Args) -> Result<(), String> {
+    use online_fp_add::arith::kernel::{reduce_terms, scalar_fold, DEFAULT_BLOCK};
+    use online_fp_add::arith::oracle::DISTRIBUTIONS;
+    use online_fp_add::arith::AccSpec;
+    use online_fp_add::formats::PAPER_FORMATS;
+    use online_fp_add::util::prng::XorShift;
+    use std::time::Instant;
+
+    let n = args.get_usize("n", 1024)?.max(1);
+    let vectors = args.get_usize("vectors", 64)?.max(1);
+    let seed = args.get_u64("seed", 0x50A0_0DD)?;
+    let blocks: Vec<usize> = match args.get("blocks") {
+        Some(list) => list
+            .split(',')
+            .map(|p| {
+                p.trim()
+                    .parse::<usize>()
+                    .map_err(|e| format!("bad block {p:?}: {e}"))
+                    .and_then(|b| if b == 0 { Err("block must be >= 1".into()) } else { Ok(b) })
+            })
+            .collect::<Result<_, _>>()?,
+        None => vec![1, 8, DEFAULT_BLOCK, 256],
+    };
+    let fmts: Vec<online_fp_add::formats::FpFormat> = match args.get("format") {
+        Some(name) if name != "all" => {
+            vec![format_by_name(name).ok_or_else(|| "unknown --format".to_string())?]
+        }
+        _ => PAPER_FORMATS.to_vec(),
+    };
+    let mut table = online_fp_add::util::table::Table::new(vec![
+        "format", "block", "scalar Mterms/s", "kernel Mterms/s", "speedup", "mismatches",
+    ]);
+    let mut bad = 0u64;
+    for fmt in fmts {
+        let spec = AccSpec::exact(fmt);
+        let mut rng =
+            XorShift::new(seed ^ ((fmt.ebits as u64) << 32) ^ ((fmt.mbits as u64) << 40));
+        let data: Vec<Vec<Fp>> = (0..vectors)
+            .map(|v| DISTRIBUTIONS[v % DISTRIBUTIONS.len()].gen_vector(&mut rng, fmt, n))
+            .collect();
+        let t0 = Instant::now();
+        let reference: Vec<_> = data.iter().map(|v| scalar_fold(v, spec)).collect();
+        let scalar_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
+        for &block in &blocks {
+            let t0 = Instant::now();
+            let got: Vec<_> = data.iter().map(|v| reduce_terms(v, block, spec)).collect();
+            let kernel_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
+            let mismatches =
+                got.iter().zip(&reference).filter(|(g, w)| g != w).count() as u64;
+            bad += mismatches;
+            table.row(vec![
+                fmt.to_string(),
+                block.to_string(),
+                format!("{:.1}", scalar_tput / 1e6),
+                format!("{:.1}", kernel_tput / 1e6),
+                format!("{:.2}x", kernel_tput / scalar_tput),
+                mismatches.to_string(),
+            ]);
+        }
+    }
+    println!(
+        "SoA kernel vs scalar ⊙ fold — {vectors} adversarial vectors × {n} terms per format\n"
+    );
+    println!("{}", table.render());
+    if bad > 0 {
+        return Err(format!("{bad} kernel states differed from the scalar fold"));
+    }
+    println!("kernel [λ; acc; sticky] bit-matches the scalar fold on every vector ✓");
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<(), String> {
     let fmt = format_by_name(args.get_or("format", "bf16"))
         .ok_or_else(|| "unknown --format".to_string())?;
@@ -278,7 +362,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 scope.spawn(move || {
                     let mut rng = XorShift::new(0x5E21E ^ c as u64);
                     let mut bad = 0usize;
-                    let cfg = RadixConfig::binary(32).unwrap();
+                    let cfg = RadixConfig::baseline(32);
                     for _ in 0..per_client {
                         let terms: Vec<online_fp_add::formats::Fp> = (0..n_terms)
                             .map(|_| rng.gen_fp_sparse(online_fp_add::formats::BF16, 0.1))

@@ -2,16 +2,19 @@
 //! align-and-add reduction with a fixed `(batch, n_terms)` geometry,
 //! executed by the native interpreter.
 //!
-//! The executor reproduces the Pallas kernel's semantics exactly: each row's
-//! `(e, m)` pairs become `⊙` leaves and are reduced by the balanced binary
-//! tree the kernel lowers to, in the truncated accumulator frame with
-//! `guard` fractional-extension bits — so results are bit-identical to
-//! `tree_sum(_, RadixConfig::binary(n), AccSpec::truncated(guard))`.
+//! The executor reproduces the hardware's fused-adder semantics: each row's
+//! `(e, m)` pairs become SoA lanes of the batched kernel
+//! ([`crate::arith::kernel::block_state`]) and are reduced against one
+//! row-local maximum exponent in the truncated accumulator frame with
+//! `guard` fractional-extension bits — the paper's baseline (Fig. 1)
+//! datapath, one max-exponent tree feeding one aligned compressor. Results
+//! are bit-identical to
+//! `tree_sum(_, RadixConfig::baseline(n), AccSpec::truncated(guard))`
+//! by construction (a single kernel block *is* the radix-`n` operator).
 
 use super::{LoadedArtifact, Result, Runtime, RuntimeError};
-use crate::arith::operator::AlignAcc;
-use crate::arith::tree::{reduce_in_place, RadixConfig};
-use crate::arith::{AccSpec, WideInt};
+use crate::arith::kernel::block_state;
+use crate::arith::AccSpec;
 
 /// Output of one reduction batch: per-row `(λ, acc)` states.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -24,8 +27,6 @@ pub struct ReduceOut {
 /// geometry (baked in at AOT time — see `python/compile/aot.py`).
 pub struct OnlineReduceExe {
     exe: LoadedArtifact,
-    /// The balanced binary tree the kernel lowers to.
-    cfg: RadixConfig,
     pub batch: usize,
     pub n_terms: usize,
     /// Guard (fractional-extension) bits of the artifact's accumulator
@@ -42,12 +43,14 @@ impl OnlineReduceExe {
         n_terms: usize,
         guard: u32,
     ) -> Result<Self> {
-        let cfg = RadixConfig::binary(n_terms as u32).map_err(|e| {
-            RuntimeError::msg(format!("artifact {name}: unsupported geometry: {e}"))
-        })?;
+        if n_terms < 2 || n_terms > 4096 {
+            return Err(RuntimeError::msg(format!(
+                "artifact {name}: unsupported geometry: {n_terms} terms (need 2..=4096)"
+            )));
+        }
         let exe = rt.load(name)?;
         exe.expect_kind(super::ArtifactKind::OnlineReduce)?;
-        Ok(OnlineReduceExe { exe, cfg, batch, n_terms, guard })
+        Ok(OnlineReduceExe { exe, batch, n_terms, guard })
     }
 
     /// The BF16 32-term artifact with its baked geometry.
@@ -64,10 +67,13 @@ impl OnlineReduceExe {
 
     /// Reduce up to `batch` rows of `(e, m)` terms — effective exponent
     /// ([`crate::formats::Fp::eff_exp`]) and signed significand per lane,
-    /// so subnormal operands travel as `(1, ±mantissa)`. Short batches are
-    /// accepted (the hardware pads its unused lanes with identity rows;
-    /// the native executor simply computes the live rows) and exactly the
-    /// live rows are returned.
+    /// so subnormal operands travel as `(1, ±mantissa)` and zero/padding
+    /// lanes as `(_, 0)` (a zero significand is the identity regardless of
+    /// its exponent field, exactly as unused hardware lanes contribute
+    /// neither to the max-exponent tree nor to the fraction sum). Short
+    /// batches are accepted (the hardware pads its unused lanes with
+    /// identity rows; the native executor simply computes the live rows)
+    /// and exactly the live rows are returned.
     pub fn run(&self, rt: &Runtime, e: &[i32], m: &[i32]) -> Result<ReduceOut> {
         let _ = rt; // execution is native; the runtime only gates loading
         assert_eq!(e.len(), m.len());
@@ -82,15 +88,17 @@ impl OnlineReduceExe {
         let spec = AccSpec::truncated(self.guard);
         let mut lambda = Vec::with_capacity(rows);
         let mut acc = Vec::with_capacity(rows);
-        let mut buf = vec![AlignAcc::IDENTITY; self.n_terms];
+        let mut sig = vec![0i64; self.n_terms];
         for r in 0..rows {
             let base = r * self.n_terms;
-            for (lane, slot) in buf.iter_mut().enumerate() {
-                *slot = leaf_from_fields(e[base + lane], m[base + lane], spec);
+            let eff = &e[base..base + self.n_terms];
+            for (slot, &mi) in sig.iter_mut().zip(&m[base..base + self.n_terms]) {
+                *slot = mi as i64;
             }
-            // The same reduction code path as `tree_sum` — bit-equivalence
-            // to the model is by construction.
-            let state = reduce_in_place(&mut buf, self.n_terms, &self.cfg, spec);
+            // One SoA kernel block per row: bit-equivalence to the baseline
+            // radix-n `⊙` operator (and hence to tree_sum with the baseline
+            // config) is by construction.
+            let state = block_state(eff, &sig, spec);
             lambda.push(state.lambda);
             acc.push(state.acc.to_i128() as i64);
         }
@@ -98,38 +106,24 @@ impl OnlineReduceExe {
     }
 }
 
-/// Lift one `(e, m)` lane into the operator domain, matching
-/// [`AlignAcc::leaf`]: a zero significand is the identity (a zero operand
-/// contributes neither to the max-exponent tree nor to the fraction sum).
-///
-/// `e` is the term's *effective* exponent ([`crate::formats::Fp::eff_exp`]):
-/// callers encode subnormal lanes as `(1, ±mantissa)` — hidden bit 0 at
-/// effective exponent 1, the gradual-underflow λ-convention — so a nonzero
-/// `m` with `e == 1` may be either a subnormal or a minimal normal; the
-/// datapath treats both identically.
-fn leaf_from_fields(e: i32, m: i32, spec: AccSpec) -> AlignAcc {
-    if m == 0 {
-        return AlignAcc::IDENTITY;
-    }
-    AlignAcc { lambda: e, acc: WideInt::from_i64_shl(m as i64, spec.f), sticky: false }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arith::tree::tree_sum;
+    use crate::arith::tree::{tree_sum, RadixConfig};
     use crate::formats::{Fp, BF16};
     use crate::util::prng::XorShift;
 
     #[test]
-    fn native_executor_leaves_match_tree_sum_bitexact() {
-        // The executor shares reduce_in_place with tree_sum, so the only
-        // thing left to check is that (e, m) field lifting matches
-        // AlignAcc::leaf on real encoded terms.
+    fn native_executor_rows_match_baseline_tree_sum_bitexact() {
+        // The executor runs one kernel block per row; a single block is the
+        // radix-n operator, so the (e, m) field lifting plus reduction must
+        // bit-match tree_sum under the baseline (single-level) config on
+        // real encoded terms — zeros, normals and subnormals alike.
         let spec = AccSpec::truncated(16);
-        let cfg = RadixConfig::binary(32).unwrap();
+        let cfg = RadixConfig::baseline(32);
         let mut rng = XorShift::new(0x2E0);
-        let mut buf = vec![AlignAcc::IDENTITY; 32];
+        let mut sig = vec![0i64; 32];
+        let mut eff = vec![0i32; 32];
         for _ in 0..200 {
             let terms: Vec<Fp> = (0..32)
                 .map(|_| {
@@ -142,10 +136,11 @@ mod tests {
                     }
                 })
                 .collect();
-            for (slot, t) in buf.iter_mut().zip(&terms) {
-                *slot = leaf_from_fields(t.eff_exp(), t.signed_sig() as i32, spec);
+            for (i, t) in terms.iter().enumerate() {
+                eff[i] = t.eff_exp();
+                sig[i] = t.signed_sig();
             }
-            let got = reduce_in_place(&mut buf, 32, &cfg, spec);
+            let got = block_state(&eff, &sig, spec);
             let want = tree_sum(&terms, &cfg, spec);
             assert_eq!(got, want);
         }

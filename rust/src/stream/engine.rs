@@ -15,8 +15,9 @@
 //! [`super::segment::SegmentAssembler`] on a single consumer when a
 //! truncated datapath must replay deterministically.
 
-use super::segment::{reduce_chunk, Segment};
+use super::segment::{reduce_chunk_with, Segment};
 use super::shard::{ShardMap, Snapshot};
+use crate::arith::kernel::ReduceBackend;
 use crate::arith::AccSpec;
 use crate::coordinator::batcher::SubmitError;
 use crate::coordinator::metrics::{Counter, LatencyHistogram};
@@ -41,6 +42,11 @@ pub struct EngineConfig {
     /// Accumulator datapath; exact specs give order/chunking/thread-count
     /// invariant results.
     pub spec: AccSpec,
+    /// Chunk-reduction backend ([`ReduceBackend::Auto`] resolves to the SoA
+    /// kernel on exact specs, the scalar fold on truncated ones). On exact
+    /// specs this is a pure throughput knob — the merged states are
+    /// bit-identical across backends.
+    pub backend: ReduceBackend,
 }
 
 impl Default for EngineConfig {
@@ -51,6 +57,7 @@ impl Default for EngineConfig {
             queue_depth: 4096,
             stripes: 16,
             spec: AccSpec::exact(BF16),
+            backend: ReduceBackend::Auto,
         }
     }
 }
@@ -128,7 +135,10 @@ impl StreamEngine {
             let progress = Arc::clone(&progress);
             let chunk = cfg.chunk.max(1);
             let spec = cfg.spec;
-            pool.submit(move || worker_loop(&rx, &shards, &metrics, &progress, chunk, spec));
+            let backend = cfg.backend.resolve(spec);
+            pool.submit(move || {
+                worker_loop(&rx, &shards, &metrics, &progress, chunk, spec, backend)
+            });
         }
         StreamEngine { cfg, shards, metrics, tx: Some(tx), progress, pool }
     }
@@ -249,6 +259,7 @@ fn worker_loop(
     progress: &ProgressSync,
     chunk: usize,
     spec: AccSpec,
+    backend: ReduceBackend,
 ) {
     loop {
         let item = {
@@ -268,7 +279,7 @@ fn worker_loop(
             let mut segments = 0u64;
             let mut merged = Segment::EMPTY;
             for c in item.terms.chunks(chunk) {
-                let seg = reduce_chunk(c, spec);
+                let seg = reduce_chunk_with(backend, c, spec);
                 segments += 1;
                 // Batch-local pre-merge: one stripe-lock acquisition per
                 // batch rather than per segment (associativity again).
@@ -347,6 +358,27 @@ mod tests {
                 let snap = engine.snapshot("s").unwrap();
                 assert_eq!(snap.state(), want, "threads={threads} chunk={chunk}");
             }
+        }
+    }
+
+    #[test]
+    fn backend_is_a_pure_throughput_knob_on_exact_specs() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x8ACE);
+        let data = rows(&mut rng, 24, 48);
+        let want = reference(&data, spec);
+        for backend in [
+            ReduceBackend::Scalar,
+            ReduceBackend::KERNEL,
+            ReduceBackend::Kernel { block: 5 },
+            ReduceBackend::Auto,
+        ] {
+            let engine = StreamEngine::new(EngineConfig { backend, ..config(4, 16) });
+            for r in &data {
+                engine.ingest_blocking("s", r.clone()).unwrap();
+            }
+            engine.quiesce();
+            assert_eq!(engine.snapshot("s").unwrap().state(), want, "{backend}");
         }
     }
 

@@ -34,7 +34,11 @@ pub mod segment;
 pub mod service;
 pub mod shard;
 
+pub use crate::arith::kernel::ReduceBackend;
 pub use engine::{EngineConfig, EngineMetrics, StreamEngine};
-pub use segment::{reduce_chunk, segment_terms, Segment, SegmentAssembler};
+pub use segment::{
+    reduce_chunk, reduce_chunk_with, segment_terms, segment_terms_with, Segment,
+    SegmentAssembler,
+};
 pub use service::{IngestError, Request, Response, StreamService};
 pub use shard::{ShardMap, Snapshot};

@@ -16,6 +16,7 @@
 //! bit-deterministic only under exact specs — for deterministic truncated
 //! replay, feed segments through an assembler instead.)
 
+use crate::arith::kernel::ReduceBackend;
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::AccSpec;
 use crate::formats::Fp;
@@ -42,24 +43,40 @@ impl Segment {
     }
 }
 
-/// Reduce one chunk of finite terms into a segment (a serial `⊙` fold —
-/// in an exact spec this is bit-identical to any tree over the same terms).
+/// Reduce one chunk of finite terms into a segment with an explicit
+/// [`ReduceBackend`]: the batched SoA kernel on exact specs resolves to the
+/// same `[λ; acc; sticky]` bits as the scalar `⊙` fold (eq. 10), so the
+/// backend is a pure throughput knob there; on truncated specs the backends
+/// drop different low bits (each deterministically) — pick one and keep it
+/// for reproducible replay.
 ///
 /// Like [`crate::arith::tree::tree_sum`], callers screen Inf/NaN first
 /// (see [`crate::arith::adder`] for the screening rules).
+pub fn reduce_chunk_with(backend: ReduceBackend, terms: &[Fp], spec: AccSpec) -> Segment {
+    Segment { state: backend.reduce(terms, spec), terms: terms.len() as u64 }
+}
+
+/// Reduce one chunk under the default backend ([`ReduceBackend::Auto`]):
+/// the kernel for exact specs, the scalar reference fold for truncated
+/// ones — bit-identical to the pre-kernel serial fold in both cases.
 pub fn reduce_chunk(terms: &[Fp], spec: AccSpec) -> Segment {
-    let mut state = AlignAcc::IDENTITY;
-    for t in terms {
-        let leaf = AlignAcc::leaf(*t, spec);
-        state = op_combine(&state, &leaf, spec);
-    }
-    Segment { state, terms: terms.len() as u64 }
+    reduce_chunk_with(ReduceBackend::Auto, terms, spec)
 }
 
 /// Split `terms` at `chunk`-sized boundaries and reduce each chunk.
 pub fn segment_terms(terms: &[Fp], chunk: usize, spec: AccSpec) -> Vec<Segment> {
+    segment_terms_with(ReduceBackend::Auto, terms, chunk, spec)
+}
+
+/// [`segment_terms`] with an explicit backend.
+pub fn segment_terms_with(
+    backend: ReduceBackend,
+    terms: &[Fp],
+    chunk: usize,
+    spec: AccSpec,
+) -> Vec<Segment> {
     debug_assert!(chunk >= 1);
-    terms.chunks(chunk.max(1)).map(|c| reduce_chunk(c, spec)).collect()
+    terms.chunks(chunk.max(1)).map(|c| reduce_chunk_with(backend, c, spec)).collect()
 }
 
 /// Reassembles a stream of sequence-numbered segments into one state,
@@ -153,6 +170,24 @@ mod tests {
                     .fold(Segment::EMPTY, |a, s| a.merge(s, spec));
                 assert_eq!(merged.state, reference, "n={n} chunk={chunk}");
                 assert_eq!(merged.terms, n as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_and_scalar_backends_produce_identical_segments() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x5E6C);
+        for n in [1usize, 17, 64, 200] {
+            let terms = random_terms(&mut rng, n);
+            let want = reduce_chunk_with(ReduceBackend::Scalar, &terms, spec);
+            for backend in [
+                ReduceBackend::KERNEL,
+                ReduceBackend::Kernel { block: 3 },
+                ReduceBackend::Auto,
+            ] {
+                let got = reduce_chunk_with(backend, &terms, spec);
+                assert_eq!(got, want, "n={n} backend={backend}");
             }
         }
     }

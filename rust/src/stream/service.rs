@@ -96,6 +96,19 @@ impl StreamService {
         Self::new(format, cfg)
     }
 
+    /// An exact-datapath service with an explicit chunk-reduction backend
+    /// (see [`crate::arith::kernel::ReduceBackend`]); with the exact spec
+    /// every backend yields bit-identical stream states, so this picks
+    /// throughput, not semantics.
+    pub fn exact_with_backend(
+        format: FpFormat,
+        backend: crate::arith::kernel::ReduceBackend,
+    ) -> Self {
+        let cfg =
+            EngineConfig { spec: AccSpec::exact(format), backend, ..Default::default() };
+        Self::new(format, cfg)
+    }
+
     pub fn format(&self) -> FpFormat {
         self.format
     }

@@ -7,6 +7,9 @@
 //! what the switching-activity power model consumes.
 
 use super::trace::Trace;
+use crate::arith::kernel::ReduceBackend;
+use crate::arith::normalize::normalize_round;
+use crate::arith::AccSpec;
 use crate::formats::{Fp, FpFormat};
 use crate::util::prng::XorShift;
 
@@ -26,6 +29,40 @@ pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32
             for j in 0..n {
                 orow[j] += av * brow[j];
             }
+        }
+    }
+    out
+}
+
+/// Fused-adder matmul: every output element is the **once-rounded** sum of
+/// its K partial products (each product rounded into `fmt` exactly as
+/// [`partial_product_trace`] captures them), reduced through the
+/// [`ReduceBackend`] seam — this is the hot reduction path the SoA kernel
+/// accelerates. With [`AccSpec::exact`] the result per element is the
+/// correctly-rounded dot product regardless of backend; with a truncated
+/// spec it models the hardware datapath under the chosen backend's
+/// parenthesisation.
+pub fn matmul_fused(
+    a: &[f32],
+    b: &[f32],
+    (m, k, n): (usize, usize, usize),
+    fmt: FpFormat,
+    spec: AccSpec,
+    backend: ReduceBackend,
+) -> Vec<Fp> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = Vec::with_capacity(m * n);
+    let mut prods: Vec<Fp> = Vec::with_capacity(k);
+    for i in 0..m {
+        for j in 0..n {
+            prods.clear();
+            for l in 0..k {
+                let p = (a[i * k + l] as f64) * (b[l * n + j] as f64);
+                prods.push(Fp::from_f64(p, fmt).finite_or_saturated());
+            }
+            let state = backend.reduce(&prods, spec);
+            out.push(normalize_round(&state, spec, fmt));
         }
     }
     out
@@ -94,6 +131,33 @@ mod tests {
         let a = [1.0, 2.0, 3.0, 4.0];
         let eye = [1.0, 0.0, 0.0, 1.0];
         assert_eq!(matmul_f32(&a, &eye, 2, 2, 2), a.to_vec());
+    }
+
+    #[test]
+    fn fused_matmul_backends_agree_and_round_correctly() {
+        use crate::arith::exact::exact_rounded_sum;
+        use crate::formats::FP32;
+        let (m, k, n) = (4usize, 40usize, 3usize);
+        let mut rng = XorShift::new(0xFA5);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gauss() as f32).collect();
+        let spec = crate::arith::AccSpec::exact(FP32);
+        let scalar = matmul_fused(&a, &b, (m, k, n), FP32, spec, ReduceBackend::Scalar);
+        let kernel = matmul_fused(&a, &b, (m, k, n), FP32, spec, ReduceBackend::KERNEL);
+        assert_eq!(scalar.len(), m * n);
+        for (s, kr) in scalar.iter().zip(&kernel) {
+            assert_eq!(s.bits, kr.bits, "backends must be bit-identical on exact specs");
+        }
+        // Spot-check one element against the independent correctly-rounded
+        // oracle over the same rounded products.
+        let (i, j) = (2usize, 1usize);
+        let prods: Vec<Fp> = (0..k)
+            .map(|l| {
+                Fp::from_f64((a[i * k + l] as f64) * (b[l * n + j] as f64), FP32)
+                    .finite_or_saturated()
+            })
+            .collect();
+        assert_eq!(kernel[i * n + j].bits, exact_rounded_sum(&prods, FP32).bits);
     }
 
     #[test]

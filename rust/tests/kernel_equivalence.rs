@@ -1,0 +1,201 @@
+//! Kernel-equivalence battery (DESIGN.md §Kernel): the batched SoA
+//! align-and-add kernel must be **bit-identical** — the full
+//! `[λ; acc; sticky]` state, not just the rounded value — to the scalar
+//! `⊙` fold it replaces, over the entire finite operand space (signed
+//! zeros, subnormals, normals), for every paper format, at every block
+//! size, on both the narrow-i128 and wide-`WideInt` accumulator paths, and
+//! under the adversarial oracle distributions (subnormal-dense,
+//! cancellation-heavy, near-overflow). Special values must propagate
+//! through the kernel-backed adder exactly as `Fp` semantics dictate.
+
+use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::kernel::{reduce_terms, scalar_fold, ReduceBackend};
+use online_fp_add::arith::oracle::DISTRIBUTIONS;
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, FpClass, SpecialsMode, FP8_E4M3, FP8_E6M1, PAPER_FORMATS};
+use online_fp_add::util::proptest::check;
+use online_fp_add::util::prng::XorShift;
+
+const BLOCKS: [usize; 4] = [1, 3, 8, 64];
+
+/// The exact spec plus its forced-wide twin (for formats whose exact frame
+/// fits the narrow path, both accumulator paths must agree).
+fn exact_specs(fmt: online_fp_add::formats::FpFormat) -> Vec<AccSpec> {
+    let exact = AccSpec::exact(fmt);
+    let mut specs = vec![exact];
+    if exact.narrow {
+        specs.push(AccSpec { narrow: false, ..exact });
+    }
+    specs
+}
+
+#[test]
+fn prop_kernel_state_bitidentical_to_scalar_fold_full_operand_space() {
+    check("kernel ≡ scalar ⊙ fold (full space)", 150, |g| {
+        for fmt in PAPER_FORMATS {
+            let n = 1 + g.rng.below(180) as usize;
+            let terms = g.fp_full_vec(fmt, n);
+            for spec in exact_specs(fmt) {
+                let want = scalar_fold(&terms, spec);
+                for block in BLOCKS.iter().copied().chain([n]) {
+                    let got = reduce_terms(&terms, block, spec);
+                    if got != want {
+                        return Err(format!(
+                            "{fmt} n={n} block={block} narrow={}: {got:?} != {want:?}",
+                            spec.narrow
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_block_one_is_the_scalar_fold_in_truncated_frames() {
+    // Truncated frames are merge-order sensitive in their dropped bits, but
+    // block = 1 degenerates the kernel to exactly the radix-2 fold — the
+    // bit pattern must survive, sticky included.
+    check("kernel block=1 ≡ scalar fold (truncated)", 150, |g| {
+        for fmt in PAPER_FORMATS {
+            let spec = AccSpec::truncated(1 + g.rng.below(18) as u32);
+            let n = 1 + g.rng.below(100) as usize;
+            let terms = g.fp_full_vec(fmt, n);
+            let want = scalar_fold(&terms, spec);
+            let got = reduce_terms(&terms, 1, spec);
+            if got != want {
+                return Err(format!("{fmt} n={n} guard={}: {got:?} != {want:?}", spec.f));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_matches_scalar_fold_on_adversarial_distributions() {
+    // The oracle's adversarial generators — subnormal-dense vectors hugging
+    // the underflow boundary, ±1-ulp cancellation pairs, mixed-sign
+    // near-overflow — through every block size, zero state mismatches.
+    let mut rng = XorShift::new(0xADE2);
+    for fmt in PAPER_FORMATS {
+        for dist in DISTRIBUTIONS {
+            for spec in exact_specs(fmt) {
+                for _ in 0..40 {
+                    let n = 64;
+                    let terms = dist.gen_vector(&mut rng, fmt, n);
+                    let want = scalar_fold(&terms, spec);
+                    for block in BLOCKS.iter().copied().chain([n]) {
+                        assert_eq!(
+                            reduce_terms(&terms, block, spec),
+                            want,
+                            "{fmt} {} block={block} narrow={}",
+                            dist.name(),
+                            spec.narrow
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_kernel_backend_rounds_identically_through_the_adder() {
+    // End to end through MultiTermAdder: the kernel architecture's rounded
+    // result must bit-match the baseline architecture on the same lanes.
+    check("kernel adder ≡ baseline adder", 120, |g| {
+        for fmt in PAPER_FORMATS {
+            let n = 16usize;
+            let terms = g.fp_full_vec(fmt, n);
+            let kernel =
+                MultiTermAdder::exact(fmt, n, Architecture::Kernel { block: 5 }).add(&terms);
+            let baseline = MultiTermAdder::exact(fmt, n, Architecture::Baseline).add(&terms);
+            if kernel.bits != baseline.bits {
+                return Err(format!("{fmt}: {kernel:?} != {baseline:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn special_values_propagate_identically_through_kernel_and_scalar_adders() {
+    // Inf/NaN never reach the datapath (the unpack stage screens them);
+    // both architectures must apply the same Fp semantics: NaN dominates,
+    // opposite infinities are invalid (NaN), a lone Inf wins with its sign.
+    for fmt in PAPER_FORMATS {
+        let kernel = MultiTermAdder::exact(fmt, 8, Architecture::Kernel { block: 3 });
+        let scalar = MultiTermAdder::exact(fmt, 8, Architecture::Baseline);
+        let one = Fp::from_f64(1.0, fmt);
+        let nan = Fp::nan(fmt);
+        let nan_vec = vec![one, nan, one, one];
+        assert_eq!(kernel.add(&nan_vec).class(), FpClass::Nan, "{fmt}");
+        assert_eq!(kernel.add(&nan_vec).bits, scalar.add(&nan_vec).bits, "{fmt}");
+        if fmt.specials == SpecialsMode::Ieee {
+            let inf = Fp::overflow(false, fmt);
+            let ninf = Fp::overflow(true, fmt);
+            let invalid = vec![inf, ninf, one];
+            assert_eq!(kernel.add(&invalid).class(), FpClass::Nan, "{fmt}: +Inf + -Inf");
+            assert_eq!(kernel.add(&invalid).bits, scalar.add(&invalid).bits, "{fmt}");
+            for sign in [false, true] {
+                let v = vec![Fp::overflow(sign, fmt), one, one];
+                let r = kernel.add(&v);
+                assert_eq!(r.class(), FpClass::Inf, "{fmt}");
+                assert_eq!(r.sign(), sign, "{fmt}");
+                assert_eq!(r.bits, scalar.add(&v).bits, "{fmt}");
+            }
+        }
+    }
+}
+
+#[test]
+fn noinf_formats_saturate_identically_through_kernel_and_scalar_adders() {
+    // Saturating (NoInf) formats have no Inf: overflowing sums clamp to the
+    // maximum finite value in both backends, and the OCP NaN still
+    // dominates.
+    for fmt in [FP8_E4M3, FP8_E6M1] {
+        let kernel = MultiTermAdder::exact(fmt, 4, Architecture::Kernel { block: 2 });
+        let scalar = MultiTermAdder::exact(fmt, 4, Architecture::Baseline);
+        let max = Fp::pack(false, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
+        let sat = kernel.add(&[max, max, max, max]);
+        assert_eq!(sat.bits, Fp::overflow(false, fmt).bits, "{fmt}: positive saturation");
+        assert_eq!(sat.bits, scalar.add(&[max, max, max, max]).bits, "{fmt}");
+        let nmax = Fp::pack(true, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
+        let nsat = kernel.add(&[nmax, nmax, nmax, nmax]);
+        assert_eq!(nsat.bits, Fp::overflow(true, fmt).bits, "{fmt}: negative saturation");
+        assert_eq!(nsat.bits, scalar.add(&[nmax, nmax, nmax, nmax]).bits, "{fmt}");
+        let nan = Fp::nan(fmt);
+        assert_eq!(kernel.add(&[max, nan, max, max]).class(), FpClass::Nan, "{fmt}");
+    }
+}
+
+#[test]
+fn kernel_backend_seam_resolves_and_reduces_consistently() {
+    // The ReduceBackend seam: Auto must route exact specs to the kernel and
+    // truncated specs to the scalar fold, and every concrete backend must
+    // agree bit-for-bit on exact specs.
+    let mut rng = XorShift::new(0x5EAC);
+    for fmt in PAPER_FORMATS {
+        let exact = AccSpec::exact(fmt);
+        assert_eq!(ReduceBackend::Auto.resolve(exact), ReduceBackend::KERNEL, "{fmt}");
+        let terms: Vec<Fp> = (0..97).map(|_| rng.gen_fp_full(fmt)).collect();
+        let want = ReduceBackend::Scalar.reduce(&terms, exact);
+        for backend in
+            [ReduceBackend::Auto, ReduceBackend::KERNEL, ReduceBackend::Kernel { block: 9 }]
+        {
+            assert_eq!(backend.reduce(&terms, exact), want, "{fmt} {backend}");
+        }
+        let truncated = AccSpec::truncated(6);
+        assert_eq!(
+            ReduceBackend::Auto.resolve(truncated),
+            ReduceBackend::Scalar,
+            "{fmt}: truncated frames keep the scalar reference"
+        );
+        assert_eq!(
+            ReduceBackend::Auto.reduce(&terms, truncated),
+            scalar_fold(&terms, truncated),
+            "{fmt}"
+        );
+    }
+}

@@ -2,13 +2,15 @@
 //! vectors per format — rotating through uniform full-range,
 //! subnormal-dense, cancellation-heavy and mixed-sign near-overflow
 //! distributions — must produce **zero** exact-mode mismatches between any
-//! algorithm × radix-config × accumulator-path combination and the
-//! independent sign-magnitude reference. Two-term FP32 exact-mode sums must
-//! additionally bit-match native `f32` addition, including subnormal
-//! results.
+//! algorithm × radix-config × accumulator-path combination (the batched
+//! SoA kernel included, both inside `run_oracle`'s rotation and through a
+//! dedicated per-block-size gate below) and the independent sign-magnitude
+//! reference. Two-term FP32 exact-mode sums must additionally bit-match
+//! native `f32` addition, including subnormal results.
 
 use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
 use online_fp_add::arith::oracle::{reference_sum, run_oracle, OracleConfig, DISTRIBUTIONS};
+use online_fp_add::arith::AccSpec;
 use online_fp_add::formats::{FpClass, FP32, PAPER_FORMATS};
 use online_fp_add::util::prng::XorShift;
 
@@ -35,6 +37,47 @@ fn oracle_runs_clean_over_10k_vectors_per_format() {
             "{fmt}: truncated deviation {} ulp",
             rep.truncated_max_ulp
         );
+    }
+}
+
+#[test]
+fn kernel_path_runs_clean_against_the_oracle_on_every_distribution() {
+    // The same adversarial distributions, driven explicitly through the
+    // SoA-kernel architecture (several block sizes, narrow and wide
+    // accumulator paths where the format offers both) with the same
+    // zero-mismatch gate against the big-int reference.
+    let mut rng = XorShift::new(0x4E61_D1FF);
+    let n = 16usize;
+    for fmt in PAPER_FORMATS {
+        let exact = AccSpec::exact(fmt);
+        let mut specs = vec![exact];
+        if exact.narrow {
+            specs.push(AccSpec { narrow: false, ..exact });
+        }
+        let mut mismatches = 0u64;
+        let mut checks = 0u64;
+        for dist in DISTRIBUTIONS {
+            for _ in 0..250 {
+                let terms = dist.gen_vector(&mut rng, fmt, n);
+                let expected = reference_sum(&terms, fmt);
+                for &spec in &specs {
+                    for block in [1usize, 3, 8, 64, n] {
+                        let adder = MultiTermAdder {
+                            format: fmt,
+                            n_terms: n,
+                            spec,
+                            arch: Architecture::Kernel { block },
+                        };
+                        checks += 1;
+                        if adder.add(&terms).bits != expected.bits {
+                            mismatches += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(mismatches, 0, "{fmt}: kernel-path oracle mismatches");
+        assert!(checks >= 5_000, "{fmt}: only {checks} kernel checks ran");
     }
 }
 

@@ -43,7 +43,9 @@ fn pallas_reduce_bf16_matches_rust_tree_bitexact() {
     let Some(rt) = runtime() else { return };
     let exe = OnlineReduceExe::load_bf16_n32(&rt).expect("load artifact");
     let spec = AccSpec::truncated(exe.guard);
-    let cfg = RadixConfig::binary(32).unwrap();
+    // The artifact executes the blockwise single-λ reduction — the baseline
+    // (single-level) corner of the radix design space.
+    let cfg = RadixConfig::baseline(32);
     let mut rng = XorShift::new(0x517E);
 
     for round in 0..4 {
@@ -74,7 +76,7 @@ fn pallas_reduce_fp32_matches_rust_tree_bitexact() {
     let Some(rt) = runtime() else { return };
     let exe = OnlineReduceExe::load_fp32_n16(&rt).expect("load artifact");
     let spec = AccSpec::truncated(exe.guard);
-    let cfg = RadixConfig::binary(16).unwrap();
+    let cfg = RadixConfig::baseline(16);
     let mut rng = XorShift::new(0xF32);
 
     let mut e_all = Vec::new();
@@ -164,7 +166,7 @@ fn batcher_over_pjrt_serves_concurrent_requests_bitexactly() {
                 let mut rng = XorShift::new(0xB000 + i);
                 let (e, m, fps) = encode_row(&mut rng, BF16, n_terms);
                 let resp = h.reduce(e, m).expect("batched reduce");
-                let want = tree_sum(&fps, &RadixConfig::binary(32).unwrap(), spec);
+                let want = tree_sum(&fps, &RadixConfig::baseline(32), spec);
                 assert_eq!(resp.lambda, want.lambda);
                 assert_eq!(resp.acc, want.acc.to_i128() as i64);
             })

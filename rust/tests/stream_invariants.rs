@@ -178,6 +178,45 @@ fn prop_chunked_service_query_equals_exact_reference() {
     });
 }
 
+/// End-to-end stream oracle with the SoA-kernel backend: replay a real
+/// BERT partial-product trace through a [`StreamService`] whose chunks are
+/// reduced by the batched kernel, and check every per-stream **query**
+/// (one rounding over the whole history) against the independent
+/// sign-magnitude big-int reference ([`reference_sum`]) bit for bit — and
+/// against a scalar-backend service replaying the same traffic.
+#[test]
+fn kernel_backend_service_queries_match_bigint_oracle_on_bert_trace() {
+    use online_fp_add::arith::oracle::reference_sum;
+    use online_fp_add::stream::ReduceBackend;
+
+    let trace = power_trace(BF16, 32, 96, 0x4E7);
+    let streams = 6usize;
+    for backend in [ReduceBackend::KERNEL, ReduceBackend::Kernel { block: 5 }] {
+        let svc = StreamService::exact_with_backend(BF16, backend);
+        let total = svc.replay_trace("kq", &trace, streams);
+        assert_eq!(total, (trace.len() * 32) as u64);
+        let scalar_svc = StreamService::exact_with_backend(BF16, ReduceBackend::Scalar);
+        scalar_svc.replay_trace("kq", &trace, streams);
+        let mut per_stream: Vec<Vec<Fp>> = vec![Vec::new(); streams];
+        for (i, row) in trace.vectors.iter().enumerate() {
+            per_stream[i % streams].extend_from_slice(row);
+        }
+        for (s, terms) in per_stream.iter().enumerate() {
+            let id = format!("kq-{s}");
+            let (value, snap) = svc.query(&id).expect("stream exists");
+            assert_eq!(snap.terms, terms.len() as u64);
+            let oracle = reference_sum(terms, BF16);
+            assert_eq!(
+                value.bits, oracle.bits,
+                "stream {s}: kernel-backend query {value:?} != big-int oracle {oracle:?}"
+            );
+            let (scalar_value, scalar_snap) = scalar_svc.query(&id).expect("stream exists");
+            assert_eq!(value.bits, scalar_value.bits, "stream {s}: backend divergence");
+            assert_eq!(snap.state(), scalar_snap.state(), "stream {s}: state divergence");
+        }
+    }
+}
+
 /// Acceptance: the engine is order/chunking/thread-count invariant on a
 /// real BERT partial-product trace.
 #[test]
