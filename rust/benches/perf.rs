@@ -119,6 +119,31 @@ fn main() {
                     .param("speedup_vs_scalar", tput / scalar_tput),
             );
         }
+        // The deferred-alignment backend: shift-free banking + one drain.
+        let r = bench(
+            &format!("reduce eia {fname} n={n_reduce}"),
+            target_seconds(0.6),
+            || {
+                black_box(online_fp_add::stream::reduce_chunk_with(
+                    ReduceBackend::Eia,
+                    &terms,
+                    spec,
+                ));
+            },
+        );
+        let tput = r.throughput(n_reduce as f64);
+        println!(
+            "{}   [{:.1} M terms/s, {:.2}x scalar]",
+            r.line(),
+            tput / 1e6,
+            tput / scalar_tput
+        );
+        records.push(
+            BenchRecord::new(r)
+                .param("n", n_reduce as f64)
+                .param("terms_per_s", tput)
+                .param("speedup_vs_scalar", tput / scalar_tput),
+        );
     }
 
     header("fused matmul workload (round-once dot products, BF16 16x64x16)");
@@ -129,9 +154,11 @@ fn main() {
         let a: Vec<f32> = (0..mm * mk).map(|_| rng.gauss() as f32).collect();
         let b: Vec<f32> = (0..mk * mn).map(|_| rng.gauss() as f32).collect();
         let mspec = AccSpec::exact(BF16);
-        for (label, backend) in
-            [("scalar", ReduceBackend::Scalar), ("kernel", ReduceBackend::KERNEL)]
-        {
+        for (label, backend) in [
+            ("scalar", ReduceBackend::Scalar),
+            ("kernel", ReduceBackend::KERNEL),
+            ("eia", ReduceBackend::Eia),
+        ] {
             let r = bench(&format!("matmul_fused {label} 16x64x16"), target_seconds(0.5), || {
                 black_box(matmul_fused(&a, &b, (mm, mk, mn), BF16, mspec, backend));
             });

@@ -58,8 +58,8 @@ fn main() {
         }
     }
 
-    header("chunk-reduction backend (threads=4): scalar fold vs SoA kernel");
-    for backend in [ReduceBackend::Scalar, ReduceBackend::KERNEL] {
+    header("chunk-reduction backend (threads=4): scalar fold vs SoA kernel vs EIA");
+    for backend in [ReduceBackend::Scalar, ReduceBackend::KERNEL, ReduceBackend::Eia] {
         for &chunk in &[64usize, 256] {
             let engine = StreamEngine::new(EngineConfig {
                 threads: 4,

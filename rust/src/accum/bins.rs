@@ -1,0 +1,238 @@
+//! Per-exponent-bin carry-save lanes: the storage layer of the
+//! exponent-indexed accumulator.
+//!
+//! A bin holds the exact integer sum of the signed significands of every
+//! term banked at one effective exponent. The sum is kept in two lanes in
+//! the carry-save spirit: a fast `i64` lane (`lo`) that every ingest adds
+//! into, and an `i128` spill lane (`hi`) that absorbs the fast lane
+//! whenever it approaches its headroom — so the O(1) ingest never
+//! propagates a carry wider than one machine word. The bin's value is
+//! always `hi + lo`, and with per-term significands below 2^25 the fast
+//! lane alone covers ~2^37 terms per bin before the first spill; the spill
+//! lane then extends the exact range to ~2^127 — unreachable in practice,
+//! and guarded by a checked add so saturation can never be silent.
+//!
+//! Bins are indexed by *effective* exponent ([`crate::formats::Fp::eff_exp`]):
+//! subnormals bank at exponent 1 with hidden bit 0, zeros never reach a
+//! bin, so every live index is in `[1, MAX_BINS)`. The spill lane is
+//! allocated lazily — an accumulator that never spills carries only the
+//! `i64` lanes.
+
+/// Number of exponent bins: covers every paper format's effective-exponent
+/// range (`eff_exp` ∈ `[1, max_normal_exp]`, and `max_normal_exp ≤ 254`
+/// for 8-bit-exponent formats). Index 0 is the identity level and stays
+/// untouched.
+pub const MAX_BINS: usize = 256;
+
+/// Fast-lane spill threshold: once `|lo|` reaches this, the lane is folded
+/// into the wide lane. Leaves 2^25 of headroom below `i64::MAX`, so a
+/// single post-threshold ingest can never overflow the fast lane.
+const SPILL_LIMIT: u64 = 1 << 62;
+
+/// Per-exponent-bin carry-save storage (see the module docs).
+#[derive(Clone, Debug)]
+pub struct ExpBins {
+    /// Fast lane: one `i64` per bin, absorbing every ingest. A fixed
+    /// inline array (2 KB) — constructing an accumulator performs **no**
+    /// heap allocation, so per-chunk `ReduceBackend::Eia` reductions don't
+    /// pay allocator traffic on the hot path.
+    lo: [i64; MAX_BINS],
+    /// Spill (carry) lane: empty until the first spill, then `MAX_BINS`
+    /// wide. A bin's value is `hi + lo`.
+    hi: Vec<i128>,
+    /// Touched-bin occupancy range; `min_e > max_e` means no bin has ever
+    /// been banked into (only zeros, or nothing, ingested).
+    min_e: i32,
+    max_e: i32,
+}
+
+impl ExpBins {
+    pub fn new() -> Self {
+        ExpBins { lo: [0; MAX_BINS], hi: Vec::new(), min_e: MAX_BINS as i32, max_e: 0 }
+    }
+
+    /// O(1) shift-free ingest: add one term's signed significand to its
+    /// exponent bin. Callers screen zeros (a zero significand is the
+    /// identity and must not widen the occupancy range).
+    #[inline]
+    pub fn bank(&mut self, e: i32, sig: i64) {
+        debug_assert!(
+            (1..MAX_BINS as i32).contains(&e),
+            "effective exponent {e} outside the bin range"
+        );
+        debug_assert!(sig != 0, "zero significands never reach a bin");
+        debug_assert!(sig.unsigned_abs() < (1 << 25), "significand wider than any paper format");
+        let slot = &mut self.lo[e as usize];
+        // |lo| < SPILL_LIMIT and |sig| < 2^25, so this add cannot overflow.
+        *slot += sig;
+        if slot.unsigned_abs() >= SPILL_LIMIT {
+            self.spill(e as usize);
+        }
+        self.min_e = self.min_e.min(e);
+        self.max_e = self.max_e.max(e);
+    }
+
+    /// Bank an arbitrary exact value into a bin (snapshot restore and
+    /// cross-accumulator merge, where a bin sum no longer fits the
+    /// single-term bound of [`ExpBins::bank`]).
+    pub fn bank_wide(&mut self, e: i32, v: i128) {
+        debug_assert!(
+            (1..MAX_BINS as i32).contains(&e),
+            "effective exponent {e} outside the bin range"
+        );
+        if v == 0 {
+            return;
+        }
+        match i64::try_from(v) {
+            // Small enough for the fast lane without overflowing it
+            // (|lo| < 2^62 and |small| < 2^62 sum below i64::MAX).
+            Ok(small) if small.unsigned_abs() < SPILL_LIMIT => {
+                let slot = &mut self.lo[e as usize];
+                *slot += small;
+                if slot.unsigned_abs() >= SPILL_LIMIT {
+                    self.spill(e as usize);
+                }
+            }
+            _ => {
+                self.ensure_hi();
+                self.hi[e as usize] = self.hi[e as usize]
+                    .checked_add(v)
+                    .expect("EIA bin overflow: accumulator headroom exceeded");
+            }
+        }
+        self.min_e = self.min_e.min(e);
+        self.max_e = self.max_e.max(e);
+    }
+
+    fn ensure_hi(&mut self) {
+        if self.hi.is_empty() {
+            self.hi = vec![0; MAX_BINS];
+        }
+    }
+
+    fn spill(&mut self, idx: usize) {
+        self.ensure_hi();
+        self.hi[idx] = self.hi[idx]
+            .checked_add(self.lo[idx] as i128)
+            .expect("EIA bin overflow: accumulator headroom exceeded");
+        self.lo[idx] = 0;
+    }
+
+    /// The bin's exact value (`hi + lo`). The lanes are a carry-save
+    /// split of a value far below `i128` range, so this add is exact.
+    #[inline]
+    pub fn value(&self, e: i32) -> i128 {
+        let lo = self.lo[e as usize] as i128;
+        if self.hi.is_empty() {
+            lo
+        } else {
+            self.hi[e as usize] + lo
+        }
+    }
+
+    /// Inclusive range of bins ever banked into, or `None` if untouched.
+    /// (A touched bin may still hold value 0 after exact cancellation.)
+    pub fn live_range(&self) -> Option<(i32, i32)> {
+        if self.min_e > self.max_e {
+            None
+        } else {
+            Some((self.min_e, self.max_e))
+        }
+    }
+
+    /// True when no bin was ever banked into.
+    pub fn is_untouched(&self) -> bool {
+        self.min_e > self.max_e
+    }
+
+    /// Fold every bin of `other` into this store (pointwise exact integer
+    /// adds — associative and commutative by construction).
+    pub fn merge_from(&mut self, other: &ExpBins) {
+        let Some((lo_e, hi_e)) = other.live_range() else { return };
+        for e in lo_e..=hi_e {
+            self.bank_wide(e, other.value(e));
+        }
+        // bank_wide skips zero-valued bins; keep the full touched range so
+        // cancelled-but-live bins stay inside the drain sweep.
+        self.min_e = self.min_e.min(lo_e);
+        self.max_e = self.max_e.max(hi_e);
+    }
+}
+
+impl Default for ExpBins {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_accumulates_exactly_per_bin() {
+        let mut b = ExpBins::new();
+        b.bank(5, 7);
+        b.bank(5, -3);
+        b.bank(9, 1);
+        assert_eq!(b.value(5), 4);
+        assert_eq!(b.value(9), 1);
+        assert_eq!(b.value(6), 0);
+        assert_eq!(b.live_range(), Some((5, 9)));
+    }
+
+    #[test]
+    fn untouched_store_reports_empty() {
+        let b = ExpBins::new();
+        assert!(b.is_untouched());
+        assert_eq!(b.live_range(), None);
+        assert_eq!(b.value(1), 0);
+    }
+
+    #[test]
+    fn fast_lane_spills_without_losing_a_bit() {
+        let mut b = ExpBins::new();
+        // Drive the fast lane past the spill threshold via bank_wide
+        // (single-term ingests would need ~2^37 calls).
+        let step = (1i128 << 61) + 12345;
+        for _ in 0..8 {
+            b.bank_wide(3, step);
+        }
+        assert_eq!(b.value(3), 8 * step);
+        // And negative traffic cancels exactly across the lane split.
+        for _ in 0..8 {
+            b.bank_wide(3, -step);
+        }
+        assert_eq!(b.value(3), 0);
+        assert_eq!(b.live_range(), Some((3, 3)), "cancelled bins stay live");
+    }
+
+    #[test]
+    fn merge_is_pointwise_and_order_independent() {
+        let (mut a, mut b, mut both) = (ExpBins::new(), ExpBins::new(), ExpBins::new());
+        for (e, s) in [(2, 10i64), (7, -4), (200, 1)] {
+            a.bank(e, s);
+            both.bank(e, s);
+        }
+        for (e, s) in [(2, -10i64), (3, 9), (253, -2)] {
+            b.bank(e, s);
+            both.bank(e, s);
+        }
+        let mut ab = a.clone();
+        ab.merge_from(&b);
+        let mut ba = b.clone();
+        ba.merge_from(&a);
+        for e in 1..MAX_BINS as i32 {
+            assert_eq!(ab.value(e), both.value(e), "bin {e}");
+            assert_eq!(ba.value(e), both.value(e), "bin {e}");
+        }
+        assert_eq!(ab.live_range(), Some((2, 253)));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside the bin range")]
+    fn out_of_range_exponent_fails_loudly() {
+        ExpBins::new().bank(MAX_BINS as i32, 1);
+    }
+}

@@ -1,0 +1,147 @@
+//! The reconcile-and-align drain: pay the whole deferred alignment bill in
+//! one pass over the occupied exponent bins.
+//!
+//! Each bin holds the *exact* integer sum `v_e` of the significands banked
+//! at effective exponent `e`; the drain aligns every bin value against the
+//! tracked maximum `λ` and produces the standard `[λ; acc; sticky]` state:
+//!
+//! ```text
+//! acc = Σ_e  v_e · 2^(f − (λ − e))        (sticky from any dropped bits)
+//! ```
+//!
+//! **Exact specs** (`f ≥` the worst-case alignment distance): no shift
+//! drops a bit, so the drain computes exactly the integer the scalar `⊙`
+//! fold computes term by term — same `λ` (both track `max eff_exp` over
+//! live terms, identity level 0), same two's-complement accumulator, same
+//! (false) sticky: **bit-identical**, on both the narrow-`i128` and the
+//! wide-`WideInt` accumulator paths.
+//!
+//! **Truncated specs**: a bin with alignment distance `d > f` contributes
+//! `v_e ≫ (d − f)` with the dropped bits OR-folded into sticky — the same
+//! net-shift arithmetic as [`crate::arith::kernel::block_state`]'s `d > f`
+//! arm, applied to the exact bin sum. Because banking itself never drops a
+//! bit, the truncated drain is invariant to ingest order and merge
+//! grouping (the reproducibility gate in `tests/eia_equivalence.rs`);
+//! its dropped-bit pattern is the "defer everything" parenthesisation,
+//! deliberately distinct from the radix-2 fold's.
+
+use super::eia::Eia;
+use crate::arith::operator::AlignAcc;
+use crate::arith::{AccSpec, WideInt};
+
+/// Drain an [`Eia`] into an [`AlignAcc`] (see the module docs for the
+/// equivalence contract).
+pub fn drain_eia(eia: &Eia, spec: AccSpec) -> AlignAcc {
+    let lambda = eia.max_lambda();
+    let parts = eia.bins().live_range().into_iter().flat_map(|(lo, hi)| {
+        (lo..=hi).filter_map(|e| {
+            let v = eia.bins().value(e);
+            (v != 0).then_some((e, v))
+        })
+    });
+    drain_parts(lambda, parts, spec)
+}
+
+/// Core drain over `(eff_exp, exact bin value)` parts. `lambda` must be at
+/// least every part's exponent (the ingest-side running max guarantees
+/// it). An empty iterator yields `[λ; 0; false]` — for λ = 0 that is the
+/// identity, and for λ > 0 the fully-cancelled state the `⊙` fold also
+/// produces.
+pub(crate) fn drain_parts(
+    lambda: i32,
+    parts: impl Iterator<Item = (i32, i128)>,
+    spec: AccSpec,
+) -> AlignAcc {
+    if spec.narrow {
+        // Narrow fast path: the whole reconcile in two-limb arithmetic,
+        // one dropped-bit mask OR-folded across the bins (§Perf).
+        let f = spec.f;
+        let mut acc = 0i128;
+        let mut dropped = 0u128;
+        for (e, v) in parts {
+            debug_assert!(e <= lambda, "bin {e} above the tracked λ {lambda}");
+            let d = (lambda - e) as u32;
+            if d <= f {
+                // (v << f) >> d with d ≤ f is v << (f − d): no bits drop
+                // (shift composition), no full-width right shift.
+                acc += v << (f - d);
+            } else {
+                // Net right shift ≥ 128 is pure sign fill either way, and
+                // the mask still sees every magnitude bit of v.
+                let sh = (d - f).min(127);
+                acc += v >> sh;
+                dropped |= (v as u128) & ((1u128 << sh) - 1);
+            }
+        }
+        let sticky = dropped != 0;
+        debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+        return AlignAcc { lambda, acc: WideInt::from_i128(acc), sticky };
+    }
+    let f = spec.f as i32;
+    let mut acc = WideInt::ZERO;
+    let mut sticky = false;
+    for (e, v) in parts {
+        debug_assert!(e <= lambda, "bin {e} above the tracked λ {lambda}");
+        let d = lambda - e;
+        if d <= f {
+            acc = acc.add(&WideInt::from_i128(v).shl((f - d) as u32));
+        } else {
+            let sh = ((d - f) as u32).min(127);
+            sticky |= (v as u128) & ((1u128 << sh) - 1) != 0;
+            acc = acc.add(&WideInt::from_i128(v >> sh));
+        }
+    }
+    debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+    AlignAcc { lambda, acc, sticky }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accum::reduce_terms_eia;
+    use crate::arith::kernel::scalar_fold;
+    use crate::formats::{Fp, BF16, FP32, FP8_E5M2};
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn narrow_and_wide_drains_agree_bit_for_bit() {
+        let mut rng = XorShift::new(0xD2A1);
+        let narrow = AccSpec::exact(FP8_E5M2);
+        assert!(narrow.narrow);
+        let wide = AccSpec { narrow: false, ..narrow };
+        for _ in 0..300 {
+            let terms: Vec<Fp> = (0..48).map(|_| rng.gen_fp_full(FP8_E5M2)).collect();
+            assert_eq!(reduce_terms_eia(&terms, narrow), reduce_terms_eia(&terms, wide));
+        }
+    }
+
+    #[test]
+    fn truncated_drain_is_ingest_order_invariant() {
+        // Banking is exact, so even a bit-dropping drain cannot see the
+        // ingest order — unlike the online fold, whose truncated result is
+        // order-sensitive. This is the EIA's reproducibility edge.
+        let mut rng = XorShift::new(0xD2A2);
+        for spec in [AccSpec::truncated(2), AccSpec::truncated(8)] {
+            for _ in 0..100 {
+                let mut terms: Vec<Fp> = (0..40).map(|_| rng.gen_fp_full(FP32)).collect();
+                let want = reduce_terms_eia(&terms, spec);
+                rng.shuffle(&mut terms);
+                assert_eq!(reduce_terms_eia(&terms, spec), want);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_drain_sets_sticky_on_dropped_bits() {
+        // 2^20 against 1.0 under a 2-bit guard: the small bin must drop
+        // bits into sticky, with λ pinned to the big term.
+        let spec = AccSpec::truncated(2);
+        let big = Fp::from_f64(1048576.0, BF16);
+        let small = Fp::from_f64(1.0, BF16);
+        let r = reduce_terms_eia(&[big, small], spec);
+        assert!(r.sticky);
+        assert_eq!(r.lambda, big.eff_exp());
+        // The radix-2 fold over two terms drops the same bits.
+        assert_eq!(r, scalar_fold(&[big, small], spec));
+    }
+}

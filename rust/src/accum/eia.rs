@@ -1,0 +1,215 @@
+//! The exponent-indexed accumulator: O(1) shift-free ingest of decoded
+//! `(eff_exp, signed_sig)` terms, reconciled once at drain time.
+//!
+//! Where the online backends pay a max-exponent update and an alignment
+//! shift per term (scalar fold) or per block (SoA kernel), the EIA ingest
+//! is a single integer add into the term's exponent bin plus a running
+//! `max` — the entire alignment network is deferred to
+//! [`crate::accum::drain`]. The price is a query-time reconcile over the
+//! occupied exponent range; the prize is an ingest path with no shifter at
+//! all and a state that merges associatively across shards
+//! ([`crate::accum::merge::EiaSnapshot`]).
+
+use super::bins::ExpBins;
+use super::drain;
+use super::merge::EiaSnapshot;
+use crate::arith::operator::AlignAcc;
+use crate::arith::AccSpec;
+use crate::formats::Fp;
+
+/// An exponent-indexed accumulator over decoded finite terms.
+#[derive(Clone, Debug)]
+pub struct Eia {
+    bins: ExpBins,
+    /// Running maximum effective exponent over *live* (nonzero) terms;
+    /// 0 is the identity level, exactly as in
+    /// [`AlignAcc::IDENTITY`] — so the drained λ
+    /// matches the scalar `⊙` fold's λ bit for bit.
+    max_lambda: i32,
+    /// Terms ingested, zeros included (bookkeeping parity with
+    /// [`crate::stream::Segment`]).
+    terms: u64,
+}
+
+impl Eia {
+    pub fn new() -> Self {
+        Eia { bins: ExpBins::new(), max_lambda: 0, terms: 0 }
+    }
+
+    /// Ingest one finite term: decode to `(eff_exp, signed_sig)` and bank.
+    /// Inf/NaN must be screened by the caller (same contract as
+    /// [`crate::arith::kernel`]; see [`crate::arith::adder`] for the rules).
+    #[inline]
+    pub fn ingest(&mut self, t: Fp) {
+        debug_assert!(t.is_finite(), "EIA ingest requires finite terms (screen specials first)");
+        self.ingest_decoded(t.eff_exp(), t.signed_sig());
+    }
+
+    /// Ingest a pre-decoded `(eff_exp, signed_sig)` lane — the runtime's
+    /// `(e, m)` field convention: a zero significand is the identity
+    /// regardless of its exponent field (it neither banks nor lifts λ).
+    #[inline]
+    pub fn ingest_decoded(&mut self, eff_exp: i32, signed_sig: i64) {
+        self.terms += 1;
+        if signed_sig == 0 {
+            return; // ±0 / dead lane: contributes nothing
+        }
+        self.max_lambda = self.max_lambda.max(eff_exp);
+        self.bins.bank(eff_exp, signed_sig);
+    }
+
+    /// Ingest a slice of finite terms.
+    pub fn ingest_terms(&mut self, terms: &[Fp]) {
+        for t in terms {
+            self.ingest(*t);
+        }
+    }
+
+    /// Terms ingested so far (zeros included).
+    pub fn terms(&self) -> u64 {
+        self.terms
+    }
+
+    /// The running maximum effective exponent (0 = identity level).
+    pub fn max_lambda(&self) -> i32 {
+        self.max_lambda
+    }
+
+    /// True when only zeros (or nothing) have been ingested — the drain of
+    /// such a state is [`AlignAcc::IDENTITY`].
+    pub fn is_identity(&self) -> bool {
+        self.max_lambda == 0 && self.bins.is_untouched()
+    }
+
+    pub(crate) fn bins(&self) -> &ExpBins {
+        &self.bins
+    }
+
+    pub(crate) fn bins_mut(&mut self) -> &mut ExpBins {
+        &mut self.bins
+    }
+
+    pub(crate) fn set_bookkeeping(&mut self, max_lambda: i32, terms: u64) {
+        self.max_lambda = max_lambda;
+        self.terms = terms;
+    }
+
+    /// Reconcile-and-align: produce the `[λ; acc; sticky]` state
+    /// (bit-identical to the scalar `⊙` fold under exact specs — see
+    /// [`crate::accum::drain`]).
+    pub fn drain(&self, spec: AccSpec) -> AlignAcc {
+        drain::drain_eia(self, spec)
+    }
+
+    /// A canonical, mergeable, serializable checkpoint of this state.
+    pub fn snapshot(&self) -> EiaSnapshot {
+        EiaSnapshot::of(self)
+    }
+
+    /// Fold another accumulator's state into this one (exact pointwise bin
+    /// adds + λ max — associative and commutative).
+    pub fn merge_from(&mut self, other: &Eia) {
+        self.bins.merge_from(&other.bins);
+        self.max_lambda = self.max_lambda.max(other.max_lambda);
+        self.terms += other.terms;
+    }
+}
+
+impl Default for Eia {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot EIA reduction of a term slice — the
+/// [`crate::arith::kernel::ReduceBackend::Eia`] path: bank every term,
+/// reconcile once.
+pub fn reduce_terms_eia(terms: &[Fp], spec: AccSpec) -> AlignAcc {
+    let mut eia = Eia::new();
+    eia.ingest_terms(terms);
+    eia.drain(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::kernel::scalar_fold;
+    use crate::formats::{BF16, FP32};
+    use crate::util::prng::XorShift;
+
+    fn mixed_terms(rng: &mut XorShift, fmt: crate::formats::FpFormat, n: usize) -> Vec<Fp> {
+        (0..n)
+            .map(|_| match rng.below(8) {
+                0 => Fp::zero(fmt),
+                1 | 2 => rng.gen_fp_subnormal(fmt),
+                _ => rng.gen_fp_full(fmt),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_all_zero_ingest_drain_to_the_identity() {
+        let spec = AccSpec::exact(BF16);
+        let eia = Eia::new();
+        assert!(eia.is_identity());
+        assert!(eia.drain(spec).is_identity());
+        assert!(reduce_terms_eia(&[], spec).is_identity());
+        let mut zeros = Eia::new();
+        zeros.ingest_terms(&[Fp::zero(BF16); 12]);
+        assert!(zeros.is_identity());
+        assert_eq!(zeros.terms(), 12);
+        assert!(zeros.drain(spec).is_identity());
+    }
+
+    #[test]
+    fn single_term_drains_to_its_leaf() {
+        let mut rng = XorShift::new(0xE1A1);
+        for fmt in [BF16, FP32] {
+            let spec = AccSpec::exact(fmt);
+            for _ in 0..200 {
+                let t = rng.gen_fp_full(fmt);
+                assert_eq!(reduce_terms_eia(&[t], spec), AlignAcc::leaf(t, spec), "{t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn drain_bit_matches_scalar_fold_exact() {
+        let mut rng = XorShift::new(0xE1A2);
+        for fmt in [BF16, FP32] {
+            let spec = AccSpec::exact(fmt);
+            for n in [1usize, 2, 16, 64, 300] {
+                let terms = mixed_terms(&mut rng, fmt, n);
+                assert_eq!(reduce_terms_eia(&terms, spec), scalar_fold(&terms, spec), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_survives_full_cancellation() {
+        // {x, -x}: the fold keeps λ = e_x with a zero accumulator; so must
+        // the EIA (a cancelled bin stays inside the tracked state).
+        let spec = AccSpec::exact(BF16);
+        let x = Fp::from_f64(3.5, BF16);
+        let nx = Fp::from_f64(-3.5, BF16);
+        let got = reduce_terms_eia(&[x, nx], spec);
+        assert_eq!(got, scalar_fold(&[x, nx], spec));
+        assert_eq!(got.lambda, x.eff_exp());
+        assert!(got.acc.is_zero());
+    }
+
+    #[test]
+    fn merge_from_equals_single_accumulator() {
+        let mut rng = XorShift::new(0xE1A3);
+        let spec = AccSpec::exact(BF16);
+        let terms = mixed_terms(&mut rng, BF16, 100);
+        let mut whole = Eia::new();
+        whole.ingest_terms(&terms);
+        let (mut a, mut b) = (Eia::new(), Eia::new());
+        a.ingest_terms(&terms[..37]);
+        b.ingest_terms(&terms[37..]);
+        a.merge_from(&b);
+        assert_eq!(a.terms(), whole.terms());
+        assert_eq!(a.drain(spec), whole.drain(spec));
+    }
+}

@@ -1,0 +1,263 @@
+//! [`EiaSnapshot`]: a canonical, mergeable, serializable checkpoint of an
+//! exponent-indexed accumulator.
+//!
+//! The snapshot stores each occupied bin's *total* value (the carry-save
+//! lane split is an ingest-side detail that canonicalizes away), sorted by
+//! exponent with zero-valued bins dropped. That canonical form makes merge
+//! results comparable bit-for-bit: two snapshots combine by pointwise
+//! exact integer adds plus a λ max and a term-count sum — associative
+//! *and* commutative, so any grouping of per-shard partials collapses to
+//! the same snapshot, exactly like `[λ; acc; sticky]` partials under `⊙`
+//! in exact frames (eq. 10) but without ever leaving the deferred-alignment
+//! domain. The byte codec below is what ships EIA state across shard /
+//! checkpoint boundaries (`stream::shard::ShardMap::merge_eia`).
+
+use super::drain::drain_parts;
+use super::eia::Eia;
+use crate::arith::operator::AlignAcc;
+use crate::arith::AccSpec;
+
+/// Canonical checkpoint of one [`Eia`] (see the module docs).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EiaSnapshot {
+    /// Running maximum effective exponent over the covered live terms
+    /// (0 = identity level) — survives even full cancellation, matching
+    /// the `⊙` fold's λ semantics.
+    pub max_lambda: i32,
+    /// Terms covered (zeros included).
+    pub terms: u64,
+    /// `(eff_exp, exact bin value)`, ascending by exponent, no zeros.
+    pub bins: Vec<(i32, i128)>,
+}
+
+/// Byte-codec magic + version ("EIA", format 1).
+const MAGIC: [u8; 4] = *b"EIA1";
+/// Header: magic (4) + max_lambda (4) + terms (8) + bin count (4).
+const HEADER_LEN: usize = 20;
+/// Per-bin record: eff_exp (4) + value (16).
+const BIN_LEN: usize = 20;
+
+impl EiaSnapshot {
+    /// The identity checkpoint (no terms covered).
+    pub const IDENTITY: EiaSnapshot =
+        EiaSnapshot { max_lambda: 0, terms: 0, bins: Vec::new() };
+
+    /// Capture `eia`'s state in canonical form.
+    pub fn of(eia: &Eia) -> EiaSnapshot {
+        let mut bins = Vec::new();
+        if let Some((lo, hi)) = eia.bins().live_range() {
+            for e in lo..=hi {
+                let v = eia.bins().value(e);
+                if v != 0 {
+                    bins.push((e, v));
+                }
+            }
+        }
+        EiaSnapshot { max_lambda: eia.max_lambda(), terms: eia.terms(), bins }
+    }
+
+    /// True when this is the identity checkpoint.
+    pub fn is_identity(&self) -> bool {
+        self.max_lambda == 0 && self.bins.is_empty()
+    }
+
+    /// Combine two checkpoints (associative and commutative; canonical
+    /// output, so any merge grouping of the same partials is `==`).
+    pub fn merge(&self, other: &EiaSnapshot) -> EiaSnapshot {
+        let mut bins = Vec::with_capacity(self.bins.len() + other.bins.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.bins.len() || j < other.bins.len() {
+            let take_left = match (self.bins.get(i), other.bins.get(j)) {
+                (Some((ea, _)), Some((eb, _))) if ea == eb => {
+                    let v = self.bins[i]
+                        .1
+                        .checked_add(other.bins[j].1)
+                        .expect("EIA bin overflow: accumulator headroom exceeded");
+                    if v != 0 {
+                        bins.push((self.bins[i].0, v));
+                    }
+                    i += 1;
+                    j += 1;
+                    continue;
+                }
+                (Some((ea, _)), Some((eb, _))) => ea < eb,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if take_left {
+                bins.push(self.bins[i]);
+                i += 1;
+            } else {
+                bins.push(other.bins[j]);
+                j += 1;
+            }
+        }
+        EiaSnapshot {
+            max_lambda: self.max_lambda.max(other.max_lambda),
+            terms: self.terms + other.terms,
+            bins,
+        }
+    }
+
+    /// Reconcile-and-align this checkpoint into an [`AlignAcc`] under
+    /// `spec` (same contract as [`Eia::drain`]).
+    pub fn drain(&self, spec: AccSpec) -> AlignAcc {
+        drain_parts(self.max_lambda, self.bins.iter().copied(), spec)
+    }
+
+    /// Restore a live accumulator from this checkpoint.
+    pub fn restore(&self) -> Eia {
+        let mut eia = Eia::new();
+        for &(e, v) in &self.bins {
+            eia.bins_mut().bank_wide(e, v);
+        }
+        eia.set_bookkeeping(self.max_lambda, self.terms);
+        eia
+    }
+
+    /// Serialize to the portable little-endian byte format (see `MAGIC`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + BIN_LEN * self.bins.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&self.max_lambda.to_le_bytes());
+        out.extend_from_slice(&self.terms.to_le_bytes());
+        out.extend_from_slice(&(self.bins.len() as u32).to_le_bytes());
+        for (e, v) in &self.bins {
+            out.extend_from_slice(&e.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize and validate (magic, length, canonical bin order and
+    /// bin range) — a corrupted checkpoint must fail loudly, never bank
+    /// garbage into a live sum.
+    pub fn from_bytes(bytes: &[u8]) -> Result<EiaSnapshot, String> {
+        if bytes.len() < HEADER_LEN {
+            return Err(format!("EIA snapshot too short: {} bytes", bytes.len()));
+        }
+        if bytes[..4] != MAGIC {
+            return Err("EIA snapshot: bad magic".into());
+        }
+        let max_lambda = i32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        let terms = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let count = u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+        if bytes.len() != HEADER_LEN + BIN_LEN * count {
+            return Err(format!(
+                "EIA snapshot: expected {} bytes for {count} bins, got {}",
+                HEADER_LEN + BIN_LEN * count,
+                bytes.len()
+            ));
+        }
+        let mut bins = Vec::with_capacity(count);
+        let mut prev_e = 0i32;
+        for k in 0..count {
+            let at = HEADER_LEN + BIN_LEN * k;
+            let e = i32::from_le_bytes(bytes[at..at + 4].try_into().unwrap());
+            let v = i128::from_le_bytes(bytes[at + 4..at + 20].try_into().unwrap());
+            if !(1..super::bins::MAX_BINS as i32).contains(&e) {
+                return Err(format!("EIA snapshot: bin exponent {e} out of range"));
+            }
+            if e <= prev_e && k > 0 {
+                return Err("EIA snapshot: bins not strictly ascending".into());
+            }
+            if e > max_lambda {
+                return Err(format!("EIA snapshot: bin {e} above λ {max_lambda}"));
+            }
+            if v == 0 {
+                return Err(format!("EIA snapshot: non-canonical zero bin at {e}"));
+            }
+            bins.push((e, v));
+            prev_e = e;
+        }
+        Ok(EiaSnapshot { max_lambda, terms, bins })
+    }
+}
+
+impl Default for EiaSnapshot {
+    fn default() -> Self {
+        EiaSnapshot::IDENTITY
+    }
+}
+
+/// Convenience: snapshot-level equivalent of
+/// [`crate::arith::kernel::ReduceBackend::reduce`] for callers that want
+/// to stay in the deferred domain.
+pub fn snapshot_terms(terms: &[crate::formats::Fp]) -> EiaSnapshot {
+    let mut eia = Eia::new();
+    eia.ingest_terms(terms);
+    eia.snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Fp, BF16};
+    use crate::util::prng::XorShift;
+
+    fn terms(rng: &mut XorShift, n: usize) -> Vec<Fp> {
+        (0..n).map(|_| rng.gen_fp_sparse(BF16, 0.15)).collect()
+    }
+
+    #[test]
+    fn snapshot_merge_matches_one_shot_and_is_canonical() {
+        let mut rng = XorShift::new(0x5AA1);
+        let spec = AccSpec::exact(BF16);
+        for n in [2usize, 17, 64, 200] {
+            let ts = terms(&mut rng, n);
+            let whole = snapshot_terms(&ts);
+            let cut = 1 + rng.below(n as u64 - 1) as usize;
+            let (a, b) = (snapshot_terms(&ts[..cut]), snapshot_terms(&ts[cut..]));
+            // Commutative and equal to the one-shot snapshot, field for
+            // field (canonical form), hence also drain-equal.
+            assert_eq!(a.merge(&b), whole, "n={n} cut={cut}");
+            assert_eq!(b.merge(&a), whole, "n={n} cut={cut}");
+            assert_eq!(a.merge(&b).drain(spec), whole.drain(spec));
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_over_arbitrary_groupings() {
+        let mut rng = XorShift::new(0x5AA2);
+        let ts = terms(&mut rng, 120);
+        let parts: Vec<EiaSnapshot> =
+            ts.chunks(17).map(snapshot_terms).collect();
+        let left = parts[1..]
+            .iter()
+            .fold(parts[0].clone(), |acc, p| acc.merge(p));
+        let mut right = parts[parts.len() - 1].clone();
+        for p in parts[..parts.len() - 1].iter().rev() {
+            right = p.merge(&right);
+        }
+        assert_eq!(left, right);
+        assert_eq!(left, snapshot_terms(&ts));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = XorShift::new(0x5AA3);
+        let s = snapshot_terms(&terms(&mut rng, 30));
+        assert_eq!(EiaSnapshot::IDENTITY.merge(&s), s);
+        assert_eq!(s.merge(&EiaSnapshot::IDENTITY), s);
+        assert!(EiaSnapshot::IDENTITY.is_identity());
+        assert!(EiaSnapshot::IDENTITY.drain(AccSpec::exact(BF16)).is_identity());
+    }
+
+    #[test]
+    fn bytes_roundtrip_and_validation() {
+        let mut rng = XorShift::new(0x5AA4);
+        let s = snapshot_terms(&terms(&mut rng, 50));
+        let bytes = s.to_bytes();
+        assert_eq!(EiaSnapshot::from_bytes(&bytes).unwrap(), s);
+        // Restore path: a round-tripped snapshot re-snapshots identically.
+        assert_eq!(EiaSnapshot::from_bytes(&bytes).unwrap().restore().snapshot(), s);
+        // Corruptions fail loudly.
+        assert!(EiaSnapshot::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(EiaSnapshot::from_bytes(&bad_magic).is_err());
+        let empty = EiaSnapshot::IDENTITY.to_bytes();
+        assert_eq!(EiaSnapshot::from_bytes(&empty).unwrap(), EiaSnapshot::IDENTITY);
+        assert!(EiaSnapshot::from_bytes(b"nope").is_err());
+    }
+}

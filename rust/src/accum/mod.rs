@@ -1,0 +1,47 @@
+//! Exponent-indexed accumulator (EIA): the deferred-alignment backend
+//! (DESIGN.md §Accumulator).
+//!
+//! Every other backend in this crate — the scalar `⊙` fold (Algorithm 3)
+//! and the batched SoA kernel — performs *online* alignment: each term (or
+//! block) pays a max-exponent update and a shift on the ingest path. This
+//! subsystem is the opposite corner of that design space: alignment is
+//! **deferred entirely**. A decoded term `(eff_exp, signed_sig)` is banked
+//! into an accumulator bin indexed by its effective exponent — one integer
+//! add, no max sweep, no shifter — and the whole alignment bill is paid
+//! once, at query time, by a reconcile-and-round drain.
+//!
+//! Layering, bottom up:
+//!
+//! * [`bins`] — per-exponent-bin storage with a carry-save split: a fast
+//!   `i64` lane absorbing ingests plus a spill lane for the (astronomically
+//!   rare) carries, so banking never propagates a wide carry.
+//! * [`eia`] — the accumulator itself: O(1) shift-free ingest of decoded
+//!   terms, tracking the running maximum effective exponent `λ`.
+//! * [`merge`] — [`EiaSnapshot`], a canonical, serializable checkpoint;
+//!   two snapshots combine associatively and commutatively (pointwise
+//!   exact integer adds), exactly like `[λ; acc; sticky]` partials do
+//!   under `⊙` in exact frames — which is what lets EIA state ship
+//!   between shards.
+//! * [`drain`] — the single reconcile step: align every bin against the
+//!   tracked `λ` and produce an [`crate::arith::operator::AlignAcc`].
+//!
+//! **Equivalence contract**: under an exact [`crate::arith::AccSpec`] the
+//! drained `(λ, acc, sticky)` is **bit-identical** to the scalar `⊙` fold
+//! over the same terms (both compute `λ = max eff_exp` and the same exact
+//! integer sum `Σ sig_i · 2^(f − (λ − e_i))`; addition of exactly
+//! represented integers commutes). Under a truncated spec the EIA is its
+//! own parenthesisation — banking is still exact, bits drop only in the
+//! one drain alignment — which buys a *stronger* reproducibility property
+//! than the online backends: the truncated EIA result is invariant to
+//! ingest order, chunking and merge grouping, because nothing lossy
+//! happens before the final drain. `tests/eia_equivalence.rs` pins both
+//! properties, plus a ≥ 5k-vector-per-format differential-oracle gate.
+
+pub mod bins;
+pub mod drain;
+pub mod eia;
+pub mod merge;
+
+pub use bins::{ExpBins, MAX_BINS};
+pub use eia::{reduce_terms_eia, Eia};
+pub use merge::EiaSnapshot;

@@ -34,16 +34,22 @@ pub enum Architecture {
         /// Lanes per SoA block.
         block: usize,
     },
+    /// The exponent-indexed accumulator ([`crate::accum`]): deferred
+    /// alignment — shift-free per-term banking, one reconcile-and-align
+    /// drain. Bit-identical to the scalar fold in exact specs; in
+    /// truncated specs it is the deferred (drain-once) parenthesisation.
+    Eia,
 }
 
 impl Architecture {
-    /// Parse `"baseline"`, `"online"`, `"exact"`, `"kernel"` /
+    /// Parse `"baseline"`, `"online"`, `"exact"`, `"eia"`, `"kernel"` /
     /// `"kernel:<block>"` or a radix config (`"8-2-2"`).
     pub fn parse(s: &str, _n_terms: u32) -> Result<Self, String> {
         match s.to_ascii_lowercase().as_str() {
             "baseline" | "base" => Ok(Architecture::Baseline),
             "online" | "serial-online" => Ok(Architecture::Online),
             "exact" | "kulisch" => Ok(Architecture::Exact),
+            "eia" => Ok(Architecture::Eia),
             other if other == "kernel" || other.starts_with("kernel:") => {
                 // One parser for the kernel syntax: delegate to the
                 // ReduceBackend grammar ("kernel" / "kernel:<block>").
@@ -55,6 +61,21 @@ impl Architecture {
                 }
             }
             other => other.parse::<RadixConfig>().map(Architecture::Tree),
+        }
+    }
+}
+
+impl std::fmt::Display for Architecture {
+    /// Canonical spelling, round-trippable through [`Architecture::parse`]
+    /// (property-pinned in `tests/properties.rs`).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Architecture::Baseline => f.write_str("baseline"),
+            Architecture::Online => f.write_str("online"),
+            Architecture::Exact => f.write_str("exact"),
+            Architecture::Eia => f.write_str("eia"),
+            Architecture::Tree(cfg) => write!(f, "{cfg}"),
+            Architecture::Kernel { block } => write!(f, "kernel:{block}"),
         }
     }
 }
@@ -140,6 +161,7 @@ impl MultiTermAdder {
             Architecture::Kernel { block } => {
                 super::kernel::reduce_terms(lanes, *block, self.spec)
             }
+            Architecture::Eia => crate::accum::reduce_terms_eia(lanes, self.spec),
         }
     }
 
@@ -189,6 +211,7 @@ mod tests {
                 Architecture::Baseline,
                 Architecture::Online,
                 Architecture::Exact,
+                Architecture::Eia,
                 Architecture::Tree("4-4".parse().unwrap()),
                 Architecture::Tree("2-2-2-2".parse().unwrap()),
                 Architecture::Tree("8-2".parse().unwrap()),

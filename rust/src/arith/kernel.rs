@@ -203,6 +203,13 @@ pub enum ReduceBackend {
         /// Lanes per block (clamped to ≥ 1).
         block: usize,
     },
+    /// The exponent-indexed accumulator ([`crate::accum`]): shift-free
+    /// O(1) banking per term, one reconcile-and-align drain at the end.
+    /// Bit-identical to the scalar fold on exact specs; on truncated specs
+    /// it is the deferred-alignment parenthesisation — bits drop only in
+    /// the single drain, making the result ingest-order invariant even
+    /// when truncating.
+    Eia,
 }
 
 impl ReduceBackend {
@@ -229,6 +236,7 @@ impl ReduceBackend {
         match self.resolve(spec) {
             ReduceBackend::Scalar => scalar_fold(terms, spec),
             ReduceBackend::Kernel { block } => reduce_terms(terms, block, spec),
+            ReduceBackend::Eia => crate::accum::reduce_terms_eia(terms, spec),
             ReduceBackend::Auto => unreachable!("resolve() never returns Auto"),
         }
     }
@@ -240,6 +248,7 @@ impl fmt::Display for ReduceBackend {
             ReduceBackend::Auto => write!(f, "auto"),
             ReduceBackend::Scalar => write!(f, "scalar"),
             ReduceBackend::Kernel { block } => write!(f, "kernel:{block}"),
+            ReduceBackend::Eia => write!(f, "eia"),
         }
     }
 }
@@ -247,12 +256,14 @@ impl fmt::Display for ReduceBackend {
 impl FromStr for ReduceBackend {
     type Err = String;
 
-    /// Parse `"auto"`, `"scalar"`, `"kernel"` or `"kernel:<block>"`.
+    /// Parse `"auto"`, `"scalar"`, `"kernel"`, `"kernel:<block>"` or
+    /// `"eia"`.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Ok(ReduceBackend::Auto),
             "scalar" => Ok(ReduceBackend::Scalar),
             "kernel" => Ok(ReduceBackend::KERNEL),
+            "eia" => Ok(ReduceBackend::Eia),
             other => match other.strip_prefix("kernel:") {
                 Some(b) => {
                     let block: usize =
@@ -263,7 +274,8 @@ impl FromStr for ReduceBackend {
                     Ok(ReduceBackend::Kernel { block })
                 }
                 None => Err(format!(
-                    "unknown backend {s:?} (expected auto, scalar, kernel or kernel:<block>)"
+                    "unknown backend {s:?} (expected auto, scalar, kernel, \
+                     kernel:<block> or eia)"
                 )),
             },
         }
@@ -406,6 +418,8 @@ mod tests {
             ReduceBackend::Kernel { block: 8 }
         );
         assert_eq!("auto".parse::<ReduceBackend>().unwrap(), ReduceBackend::Auto);
+        assert_eq!("eia".parse::<ReduceBackend>().unwrap(), ReduceBackend::Eia);
+        assert_eq!(ReduceBackend::Eia.to_string(), "eia");
         assert!("kernel:0".parse::<ReduceBackend>().is_err());
         assert!("simd".parse::<ReduceBackend>().is_err());
         let exact = AccSpec::exact(BF16);
@@ -427,6 +441,38 @@ mod tests {
             assert_eq!(ReduceBackend::Auto.reduce(&terms, spec), want);
             assert_eq!(ReduceBackend::KERNEL.reduce(&terms, spec), want);
             assert_eq!(ReduceBackend::Kernel { block: 7 }.reduce(&terms, spec), want);
+            assert_eq!(ReduceBackend::Eia.reduce(&terms, spec), want);
+        }
+    }
+
+    #[test]
+    fn short_and_single_term_inputs_reduce_as_one_partial_block() {
+        // `len < block` takes the single-partial-block path: identical to
+        // the radix-`len` operator over the same leaves in ANY spec (the
+        // identity ⊙ prefix is transparent), and hence to the scalar fold
+        // in exact specs. Dedicated coverage — the seam's consumers feed
+        // short tails here constantly.
+        let mut rng = XorShift::new(0x51E);
+        for spec in [AccSpec::exact(BF16), AccSpec::truncated(3)] {
+            for n in [1usize, 2, 7] {
+                let terms = mixed_terms(&mut rng, BF16, n);
+                let leaves: Vec<AlignAcc> =
+                    terms.iter().map(|t| AlignAcc::leaf(*t, spec)).collect();
+                let want = op_combine_many(&leaves, spec);
+                for block in [8usize, 64, 1024] {
+                    assert_eq!(
+                        reduce_terms(&terms, block, spec),
+                        want,
+                        "n={n} block={block} {spec:?}"
+                    );
+                }
+            }
+        }
+        // A single full-space term is exactly its leaf in exact mode.
+        let spec = AccSpec::exact(BF16);
+        for _ in 0..100 {
+            let t = rng.gen_fp_full(BF16);
+            assert_eq!(reduce_terms(&[t], 64, spec), AlignAcc::leaf(t, spec), "{t:?}");
         }
     }
 }

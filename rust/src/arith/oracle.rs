@@ -16,8 +16,8 @@
 //! [`run_oracle`] fuzzes adversarial operand distributions (uniform
 //! full-range, subnormal-dense, cancellation-heavy, mixed-sign
 //! near-overflow) through baseline / online / Kulisch / SoA-kernel /
-//! mixed-radix-tree architectures under exact [`AccSpec`]s (narrow and
-//! wide paths) and
+//! exponent-indexed-accumulator / mixed-radix-tree architectures under
+//! exact [`AccSpec`]s (narrow and wide paths) and
 //! reports every bit mismatch, plus a faithfulness bound for the
 //! hardware-default truncated datapath. The `repro oracle` CLI subcommand
 //! and `tests/oracle_differential.rs` drive it; see DESIGN.md §Oracle.
@@ -359,11 +359,12 @@ pub fn run_oracle(fmt: FpFormat, cfg: &OracleConfig) -> OracleReport {
     // rather than per vector. The SoA kernel runs at a deliberately awkward
     // block size (the vector length never divides evenly) so the
     // partial-tail block path is fuzzed too.
-    let fixed_archs: [(&str, Architecture); 4] = [
+    let fixed_archs: [(&str, Architecture); 5] = [
         ("baseline", Architecture::Baseline),
         ("online", Architecture::Online),
         ("kulisch", Architecture::Exact),
         ("kernel-b5", Architecture::Kernel { block: 5 }),
+        ("eia", Architecture::Eia),
     ];
     let tree_archs: Vec<(String, Architecture)> = enumerate_configs(n as u32)
         .into_iter()

@@ -5,10 +5,12 @@
 //!
 //! The crate is organised in five tiers:
 //!
-//! * [`formats`] + [`arith`] — bit-accurate models of every algorithm in the
-//!   paper: the serial baseline (Algorithm 2), the online fused recurrence
-//!   (Algorithm 3, eq. 7), the associative align-and-add operator `⊙`
-//!   (eq. 8) and arbitrary mixed-radix operator trees (eq. 9, Fig. 2).
+//! * [`formats`] + [`arith`] + [`accum`] — bit-accurate models of every
+//!   algorithm in the paper: the serial baseline (Algorithm 2), the online
+//!   fused recurrence (Algorithm 3, eq. 7), the associative align-and-add
+//!   operator `⊙` (eq. 8), arbitrary mixed-radix operator trees (eq. 9,
+//!   Fig. 2), and the deferred-alignment exponent-indexed accumulator
+//!   (the `eia` backend) as the opposite corner of the same design space.
 //! * [`hw`] — structural hardware cost models (unit-gate area/delay,
 //!   pipeline-stage scheduling, switching-activity power) that regenerate
 //!   the paper's evaluation (Fig. 4, Fig. 5, Table I).
@@ -26,6 +28,7 @@
 //! See `DESIGN.md` for the crate map and the experiment index (including
 //! the perf and calibration notes the code comments cite).
 
+pub mod accum;
 pub mod arith;
 pub mod bench_util;
 pub mod coordinator;
@@ -37,6 +40,7 @@ pub mod stream;
 pub mod util;
 pub mod workload;
 
+pub use accum::{Eia, EiaSnapshot};
 pub use arith::{
     baseline::baseline_sum,
     kernel::ReduceBackend,

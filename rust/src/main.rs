@@ -8,6 +8,7 @@
 //! repro add    --format bf16 --arch 8-2-2 x y z ...    one fused addition
 //! repro oracle [--format all] [--vectors 2000]         differential oracle
 //! repro kernel [--format all] [--n 1024] [--blocks 1,8,64]  SoA-kernel check
+//! repro eia    [--format all] [--n 1024] [--vectors 64]     EIA backend check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
@@ -32,6 +33,7 @@ fn main() -> ExitCode {
         "add" => cmd_add(&args),
         "oracle" => cmd_oracle(&args),
         "kernel" => cmd_kernel(&args),
+        "eia" => cmd_eia(&args),
         "sweep" => cmd_sweep(&args),
         "e2e" => cmd_e2e(&args),
         "serve" => cmd_serve(&args),
@@ -69,6 +71,14 @@ commands:
                                           [λ; acc; sticky] state bit-matches
                                           the scalar ⊙ fold per block size,
                                           and report the measured speedup
+  eia     [--format F|all] [--n 1024] [--vectors 64] [--seed S]
+                                          exponent-indexed accumulator
+                                          check: assert the deferred-
+                                          alignment drain bit-matches the
+                                          scalar ⊙ fold, that split-merge
+                                          snapshots (bytes round-tripped)
+                                          equal one-shot banking, and
+                                          report ingest/drain throughput
   sweep   --format F --n N [--clock 1.0]  raw design-space dump for any N
   e2e     [--sentences 4] [--requests 256] PJRT BERT workload + batched serving demo
   serve   [--requests 2048] [--clients 8]  load-test the batched PJRT reduction path
@@ -282,6 +292,87 @@ fn cmd_kernel(args: &Args) -> Result<(), String> {
         return Err(format!("{bad} kernel states differed from the scalar fold"));
     }
     println!("kernel [λ; acc; sticky] bit-matches the scalar fold on every vector ✓");
+    Ok(())
+}
+
+/// Exponent-indexed accumulator check (DESIGN.md §Accumulator): fuzz the
+/// oracle's adversarial operand distributions through the deferred-
+/// alignment EIA backend, assert the drained `[λ; acc; sticky]` state
+/// bit-matches the scalar `⊙` fold (exact specs), assert split-merge
+/// snapshot banking (serialized to bytes and back) equals one-shot
+/// banking, and report the measured throughput of both backends. Exits
+/// nonzero on any mismatch.
+fn cmd_eia(args: &Args) -> Result<(), String> {
+    use online_fp_add::accum::{merge::snapshot_terms, reduce_terms_eia, EiaSnapshot};
+    use online_fp_add::arith::kernel::scalar_fold;
+    use online_fp_add::arith::oracle::DISTRIBUTIONS;
+    use online_fp_add::arith::AccSpec;
+    use online_fp_add::formats::PAPER_FORMATS;
+    use online_fp_add::util::prng::XorShift;
+    use std::time::Instant;
+
+    let n = args.get_usize("n", 1024)?.max(2);
+    let vectors = args.get_usize("vectors", 64)?.max(1);
+    let seed = args.get_u64("seed", 0xE1A_5EED)?;
+    let fmts: Vec<online_fp_add::formats::FpFormat> = match args.get("format") {
+        Some(name) if name != "all" => {
+            vec![format_by_name(name).ok_or_else(|| "unknown --format".to_string())?]
+        }
+        _ => PAPER_FORMATS.to_vec(),
+    };
+    let mut table = online_fp_add::util::table::Table::new(vec![
+        "format", "scalar Mterms/s", "eia Mterms/s", "speedup", "drain mism", "merge mism",
+    ]);
+    let mut bad = 0u64;
+    for fmt in fmts {
+        let spec = AccSpec::exact(fmt);
+        let mut rng =
+            XorShift::new(seed ^ ((fmt.ebits as u64) << 32) ^ ((fmt.mbits as u64) << 40));
+        let data: Vec<Vec<Fp>> = (0..vectors)
+            .map(|v| DISTRIBUTIONS[v % DISTRIBUTIONS.len()].gen_vector(&mut rng, fmt, n))
+            .collect();
+        let t0 = Instant::now();
+        let reference: Vec<_> = data.iter().map(|v| scalar_fold(v, spec)).collect();
+        let scalar_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let got: Vec<_> = data.iter().map(|v| reduce_terms_eia(v, spec)).collect();
+        let eia_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
+        let drain_mismatches =
+            got.iter().zip(&reference).filter(|(g, w)| g != w).count() as u64;
+        // Split-merge reproducibility: banking each vector in two pieces,
+        // shipping both snapshots through the byte codec and merging, must
+        // equal one-shot banking — canonically (snapshot ==) and therefore
+        // also after the drain.
+        let mut merge_mismatches = 0u64;
+        for (v, terms) in data.iter().enumerate() {
+            let cut = 1 + (v * 7919) % (n - 1);
+            let whole = snapshot_terms(terms);
+            let halves = [&terms[..cut], &terms[cut..]].map(|half| {
+                EiaSnapshot::from_bytes(&snapshot_terms(half).to_bytes())
+                    .expect("valid checkpoint bytes")
+            });
+            if halves[0].merge(&halves[1]) != whole {
+                merge_mismatches += 1;
+            }
+        }
+        bad += drain_mismatches + merge_mismatches;
+        table.row(vec![
+            fmt.to_string(),
+            format!("{:.1}", scalar_tput / 1e6),
+            format!("{:.1}", eia_tput / 1e6),
+            format!("{:.2}x", eia_tput / scalar_tput),
+            drain_mismatches.to_string(),
+            merge_mismatches.to_string(),
+        ]);
+    }
+    println!(
+        "EIA (deferred alignment) vs scalar ⊙ fold — {vectors} adversarial vectors × {n} terms per format\n"
+    );
+    println!("{}", table.render());
+    if bad > 0 {
+        return Err(format!("{bad} EIA states differed from the scalar fold / one-shot banking"));
+    }
+    println!("EIA drain bit-matches the scalar fold and split-merge banking on every vector ✓");
     Ok(())
 }
 

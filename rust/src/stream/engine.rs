@@ -371,6 +371,7 @@ mod tests {
             ReduceBackend::Scalar,
             ReduceBackend::KERNEL,
             ReduceBackend::Kernel { block: 5 },
+            ReduceBackend::Eia,
             ReduceBackend::Auto,
         ] {
             let engine = StreamEngine::new(EngineConfig { backend, ..config(4, 16) });
@@ -440,6 +441,24 @@ mod tests {
         assert!(overloaded, "bounded queue must reject past its depth");
         assert!(engine.metrics().rejected.get() >= 1);
         engine.quiesce(); // everything accepted still completes
+    }
+
+    #[test]
+    fn empty_batch_ingest_is_counted_but_merges_nothing() {
+        // A zero-term batch is legal traffic (clients flush empty
+        // buffers): it must be accepted, complete (quiesce stays live),
+        // create no stream state, and leave later batches unaffected.
+        let engine = StreamEngine::new(config(2, 8));
+        assert_eq!(engine.ingest("empty", Vec::new()).unwrap(), 0);
+        engine.quiesce();
+        assert!(engine.snapshot("empty").is_none(), "no segment, no stream state");
+        assert_eq!(engine.metrics().batches.get(), 1);
+        assert_eq!(engine.metrics().ingested_terms.get(), 0);
+        assert_eq!(engine.metrics().merges.get(), 0);
+        let one = Fp::from_f64(1.0, BF16);
+        engine.ingest_blocking("live", vec![one]).unwrap();
+        engine.quiesce();
+        assert_eq!(engine.snapshot("live").unwrap().terms, 1);
     }
 
     #[test]

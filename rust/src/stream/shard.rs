@@ -7,6 +7,7 @@
 //! stripe lock (which is all exact-mode `⊙` needs — any order, same bits).
 
 use super::segment::Segment;
+use crate::accum::EiaSnapshot;
 use crate::arith::operator::AlignAcc;
 use crate::arith::{AccSpec, WideInt};
 use std::collections::hash_map::DefaultHasher;
@@ -96,6 +97,19 @@ impl ShardMap {
                 seg.terms
             }
         }
+    }
+
+    /// Merge a deferred-alignment EIA checkpoint
+    /// ([`crate::accum::EiaSnapshot`], e.g. deserialized from a peer shard
+    /// via `EiaSnapshot::from_bytes`) into `id`'s stream state: the
+    /// snapshot reconciles (drains) under this map's spec and merges as an
+    /// ordinary segment. Under an exact spec this is bit-identical to
+    /// having ingested the snapshot's terms into this map directly — the
+    /// drain equals the scalar `⊙` fold over those terms, and `⊙` is
+    /// associative (eq. 10). Returns the stream's new term count.
+    pub fn merge_eia(&self, id: &str, snap: &EiaSnapshot) -> u64 {
+        let seg = Segment { state: snap.drain(self.spec), terms: snap.terms };
+        self.merge(id, seg)
     }
 
     /// Copy out `id`'s current checkpoint, if the stream exists.
@@ -215,6 +229,29 @@ mod tests {
         for (i, s) in segs.iter().enumerate() {
             assert_eq!(map.snapshot(&format!("stream-{i}")).unwrap().segment(), *s);
         }
+    }
+
+    #[test]
+    fn eia_snapshots_serialize_and_merge_across_shards() {
+        use crate::accum::{merge::snapshot_terms, EiaSnapshot};
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(4);
+        let terms: Vec<Fp> = (0..120).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+        // Reference: the whole vector ingested directly as one segment.
+        let reference = ShardMap::new(2, spec);
+        reference.merge("s", reduce_chunk(&terms, spec));
+        // Two worker shards bank disjoint halves into EIAs, ship their
+        // snapshots as bytes, and the destination merges the deserialized
+        // checkpoints — same stream, same bits.
+        let dst = ShardMap::new(4, spec);
+        for half in [&terms[..53], &terms[53..]] {
+            let wire = snapshot_terms(half).to_bytes();
+            let snap = EiaSnapshot::from_bytes(&wire).expect("valid checkpoint");
+            dst.merge_eia("s", &snap);
+        }
+        let (want, got) = (reference.snapshot("s").unwrap(), dst.snapshot("s").unwrap());
+        assert_eq!(got.state(), want.state());
+        assert_eq!(got.terms, want.terms);
     }
 
     #[test]

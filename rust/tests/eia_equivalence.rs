@@ -1,0 +1,242 @@
+//! EIA acceptance battery (DESIGN.md §Accumulator): the exponent-indexed
+//! accumulator's reconcile-and-round drain must be **bit-identical** to
+//! the scalar `⊙` fold — the full `(λ, acc, sticky)` state — across all
+//! five paper formats × the oracle's adversarial distributions × the
+//! narrow-`i128` and wide-`WideInt` accumulator paths; snapshot merging at
+//! arbitrary split points must equal one-shot banking; serialized
+//! checkpoints must round-trip; and a dedicated ≥ 5k-vector-per-format
+//! differential-oracle gate must run with **zero** mismatches against the
+//! independent sign-magnitude reference. On top of the equivalence gates,
+//! the deferred-alignment reproducibility property is pinned: even under
+//! truncated specs the EIA result is ingest-order invariant, because
+//! banking is exact and bits can only drop in the single drain.
+
+use online_fp_add::accum::{merge::snapshot_terms, reduce_terms_eia, Eia, EiaSnapshot};
+use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
+use online_fp_add::arith::kernel::{scalar_fold, ReduceBackend};
+use online_fp_add::arith::oracle::{reference_sum, DISTRIBUTIONS};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, FpClass, FpFormat, BF16, FP32, PAPER_FORMATS};
+use online_fp_add::util::prng::XorShift;
+
+/// Exact spec plus, where the format's exact frame fits the i128 fast
+/// path, the forced wide-`WideInt` variant — both must produce the same
+/// bits as the fold does under the same spec.
+fn exact_specs(fmt: FpFormat) -> Vec<AccSpec> {
+    let exact = AccSpec::exact(fmt);
+    let mut specs = vec![exact];
+    if exact.narrow {
+        specs.push(AccSpec { narrow: false, ..exact });
+    }
+    specs
+}
+
+#[test]
+fn eia_drain_bit_matches_scalar_fold_all_formats_distributions_and_paths() {
+    let mut rng = XorShift::new(0xE1A_0001);
+    for fmt in PAPER_FORMATS {
+        for spec in exact_specs(fmt) {
+            for dist in DISTRIBUTIONS {
+                for n in [1usize, 5, 16, 64, 200] {
+                    let terms = dist.gen_vector(&mut rng, fmt, n);
+                    let want = scalar_fold(&terms, spec);
+                    assert_eq!(
+                        reduce_terms_eia(&terms, spec),
+                        want,
+                        "{fmt} {} n={n} narrow={}",
+                        dist.name(),
+                        spec.narrow
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn eia_oracle_gate_runs_clean_over_5k_vectors_per_format() {
+    // The dedicated differential gate: ≥ 5k adversarial vectors per
+    // format, rounded EIA results vs the independent big-int reference,
+    // zero mismatches, on every exact accumulator path the format offers.
+    let n = 16usize;
+    for fmt in PAPER_FORMATS {
+        let mut rng = XorShift::new(0xE1A_D1FF ^ ((fmt.ebits as u64) << 32));
+        let specs = exact_specs(fmt);
+        let mut checks = 0u64;
+        let mut mismatches = 0u64;
+        for v in 0..5_000usize {
+            let dist = DISTRIBUTIONS[v % DISTRIBUTIONS.len()];
+            let terms = dist.gen_vector(&mut rng, fmt, n);
+            let expected = reference_sum(&terms, fmt);
+            for &spec in &specs {
+                let adder =
+                    MultiTermAdder { format: fmt, n_terms: n, spec, arch: Architecture::Eia };
+                checks += 1;
+                if adder.add(&terms).bits != expected.bits {
+                    mismatches += 1;
+                }
+            }
+        }
+        assert_eq!(mismatches, 0, "{fmt}: EIA oracle mismatches");
+        assert!(checks >= 5_000, "{fmt}: only {checks} EIA checks ran");
+    }
+}
+
+#[test]
+fn snapshot_merge_at_arbitrary_split_points_equals_one_shot() {
+    // Associativity of the deferred domain: chop a vector at random split
+    // points, bank each piece into its own EIA, merge the snapshots in a
+    // random binary grouping — the canonical snapshot, and therefore the
+    // drained state, must equal one-shot banking of the whole vector.
+    let mut rng = XorShift::new(0xE1A_0002);
+    for fmt in PAPER_FORMATS {
+        let spec = AccSpec::exact(fmt);
+        for trial in 0..40 {
+            let n = 2 + rng.below(260) as usize;
+            let dist = DISTRIBUTIONS[trial % DISTRIBUTIONS.len()];
+            let terms = dist.gen_vector(&mut rng, fmt, n);
+            let whole = snapshot_terms(&terms);
+            // 1..=4 random cut points -> up to 5 pieces (possibly empty).
+            let mut cuts: Vec<usize> =
+                (0..1 + rng.below(4) as usize).map(|_| rng.below(n as u64 + 1) as usize).collect();
+            cuts.sort_unstable();
+            let mut pieces: Vec<EiaSnapshot> = Vec::new();
+            let mut start = 0usize;
+            for &c in cuts.iter().chain(std::iter::once(&n)) {
+                pieces.push(snapshot_terms(&terms[start..c]));
+                start = c;
+            }
+            // Random parenthesisation: repeatedly merge a random adjacent
+            // pair until one snapshot remains.
+            while pieces.len() > 1 {
+                let i = rng.below(pieces.len() as u64 - 1) as usize;
+                let merged = pieces[i].merge(&pieces[i + 1]);
+                pieces.remove(i + 1);
+                pieces[i] = merged;
+            }
+            assert_eq!(pieces[0], whole, "{fmt} n={n} cuts={cuts:?}");
+            assert_eq!(pieces[0].drain(spec), whole.drain(spec), "{fmt} n={n}");
+            assert_eq!(whole.drain(spec), scalar_fold(&terms, spec), "{fmt} n={n}");
+        }
+    }
+}
+
+#[test]
+fn snapshot_bytes_roundtrip_across_formats_and_restore() {
+    let mut rng = XorShift::new(0xE1A_0003);
+    for fmt in PAPER_FORMATS {
+        let spec = AccSpec::exact(fmt);
+        for (d, dist) in DISTRIBUTIONS.iter().enumerate() {
+            let terms = dist.gen_vector(&mut rng, fmt, 32 + d);
+            let snap = snapshot_terms(&terms);
+            let back = EiaSnapshot::from_bytes(&snap.to_bytes()).expect("roundtrip");
+            assert_eq!(back, snap, "{fmt} {}", dist.name());
+            assert_eq!(back.drain(spec), snap.drain(spec));
+            // Restoring a live accumulator and continuing to ingest equals
+            // having banked everything into one accumulator.
+            let extra = dist.gen_vector(&mut rng, fmt, 16);
+            let mut resumed = back.restore();
+            resumed.ingest_terms(&extra);
+            let mut oneshot = Eia::new();
+            oneshot.ingest_terms(&terms);
+            oneshot.ingest_terms(&extra);
+            assert_eq!(resumed.snapshot(), oneshot.snapshot(), "{fmt} {}", dist.name());
+        }
+    }
+}
+
+#[test]
+fn truncated_eia_is_ingest_order_and_grouping_invariant() {
+    // The reproducibility gate: under a truncated spec the online fold's
+    // dropped-bit pattern depends on term order, but the EIA's cannot —
+    // banking is exact; the only lossy step is the single drain over
+    // per-exponent totals, which are order-free sums.
+    let mut rng = XorShift::new(0xE1A_0004);
+    for spec in [AccSpec::truncated(2), AccSpec::truncated(8), AccSpec::truncated(16)] {
+        for _ in 0..60 {
+            let mut terms: Vec<Fp> = (0..50).map(|_| rng.gen_fp_full(FP32)).collect();
+            let want = reduce_terms_eia(&terms, spec);
+            rng.shuffle(&mut terms);
+            assert_eq!(reduce_terms_eia(&terms, spec), want, "order");
+            // Grouped banking through snapshots drops the same bits.
+            let cut = 1 + rng.below(terms.len() as u64 - 1) as usize;
+            let grouped = snapshot_terms(&terms[..cut]).merge(&snapshot_terms(&terms[cut..]));
+            assert_eq!(grouped.drain(spec), want, "grouping");
+        }
+    }
+}
+
+#[test]
+fn eia_flows_through_every_seam_consumer() {
+    use online_fp_add::stream::{reduce_chunk_with, EngineConfig, StreamEngine};
+    use online_fp_add::workload::matmul::matmul_fused;
+
+    let spec = AccSpec::exact(BF16);
+    let mut rng = XorShift::new(0xE1A_0005);
+
+    // The backend spelling parses and resolves to itself on any spec.
+    let parsed: ReduceBackend = "eia".parse().unwrap();
+    assert_eq!(parsed, ReduceBackend::Eia);
+    assert_eq!(ReduceBackend::Eia.resolve(spec), ReduceBackend::Eia);
+    assert_eq!(ReduceBackend::Eia.resolve(AccSpec::truncated(4)), ReduceBackend::Eia);
+    assert_eq!(Architecture::parse("eia", 16).unwrap(), Architecture::Eia);
+
+    // stream::segment::reduce_chunk_with.
+    let terms: Vec<Fp> = (0..200).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
+    let want = reduce_chunk_with(ReduceBackend::Scalar, &terms, spec);
+    assert_eq!(reduce_chunk_with(ReduceBackend::Eia, &terms, spec), want);
+
+    // EngineConfig::backend — end to end through the threaded engine.
+    let engine = StreamEngine::new(EngineConfig {
+        threads: 4,
+        chunk: 16,
+        backend: ReduceBackend::Eia,
+        ..Default::default()
+    });
+    for row in terms.chunks(25) {
+        engine.ingest_blocking("s", row.to_vec()).unwrap();
+    }
+    engine.quiesce();
+    assert_eq!(engine.snapshot("s").unwrap().state(), want.state);
+
+    // workload::matmul::matmul_fused — round-once dot products.
+    let (m, k, n) = (3usize, 40usize, 4usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.gauss() as f32).collect();
+    let mspec = AccSpec::exact(FP32);
+    let scalar = matmul_fused(&a, &b, (m, k, n), FP32, mspec, ReduceBackend::Scalar);
+    let eia = matmul_fused(&a, &b, (m, k, n), FP32, mspec, ReduceBackend::Eia);
+    for (s, e) in scalar.iter().zip(&eia) {
+        assert_eq!(s.bits, e.bits, "matmul backends must be bit-identical on exact specs");
+    }
+}
+
+#[test]
+fn eia_adder_screens_special_values_like_every_architecture() {
+    let adder = MultiTermAdder::exact(BF16, 4, Architecture::Eia);
+    let inf = Fp::overflow(false, BF16);
+    let ninf = Fp::overflow(true, BF16);
+    let nan = Fp::nan(BF16);
+    let one = Fp::from_f64(1.0, BF16);
+    assert_eq!(adder.add(&[one, nan, one, one]).class(), FpClass::Nan);
+    assert_eq!(adder.add(&[inf, ninf, one, one]).class(), FpClass::Nan);
+    assert_eq!(adder.add(&[inf, one, one, one]).class(), FpClass::Inf);
+    let r = adder.add(&[ninf, one, one, one]);
+    assert_eq!(r.class(), FpClass::Inf);
+    assert!(r.sign());
+    // Zero-padding of short inputs is transparent, as for every arch.
+    assert_eq!(adder.add(&[one, one]).to_f64(), 2.0);
+}
+
+#[test]
+fn eia_empty_and_degenerate_inputs() {
+    let spec = AccSpec::exact(BF16);
+    assert!(reduce_terms_eia(&[], spec).is_identity());
+    let zeros = vec![Fp::zero(BF16); 9];
+    assert!(reduce_terms_eia(&zeros, spec).is_identity());
+    // Term counts still flow through snapshots for zero-only traffic.
+    let snap = snapshot_terms(&zeros);
+    assert!(snap.is_identity());
+    assert_eq!(snap.terms, 9);
+    assert_eq!(EiaSnapshot::from_bytes(&snap.to_bytes()).unwrap(), snap);
+}

@@ -360,3 +360,78 @@ fn prop_narrow_fast_path_is_bit_identical_to_wide_path() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_backend_and_architecture_display_parse_roundtrip() {
+    // CLI flags and config files address backends/architectures by their
+    // printed form; the spelling must never drift from the parser — every
+    // `Display` output (including `kernel:<block>` and the new `eia`)
+    // reparses to the same value.
+    use online_fp_add::arith::kernel::ReduceBackend;
+    check("Display ↔ parse round-trip", 600, |g| {
+        let backend = match g.rng.below(4) {
+            0 => ReduceBackend::Auto,
+            1 => ReduceBackend::Scalar,
+            2 => ReduceBackend::Eia,
+            _ => ReduceBackend::Kernel { block: 1 + g.rng.below(4096) as usize },
+        };
+        let printed = backend.to_string();
+        let reparsed: ReduceBackend =
+            printed.parse().map_err(|e| format!("backend {printed:?}: {e}"))?;
+        if reparsed != backend {
+            return Err(format!("backend {backend:?} printed {printed:?} reparsed {reparsed:?}"));
+        }
+        let n = [4u32, 8, 16, 32][g.rng.below(4) as usize];
+        let arch = match g.rng.below(6) {
+            0 => Architecture::Baseline,
+            1 => Architecture::Online,
+            2 => Architecture::Exact,
+            3 => Architecture::Eia,
+            4 => Architecture::Kernel { block: 1 + g.rng.below(512) as usize },
+            _ => {
+                let cfgs = enumerate_configs(n);
+                Architecture::Tree(cfgs[g.rng.below(cfgs.len() as u64) as usize].clone())
+            }
+        };
+        let printed = arch.to_string();
+        let reparsed =
+            Architecture::parse(&printed, n).map_err(|e| format!("arch {printed:?}: {e}"))?;
+        if reparsed != arch {
+            return Err(format!("arch {arch:?} printed {printed:?} reparsed {reparsed:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_monotone_growing_one_operand_never_decreases_the_sum() {
+    // Monotonicity of multi-term adders (Mikaitis, 2023): a fused adder
+    // that accumulates exactly and normalizes/rounds ONCE is monotone in
+    // every operand — RNE is a monotone rounding and the exact datapath
+    // sums are ordered with the operands. Pin it across all three
+    // reduction backends (scalar ⊙ fold, SoA kernel, EIA) over the full
+    // operand space, subnormals and signed zeros included.
+    use online_fp_add::arith::kernel::ReduceBackend;
+    check("monotone in each operand", 500, |g| {
+        let fmt = random_fmt(&mut g.rng);
+        let spec = AccSpec::exact(fmt);
+        let n = 2 + g.rng.below(24) as usize;
+        let mut terms: Vec<Fp> = g.fp_full_vec(fmt, n);
+        let i = g.rng.below(n as u64) as usize;
+        let (a, b) = (terms[i], g.fp_full(fmt));
+        let (small, large) = if a.to_f64() <= b.to_f64() { (a, b) } else { (b, a) };
+        for backend in [ReduceBackend::Scalar, ReduceBackend::KERNEL, ReduceBackend::Eia] {
+            terms[i] = small;
+            let lo = normalize_round(&backend.reduce(&terms, spec), spec, fmt).to_f64();
+            terms[i] = large;
+            let hi = normalize_round(&backend.reduce(&terms, spec), spec, fmt).to_f64();
+            if hi < lo {
+                return Err(format!(
+                    "{fmt} {backend}: growing lane {i} from {small:?} to {large:?} \
+                     dropped the sum {lo} -> {hi}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

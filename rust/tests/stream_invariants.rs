@@ -178,9 +178,10 @@ fn prop_chunked_service_query_equals_exact_reference() {
     });
 }
 
-/// End-to-end stream oracle with the SoA-kernel backend: replay a real
-/// BERT partial-product trace through a [`StreamService`] whose chunks are
-/// reduced by the batched kernel, and check every per-stream **query**
+/// End-to-end stream oracle with the SoA-kernel and EIA backends: replay a
+/// real BERT partial-product trace through a [`StreamService`] whose
+/// chunks are reduced by the batched kernel (or banked into the
+/// exponent-indexed accumulator), and check every per-stream **query**
 /// (one rounding over the whole history) against the independent
 /// sign-magnitude big-int reference ([`reference_sum`]) bit for bit — and
 /// against a scalar-backend service replaying the same traffic.
@@ -191,7 +192,11 @@ fn kernel_backend_service_queries_match_bigint_oracle_on_bert_trace() {
 
     let trace = power_trace(BF16, 32, 96, 0x4E7);
     let streams = 6usize;
-    for backend in [ReduceBackend::KERNEL, ReduceBackend::Kernel { block: 5 }] {
+    for backend in [
+        ReduceBackend::KERNEL,
+        ReduceBackend::Kernel { block: 5 },
+        ReduceBackend::Eia,
+    ] {
         let svc = StreamService::exact_with_backend(BF16, backend);
         let total = svc.replay_trace("kq", &trace, streams);
         assert_eq!(total, (trace.len() * 32) as u64);
