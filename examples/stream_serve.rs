@@ -6,11 +6,14 @@
 //! a single bit of any stream's `(λ, acc, sticky)` state in exact mode.
 //!
 //! Run: `cargo run --release --example stream_serve`
-//! Knobs: `--vectors 512 --streams 8 --clients 8 --threads 0` (0 = auto).
+//! Knobs: `--vectors 512 --streams 8 --clients 8 --threads 0` (0 = auto),
+//! `--backend scalar|kernel[:block]|eia` (chunk-reduction backend by
+//! registry name; omit to let the plan builder negotiate).
 
 use online_fp_add::arith::tree::{tree_sum, RadixConfig};
 use online_fp_add::arith::AccSpec;
 use online_fp_add::formats::{Fp, BF16};
+use online_fp_add::reduce::BackendSel;
 use online_fp_add::stream::{EngineConfig, StreamService};
 use online_fp_add::util::cli::Args;
 use online_fp_add::util::prng::XorShift;
@@ -25,6 +28,13 @@ fn main() {
     let streams = args.get_usize("streams", 8).unwrap().max(1);
     let clients = args.get_usize("clients", 8).unwrap().max(1);
     let threads = args.get_usize("threads", 0).unwrap();
+    // Backend by registry name; None lets ReducePlan::negotiate pick.
+    let backend: Option<BackendSel> = args.get("backend").map(|s| {
+        s.parse::<BackendSel>().unwrap_or_else(|e: String| {
+            eprintln!("--backend: {e}");
+            std::process::exit(2);
+        })
+    });
 
     let spec = AccSpec::exact(BF16);
     println!("extracting BERT partial-product trace ({vectors} vectors × {N_TERMS} lanes)...");
@@ -48,11 +58,12 @@ fn main() {
         .collect();
 
     // ---- live replay: concurrent clients feeding the service -----------
-    let mut cfg = EngineConfig { spec, ..Default::default() };
+    let mut cfg = EngineConfig { spec, backend, ..Default::default() };
     if threads > 0 {
         cfg.threads = threads;
     }
     let svc = StreamService::new(BF16, cfg);
+    println!("reduction plan: {}", svc.engine().plan().describe());
     let t0 = Instant::now();
     std::thread::scope(|scope| {
         for c in 0..clients {
@@ -114,7 +125,7 @@ fn main() {
             rng.shuffle(&mut order);
             let svc = StreamService::new(
                 BF16,
-                EngineConfig { threads, chunk, spec, ..Default::default() },
+                EngineConfig { threads, chunk, spec, backend, ..Default::default() },
             );
             for &i in &order {
                 svc.ingest_blocking(&format!("bert-{}", i % streams), trace.vectors[i].clone())

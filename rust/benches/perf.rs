@@ -14,9 +14,9 @@
 //! Run: `cargo bench --bench perf`
 
 use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
-use online_fp_add::arith::kernel::ReduceBackend;
 use online_fp_add::arith::tree::RadixConfig;
 use online_fp_add::arith::AccSpec;
+use online_fp_add::reduce::{registry, ReducePlan};
 use online_fp_add::bench_util::{
     bench, black_box, header, suite_label, target_seconds, write_json, BenchRecord,
 };
@@ -74,15 +74,12 @@ fn main() {
             let mut rng = XorShift::new(0x5EDC ^ fmt.ebits as u64 ^ ((fmt.mbits as u64) << 8));
             (0..n_reduce).map(|_| rng.gen_fp_full(fmt)).collect()
         };
+        let scalar_plan = ReducePlan::with_backend(spec, registry::sel("scalar").unwrap());
         let scalar = bench(
             &format!("reduce scalar {fname} n={n_reduce}"),
             target_seconds(0.6),
             || {
-                black_box(online_fp_add::stream::reduce_chunk_with(
-                    ReduceBackend::Scalar,
-                    &terms,
-                    spec,
-                ));
+                black_box(online_fp_add::stream::reduce_chunk_with(&scalar_plan, &terms));
             },
         );
         let scalar_tput = scalar.throughput(n_reduce as f64);
@@ -93,15 +90,15 @@ fn main() {
                 .param("terms_per_s", scalar_tput),
         );
         for block in [8usize, 64, 256] {
+            let plan = ReducePlan::with_backend(
+                spec,
+                registry::sel("kernel").unwrap().with_block(block).unwrap(),
+            );
             let r = bench(
                 &format!("reduce kernel {fname} n={n_reduce} b={block}"),
                 target_seconds(0.6),
                 || {
-                    black_box(online_fp_add::stream::reduce_chunk_with(
-                        ReduceBackend::Kernel { block },
-                        &terms,
-                        spec,
-                    ));
+                    black_box(online_fp_add::stream::reduce_chunk_with(&plan, &terms));
                 },
             );
             let tput = r.throughput(n_reduce as f64);
@@ -120,15 +117,12 @@ fn main() {
             );
         }
         // The deferred-alignment backend: shift-free banking + one drain.
+        let eia_plan = ReducePlan::with_backend(spec, registry::sel("eia").unwrap());
         let r = bench(
             &format!("reduce eia {fname} n={n_reduce}"),
             target_seconds(0.6),
             || {
-                black_box(online_fp_add::stream::reduce_chunk_with(
-                    ReduceBackend::Eia,
-                    &terms,
-                    spec,
-                ));
+                black_box(online_fp_add::stream::reduce_chunk_with(&eia_plan, &terms));
             },
         );
         let tput = r.throughput(n_reduce as f64);
@@ -146,6 +140,47 @@ fn main() {
         );
     }
 
+    header("reduce dispatch: trait-object Reducer vs direct plan path (BF16, exact)");
+    // The API-redesign guardrail series: dispatching through a boxed
+    // `dyn Reducer` (reset + ingest + finish per reduction) must add no
+    // measurable overhead over the direct fn-pointer path the old enum
+    // match compiled to. CI asserts the series exists; the ratio param
+    // tracks the trajectory.
+    {
+        let spec = AccSpec::exact(BF16);
+        let terms: Vec<Fp> = {
+            let mut rng = XorShift::new(0xD15B);
+            (0..1024).map(|_| rng.gen_fp_full(BF16)).collect()
+        };
+        let plan = ReducePlan::negotiate(spec);
+        let direct = bench("reduce dispatch direct BF16 n=1024", target_seconds(0.6), || {
+            black_box(plan.reduce(&terms));
+        });
+        let direct_tput = direct.throughput(1024.0);
+        println!("{}   [{:.1} M terms/s]", direct.line(), direct_tput / 1e6);
+        records.push(BenchRecord::new(direct.clone()).param("terms_per_s", direct_tput));
+        let mut reducer = plan.reducer();
+        let traitobj = bench("reduce dispatch trait BF16 n=1024", target_seconds(0.6), || {
+            black_box(online_fp_add::reduce::backend::reduce_once(&mut *reducer, &terms));
+        });
+        let trait_tput = traitobj.throughput(1024.0);
+        let overhead = direct_tput / trait_tput.max(1e-9);
+        println!(
+            "{}   [{:.1} M terms/s, {:.3}x direct time]",
+            traitobj.line(),
+            trait_tput / 1e6,
+            overhead
+        );
+        if overhead > 1.10 {
+            println!("WARN: trait-object dispatch measured >10% slower than the direct path");
+        }
+        records.push(
+            BenchRecord::new(traitobj)
+                .param("terms_per_s", trait_tput)
+                .param("overhead_vs_direct", overhead),
+        );
+    }
+
     header("fused matmul workload (round-once dot products, BF16 16x64x16)");
     {
         use online_fp_add::workload::matmul::matmul_fused;
@@ -154,14 +189,17 @@ fn main() {
         let a: Vec<f32> = (0..mm * mk).map(|_| rng.gauss() as f32).collect();
         let b: Vec<f32> = (0..mk * mn).map(|_| rng.gauss() as f32).collect();
         let mspec = AccSpec::exact(BF16);
-        for (label, backend) in [
-            ("scalar", ReduceBackend::Scalar),
-            ("kernel", ReduceBackend::KERNEL),
-            ("eia", ReduceBackend::Eia),
-        ] {
-            let r = bench(&format!("matmul_fused {label} 16x64x16"), target_seconds(0.5), || {
-                black_box(matmul_fused(&a, &b, (mm, mk, mn), BF16, mspec, backend));
-            });
+        // One matmul series per registered backend — a new registry entry
+        // lands in the perf trajectory automatically.
+        for entry in registry::entries() {
+            let plan = ReducePlan::with_backend(mspec, entry.sel());
+            let r = bench(
+                &format!("matmul_fused {} 16x64x16", entry.name),
+                target_seconds(0.5),
+                || {
+                    black_box(matmul_fused(&a, &b, (mm, mk, mn), BF16, &plan));
+                },
+            );
             let tput = r.throughput((mm * mn * mk) as f64);
             println!("{}   [{:.1} M dot-terms/s]", r.line(), tput / 1e6);
             records.push(BenchRecord::new(r).param("dot_terms_per_s", tput));

@@ -12,7 +12,8 @@ use online_fp_add::bench_util::{
     bench, header, smoke, suite_label, target_seconds, write_json, BenchRecord,
 };
 use online_fp_add::formats::BF16;
-use online_fp_add::stream::{EngineConfig, ReduceBackend, StreamEngine};
+use online_fp_add::reduce::registry;
+use online_fp_add::stream::{EngineConfig, StreamEngine};
 use online_fp_add::workload::bert::power_trace;
 use std::path::Path;
 
@@ -58,14 +59,17 @@ fn main() {
         }
     }
 
-    header("chunk-reduction backend (threads=4): scalar fold vs SoA kernel vs EIA");
-    for backend in [ReduceBackend::Scalar, ReduceBackend::KERNEL, ReduceBackend::Eia] {
+    header("chunk-reduction backend (threads=4): every registered backend");
+    // Registry-driven: a newly registered backend gets its own
+    // `ingest backend=` series with no bench edits.
+    for entry in registry::entries() {
+        let backend = entry.sel();
         for &chunk in &[64usize, 256] {
             let engine = StreamEngine::new(EngineConfig {
                 threads: 4,
                 chunk,
                 spec,
-                backend,
+                backend: Some(backend),
                 queue_depth: 8192,
                 ..Default::default()
             });
@@ -89,7 +93,7 @@ fn main() {
                 BenchRecord::new(r)
                     .param("threads", 4.0)
                     .param("chunk", chunk as f64)
-                    .param("kernel", matches!(backend, ReduceBackend::Kernel { .. }) as u8 as f64)
+                    .param("kernel", (backend.name() == "kernel") as u8 as f64)
                     .param("terms_per_s", tput),
             );
         }

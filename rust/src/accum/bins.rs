@@ -34,7 +34,7 @@ const SPILL_LIMIT: u64 = 1 << 62;
 pub struct ExpBins {
     /// Fast lane: one `i64` per bin, absorbing every ingest. A fixed
     /// inline array (2 KB) — constructing an accumulator performs **no**
-    /// heap allocation, so per-chunk `ReduceBackend::Eia` reductions don't
+    /// heap allocation, so per-chunk `"eia"`-backend reductions don't
     /// pay allocator traffic on the hot path.
     lo: [i64; MAX_BINS],
     /// Spill (carry) lane: empty until the first spill, then `MAX_BINS`

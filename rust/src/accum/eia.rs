@@ -121,9 +121,9 @@ impl Default for Eia {
     }
 }
 
-/// One-shot EIA reduction of a term slice — the
-/// [`crate::arith::kernel::ReduceBackend::Eia`] path: bank every term,
-/// reconcile once.
+/// One-shot EIA reduction of a term slice — the `"eia"` registry entry's
+/// direct path ([`crate::reduce::registry`]): bank every term, reconcile
+/// once.
 pub fn reduce_terms_eia(terms: &[Fp], spec: AccSpec) -> AlignAcc {
     let mut eia = Eia::new();
     eia.ingest_terms(terms);

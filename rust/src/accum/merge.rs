@@ -10,7 +10,9 @@
 //! the same snapshot, exactly like `[λ; acc; sticky]` partials under `⊙`
 //! in exact frames (eq. 10) but without ever leaving the deferred-alignment
 //! domain. The byte codec below is what ships EIA state across shard /
-//! checkpoint boundaries (`stream::shard::ShardMap::merge_eia`).
+//! checkpoint boundaries — as the `Deferred` variant of the unified
+//! [`crate::reduce::Partial`] codec consumed by
+//! `stream::shard::ShardMap::merge_partial`.
 
 use super::drain::drain_parts;
 use super::eia::Eia;
@@ -181,7 +183,7 @@ impl Default for EiaSnapshot {
 }
 
 /// Convenience: snapshot-level equivalent of
-/// [`crate::arith::kernel::ReduceBackend::reduce`] for callers that want
+/// [`crate::reduce::ReducePlan::reduce`] for callers that want
 /// to stay in the deferred domain.
 pub fn snapshot_terms(terms: &[crate::formats::Fp]) -> EiaSnapshot {
     let mut eia = Eia::new();

@@ -14,6 +14,7 @@ use super::operator::AlignAcc;
 use super::tree::{tree_sum, RadixConfig};
 use super::AccSpec;
 use crate::formats::{Fp, FpClass, FpFormat};
+use crate::reduce::{BackendSel, ReducePlan};
 
 /// Which alignment-and-addition architecture to run.
 #[derive(Clone, PartialEq, Eq, Debug)]
@@ -26,42 +27,48 @@ pub enum Architecture {
     Tree(RadixConfig),
     /// The Kulisch-style exact window (order-independent golden reference).
     Exact,
-    /// The batched SoA kernel ([`crate::arith::kernel`]): blockwise
-    /// single-λ alignment, blocks combined with `⊙`. Bit-identical to the
-    /// scalar fold in exact specs; in truncated specs it is the
-    /// `[block; block; …]` parenthesisation.
-    Kernel {
-        /// Lanes per SoA block.
-        block: usize,
-    },
-    /// The exponent-indexed accumulator ([`crate::accum`]): deferred
-    /// alignment — shift-free per-term banking, one reconcile-and-align
-    /// drain. Bit-identical to the scalar fold in exact specs; in
-    /// truncated specs it is the deferred (drain-once) parenthesisation.
-    Eia,
+    /// A registered reduction backend ([`crate::reduce::registry`]), run
+    /// through the [`ReducePlan`] API: `"scalar"` (≡ [`Self::Online`]),
+    /// `"kernel[:<block>]"` (the batched SoA kernel — bit-identical to the
+    /// scalar fold in exact specs, the `[block; block; …]`
+    /// parenthesisation when truncating) or `"eia"` (the deferred-
+    /// alignment exponent-indexed accumulator). New registry entries are
+    /// addressable here — and join the oracle rotation — with no enum
+    /// edits.
+    Backend(BackendSel),
 }
 
 impl Architecture {
-    /// Parse `"baseline"`, `"online"`, `"exact"`, `"eia"`, `"kernel"` /
-    /// `"kernel:<block>"` or a radix config (`"8-2-2"`).
+    /// Parse `"baseline"`, `"online"`, `"exact"`, any registry backend
+    /// spelling (`"scalar"`, `"kernel"` / `"kernel:<block>"`, `"eia"`) or
+    /// a radix config (`"8-2-2"`).
     pub fn parse(s: &str, _n_terms: u32) -> Result<Self, String> {
         match s.to_ascii_lowercase().as_str() {
             "baseline" | "base" => Ok(Architecture::Baseline),
             "online" | "serial-online" => Ok(Architecture::Online),
             "exact" | "kulisch" => Ok(Architecture::Exact),
-            "eia" => Ok(Architecture::Eia),
-            other if other == "kernel" || other.starts_with("kernel:") => {
-                // One parser for the kernel syntax: delegate to the
-                // ReduceBackend grammar ("kernel" / "kernel:<block>").
-                match other.parse::<super::kernel::ReduceBackend>()? {
-                    super::kernel::ReduceBackend::Kernel { block } => {
-                        Ok(Architecture::Kernel { block })
-                    }
-                    _ => unreachable!("the kernel prefix parses to the kernel backend"),
+            other => match other.parse::<BackendSel>() {
+                // One grammar for backend names: the registry's.
+                Ok(sel) => Ok(Architecture::Backend(sel)),
+                // A registered name with bad parameters ("kernel:0") must
+                // surface its own error, not radix-config noise.
+                Err(e)
+                    if crate::reduce::registry::by_name(
+                        other.split(':').next().unwrap_or(other),
+                    )
+                    .is_some() =>
+                {
+                    Err(e)
                 }
-            }
-            other => other.parse::<RadixConfig>().map(Architecture::Tree),
+                Err(_) => other.parse::<RadixConfig>().map(Architecture::Tree),
+            },
         }
+    }
+
+    /// A registered backend architecture by its registry spelling
+    /// (`"kernel:8"`, `"eia"`, …).
+    pub fn backend(name: &str) -> Result<Self, String> {
+        Ok(Architecture::Backend(name.parse()?))
     }
 }
 
@@ -73,9 +80,8 @@ impl std::fmt::Display for Architecture {
             Architecture::Baseline => f.write_str("baseline"),
             Architecture::Online => f.write_str("online"),
             Architecture::Exact => f.write_str("exact"),
-            Architecture::Eia => f.write_str("eia"),
             Architecture::Tree(cfg) => write!(f, "{cfg}"),
-            Architecture::Kernel { block } => write!(f, "kernel:{block}"),
+            Architecture::Backend(sel) => write!(f, "{sel}"),
         }
     }
 }
@@ -158,10 +164,9 @@ impl MultiTermAdder {
             Architecture::Online => online_sum(lanes, self.spec),
             Architecture::Tree(cfg) => tree_sum(lanes, cfg, self.spec),
             Architecture::Exact => exact_sum(lanes, self.format),
-            Architecture::Kernel { block } => {
-                super::kernel::reduce_terms(lanes, *block, self.spec)
+            Architecture::Backend(sel) => {
+                ReducePlan::with_backend(self.spec, *sel).reduce(lanes)
             }
-            Architecture::Eia => crate::accum::reduce_terms_eia(lanes, self.spec),
         }
     }
 
@@ -207,15 +212,21 @@ mod tests {
     fn all_architectures_agree_with_oracle_in_exact_mode() {
         let mut rng = XorShift::new(0xADD);
         for fmt in PAPER_FORMATS {
-            let archs = [
+            // Hand-picked algorithm models plus every registered backend —
+            // a new registry entry is covered here automatically.
+            let mut archs = vec![
                 Architecture::Baseline,
                 Architecture::Online,
                 Architecture::Exact,
-                Architecture::Eia,
                 Architecture::Tree("4-4".parse().unwrap()),
                 Architecture::Tree("2-2-2-2".parse().unwrap()),
                 Architecture::Tree("8-2".parse().unwrap()),
             ];
+            archs.extend(
+                crate::reduce::registry::entries()
+                    .iter()
+                    .map(|e| Architecture::Backend(e.sel())),
+            );
             for _ in 0..30 {
                 let ts: Vec<Fp> = (0..16).map(|_| rng.gen_fp_normal(fmt)).collect();
                 let oracle = exact_rounded_sum(&ts, fmt);

@@ -1,5 +1,8 @@
-//! Batched structure-of-arrays align-and-add kernel: the hot-path backend
-//! behind [`ReduceBackend`] (DESIGN.md §Kernel).
+//! Batched structure-of-arrays align-and-add kernel: the hot-path
+//! implementation behind the `"kernel"` entry of the reduction-backend
+//! registry ([`crate::reduce::registry`], DESIGN.md §Kernel / §Reducer).
+//! The [`ReduceBackend`] enum that used to be the dispatch seam survives
+//! here only as a deprecated shim over [`crate::reduce::ReducePlan`].
 //!
 //! The scalar reference path folds terms one [`op_combine`] at a time over
 //! AoS [`AlignAcc`] values — one max, one (or two) full-width shifts and a
@@ -37,9 +40,10 @@
 //! reference.
 //!
 //! The kernel-equivalence battery (`tests/kernel_equivalence.rs`), the
-//! differential oracle (which fuzzes [`super::adder::Architecture::Kernel`]
-//! alongside every other architecture) and the stream end-to-end oracle
-//! test pin these guarantees bit-for-bit.
+//! differential oracle (which fuzzes the kernel through
+//! [`super::adder::Architecture::Backend`] in its registry-driven
+//! rotation, alongside every other architecture) and the stream
+//! end-to-end oracle test pin these guarantees bit-for-bit.
 
 use super::operator::{op_combine, AlignAcc};
 use super::{AccSpec, WideInt};
@@ -155,7 +159,12 @@ pub fn scalar_fold(terms: &[Fp], spec: AccSpec) -> AlignAcc {
 /// Bit-identical to [`scalar_fold`] in exact specs (any block size) and for
 /// `block == 1` in every spec; see the module docs for the truncated
 /// `block > 1` parenthesisation semantics.
+///
+/// `block` must be ≥ 1: the plan/parse layer
+/// ([`crate::reduce::ReducePlan`], [`crate::reduce::BackendSel`]) rejects a
+/// zero block with a proper error before it can reach this function.
 pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
+    debug_assert!(block >= 1, "kernel block must be >= 1 (rejected at plan build/parse)");
     let block = block.max(1);
     if block <= DEFAULT_BLOCK {
         // Zero-allocation path for hardware-sized blocks (the default
@@ -186,9 +195,16 @@ pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
     state
 }
 
-/// The reduction-backend seam: which implementation folds a slice of terms
-/// into one `[λ; acc; sticky]` state. The scalar fold stays the reference;
-/// the kernel is the hot path.
+/// **Deprecated shim** over the [`crate::reduce`] tier: the old ad-hoc
+/// backend enum, kept only so pre-refactor call sites keep compiling. It
+/// lowers every operation onto the registry/plan API — use
+/// [`crate::reduce::ReducePlan`] (negotiation, replacing [`Self::Auto`])
+/// and [`crate::reduce::BackendSel`] (explicit registry selection)
+/// directly in new code.
+#[deprecated(
+    since = "0.2.0",
+    note = "use reduce::ReducePlan / reduce::BackendSel (the backend registry) instead"
+)]
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
 pub enum ReduceBackend {
     /// Pick per spec: the kernel for exact frames (bit-identical by
@@ -212,36 +228,64 @@ pub enum ReduceBackend {
     Eia,
 }
 
+#[allow(deprecated)]
 impl ReduceBackend {
     /// The kernel at the default block size.
     pub const KERNEL: ReduceBackend = ReduceBackend::Kernel { block: DEFAULT_BLOCK };
 
+    /// Lower this shim value onto the new API: `None` means "negotiate"
+    /// (the old `Auto`); otherwise a validated registry selection. A
+    /// `Kernel { block: 0 }` literal — the old silently-clamped case — is
+    /// now a proper error.
+    pub fn selection(self) -> Result<Option<crate::reduce::BackendSel>, String> {
+        use crate::reduce::BackendSel;
+        Ok(match self {
+            ReduceBackend::Auto => None,
+            ReduceBackend::Scalar => Some(BackendSel::named("scalar")?),
+            ReduceBackend::Kernel { block } => {
+                Some(BackendSel::named("kernel")?.with_block(block)?)
+            }
+            ReduceBackend::Eia => Some(BackendSel::named("eia")?),
+        })
+    }
+
+    /// Lower onto an executable [`crate::reduce::ReducePlan`]. Panics on a
+    /// `Kernel { block: 0 }` literal (constructible only through this
+    /// deprecated shim; the plan/parse layer rejects it with an error).
+    pub fn plan(self, spec: AccSpec) -> crate::reduce::ReducePlan {
+        match self.selection().expect("deprecated ReduceBackend carried an invalid block") {
+            None => crate::reduce::ReducePlan::negotiate(spec),
+            Some(sel) => crate::reduce::ReducePlan::with_backend(spec, sel),
+        }
+    }
+
     /// Resolve [`ReduceBackend::Auto`] against a spec; concrete backends
-    /// pass through unchanged.
+    /// pass through unchanged. (Shim: the negotiation now lives in
+    /// [`crate::reduce::ReducePlan::negotiate`].)
     pub fn resolve(self, spec: AccSpec) -> ReduceBackend {
         match self {
             ReduceBackend::Auto => {
-                if spec.exact {
-                    ReduceBackend::KERNEL
-                } else {
-                    ReduceBackend::Scalar
+                // Negotiation only ever picks "kernel" (exact specs) or
+                // "scalar" (truncated specs); both have legacy variants.
+                let sel = crate::reduce::ReducePlan::negotiate(spec).backend();
+                match (sel.name(), sel.block()) {
+                    ("kernel", Some(block)) => ReduceBackend::Kernel { block },
+                    ("eia", _) => ReduceBackend::Eia,
+                    _ => ReduceBackend::Scalar,
                 }
             }
             other => other,
         }
     }
 
-    /// Fold `terms` into one state with this backend.
+    /// Fold `terms` into one state with this backend (lowers onto
+    /// [`crate::reduce::ReducePlan::reduce`]).
     pub fn reduce(self, terms: &[Fp], spec: AccSpec) -> AlignAcc {
-        match self.resolve(spec) {
-            ReduceBackend::Scalar => scalar_fold(terms, spec),
-            ReduceBackend::Kernel { block } => reduce_terms(terms, block, spec),
-            ReduceBackend::Eia => crate::accum::reduce_terms_eia(terms, spec),
-            ReduceBackend::Auto => unreachable!("resolve() never returns Auto"),
-        }
+        self.plan(spec).reduce(terms)
     }
 }
 
+#[allow(deprecated)]
 impl fmt::Display for ReduceBackend {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -253,36 +297,36 @@ impl fmt::Display for ReduceBackend {
     }
 }
 
+#[allow(deprecated)]
 impl FromStr for ReduceBackend {
     type Err = String;
 
-    /// Parse `"auto"`, `"scalar"`, `"kernel"`, `"kernel:<block>"` or
-    /// `"eia"`.
+    /// Parse `"auto"` or any registry spelling
+    /// ([`crate::reduce::BackendSel`]); `"kernel:0"` is rejected there.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "auto" => Ok(ReduceBackend::Auto),
-            "scalar" => Ok(ReduceBackend::Scalar),
-            "kernel" => Ok(ReduceBackend::KERNEL),
-            "eia" => Ok(ReduceBackend::Eia),
-            other => match other.strip_prefix("kernel:") {
-                Some(b) => {
-                    let block: usize =
-                        b.parse().map_err(|e| format!("bad kernel block {b:?}: {e}"))?;
-                    if block == 0 {
-                        return Err("kernel block must be >= 1".into());
-                    }
-                    Ok(ReduceBackend::Kernel { block })
-                }
-                None => Err(format!(
-                    "unknown backend {s:?} (expected auto, scalar, kernel, \
-                     kernel:<block> or eia)"
-                )),
-            },
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(ReduceBackend::Auto);
+        }
+        let sel: crate::reduce::BackendSel = s.parse().map_err(|e: String| {
+            format!("{e} (or \"auto\" for plan negotiation)")
+        })?;
+        match (sel.name(), sel.block()) {
+            ("scalar", _) => Ok(ReduceBackend::Scalar),
+            ("kernel", Some(block)) => Ok(ReduceBackend::Kernel { block }),
+            ("eia", _) => Ok(ReduceBackend::Eia),
+            // A backend registered after this shim froze (e.g. the planned
+            // SIMD entry) has no legacy variant — misrouting it to Scalar
+            // would silently run different code than requested.
+            (other, _) => Err(format!(
+                "backend {other:?} has no deprecated ReduceBackend variant; \
+                 use reduce::BackendSel / ReducePlan directly"
+            )),
         }
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::arith::operator::op_combine_many;

@@ -29,6 +29,7 @@ pub mod tree;
 pub mod wide;
 
 use crate::formats::FpFormat;
+#[allow(deprecated)]
 pub use kernel::ReduceBackend;
 pub use wide::WideInt;
 

@@ -355,17 +355,27 @@ pub fn run_oracle(fmt: FpFormat, cfg: &OracleConfig) -> OracleReport {
         specs.push(("wide", AccSpec { narrow: false, ..exact }));
     }
     // Architectures and display labels are fixed for the whole run; only
-    // the tree config rotates, so format each tree label once up front
-    // rather than per vector. The SoA kernel runs at a deliberately awkward
-    // block size (the vector length never divides evenly) so the
-    // partial-tail block path is fuzzed too.
-    let fixed_archs: [(&str, Architecture); 5] = [
-        ("baseline", Architecture::Baseline),
-        ("online", Architecture::Online),
-        ("kulisch", Architecture::Exact),
-        ("kernel-b5", Architecture::Kernel { block: 5 }),
-        ("eia", Architecture::Eia),
+    // the tree config rotates, so format each label once up front rather
+    // than per vector. The reduction backends come from the registry — the
+    // one source of truth — so a newly registered backend joins this
+    // rotation with no edits here; the SoA kernel additionally runs at a
+    // deliberately awkward block size (the vector length never divides
+    // evenly) so the partial-tail block path is fuzzed too.
+    let mut fixed_archs: Vec<(String, Architecture)> = vec![
+        ("baseline".to_string(), Architecture::Baseline),
+        ("kulisch".to_string(), Architecture::Exact),
     ];
+    // The "scalar" registry entry IS Algorithm 3 (scalar_fold delegates to
+    // online_sum), so the registry sweep below covers the former hand-listed
+    // "online" rotation slot without fuzzing the same code path twice.
+    for entry in crate::reduce::registry::entries() {
+        let sel = entry.sel();
+        fixed_archs.push((sel.to_string(), Architecture::Backend(sel)));
+    }
+    fixed_archs.push((
+        "kernel:5".to_string(),
+        Architecture::backend("kernel:5").expect("registered"),
+    ));
     let tree_archs: Vec<(String, Architecture)> = enumerate_configs(n as u32)
         .into_iter()
         .map(|c| (format!("tree-{c}"), Architecture::Tree(c)))
@@ -386,7 +396,7 @@ pub fn run_oracle(fmt: FpFormat, cfg: &OracleConfig) -> OracleReport {
         let (tree_label, tree_arch) = &tree_archs[v % tree_archs.len()];
         let archs = fixed_archs
             .iter()
-            .map(|(l, a)| (*l, a))
+            .map(|(l, a)| (l.as_str(), a))
             .chain(std::iter::once((tree_label.as_str(), tree_arch)));
         for (label, arch) in archs {
             for (spec_label, spec) in &specs {

@@ -5,12 +5,17 @@
 //!
 //! The crate is organised in five tiers:
 //!
-//! * [`formats`] + [`arith`] + [`accum`] — bit-accurate models of every
-//!   algorithm in the paper: the serial baseline (Algorithm 2), the online
-//!   fused recurrence (Algorithm 3, eq. 7), the associative align-and-add
-//!   operator `⊙` (eq. 8), arbitrary mixed-radix operator trees (eq. 9,
-//!   Fig. 2), and the deferred-alignment exponent-indexed accumulator
-//!   (the `eia` backend) as the opposite corner of the same design space.
+//! * [`formats`] + [`arith`] + [`accum`] + [`reduce`] — bit-accurate
+//!   models of every algorithm in the paper: the serial baseline
+//!   (Algorithm 2), the online fused recurrence (Algorithm 3, eq. 7), the
+//!   associative align-and-add operator `⊙` (eq. 8), arbitrary mixed-radix
+//!   operator trees (eq. 9, Fig. 2), and the deferred-alignment
+//!   exponent-indexed accumulator — all dispatched through the [`reduce`]
+//!   tier: the [`reduce::Reducer`] trait, mergeable typed
+//!   [`reduce::Partial`]s with one byte codec, [`reduce::ReducePlan`]
+//!   capability negotiation, and the name-indexed backend registry
+//!   ([`reduce::registry`]) that is the single source of truth for every
+//!   backend consumer.
 //! * [`hw`] — structural hardware cost models (unit-gate area/delay,
 //!   pipeline-stage scheduling, switching-activity power) that regenerate
 //!   the paper's evaluation (Fig. 4, Fig. 5, Table I).
@@ -25,6 +30,8 @@
 //!   split live traffic across chunks, threads and arrival orders with
 //!   bit-identical results in exact mode.
 //!
+//! Most applications only need the [`prelude`].
+//!
 //! See `DESIGN.md` for the crate map and the experiment index (including
 //! the perf and calibration notes the code comments cite).
 
@@ -35,19 +42,50 @@ pub mod coordinator;
 pub mod dse;
 pub mod formats;
 pub mod hw;
+pub mod reduce;
 pub mod runtime;
 pub mod stream;
 pub mod util;
 pub mod workload;
 
 pub use accum::{Eia, EiaSnapshot};
+#[allow(deprecated)]
+pub use arith::kernel::ReduceBackend;
 pub use arith::{
     baseline::baseline_sum,
-    kernel::ReduceBackend,
     online::online_sum,
     operator::{op_combine, AlignAcc},
     tree::{tree_sum, RadixConfig},
     AccSpec,
 };
 pub use formats::{Fp, FpClass, FpFormat};
+pub use reduce::{BackendSel, Partial, PlanBuilder, ReducePlan, Reducer};
 pub use stream::{EngineConfig, Snapshot, StreamEngine, StreamService};
+
+/// The one-stop import for applications: formats, the accumulator spec,
+/// the reduction API tier (plan + registry + trait), the adder, and the
+/// serving tier.
+///
+/// ```
+/// use online_fp_add::prelude::*;
+///
+/// let plan = ReducePlan::negotiate(AccSpec::exact(BF16));
+/// let terms: Vec<Fp> = [1.0, 2.0, 0.5].iter().map(|&x| Fp::from_f64(x, BF16)).collect();
+/// assert!(!plan.reduce(&terms).is_identity());
+/// ```
+pub mod prelude {
+    pub use crate::arith::adder::{Architecture, MultiTermAdder};
+    pub use crate::arith::normalize::normalize_round;
+    pub use crate::arith::operator::{op_combine, AlignAcc};
+    pub use crate::arith::AccSpec;
+    pub use crate::formats::{
+        Fp, FpClass, FpFormat, BF16, FP32, FP8_E4M3, FP8_E5M2, PAPER_FORMATS,
+    };
+    pub use crate::reduce::{
+        registry, BackendSel, Capabilities, Partial, PartialState, PlanBuilder, ReducePlan,
+        Reducer,
+    };
+    pub use crate::stream::{
+        EngineConfig, Segment, Snapshot, StreamEngine, StreamService,
+    };
+}

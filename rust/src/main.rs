@@ -7,6 +7,8 @@
 //! repro table1 [--n 16|32|64] [--vectors 512] Table I (all formats; default all N)
 //! repro add    --format bf16 --arch 8-2-2 x y z ...    one fused addition
 //! repro oracle [--format all] [--vectors 2000]         differential oracle
+//! repro backends                              reduction-backend registry
+//! repro conform [--format all] [--vectors 20]  registry conformance suite
 //! repro kernel [--format all] [--n 1024] [--blocks 1,8,64]  SoA-kernel check
 //! repro eia    [--format all] [--n 1024] [--vectors 64]     EIA backend check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
@@ -32,6 +34,8 @@ fn main() -> ExitCode {
         "table1" => cmd_table1(&args),
         "add" => cmd_add(&args),
         "oracle" => cmd_oracle(&args),
+        "backends" => cmd_backends(&args),
+        "conform" => cmd_conform(&args),
         "kernel" => cmd_kernel(&args),
         "eia" => cmd_eia(&args),
         "sweep" => cmd_sweep(&args),
@@ -65,6 +69,18 @@ commands:
                                           adversarial operand distributions
                                           through every algorithm and diff
                                           against the independent reference
+  backends [--format F] [--guard G]       list the reduction-backend
+                                          registry with the capabilities
+                                          each backend negotiates under the
+                                          exact and truncated specs, plus
+                                          the plans Auto-negotiation builds
+  conform [--format F|all] [--vectors N] [--terms N] [--seed S]
+                                          registry-driven conformance
+                                          battery: every registered backend
+                                          through the same equivalence /
+                                          split-ingest / merge / codec /
+                                          specials gates vs the scalar ⊙
+                                          fold; exits nonzero on mismatch
   kernel  [--format F|all] [--n 1024] [--blocks 1,8,64,256] [--vectors 64]
                                           SoA-kernel equivalence + throughput:
                                           assert the batched kernel's
@@ -219,16 +235,108 @@ fn cmd_oracle(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// List the reduction-backend registry (DESIGN.md §Reducer): every
+/// registered backend with the capabilities it negotiates under the exact
+/// spec of `--format` and under a truncated `--guard` spec, plus the plans
+/// auto-negotiation builds — the inspectable replacement for the old
+/// `ReduceBackend::Auto` hidden heuristics.
+fn cmd_backends(args: &Args) -> Result<(), String> {
+    use online_fp_add::arith::AccSpec;
+    use online_fp_add::reduce::{registry, ReducePlan};
+
+    let fmt = format_by_name(args.get_or("format", "bf16"))
+        .ok_or_else(|| "unknown --format".to_string())?;
+    let guard = args.get_usize("guard", 16)? as u32;
+    let exact = AccSpec::exact(fmt);
+    let trunc = AccSpec::truncated(guard);
+    let mut table = online_fp_add::util::table::Table::new(vec![
+        "backend", "spec", "fold bits", "order inv", "lossless merge", "block",
+    ]);
+    for entry in registry::entries() {
+        let sel = entry.sel();
+        for (label, spec) in [("exact", exact), ("truncated", trunc)] {
+            let c = sel.capabilities(spec);
+            table.row(vec![
+                sel.to_string(),
+                label.to_string(),
+                c.fold_bit_identical.to_string(),
+                c.order_invariant.to_string(),
+                c.lossless_merge.to_string(),
+                c.block.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+    }
+    println!("Reduction-backend registry — capabilities per accumulator spec\n");
+    println!("{}", table.render());
+    for entry in registry::entries() {
+        println!("  {:<8} {}", entry.name, entry.summary);
+    }
+    println!("\nnegotiated plans (the old `auto`):");
+    println!("  exact({fmt}):   {}", ReducePlan::negotiate(exact).describe());
+    println!("  truncated({guard}): {}", ReducePlan::negotiate(trunc).describe());
+    Ok(())
+}
+
+/// Registry-driven conformance battery (DESIGN.md §Reducer): every
+/// registered backend through the same equivalence / split-ingest /
+/// merge-associativity / partial-codec / special-value gates against the
+/// scalar `⊙` fold. Exits nonzero on any failure — a backend added to the
+/// registry is held to the contract automatically.
+fn cmd_conform(args: &Args) -> Result<(), String> {
+    use online_fp_add::formats::PAPER_FORMATS;
+    use online_fp_add::reduce::conformance::{run_format, ConformanceConfig};
+
+    let cfg = ConformanceConfig {
+        vectors: args.get_usize("vectors", 20)?.max(1),
+        max_terms: args.get_usize("terms", 96)?.max(1),
+        seed: args.get_u64("seed", 0xC0F0_12ED)?,
+    };
+    let fmts: Vec<online_fp_add::formats::FpFormat> = match args.get("format") {
+        Some(name) if name != "all" => {
+            vec![format_by_name(name).ok_or_else(|| "unknown --format".to_string())?]
+        }
+        _ => PAPER_FORMATS.to_vec(),
+    };
+    let mut table = online_fp_add::util::table::Table::new(vec![
+        "format", "backend", "checks", "reduce", "split", "merge", "codec", "specials",
+    ]);
+    let mut bad = 0u64;
+    for fmt in fmts {
+        for rep in run_format(fmt, &cfg) {
+            bad += rep.failures();
+            table.row(vec![
+                fmt.to_string(),
+                rep.backend.clone(),
+                rep.checks.to_string(),
+                rep.reduce_mismatches.to_string(),
+                rep.split_mismatches.to_string(),
+                rep.merge_mismatches.to_string(),
+                rep.codec_failures.to_string(),
+                rep.specials_failures.to_string(),
+            ]);
+        }
+    }
+    println!("Registry conformance battery — every backend vs the scalar ⊙ fold\n");
+    println!("{}", table.render());
+    if bad > 0 {
+        return Err(format!("{bad} conformance failures"));
+    }
+    println!("every registered backend conforms on every gate ✓");
+    Ok(())
+}
+
 /// SoA-kernel equivalence + throughput check (DESIGN.md §Kernel): fuzz the
-/// oracle's adversarial operand distributions through the batched kernel at
-/// several block sizes and through the scalar `⊙` fold, assert the
-/// `[λ; acc; sticky]` states are bit-identical (exact specs), and report
-/// the measured throughput of both backends. Exits nonzero on any mismatch.
+/// oracle's adversarial operand distributions through kernel-backend plans
+/// at several block sizes and through the scalar `⊙` fold's plan, assert
+/// the `[λ; acc; sticky]` states are bit-identical (exact specs), and
+/// report the measured throughput of both backends. Exits nonzero on any
+/// mismatch.
 fn cmd_kernel(args: &Args) -> Result<(), String> {
-    use online_fp_add::arith::kernel::{reduce_terms, scalar_fold, DEFAULT_BLOCK};
+    use online_fp_add::arith::kernel::DEFAULT_BLOCK;
     use online_fp_add::arith::oracle::DISTRIBUTIONS;
     use online_fp_add::arith::AccSpec;
     use online_fp_add::formats::PAPER_FORMATS;
+    use online_fp_add::reduce::{registry, ReducePlan};
     use online_fp_add::util::prng::XorShift;
     use std::time::Instant;
 
@@ -259,17 +367,22 @@ fn cmd_kernel(args: &Args) -> Result<(), String> {
     let mut bad = 0u64;
     for fmt in fmts {
         let spec = AccSpec::exact(fmt);
+        let scalar_plan = ReducePlan::with_backend(spec, registry::sel("scalar")?);
         let mut rng =
             XorShift::new(seed ^ ((fmt.ebits as u64) << 32) ^ ((fmt.mbits as u64) << 40));
         let data: Vec<Vec<Fp>> = (0..vectors)
             .map(|v| DISTRIBUTIONS[v % DISTRIBUTIONS.len()].gen_vector(&mut rng, fmt, n))
             .collect();
         let t0 = Instant::now();
-        let reference: Vec<_> = data.iter().map(|v| scalar_fold(v, spec)).collect();
+        let reference: Vec<_> = data.iter().map(|v| scalar_plan.reduce(v)).collect();
         let scalar_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
         for &block in &blocks {
+            let plan = ReducePlan::builder(spec)
+                .backend_name("kernel")
+                .and_then(|b| b.block(block))
+                .and_then(|b| b.build())?;
             let t0 = Instant::now();
-            let got: Vec<_> = data.iter().map(|v| reduce_terms(v, block, spec)).collect();
+            let got: Vec<_> = data.iter().map(|v| plan.reduce(v)).collect();
             let kernel_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
             let mismatches =
                 got.iter().zip(&reference).filter(|(g, w)| g != w).count() as u64;
@@ -303,11 +416,11 @@ fn cmd_kernel(args: &Args) -> Result<(), String> {
 /// banking, and report the measured throughput of both backends. Exits
 /// nonzero on any mismatch.
 fn cmd_eia(args: &Args) -> Result<(), String> {
-    use online_fp_add::accum::{merge::snapshot_terms, reduce_terms_eia, EiaSnapshot};
-    use online_fp_add::arith::kernel::scalar_fold;
+    use online_fp_add::accum::{merge::snapshot_terms, EiaSnapshot};
     use online_fp_add::arith::oracle::DISTRIBUTIONS;
     use online_fp_add::arith::AccSpec;
     use online_fp_add::formats::PAPER_FORMATS;
+    use online_fp_add::reduce::{registry, ReducePlan};
     use online_fp_add::util::prng::XorShift;
     use std::time::Instant;
 
@@ -326,16 +439,18 @@ fn cmd_eia(args: &Args) -> Result<(), String> {
     let mut bad = 0u64;
     for fmt in fmts {
         let spec = AccSpec::exact(fmt);
+        let scalar_plan = ReducePlan::with_backend(spec, registry::sel("scalar")?);
+        let eia_plan = ReducePlan::with_backend(spec, registry::sel("eia")?);
         let mut rng =
             XorShift::new(seed ^ ((fmt.ebits as u64) << 32) ^ ((fmt.mbits as u64) << 40));
         let data: Vec<Vec<Fp>> = (0..vectors)
             .map(|v| DISTRIBUTIONS[v % DISTRIBUTIONS.len()].gen_vector(&mut rng, fmt, n))
             .collect();
         let t0 = Instant::now();
-        let reference: Vec<_> = data.iter().map(|v| scalar_fold(v, spec)).collect();
+        let reference: Vec<_> = data.iter().map(|v| scalar_plan.reduce(v)).collect();
         let scalar_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        let got: Vec<_> = data.iter().map(|v| reduce_terms_eia(v, spec)).collect();
+        let got: Vec<_> = data.iter().map(|v| eia_plan.reduce(v)).collect();
         let eia_tput = (vectors * n) as f64 / t0.elapsed().as_secs_f64();
         let drain_mismatches =
             got.iter().zip(&reference).filter(|(g, w)| g != w).count() as u64;

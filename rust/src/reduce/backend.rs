@@ -1,0 +1,413 @@
+//! The [`Reducer`] trait — the one lifecycle contract every reduction
+//! backend implements (DESIGN.md §Reducer) — plus the three in-tree
+//! implementations the registry ships.
+//!
+//! The lifecycle is `ingest → partial → merge/absorb → finish`:
+//!
+//! * [`Reducer::ingest`] / [`Reducer::ingest_decoded`] absorb finite terms
+//!   (specials are screened by the caller, exactly as for
+//!   [`crate::arith::adder::MultiTermAdder`]);
+//! * [`Reducer::partial`] captures the state as a mergeable, serializable
+//!   [`Partial`];
+//! * [`Reducer::absorb`] folds in a partial produced by **any** backend of
+//!   the same [`AccSpec`] (cross-backend merges resolve through the
+//!   aligned domain — bit-identical on exact specs);
+//! * [`Reducer::finish`] resolves to the final `[λ; acc; sticky]` state,
+//!   ready for [`crate::arith::normalize::normalize_round`].
+//!
+//! Contract every registered backend is held to (and the registry-driven
+//! conformance suite verifies, see [`super::conformance`]): under an exact
+//! [`AccSpec`], any interleaving of `ingest`/`absorb` calls over the same
+//! multiset of terms finishes with the **bit-identical** state of the
+//! scalar `⊙` fold (eq. 10). Under a truncated spec each backend is its
+//! own deterministic parenthesisation; [`super::Capabilities`] says which
+//! additional guarantees (fold-identical dropped bits, order invariance)
+//! survive.
+
+use super::partial::{Partial, PartialState};
+use crate::accum::Eia;
+use crate::arith::kernel::{block_state, reduce_terms};
+use crate::arith::operator::{op_combine, AlignAcc};
+use crate::arith::{AccSpec, WideInt};
+use crate::formats::Fp;
+
+/// Lift one pre-decoded `(eff_exp, signed_sig)` lane into the operator
+/// domain — the runtime's `(e, m)` field convention: a zero significand is
+/// the identity regardless of its exponent field.
+#[inline]
+fn leaf_decoded(eff: i32, sig: i64, spec: AccSpec) -> AlignAcc {
+    if sig == 0 {
+        return AlignAcc::IDENTITY;
+    }
+    AlignAcc { lambda: eff, acc: WideInt::from_i64_shl(sig, spec.f), sticky: false }
+}
+
+/// A stateful reduction backend (see the module docs for the lifecycle and
+/// the cross-backend equivalence contract).
+pub trait Reducer {
+    /// The registry name of the backend this reducer runs.
+    fn backend_name(&self) -> &'static str;
+
+    /// The accumulator spec this reducer was planned for.
+    fn spec(&self) -> AccSpec;
+
+    /// Absorb a slice of finite terms (screen Inf/NaN first).
+    fn ingest(&mut self, terms: &[Fp]);
+
+    /// Absorb pre-decoded `(eff_exp, signed_sig)` lanes — the artifact
+    /// runtime's field convention; dead lanes carry `sig == 0` and are
+    /// identities regardless of their exponent entry.
+    fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]);
+
+    /// Fold in a partial produced by any reducer under the same spec.
+    fn absorb(&mut self, partial: &Partial);
+
+    /// Capture the current state as a mergeable, serializable partial.
+    fn partial(&self) -> Partial;
+
+    /// Resolve to the final `[λ; acc; sticky]` state.
+    fn finish(&self) -> AlignAcc;
+
+    /// Terms covered so far (zeros included).
+    fn terms(&self) -> u64;
+
+    /// Forget everything — hot loops reuse one reducer across many
+    /// independent reductions instead of re-boxing per reduction.
+    fn reset(&mut self);
+}
+
+/// The scalar reference backend: the serial radix-2 `⊙` fold (Algorithm 3).
+/// Incremental ingest is the same left fold, so any split of the input
+/// across `ingest` calls is bit-identical to one flat
+/// [`crate::arith::kernel::scalar_fold`] in **every** spec, truncated
+/// included.
+pub struct FoldReducer {
+    spec: AccSpec,
+    state: AlignAcc,
+    terms: u64,
+}
+
+impl FoldReducer {
+    pub fn new(spec: AccSpec) -> Self {
+        FoldReducer { spec, state: AlignAcc::IDENTITY, terms: 0 }
+    }
+}
+
+impl Reducer for FoldReducer {
+    fn backend_name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn spec(&self) -> AccSpec {
+        self.spec
+    }
+
+    fn ingest(&mut self, terms: &[Fp]) {
+        for t in terms {
+            debug_assert!(t.is_finite(), "reducers require finite terms");
+            self.state = op_combine(&self.state, &AlignAcc::leaf(*t, self.spec), self.spec);
+        }
+        self.terms += terms.len() as u64;
+    }
+
+    fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
+        debug_assert_eq!(eff.len(), sig.len());
+        for (&e, &s) in eff.iter().zip(sig) {
+            self.state = op_combine(&self.state, &leaf_decoded(e, s, self.spec), self.spec);
+        }
+        self.terms += eff.len() as u64;
+    }
+
+    fn absorb(&mut self, partial: &Partial) {
+        self.state = op_combine(&self.state, &partial.resolve(self.spec), self.spec);
+        self.terms += partial.terms;
+    }
+
+    fn partial(&self) -> Partial {
+        Partial::aligned(self.state, self.terms)
+    }
+
+    fn finish(&self) -> AlignAcc {
+        self.state
+    }
+
+    fn terms(&self) -> u64 {
+        self.terms
+    }
+
+    fn reset(&mut self) {
+        self.state = AlignAcc::IDENTITY;
+        self.terms = 0;
+    }
+}
+
+/// The batched SoA kernel backend: each ingested slice reduces blockwise
+/// ([`reduce_terms`] / [`block_state`]) and chains into the running state
+/// with `⊙`. A single `ingest` of a whole slice is bit-identical to the
+/// free-function kernel (the identity prefix is transparent); block
+/// boundaries restart at every `ingest` call, which exact specs cannot
+/// observe (eq. 10).
+pub struct KernelReducer {
+    spec: AccSpec,
+    block: usize,
+    state: AlignAcc,
+    terms: u64,
+}
+
+impl KernelReducer {
+    /// `block` must be ≥ 1 — the plan/parse layer rejects 0 before a
+    /// reducer is ever built.
+    pub fn new(spec: AccSpec, block: usize) -> Self {
+        debug_assert!(block >= 1, "kernel block must be >= 1 (enforced at plan build)");
+        KernelReducer { spec, block: block.max(1), state: AlignAcc::IDENTITY, terms: 0 }
+    }
+}
+
+impl Reducer for KernelReducer {
+    fn backend_name(&self) -> &'static str {
+        "kernel"
+    }
+
+    fn spec(&self) -> AccSpec {
+        self.spec
+    }
+
+    fn ingest(&mut self, terms: &[Fp]) {
+        if !terms.is_empty() {
+            let part = reduce_terms(terms, self.block, self.spec);
+            self.state = op_combine(&self.state, &part, self.spec);
+        }
+        self.terms += terms.len() as u64;
+    }
+
+    fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
+        debug_assert_eq!(eff.len(), sig.len());
+        for (e_chunk, s_chunk) in eff.chunks(self.block).zip(sig.chunks(self.block)) {
+            let part = block_state(e_chunk, s_chunk, self.spec);
+            self.state = op_combine(&self.state, &part, self.spec);
+        }
+        self.terms += eff.len() as u64;
+    }
+
+    fn absorb(&mut self, partial: &Partial) {
+        self.state = op_combine(&self.state, &partial.resolve(self.spec), self.spec);
+        self.terms += partial.terms;
+    }
+
+    fn partial(&self) -> Partial {
+        Partial::aligned(self.state, self.terms)
+    }
+
+    fn finish(&self) -> AlignAcc {
+        self.state
+    }
+
+    fn terms(&self) -> u64 {
+        self.terms
+    }
+
+    fn reset(&mut self) {
+        self.state = AlignAcc::IDENTITY;
+        self.terms = 0;
+    }
+}
+
+/// The deferred-alignment backend: terms bank into an exponent-indexed
+/// accumulator ([`Eia`]) and the alignment bill is paid once at `finish`.
+/// Deferred partials absorbed from peers merge losslessly (exact pointwise
+/// bin adds under any spec); an *aligned* partial cannot re-enter the
+/// deferred domain, so it parks in a `⊙` carry that joins at the end —
+/// bit-identical to any other grouping on exact specs.
+pub struct EiaReducer {
+    spec: AccSpec,
+    eia: Eia,
+    carry: AlignAcc,
+    carry_terms: u64,
+}
+
+impl EiaReducer {
+    pub fn new(spec: AccSpec) -> Self {
+        EiaReducer { spec, eia: Eia::new(), carry: AlignAcc::IDENTITY, carry_terms: 0 }
+    }
+}
+
+impl Reducer for EiaReducer {
+    fn backend_name(&self) -> &'static str {
+        "eia"
+    }
+
+    fn spec(&self) -> AccSpec {
+        self.spec
+    }
+
+    fn ingest(&mut self, terms: &[Fp]) {
+        self.eia.ingest_terms(terms);
+    }
+
+    fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
+        debug_assert_eq!(eff.len(), sig.len());
+        for (&e, &s) in eff.iter().zip(sig) {
+            self.eia.ingest_decoded(e, s);
+        }
+    }
+
+    fn absorb(&mut self, partial: &Partial) {
+        match &partial.state {
+            PartialState::Deferred(snap) => self.eia.merge_from(&snap.restore()),
+            PartialState::Aligned(a) => {
+                self.carry = op_combine(&self.carry, a, self.spec);
+                self.carry_terms += partial.terms;
+            }
+        }
+    }
+
+    fn partial(&self) -> Partial {
+        if self.carry_terms == 0 && self.carry.is_identity() {
+            Partial::deferred(self.eia.snapshot())
+        } else {
+            Partial::aligned(self.finish(), self.terms())
+        }
+    }
+
+    fn finish(&self) -> AlignAcc {
+        let drained = self.eia.drain(self.spec);
+        if self.carry.is_identity() {
+            drained
+        } else {
+            op_combine(&drained, &self.carry, self.spec)
+        }
+    }
+
+    fn terms(&self) -> u64 {
+        self.eia.terms() + self.carry_terms
+    }
+
+    fn reset(&mut self) {
+        self.eia = Eia::new();
+        self.carry = AlignAcc::IDENTITY;
+        self.carry_terms = 0;
+    }
+}
+
+/// One-shot slice reduction through a trait-object reducer
+/// (reset → ingest → finish). This is the exact loop body of the
+/// `reduce dispatch trait` series in `BENCH_perf.json`, benchmarked
+/// against the registry's direct fn-pointer `reduce` path.
+pub fn reduce_once(reducer: &mut dyn Reducer, terms: &[Fp]) -> AlignAcc {
+    reducer.reset();
+    reducer.ingest(terms);
+    reducer.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::kernel::scalar_fold;
+    use crate::formats::{Fp, BF16, FP32};
+    use crate::util::prng::XorShift;
+
+    fn mixed(rng: &mut XorShift, n: usize) -> Vec<Fp> {
+        (0..n)
+            .map(|_| match rng.below(8) {
+                0 => Fp::zero(BF16),
+                1 | 2 => rng.gen_fp_subnormal(BF16),
+                _ => rng.gen_fp_full(BF16),
+            })
+            .collect()
+    }
+
+    fn reducers(spec: AccSpec) -> Vec<Box<dyn Reducer>> {
+        vec![
+            Box::new(FoldReducer::new(spec)),
+            Box::new(KernelReducer::new(spec, 7)),
+            Box::new(EiaReducer::new(spec)),
+        ]
+    }
+
+    #[test]
+    fn split_ingest_matches_one_shot_fold_on_exact_specs() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xBEC1);
+        for n in [1usize, 9, 64, 150] {
+            let ts = mixed(&mut rng, n);
+            let want = scalar_fold(&ts, spec);
+            for mut r in reducers(spec) {
+                // Ingest in ragged slices; exact specs cannot see the seams.
+                for chunk in ts.chunks(5) {
+                    r.ingest(chunk);
+                }
+                assert_eq!(r.finish(), want, "{} n={n}", r.backend_name());
+                assert_eq!(r.terms(), n as u64);
+                r.reset();
+                assert!(r.finish().is_identity());
+                assert_eq!(r.terms(), 0);
+                // Reuse after reset: one-shot ingest, same bits.
+                r.ingest(&ts);
+                assert_eq!(r.finish(), want, "{} reused", r.backend_name());
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_cross_backend_partials_matches_one_shot() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xBEC2);
+        let ts = mixed(&mut rng, 120);
+        let want = scalar_fold(&ts, spec);
+        // Every (consumer, producer) backend pair: producer reduces the
+        // tail, consumer ingests the head and absorbs the producer's
+        // partial — bit-identical to the flat fold.
+        for mut consumer in reducers(spec) {
+            for mut producer in reducers(spec) {
+                consumer.reset();
+                producer.reset();
+                producer.ingest(&ts[70..]);
+                consumer.ingest(&ts[..70]);
+                consumer.absorb(&producer.partial());
+                assert_eq!(
+                    consumer.finish(),
+                    want,
+                    "{} absorbing {}",
+                    consumer.backend_name(),
+                    producer.backend_name()
+                );
+                assert_eq!(consumer.terms(), 120);
+            }
+        }
+    }
+
+    #[test]
+    fn decoded_lane_ingest_matches_term_ingest() {
+        let mut rng = XorShift::new(0xBEC3);
+        for spec in [AccSpec::exact(FP32), AccSpec::truncated(16)] {
+            let ts: Vec<Fp> = (0..48).map(|_| rng.gen_fp_full(FP32)).collect();
+            let eff: Vec<i32> = ts.iter().map(|t| t.eff_exp()).collect();
+            let sig: Vec<i64> = ts.iter().map(|t| t.signed_sig()).collect();
+            for mut r in [
+                Box::new(FoldReducer::new(spec)) as Box<dyn Reducer>,
+                Box::new(KernelReducer::new(spec, 48)),
+                Box::new(EiaReducer::new(spec)),
+            ] {
+                let by_terms = reduce_once(&mut *r, &ts);
+                r.reset();
+                r.ingest_decoded(&eff, &sig);
+                assert_eq!(r.finish(), by_terms, "{}", r.backend_name());
+                assert_eq!(r.terms(), 48);
+            }
+        }
+    }
+
+    #[test]
+    fn eia_partial_stays_deferred_until_an_aligned_absorb() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0xBEC4);
+        let ts = mixed(&mut rng, 40);
+        let mut r = EiaReducer::new(spec);
+        r.ingest(&ts);
+        assert!(matches!(r.partial().state, PartialState::Deferred(_)));
+        let aligned = Partial::aligned(scalar_fold(&ts[..3], spec), 3);
+        r.absorb(&aligned);
+        assert!(matches!(r.partial().state, PartialState::Aligned(_)));
+        assert_eq!(r.terms(), 43);
+    }
+}

@@ -1,0 +1,245 @@
+//! Registry-driven conformance battery: every backend the registry knows
+//! is automatically held to the same contract (DESIGN.md §Reducer).
+//!
+//! For each registered backend × paper format × exact accumulator path
+//! (narrow `i128` and forced-wide `WideInt` where the format offers both),
+//! over the differential oracle's adversarial operand distributions:
+//!
+//! 1. **Equivalence** — the plan's one-shot `reduce` bit-matches the
+//!    scalar `⊙` fold (eq. 10);
+//! 2. **Split ingest** — a stateful [`super::Reducer`] fed the same terms
+//!    in ragged chunks finishes with the same bits;
+//! 3. **Merge** — two reducers over a random split, combined both via
+//!    [`super::Reducer::absorb`] and via [`Partial::merge`], resolve to
+//!    the same bits (merge associativity at the partial surface);
+//! 4. **Codec** — every produced partial round-trips through the unified
+//!    byte codec;
+//! 5. **Specials** — the backend behind
+//!    [`crate::arith::adder::Architecture::Backend`] applies the same
+//!    NaN/Inf screening as the baseline architecture;
+//! 6. **Identity** — empty and all-zero inputs reduce to the identity.
+//!
+//! Registering a new backend (the SIMD kernel variant, a GPU fold, …)
+//! requires **zero** test edits: `tests/reduce_conformance.rs` and
+//! `repro conform` iterate [`crate::reduce::registry::entries`].
+
+use super::backend::Reducer;
+use super::partial::Partial;
+use super::plan::ReducePlan;
+use super::registry::{self, BackendSel};
+use crate::arith::adder::{Architecture, MultiTermAdder};
+use crate::arith::kernel::scalar_fold;
+use crate::arith::oracle::DISTRIBUTIONS;
+use crate::arith::AccSpec;
+use crate::formats::{Fp, FpClass, FpFormat, SpecialsMode};
+use crate::util::prng::XorShift;
+
+/// Battery size knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ConformanceConfig {
+    /// Vectors per (distribution, spec) cell.
+    pub vectors: usize,
+    /// Maximum vector length (lengths are randomized in `1..=max_terms`).
+    pub max_terms: usize,
+    pub seed: u64,
+}
+
+impl Default for ConformanceConfig {
+    fn default() -> Self {
+        ConformanceConfig { vectors: 20, max_terms: 96, seed: 0xC0F0_12ED }
+    }
+}
+
+/// Outcome of one backend's battery on one format.
+#[derive(Clone, Debug)]
+pub struct BackendReport {
+    pub backend: String,
+    pub format: FpFormat,
+    /// Individual assertions evaluated.
+    pub checks: u64,
+    /// One-shot `reduce` states differing from the scalar fold.
+    pub reduce_mismatches: u64,
+    /// Split-ingest reducer states differing from the scalar fold.
+    pub split_mismatches: u64,
+    /// Absorb/merge resolutions differing from the scalar fold.
+    pub merge_mismatches: u64,
+    /// Partial-codec round-trip failures.
+    pub codec_failures: u64,
+    /// Special-value screening divergences from the baseline adder.
+    pub specials_failures: u64,
+}
+
+impl BackendReport {
+    pub fn failures(&self) -> u64 {
+        self.reduce_mismatches
+            + self.split_mismatches
+            + self.merge_mismatches
+            + self.codec_failures
+            + self.specials_failures
+    }
+
+    pub fn clean(&self) -> bool {
+        self.failures() == 0
+    }
+}
+
+/// The exact spec plus its forced-wide twin where the format's exact frame
+/// fits the narrow path — the same coverage rule the equivalence batteries
+/// use.
+pub fn exact_specs(fmt: FpFormat) -> Vec<AccSpec> {
+    let exact = AccSpec::exact(fmt);
+    let mut specs = vec![exact];
+    if exact.narrow {
+        specs.push(AccSpec { narrow: false, ..exact });
+    }
+    specs
+}
+
+/// Run the battery for one backend selection on one format.
+pub fn run_backend(sel: BackendSel, fmt: FpFormat, cfg: &ConformanceConfig) -> BackendReport {
+    let mut rep = BackendReport {
+        backend: sel.to_string(),
+        format: fmt,
+        checks: 0,
+        reduce_mismatches: 0,
+        split_mismatches: 0,
+        merge_mismatches: 0,
+        codec_failures: 0,
+        specials_failures: 0,
+    };
+    let mut rng = XorShift::new(
+        cfg.seed ^ ((fmt.ebits as u64) << 32) ^ ((fmt.mbits as u64) << 40),
+    );
+    for spec in exact_specs(fmt) {
+        let plan = ReducePlan::with_backend(spec, sel);
+        // Identity contract.
+        rep.checks += 2;
+        if !plan.reduce(&[]).is_identity() {
+            rep.reduce_mismatches += 1;
+        }
+        let zeros = [Fp::zero(fmt); 9];
+        if !plan.reduce(&zeros).is_identity() {
+            rep.reduce_mismatches += 1;
+        }
+        for dist in DISTRIBUTIONS {
+            for _ in 0..cfg.vectors {
+                let n = 1 + rng.below(cfg.max_terms as u64) as usize;
+                let terms = dist.gen_vector(&mut rng, fmt, n);
+                let want = scalar_fold(&terms, spec);
+
+                // 1. One-shot equivalence.
+                rep.checks += 1;
+                if plan.reduce(&terms) != want {
+                    rep.reduce_mismatches += 1;
+                }
+
+                // 2. Split ingest through the stateful reducer.
+                let mut r = plan.reducer();
+                let chunk = 1 + rng.below(n as u64) as usize;
+                for c in terms.chunks(chunk) {
+                    r.ingest(c);
+                }
+                rep.checks += 1;
+                if r.finish() != want || r.terms() != n as u64 {
+                    rep.split_mismatches += 1;
+                }
+
+                // 3. Merge: head reducer absorbs the tail's partial, and
+                // the two partials also merge at the Partial surface.
+                let cut = rng.below(n as u64 + 1) as usize;
+                let (mut head, mut tail) = (plan.reducer(), plan.reducer());
+                head.ingest(&terms[..cut]);
+                tail.ingest(&terms[cut..]);
+                let (hp, tp) = (head.partial(), tail.partial());
+                head.absorb(&tp);
+                rep.checks += 2;
+                if head.finish() != want {
+                    rep.merge_mismatches += 1;
+                }
+                if hp.merge(&tp, spec).resolve(spec) != want {
+                    rep.merge_mismatches += 1;
+                }
+
+                // 4. Codec round-trip on both partials.
+                for p in [&hp, &tp] {
+                    rep.checks += 1;
+                    match Partial::from_bytes(&p.to_bytes()) {
+                        Ok(back) if &back == p => {}
+                        _ => rep.codec_failures += 1,
+                    }
+                }
+            }
+        }
+    }
+    rep.specials_failures = specials_battery(sel, fmt, &mut rep.checks);
+    rep
+}
+
+/// Run the battery for **every registered backend** on one format.
+pub fn run_format(fmt: FpFormat, cfg: &ConformanceConfig) -> Vec<BackendReport> {
+    registry::entries().iter().map(|e| run_backend(e.sel(), fmt, cfg)).collect()
+}
+
+/// Special-value screening through the adder seam: the backend must apply
+/// exactly the baseline architecture's Fp semantics.
+fn specials_battery(sel: BackendSel, fmt: FpFormat, checks: &mut u64) -> u64 {
+    let mut failures = 0u64;
+    let backend = MultiTermAdder::exact(fmt, 4, Architecture::Backend(sel));
+    let baseline = MultiTermAdder::exact(fmt, 4, Architecture::Baseline);
+    let one = Fp::from_f64(1.0, fmt);
+    let nan = Fp::nan(fmt);
+    let nan_vec = [one, nan, one, one];
+    *checks += 2;
+    if backend.add(&nan_vec).class() != FpClass::Nan {
+        failures += 1;
+    }
+    if backend.add(&nan_vec).bits != baseline.add(&nan_vec).bits {
+        failures += 1;
+    }
+    if fmt.specials == SpecialsMode::Ieee {
+        let inf = Fp::overflow(false, fmt);
+        let ninf = Fp::overflow(true, fmt);
+        let invalid = [inf, ninf, one, one];
+        *checks += 1;
+        if backend.add(&invalid).class() != FpClass::Nan {
+            failures += 1;
+        }
+        for sign in [false, true] {
+            let v = [Fp::overflow(sign, fmt), one, one, one];
+            let r = backend.add(&v);
+            *checks += 1;
+            if r.class() != FpClass::Inf
+                || r.sign() != sign
+                || r.bits != baseline.add(&v).bits
+            {
+                failures += 1;
+            }
+        }
+    } else {
+        // NoInf formats: saturation clamps to the maximum finite value.
+        let max = Fp::pack(false, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
+        let v = [max; 4];
+        *checks += 1;
+        if backend.add(&v).bits != baseline.add(&v).bits {
+            failures += 1;
+        }
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::BF16;
+
+    #[test]
+    fn quick_battery_is_clean_for_every_registered_backend() {
+        // The full-format battery lives in tests/reduce_conformance.rs;
+        // this is a fast in-module smoke over one format.
+        let cfg = ConformanceConfig { vectors: 4, max_terms: 40, ..Default::default() };
+        for rep in run_format(BF16, &cfg) {
+            assert!(rep.clean(), "{}: {rep:?}", rep.backend);
+            assert!(rep.checks > 0);
+        }
+    }
+}

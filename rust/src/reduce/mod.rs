@@ -1,0 +1,41 @@
+//! The reduction API tier: **one** contract every reduction backend is
+//! held to, and the one surface every consumer dispatches through
+//! (DESIGN.md §Reducer).
+//!
+//! The paper's associativity result (eq. 10) makes max-exponent search,
+//! alignment and addition composable in any order — which is why this
+//! crate grew three interchangeable backends (the scalar `⊙` fold, the
+//! batched SoA kernel, the exponent-indexed accumulator). This module is
+//! the seam that keeps them interchangeable *by construction* instead of
+//! by hand-maintained pattern matches:
+//!
+//! * [`backend`] — the [`Reducer`] trait: the
+//!   `ingest → partial → merge → finish` lifecycle plus the three in-tree
+//!   implementations.
+//! * [`partial`] — [`Partial`], the backend-agnostic mergeable state with
+//!   the **one** byte codec that ships reduction state across shard and
+//!   checkpoint boundaries (replacing the `AlignAcc`-vs-`EiaSnapshot`
+//!   special-casing that used to leak into `stream::shard`).
+//! * [`registry`] — the name-indexed backend registry: the single source
+//!   of truth CLI parsing, the differential-oracle rotation and the
+//!   equivalence batteries enumerate. [`BackendSel`] is a validated
+//!   `Copy` selection of one entry.
+//! * [`plan`] — [`ReducePlan`] / [`PlanBuilder`]: capability negotiation
+//!   per [`crate::arith::AccSpec`], replacing the old
+//!   `ReduceBackend::Auto` hidden heuristics with an inspectable plan.
+//! * [`conformance`] — the registry-driven acceptance battery every
+//!   registered backend (present and future) runs through automatically.
+//!
+//! The pre-existing `crate::arith::kernel::ReduceBackend` enum survives
+//! only as a deprecated shim that lowers onto this API.
+
+pub mod backend;
+pub mod conformance;
+pub mod partial;
+pub mod plan;
+pub mod registry;
+
+pub use backend::{EiaReducer, FoldReducer, KernelReducer, Reducer};
+pub use partial::{Partial, PartialState};
+pub use plan::{PlanBuilder, ReducePlan};
+pub use registry::{BackendEntry, BackendSel, Capabilities};

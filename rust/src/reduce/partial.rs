@@ -1,0 +1,311 @@
+//! [`Partial`]: the one mergeable, serializable partial-reduction state
+//! every registered backend produces (DESIGN.md §Reducer).
+//!
+//! Before this type existed each backend leaked its own partial state
+//! through the crate — `AlignAcc`-based [`crate::stream::Segment`]s for the
+//! online backends, [`EiaSnapshot`]s for the deferred-alignment EIA — and
+//! cross-backend consumers grew special cases (`ShardMap::merge_eia`). A
+//! [`Partial`] is the union of both domains behind one `merge`/`resolve`
+//! surface and **one byte codec**, so shards, checkpoints and peers ship a
+//! single wire type regardless of which backend produced the state.
+//!
+//! Two variants, because the two domains genuinely differ:
+//!
+//! * [`PartialState::Aligned`] — the paper's `[λ; acc; sticky]` vector
+//!   (eq. 8), produced by the scalar `⊙` fold and the SoA kernel. Merging
+//!   two aligned partials is one [`op_combine`].
+//! * [`PartialState::Deferred`] — a canonical exponent-bin checkpoint
+//!   ([`EiaSnapshot`]), produced by the EIA backend. Merging two deferred
+//!   partials is exact (pointwise integer adds) under *any* spec.
+//!
+//! Cross-domain merges resolve the deferred side under the merge's
+//! [`AccSpec`] and combine with `⊙`. Under an exact spec every grouping —
+//! pure aligned, pure deferred, or mixed — resolves to bit-identical
+//! `(λ, acc, sticky)` (eq. 10 plus the EIA drain-equivalence contract);
+//! under a truncated spec each grouping is its own deterministic
+//! parenthesisation, exactly as for the backends themselves.
+
+use crate::accum::EiaSnapshot;
+use crate::arith::operator::{op_combine, AlignAcc};
+use crate::arith::wide::LIMBS;
+use crate::arith::{AccSpec, WideInt};
+
+/// The backend-domain payload of a [`Partial`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PartialState {
+    /// An aligned `[λ; acc; sticky]` state (scalar fold / SoA kernel).
+    Aligned(AlignAcc),
+    /// A deferred-alignment exponent-bin checkpoint (EIA).
+    Deferred(EiaSnapshot),
+}
+
+/// One backend-agnostic partial-reduction state: the payload plus the
+/// number of terms it covers (zeros included — the same bookkeeping
+/// [`crate::stream::Segment`] carries).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partial {
+    pub state: PartialState,
+    pub terms: u64,
+}
+
+/// Byte-codec magic + version ("RDP" = reduce partial, format 1).
+const MAGIC: [u8; 4] = *b"RDP1";
+/// Header: magic (4) + tag (1) + terms (8).
+const HEADER_LEN: usize = 13;
+/// Aligned payload: lambda (4) + sticky (1) + acc limbs (8 × `LIMBS`).
+const ALIGNED_LEN: usize = 4 + 1 + 8 * LIMBS;
+const TAG_ALIGNED: u8 = 0;
+const TAG_DEFERRED: u8 = 1;
+
+impl Partial {
+    /// The identity partial: no terms covered, merges as a no-op.
+    pub const IDENTITY: Partial =
+        Partial { state: PartialState::Aligned(AlignAcc::IDENTITY), terms: 0 };
+
+    /// An aligned partial over `terms` covered values.
+    pub fn aligned(state: AlignAcc, terms: u64) -> Partial {
+        Partial { state: PartialState::Aligned(state), terms }
+    }
+
+    /// A deferred partial; the term count is the snapshot's own.
+    pub fn deferred(snap: EiaSnapshot) -> Partial {
+        let terms = snap.terms;
+        Partial { state: PartialState::Deferred(snap), terms }
+    }
+
+    /// True when no live value has been absorbed (identity of `merge`).
+    pub fn is_identity(&self) -> bool {
+        match &self.state {
+            PartialState::Aligned(a) => a.is_identity(),
+            PartialState::Deferred(s) => s.is_identity(),
+        }
+    }
+
+    /// Resolve to the aligned `[λ; acc; sticky]` state under `spec`
+    /// (deferred partials pay their alignment bill here; aligned partials
+    /// are returned as-is).
+    pub fn resolve(&self, spec: AccSpec) -> AlignAcc {
+        match &self.state {
+            PartialState::Aligned(a) => *a,
+            PartialState::Deferred(s) => s.drain(spec),
+        }
+    }
+
+    /// Merge two partials under `spec`. Deferred ⊙ deferred stays in the
+    /// deferred domain (exact under any spec); any aligned operand forces
+    /// an aligned result via `⊙`. Associative in exact specs across all
+    /// variant combinations (see the module docs).
+    pub fn merge(&self, other: &Partial, spec: AccSpec) -> Partial {
+        match (&self.state, &other.state) {
+            (PartialState::Deferred(a), PartialState::Deferred(b)) => {
+                Partial::deferred(a.merge(b))
+            }
+            _ => Partial {
+                state: PartialState::Aligned(op_combine(
+                    &self.resolve(spec),
+                    &other.resolve(spec),
+                    spec,
+                )),
+                terms: self.terms + other.terms,
+            },
+        }
+    }
+
+    /// Serialize to the portable little-endian wire format (see `MAGIC`).
+    /// This is the **one** codec for shipping reduction state across
+    /// shard/checkpoint boundaries, whichever backend produced it.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + ALIGNED_LEN);
+        out.extend_from_slice(&MAGIC);
+        match &self.state {
+            PartialState::Aligned(a) => {
+                out.push(TAG_ALIGNED);
+                out.extend_from_slice(&self.terms.to_le_bytes());
+                out.extend_from_slice(&a.lambda.to_le_bytes());
+                out.push(a.sticky as u8);
+                for limb in &a.acc.limbs {
+                    out.extend_from_slice(&limb.to_le_bytes());
+                }
+            }
+            PartialState::Deferred(s) => {
+                out.push(TAG_DEFERRED);
+                out.extend_from_slice(&self.terms.to_le_bytes());
+                out.extend_from_slice(&s.to_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize and validate. A corrupted or cross-version buffer must
+    /// fail loudly — a garbage partial merged into a live stream would
+    /// silently poison every later query.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Partial, String> {
+        if bytes.len() < HEADER_LEN {
+            return Err(format!("reduce partial too short: {} bytes", bytes.len()));
+        }
+        if bytes[..4] != MAGIC {
+            return Err("reduce partial: bad magic".into());
+        }
+        let tag = bytes[4];
+        let terms = u64::from_le_bytes(bytes[5..13].try_into().unwrap());
+        let body = &bytes[HEADER_LEN..];
+        match tag {
+            TAG_ALIGNED => {
+                if body.len() != ALIGNED_LEN {
+                    return Err(format!(
+                        "reduce partial: aligned payload is {} bytes, expected {ALIGNED_LEN}",
+                        body.len()
+                    ));
+                }
+                let lambda = i32::from_le_bytes(body[..4].try_into().unwrap());
+                let sticky = match body[4] {
+                    0 => false,
+                    1 => true,
+                    other => {
+                        return Err(format!("reduce partial: bad sticky byte {other:#x}"))
+                    }
+                };
+                let mut limbs = [0u64; LIMBS];
+                for (i, limb) in limbs.iter_mut().enumerate() {
+                    let at = 5 + 8 * i;
+                    *limb = u64::from_le_bytes(body[at..at + 8].try_into().unwrap());
+                }
+                if lambda < 0 {
+                    return Err(format!("reduce partial: negative λ {lambda}"));
+                }
+                Ok(Partial::aligned(
+                    AlignAcc { lambda, acc: WideInt { limbs }, sticky },
+                    terms,
+                ))
+            }
+            TAG_DEFERRED => {
+                let snap = EiaSnapshot::from_bytes(body)?;
+                if snap.terms != terms {
+                    return Err(format!(
+                        "reduce partial: header covers {terms} terms but snapshot covers {}",
+                        snap.terms
+                    ));
+                }
+                Ok(Partial::deferred(snap))
+            }
+            other => Err(format!("reduce partial: unknown state tag {other:#x}")),
+        }
+    }
+}
+
+impl Default for Partial {
+    fn default() -> Self {
+        Partial::IDENTITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accum::merge::snapshot_terms;
+    use crate::arith::kernel::scalar_fold;
+    use crate::formats::{Fp, BF16};
+    use crate::util::prng::XorShift;
+
+    fn terms(rng: &mut XorShift, n: usize) -> Vec<Fp> {
+        (0..n).map(|_| rng.gen_fp_full(BF16)).collect()
+    }
+
+    #[test]
+    fn identity_is_neutral_in_both_domains() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x9A27);
+        let ts = terms(&mut rng, 30);
+        let aligned = Partial::aligned(scalar_fold(&ts, spec), 30);
+        let deferred = Partial::deferred(snapshot_terms(&ts));
+        for p in [&aligned, &deferred] {
+            let m = Partial::IDENTITY.merge(p, spec);
+            assert_eq!(m.resolve(spec), p.resolve(spec));
+            assert_eq!(m.terms, 30);
+            let m = p.merge(&Partial::IDENTITY, spec);
+            assert_eq!(m.resolve(spec), p.resolve(spec));
+        }
+        assert!(Partial::IDENTITY.is_identity());
+        assert_eq!(Partial::default(), Partial::IDENTITY);
+    }
+
+    #[test]
+    fn mixed_domain_merge_is_bit_identical_on_exact_specs() {
+        // aligned ⊙ deferred == deferred ⊙ deferred == the one-shot fold:
+        // the drain-equivalence contract lifted to the Partial surface.
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x9A28);
+        for n in [2usize, 17, 90] {
+            let ts = terms(&mut rng, n);
+            let want = scalar_fold(&ts, spec);
+            let cut = 1 + rng.below(n as u64 - 1) as usize;
+            let a = Partial::aligned(scalar_fold(&ts[..cut], spec), cut as u64);
+            let d = Partial::deferred(snapshot_terms(&ts[cut..]));
+            for merged in [a.merge(&d, spec), d.merge(&a, spec)] {
+                assert_eq!(merged.resolve(spec), want, "n={n} cut={cut}");
+                assert_eq!(merged.terms, n as u64);
+            }
+            // Pure deferred merges stay deferred (lossless under any spec).
+            let d2 = Partial::deferred(snapshot_terms(&ts[..cut]));
+            let dd = d2.merge(&d, spec);
+            assert!(matches!(dd.state, PartialState::Deferred(_)));
+            assert_eq!(dd.resolve(spec), want);
+        }
+    }
+
+    #[test]
+    fn codec_roundtrips_aligned_deferred_and_identity() {
+        let mut rng = XorShift::new(0x9A29);
+        let ts = terms(&mut rng, 64);
+        // Truncated-spec aligned snapshot: sticky set, bits already dropped.
+        let trunc = AccSpec::truncated(2);
+        let cases = [
+            Partial::IDENTITY,
+            Partial::aligned(scalar_fold(&ts, AccSpec::exact(BF16)), 64),
+            Partial::aligned(scalar_fold(&ts, trunc), 64),
+            Partial::deferred(snapshot_terms(&ts)),
+            Partial::deferred(EiaSnapshot::IDENTITY),
+        ];
+        for p in &cases {
+            let bytes = p.to_bytes();
+            let back = Partial::from_bytes(&bytes).expect("roundtrip");
+            assert_eq!(&back, p);
+        }
+    }
+
+    #[test]
+    fn codec_rejects_garbage_loudly() {
+        let mut rng = XorShift::new(0x9A2A);
+        let ts = terms(&mut rng, 40);
+        let aligned = Partial::aligned(scalar_fold(&ts, AccSpec::exact(BF16)), 40);
+        let deferred = Partial::deferred(snapshot_terms(&ts));
+        // Too short / empty.
+        assert!(Partial::from_bytes(b"").is_err());
+        assert!(Partial::from_bytes(b"RDP1").is_err());
+        // Wrong magic (e.g. a raw EIA snapshot shipped on the wrong wire).
+        assert!(Partial::from_bytes(&snapshot_terms(&ts).to_bytes()).is_err());
+        let mut bad = aligned.to_bytes();
+        bad[0] ^= 0xFF;
+        assert!(Partial::from_bytes(&bad).is_err());
+        // Unknown tag.
+        let mut bad = aligned.to_bytes();
+        bad[4] = 9;
+        assert!(Partial::from_bytes(&bad).is_err());
+        // Truncated and padded payloads.
+        let bytes = aligned.to_bytes();
+        assert!(Partial::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(Partial::from_bytes(&padded).is_err());
+        // Non-boolean sticky byte.
+        let mut bad = bytes.clone();
+        bad[HEADER_LEN + 4] = 2;
+        assert!(Partial::from_bytes(&bad).is_err());
+        // Deferred: inner snapshot corruption and term-count mismatch.
+        let bytes = deferred.to_bytes();
+        assert!(Partial::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        let mut bad = bytes.clone();
+        bad[5] ^= 0xFF; // header term count no longer matches the snapshot
+        assert!(Partial::from_bytes(&bad).is_err());
+    }
+}

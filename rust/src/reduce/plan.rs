@@ -1,0 +1,340 @@
+//! [`ReducePlan`] and [`PlanBuilder`]: capability negotiation that turned
+//! `ReduceBackend::Auto`'s hidden heuristics into an **inspectable plan**
+//! (DESIGN.md §Reducer).
+//!
+//! A plan binds a validated backend selection to an [`AccSpec`] together
+//! with the [`Capabilities`] the pair guarantees and a human-readable
+//! rationale for *why* that backend was chosen — so a config dump or a
+//! `repro backends` listing can answer "which code will run and what does
+//! it promise" without reading the dispatch code.
+
+use super::backend::Reducer;
+use super::registry::{self, BackendSel, Capabilities};
+use crate::arith::operator::AlignAcc;
+use crate::arith::AccSpec;
+use crate::formats::Fp;
+
+const EXPLICIT: &str = "explicit backend selection";
+const NEGOTIATED_EXACT: &str =
+    "negotiated: exact spec → SoA kernel (bit-identical to the ⊙ fold by eq. 10)";
+const NEGOTIATED_TRUNCATED: &str =
+    "negotiated: truncated spec → scalar ⊙ fold (preserves the radix-2 dropped-bit pattern)";
+const NEGOTIATED_ORDER_INVARIANT: &str =
+    "negotiated: truncated spec + order-invariance → exponent-indexed accumulator";
+
+/// An executable reduction plan: spec + backend + negotiated capabilities.
+///
+/// Plans are `Copy` — build once, hand to every worker.
+///
+/// ```
+/// use online_fp_add::prelude::*;
+///
+/// // Negotiation (the old `ReduceBackend::Auto`, now inspectable): exact
+/// // specs pick the SoA kernel, truncated specs keep the scalar fold.
+/// let spec = AccSpec::exact(BF16);
+/// let plan = ReducePlan::negotiate(spec);
+/// assert_eq!(plan.backend().name(), "kernel");
+/// assert!(plan.capabilities().fold_bit_identical);
+///
+/// // Explicit selection by registry name, through the builder:
+/// let eia = ReducePlan::builder(spec).backend_name("eia").unwrap().build().unwrap();
+///
+/// // On exact specs every registered backend resolves to the same bits:
+/// let terms: Vec<Fp> = [1.5, -0.25, 3.0].iter().map(|&x| Fp::from_f64(x, BF16)).collect();
+/// assert_eq!(plan.reduce(&terms), eia.reduce(&terms));
+///
+/// // A zero block is rejected at plan-build time, never clamped:
+/// assert!(ReducePlan::builder(spec).block(0).is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReducePlan {
+    spec: AccSpec,
+    sel: BackendSel,
+    caps: Capabilities,
+    rationale: &'static str,
+}
+
+impl ReducePlan {
+    /// Negotiate a backend for `spec` with no further requirements — the
+    /// replacement for `ReduceBackend::Auto`: the SoA kernel on exact
+    /// specs (bit-identical by eq. 10, fastest measured), the scalar fold
+    /// on truncated specs (preserving the pre-kernel dropped-bit pattern).
+    pub fn negotiate(spec: AccSpec) -> ReducePlan {
+        // One negotiation rule, owned by the builder's no-backend branch.
+        ReducePlan::builder(spec).build().expect("unconstrained negotiation is infallible")
+    }
+
+    /// A plan for an explicit, already-validated selection.
+    pub fn with_backend(spec: AccSpec, sel: BackendSel) -> ReducePlan {
+        ReducePlan { spec, sel, caps: sel.capabilities(spec), rationale: EXPLICIT }
+    }
+
+    /// Start a builder (explicit backend, block size, requirements).
+    pub fn builder(spec: AccSpec) -> PlanBuilder {
+        PlanBuilder {
+            spec,
+            sel: None,
+            block: None,
+            require_order_invariant: false,
+            require_fold_bits: false,
+        }
+    }
+
+    pub fn spec(&self) -> AccSpec {
+        self.spec
+    }
+
+    /// The backend this plan dispatches to.
+    pub fn backend(&self) -> BackendSel {
+        self.sel
+    }
+
+    /// What the (backend, spec) pair guarantees.
+    pub fn capabilities(&self) -> Capabilities {
+        self.caps
+    }
+
+    /// Why this backend was chosen ("explicit backend selection" or the
+    /// negotiation rule that fired).
+    pub fn rationale(&self) -> &'static str {
+        self.rationale
+    }
+
+    /// One-shot slice reduction on the direct (fn-pointer) dispatch path —
+    /// what the old `ReduceBackend::reduce` enum match compiled to.
+    pub fn reduce(&self, terms: &[Fp]) -> AlignAcc {
+        self.sel.reduce(terms, self.spec)
+    }
+
+    /// Build a stateful [`Reducer`] for streaming/mergeable use; call
+    /// [`Reducer::reset`] to reuse it across independent reductions.
+    pub fn reducer(&self) -> Box<dyn Reducer> {
+        self.sel.reducer(self.spec)
+    }
+
+    /// One human-readable line: backend, spec, capabilities, rationale.
+    pub fn describe(&self) -> String {
+        let c = &self.caps;
+        format!(
+            "{} on {} spec (f={}) — fold_bits={} order_invariant={} lossless_merge={} [{}]",
+            self.sel,
+            if self.spec.exact { "exact" } else { "truncated" },
+            self.spec.f,
+            c.fold_bit_identical,
+            c.order_invariant,
+            c.lossless_merge,
+            self.rationale,
+        )
+    }
+}
+
+/// Builder for [`ReducePlan`]: explicit backend and/or block plus
+/// capability requirements, validated at [`PlanBuilder::build`].
+#[derive(Clone, Debug)]
+pub struct PlanBuilder {
+    spec: AccSpec,
+    sel: Option<BackendSel>,
+    block: Option<usize>,
+    require_order_invariant: bool,
+    require_fold_bits: bool,
+}
+
+impl PlanBuilder {
+    /// Request an explicit (already validated) selection.
+    pub fn backend(mut self, sel: BackendSel) -> Self {
+        self.sel = Some(sel);
+        self
+    }
+
+    /// Request a backend by registry name (`"scalar"`, `"kernel"`,
+    /// `"kernel:<block>"`, `"eia"`); errors on unknown names or bad
+    /// parameters.
+    pub fn backend_name(mut self, name: &str) -> Result<Self, String> {
+        self.sel = Some(registry::sel(name)?);
+        Ok(self)
+    }
+
+    /// Request a block size (block-taking backends only). Zero is an
+    /// error here — the plan layer never clamps.
+    pub fn block(mut self, block: usize) -> Result<Self, String> {
+        if block == 0 {
+            return Err("reduce plan: block must be >= 1".into());
+        }
+        self.block = Some(block);
+        Ok(self)
+    }
+
+    /// Require a truncated-spec result that is invariant to ingest order
+    /// and merge grouping **at the reducer/partial level**: the guarantee
+    /// holds while state stays in one [`super::Reducer`] or merges through
+    /// deferred [`super::Partial`]s. A pipeline that resolves partials to
+    /// aligned states early and `⊙`-merges them in completion order (the
+    /// multi-threaded [`crate::stream::StreamEngine`] does exactly that
+    /// per chunk) reintroduces order sensitivity in truncated frames —
+    /// see the engine docs for its reproducible-replay recipe.
+    pub fn require_order_invariant(mut self) -> Self {
+        self.require_order_invariant = true;
+        self
+    }
+
+    /// Require the scalar radix-2 fold's exact dropped-bit pattern.
+    pub fn require_fold_bits(mut self) -> Self {
+        self.require_fold_bits = true;
+        self
+    }
+
+    /// Validate and negotiate. With an explicit backend the requirements
+    /// are checked against its capabilities; without one, the negotiation
+    /// picks the first registered backend that satisfies them.
+    pub fn build(self) -> Result<ReducePlan, String> {
+        let (sel, rationale) = match self.sel {
+            Some(sel) => {
+                let sel = match self.block {
+                    Some(b) => sel.with_block(b)?,
+                    None => sel,
+                };
+                (sel, EXPLICIT)
+            }
+            None => {
+                if self.spec.exact {
+                    // Every backend qualifies on exact specs; the kernel is
+                    // the fastest measured (§Perf), honoring a block hint.
+                    let mut sel = BackendSel::named("kernel").expect("registered");
+                    if let Some(b) = self.block {
+                        sel = sel.with_block(b)?;
+                    }
+                    (sel, NEGOTIATED_EXACT)
+                } else if self.block.is_some() {
+                    // A block hint must not be dropped on the floor: the
+                    // truncated negotiation picks a non-batched backend.
+                    return Err(
+                        "reduce plan: a block size requires an explicit \"kernel\" \
+                         selection under a truncated spec (negotiation picks a \
+                         non-batched backend there)"
+                            .into(),
+                    );
+                } else if self.require_order_invariant && self.require_fold_bits {
+                    return Err(
+                        "reduce plan: no registered backend is both order-invariant and \
+                         fold-bit-identical under a truncated spec (the radix-2 fold's \
+                         dropped bits depend on term order by construction)"
+                            .into(),
+                    );
+                } else if self.require_order_invariant {
+                    (BackendSel::named("eia").expect("registered"), NEGOTIATED_ORDER_INVARIANT)
+                } else {
+                    (BackendSel::named("scalar").expect("registered"), NEGOTIATED_TRUNCATED)
+                }
+            }
+        };
+        let caps = sel.capabilities(self.spec);
+        if self.require_order_invariant && !caps.order_invariant {
+            return Err(format!(
+                "reduce plan: backend {sel} is not order-invariant under this spec \
+                 (its truncated dropped bits depend on ingest order); use \"eia\" or an \
+                 exact spec"
+            ));
+        }
+        if self.require_fold_bits && !caps.fold_bit_identical {
+            return Err(format!(
+                "reduce plan: backend {sel} does not reproduce the scalar fold's \
+                 dropped-bit pattern under this spec; use \"scalar\" (or \"kernel:1\")"
+            ));
+        }
+        Ok(ReducePlan { spec: self.spec, sel, caps, rationale })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{Fp, BF16};
+    use crate::util::prng::XorShift;
+
+    #[test]
+    fn negotiation_replaces_the_auto_heuristics_inspectably() {
+        let exact = ReducePlan::negotiate(AccSpec::exact(BF16));
+        assert_eq!(exact.backend().name(), "kernel");
+        assert!(exact.rationale().contains("exact spec"));
+        let trunc = ReducePlan::negotiate(AccSpec::truncated(4));
+        assert_eq!(trunc.backend().name(), "scalar");
+        assert!(trunc.rationale().contains("truncated spec"));
+        assert!(trunc.describe().contains("scalar"));
+    }
+
+    #[test]
+    fn zero_block_is_a_build_error_never_a_clamp() {
+        let spec = AccSpec::exact(BF16);
+        assert!(ReducePlan::builder(spec).block(0).is_err());
+        assert!(ReducePlan::builder(spec).backend_name("kernel:0").is_err());
+        // An explicit backend with a later zero block override also fails.
+        let b = ReducePlan::builder(spec).backend_name("kernel").unwrap();
+        assert!(b.block(0).is_err());
+        // And a valid block flows into the selection.
+        let plan = ReducePlan::builder(spec)
+            .backend_name("kernel")
+            .unwrap()
+            .block(7)
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(plan.backend().block(), Some(7));
+    }
+
+    #[test]
+    fn requirements_steer_or_reject_truncated_negotiation() {
+        let trunc = AccSpec::truncated(8);
+        let plan = ReducePlan::builder(trunc).require_order_invariant().build().unwrap();
+        assert_eq!(plan.backend().name(), "eia");
+        let plan = ReducePlan::builder(trunc).require_fold_bits().build().unwrap();
+        assert_eq!(plan.backend().name(), "scalar");
+        assert!(ReducePlan::builder(trunc)
+            .require_order_invariant()
+            .require_fold_bits()
+            .build()
+            .is_err());
+        // Explicit backends that cannot satisfy a requirement are rejected.
+        assert!(ReducePlan::builder(trunc)
+            .backend_name("kernel")
+            .unwrap()
+            .require_order_invariant()
+            .build()
+            .is_err());
+        assert!(ReducePlan::builder(trunc)
+            .backend_name("eia")
+            .unwrap()
+            .require_fold_bits()
+            .build()
+            .is_err());
+        // On exact specs every requirement is free.
+        let plan = ReducePlan::builder(AccSpec::exact(BF16))
+            .backend_name("eia")
+            .unwrap()
+            .require_order_invariant()
+            .require_fold_bits()
+            .build()
+            .unwrap();
+        assert_eq!(plan.backend().name(), "eia");
+    }
+
+    #[test]
+    fn plans_reduce_bit_identically_across_backends_on_exact_specs() {
+        let spec = AccSpec::exact(BF16);
+        let mut rng = XorShift::new(0x91A0);
+        let terms: Vec<Fp> = (0..90).map(|_| rng.gen_fp_full(BF16)).collect();
+        let want = ReducePlan::builder(spec)
+            .backend_name("scalar")
+            .unwrap()
+            .build()
+            .unwrap()
+            .reduce(&terms);
+        for entry in registry::entries() {
+            let plan = ReducePlan::with_backend(spec, entry.sel());
+            assert_eq!(plan.reduce(&terms), want, "{}", entry.name);
+            // The stateful reducer path resolves to the same bits.
+            let mut r = plan.reducer();
+            r.ingest(&terms);
+            assert_eq!(r.finish(), want, "{} reducer", entry.name);
+        }
+    }
+}

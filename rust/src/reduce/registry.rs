@@ -1,0 +1,358 @@
+//! The name-indexed reduction-backend registry: the **one source of
+//! truth** every backend consumer enumerates (DESIGN.md §Reducer).
+//!
+//! CLI parsing (`repro --backend`, `Architecture::parse`), the
+//! differential-oracle rotation, the equivalence batteries and the
+//! conformance suite all iterate [`entries`] instead of hand-maintained
+//! lists — registering a new backend here (e.g. the planned SIMD kernel
+//! variant) automatically puts it in front of every gate and every CLI
+//! surface.
+//!
+//! A [`BackendSel`] is a validated selection of one registry entry plus
+//! its parameters; it is the `Copy` value configs and plans carry, and its
+//! `Display`/`FromStr` grammar (`"scalar"`, `"kernel"`, `"kernel:<block>"`,
+//! `"eia"`) is the one spelling used everywhere.
+
+use super::backend::{EiaReducer, FoldReducer, KernelReducer, Reducer};
+use crate::arith::kernel::DEFAULT_BLOCK;
+use crate::arith::operator::AlignAcc;
+use crate::arith::AccSpec;
+use crate::formats::Fp;
+use std::fmt;
+use std::str::FromStr;
+
+/// What a backend guarantees under a given [`AccSpec`] — the negotiation
+/// surface [`super::PlanBuilder`] matches requirements against.
+///
+/// Every registered backend is bit-identical to the scalar `⊙` fold under
+/// **exact** specs (the conformance suite enforces it); the capabilities
+/// describe what additionally holds, per spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Dropped-bit pattern (and therefore the full `[λ; acc; sticky]`
+    /// state) matches the scalar radix-2 `⊙` fold under this spec.
+    pub fold_bit_identical: bool,
+    /// Result is invariant to ingest order and merge grouping under this
+    /// spec (always true on exact specs — eq. 10). For truncated specs
+    /// this is a property of the reducer/partial lifecycle itself; a
+    /// consumer that drops to aligned `⊙` merges mid-pipeline (e.g. the
+    /// stream engine's per-chunk reduce) forfeits it — see
+    /// [`super::PlanBuilder::require_order_invariant`].
+    pub order_invariant: bool,
+    /// Partials merge without a lossy resolve under this spec (deferred
+    /// domain, or exact aligned merges).
+    pub lossless_merge: bool,
+    /// SoA lanes per block, when the backend is batched.
+    pub block: Option<usize>,
+}
+
+/// One registered reduction backend.
+pub struct BackendEntry {
+    /// Registry name — the canonical CLI/config spelling.
+    pub name: &'static str,
+    /// One-line description for `repro backends`.
+    pub summary: &'static str,
+    /// Whether the backend takes a `:<block>` parameter.
+    pub takes_block: bool,
+    /// Default block size for block-taking backends.
+    pub default_block: Option<usize>,
+    caps_fn: fn(AccSpec, Option<usize>) -> Capabilities,
+    reduce_fn: fn(&[Fp], AccSpec, Option<usize>) -> AlignAcc,
+    make_fn: fn(AccSpec, Option<usize>) -> Box<dyn Reducer>,
+}
+
+impl BackendEntry {
+    /// The default selection of this backend (default block, if any).
+    pub fn sel(&'static self) -> BackendSel {
+        BackendSel { entry: self, block: self.default_block }
+    }
+
+    /// Capabilities under `spec` at `block` (None = default).
+    pub fn capabilities(&self, spec: AccSpec, block: Option<usize>) -> Capabilities {
+        (self.caps_fn)(spec, block)
+    }
+}
+
+// ---- the three in-tree backends --------------------------------------
+
+fn scalar_caps(spec: AccSpec, _block: Option<usize>) -> Capabilities {
+    Capabilities {
+        fold_bit_identical: true,
+        order_invariant: spec.exact,
+        lossless_merge: spec.exact,
+        block: None,
+    }
+}
+
+fn scalar_reduce(terms: &[Fp], spec: AccSpec, _block: Option<usize>) -> AlignAcc {
+    crate::arith::kernel::scalar_fold(terms, spec)
+}
+
+fn scalar_make(spec: AccSpec, _block: Option<usize>) -> Box<dyn Reducer> {
+    Box::new(FoldReducer::new(spec))
+}
+
+fn kernel_caps(spec: AccSpec, block: Option<usize>) -> Capabilities {
+    let b = block.unwrap_or(DEFAULT_BLOCK);
+    Capabilities {
+        fold_bit_identical: spec.exact || b == 1,
+        order_invariant: spec.exact,
+        lossless_merge: spec.exact,
+        block: Some(b),
+    }
+}
+
+fn kernel_reduce(terms: &[Fp], spec: AccSpec, block: Option<usize>) -> AlignAcc {
+    crate::arith::kernel::reduce_terms(terms, block.unwrap_or(DEFAULT_BLOCK), spec)
+}
+
+fn kernel_make(spec: AccSpec, block: Option<usize>) -> Box<dyn Reducer> {
+    Box::new(KernelReducer::new(spec, block.unwrap_or(DEFAULT_BLOCK)))
+}
+
+fn eia_caps(spec: AccSpec, _block: Option<usize>) -> Capabilities {
+    Capabilities {
+        fold_bit_identical: spec.exact,
+        // Banking is exact; bits can only drop in the single drain, so the
+        // EIA result is ingest-order invariant even when truncating.
+        order_invariant: true,
+        lossless_merge: true,
+        block: None,
+    }
+}
+
+fn eia_reduce(terms: &[Fp], spec: AccSpec, _block: Option<usize>) -> AlignAcc {
+    crate::accum::reduce_terms_eia(terms, spec)
+}
+
+fn eia_make(spec: AccSpec, _block: Option<usize>) -> Box<dyn Reducer> {
+    Box::new(EiaReducer::new(spec))
+}
+
+static REGISTRY: [BackendEntry; 3] = [
+    BackendEntry {
+        name: "scalar",
+        summary: "serial radix-2 ⊙ fold (Algorithm 3) — the reference",
+        takes_block: false,
+        default_block: None,
+        caps_fn: scalar_caps,
+        reduce_fn: scalar_reduce,
+        make_fn: scalar_make,
+    },
+    BackendEntry {
+        name: "kernel",
+        summary: "batched SoA align-and-add kernel (blockwise single-λ)",
+        takes_block: true,
+        default_block: Some(DEFAULT_BLOCK),
+        caps_fn: kernel_caps,
+        reduce_fn: kernel_reduce,
+        make_fn: kernel_make,
+    },
+    BackendEntry {
+        name: "eia",
+        summary: "exponent-indexed accumulator (deferred alignment, O(1) ingest)",
+        takes_block: false,
+        default_block: None,
+        caps_fn: eia_caps,
+        reduce_fn: eia_reduce,
+        make_fn: eia_make,
+    },
+];
+
+/// All registered backends, in registration order.
+pub fn entries() -> &'static [BackendEntry] {
+    &REGISTRY
+}
+
+/// Look a backend up by its registry name (case-sensitive, lowercase).
+pub fn by_name(name: &str) -> Option<&'static BackendEntry> {
+    REGISTRY.iter().find(|e| e.name == name)
+}
+
+/// Registered backend names, for error messages and listings.
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|e| e.name).collect()
+}
+
+/// Parse a backend selection (`"name"` / `"name:<block>"`); the top-level
+/// convenience over [`BackendSel::from_str`].
+pub fn sel(spec: &str) -> Result<BackendSel, String> {
+    spec.parse()
+}
+
+/// A validated selection of one registered backend plus its parameters —
+/// the `Copy` value configs, plans and CLIs carry. Constructors reject
+/// invalid parameters (a block of 0 is an error, never a silent clamp).
+#[derive(Clone, Copy)]
+pub struct BackendSel {
+    entry: &'static BackendEntry,
+    block: Option<usize>,
+}
+
+impl BackendSel {
+    /// Select `entry` with an explicit block (None = the entry's default).
+    pub fn new(entry: &'static BackendEntry, block: Option<usize>) -> Result<Self, String> {
+        match block {
+            None => Ok(BackendSel { entry, block: entry.default_block }),
+            Some(_) if !entry.takes_block => {
+                Err(format!("backend {} takes no block parameter", entry.name))
+            }
+            Some(0) => Err(format!("backend {}: block must be >= 1", entry.name)),
+            Some(b) => Ok(BackendSel { entry, block: Some(b) }),
+        }
+    }
+
+    /// Select a backend by registry name, at its default parameters.
+    pub fn named(name: &str) -> Result<Self, String> {
+        let entry = by_name(name).ok_or_else(|| {
+            format!("unknown backend {name:?} (registered: {})", names().join(", "))
+        })?;
+        Ok(entry.sel())
+    }
+
+    /// The registry entry backing this selection.
+    pub fn entry(&self) -> &'static BackendEntry {
+        self.entry
+    }
+
+    /// The registry name.
+    pub fn name(&self) -> &'static str {
+        self.entry.name
+    }
+
+    /// The selected block size, for block-taking backends.
+    pub fn block(&self) -> Option<usize> {
+        self.block
+    }
+
+    /// This selection with a different block size (errors on 0 or on a
+    /// backend that takes no block).
+    pub fn with_block(&self, block: usize) -> Result<Self, String> {
+        BackendSel::new(self.entry, Some(block))
+    }
+
+    /// Capabilities of this selection under `spec`.
+    pub fn capabilities(&self, spec: AccSpec) -> Capabilities {
+        (self.entry.caps_fn)(spec, self.block)
+    }
+
+    /// One-shot slice reduction — the direct (fn-pointer) dispatch path.
+    pub fn reduce(&self, terms: &[Fp], spec: AccSpec) -> AlignAcc {
+        (self.entry.reduce_fn)(terms, spec, self.block)
+    }
+
+    /// Build a stateful [`Reducer`] for this selection.
+    pub fn reducer(&self, spec: AccSpec) -> Box<dyn Reducer> {
+        (self.entry.make_fn)(spec, self.block)
+    }
+}
+
+impl PartialEq for BackendSel {
+    fn eq(&self, other: &Self) -> bool {
+        self.entry.name == other.entry.name && self.block == other.block
+    }
+}
+
+impl Eq for BackendSel {}
+
+impl fmt::Debug for BackendSel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "BackendSel({})", self)
+    }
+}
+
+impl fmt::Display for BackendSel {
+    /// Canonical spelling, round-trippable through [`FromStr`]: the
+    /// registry name, plus `:<block>` for block-taking backends.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.block {
+            Some(b) => write!(f, "{}:{}", self.entry.name, b),
+            None => f.write_str(self.entry.name),
+        }
+    }
+}
+
+impl FromStr for BackendSel {
+    type Err = String;
+
+    /// Parse `"name"` or `"name:<block>"` against the registry. A zero
+    /// block is rejected here — never clamped.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let lower = s.to_ascii_lowercase();
+        let (name, block) = match lower.split_once(':') {
+            Some((n, b)) => {
+                let parsed: usize = b
+                    .parse()
+                    .map_err(|e| format!("bad block {b:?} in backend {s:?}: {e}"))?;
+                (n, Some(parsed))
+            }
+            None => (lower.as_str(), None),
+        };
+        let entry = by_name(name).ok_or_else(|| {
+            format!("unknown backend {s:?} (registered: {})", names().join(", "))
+        })?;
+        BackendSel::new(entry, block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::BF16;
+
+    #[test]
+    fn registry_lists_all_three_backends() {
+        assert_eq!(names(), vec!["scalar", "kernel", "eia"]);
+        for e in entries() {
+            assert!(by_name(e.name).is_some());
+            assert_eq!(e.sel().name(), e.name);
+        }
+        assert!(by_name("simd").is_none());
+    }
+
+    #[test]
+    fn selection_parse_display_roundtrip() {
+        for s in ["scalar", "kernel:64", "kernel:3", "eia"] {
+            let parsed: BackendSel = s.parse().unwrap();
+            assert_eq!(parsed.to_string(), s);
+            assert_eq!(parsed.to_string().parse::<BackendSel>().unwrap(), parsed);
+        }
+        // Bare "kernel" fills the default block in the canonical spelling.
+        let k: BackendSel = "kernel".parse().unwrap();
+        assert_eq!(k.block(), Some(DEFAULT_BLOCK));
+        assert_eq!(k.to_string(), format!("kernel:{DEFAULT_BLOCK}"));
+        assert!("simd".parse::<BackendSel>().is_err());
+        assert!("kernel:x".parse::<BackendSel>().is_err());
+    }
+
+    #[test]
+    fn zero_and_misplaced_blocks_are_rejected_not_clamped() {
+        // The satellite fix: a zero block used to be silently clamped to 1
+        // deep in the kernel; it is now a parse/build-time error.
+        let err = "kernel:0".parse::<BackendSel>().unwrap_err();
+        assert!(err.contains("block must be >= 1"), "{err}");
+        assert!(BackendSel::named("kernel").unwrap().with_block(0).is_err());
+        // Non-batched backends take no block at all.
+        assert!("scalar:8".parse::<BackendSel>().is_err());
+        assert!("eia:2".parse::<BackendSel>().is_err());
+    }
+
+    #[test]
+    fn capabilities_match_the_documented_contracts() {
+        let exact = AccSpec::exact(BF16);
+        let trunc = AccSpec::truncated(4);
+        for e in entries() {
+            let c = e.sel().capabilities(exact);
+            assert!(c.fold_bit_identical, "{}: exact specs are fold-identical", e.name);
+            assert!(c.order_invariant, "{}: exact specs are order-invariant", e.name);
+        }
+        let scalar = BackendSel::named("scalar").unwrap().capabilities(trunc);
+        assert!(scalar.fold_bit_identical && !scalar.order_invariant);
+        let kernel = BackendSel::named("kernel").unwrap().capabilities(trunc);
+        assert!(!kernel.fold_bit_identical && !kernel.order_invariant);
+        let k1 = sel("kernel:1").unwrap().capabilities(trunc);
+        assert!(k1.fold_bit_identical, "block=1 degenerates to the fold");
+        let eia = BackendSel::named("eia").unwrap().capabilities(trunc);
+        assert!(!eia.fold_bit_identical && eia.order_invariant && eia.lossless_merge);
+    }
+}

@@ -2,10 +2,10 @@
 //! align-and-add reduction with a fixed `(batch, n_terms)` geometry,
 //! executed by the native interpreter.
 //!
-//! The executor reproduces the hardware's fused-adder semantics: each row's
-//! `(e, m)` pairs become SoA lanes of the batched kernel
-//! ([`crate::arith::kernel::block_state`]) and are reduced against one
-//! row-local maximum exponent in the truncated accumulator frame with
+//! The executor reproduces the hardware's fused-adder semantics: each
+//! row's `(e, m)` pairs feed a [`crate::reduce::Reducer`] planned for the
+//! `"kernel"` backend at `block == n_terms`, so every row reduces against
+//! one row-local maximum exponent in the truncated accumulator frame with
 //! `guard` fractional-extension bits — the paper's baseline (Fig. 1)
 //! datapath, one max-exponent tree feeding one aligned compressor. Results
 //! are bit-identical to
@@ -13,8 +13,8 @@
 //! by construction (a single kernel block *is* the radix-`n` operator).
 
 use super::{LoadedArtifact, Result, Runtime, RuntimeError};
-use crate::arith::kernel::block_state;
 use crate::arith::AccSpec;
+use crate::reduce::{ReducePlan, Reducer};
 
 /// Output of one reduction batch: per-row `(λ, acc)` states.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -32,6 +32,10 @@ pub struct OnlineReduceExe {
     /// Guard (fractional-extension) bits of the artifact's accumulator
     /// frame — must match the Rust-side `AccSpec` when cross-checking.
     pub guard: u32,
+    /// The reduction plan every row runs: the `"kernel"` backend at
+    /// `block == n_terms` under `AccSpec::truncated(guard)`, built once at
+    /// load time through the same builder every other consumer uses.
+    plan: ReducePlan,
 }
 
 impl OnlineReduceExe {
@@ -50,7 +54,17 @@ impl OnlineReduceExe {
         }
         let exe = rt.load(name)?;
         exe.expect_kind(super::ArtifactKind::OnlineReduce)?;
-        Ok(OnlineReduceExe { exe, batch, n_terms, guard })
+        let plan = ReducePlan::builder(AccSpec::truncated(guard))
+            .backend_name("kernel")
+            .and_then(|b| b.block(n_terms))
+            .and_then(|b| b.build())
+            .map_err(|e| RuntimeError::msg(format!("artifact {name}: {e}")))?;
+        Ok(OnlineReduceExe { exe, batch, n_terms, guard, plan })
+    }
+
+    /// The reduction plan the executor dispatches rows through.
+    pub fn plan(&self) -> ReducePlan {
+        self.plan
     }
 
     /// The BF16 32-term artifact with its baked geometry.
@@ -85,20 +99,25 @@ impl OnlineReduceExe {
                 self.exe.name, self.batch
             )));
         }
-        let spec = AccSpec::truncated(self.guard);
         let mut lambda = Vec::with_capacity(rows);
         let mut acc = Vec::with_capacity(rows);
         let mut sig = vec![0i64; self.n_terms];
+        // One reusable reducer from the load-time plan; `reset` between
+        // rows keeps this allocation-free on the per-row path.
+        let mut reducer = self.plan.reducer();
         for r in 0..rows {
             let base = r * self.n_terms;
             let eff = &e[base..base + self.n_terms];
             for (slot, &mi) in sig.iter_mut().zip(&m[base..base + self.n_terms]) {
                 *slot = mi as i64;
             }
-            // One SoA kernel block per row: bit-equivalence to the baseline
-            // radix-n `⊙` operator (and hence to tree_sum with the baseline
-            // config) is by construction.
-            let state = block_state(eff, &sig, spec);
+            // One SoA kernel block per row (`block == n_terms`):
+            // bit-equivalence to the baseline radix-n `⊙` operator (and
+            // hence to tree_sum with the baseline config) is by
+            // construction.
+            reducer.reset();
+            reducer.ingest_decoded(eff, &sig);
+            let state = reducer.finish();
             lambda.push(state.lambda);
             acc.push(state.acc.to_i128() as i64);
         }
@@ -115,15 +134,22 @@ mod tests {
 
     #[test]
     fn native_executor_rows_match_baseline_tree_sum_bitexact() {
-        // The executor runs one kernel block per row; a single block is the
-        // radix-n operator, so the (e, m) field lifting plus reduction must
-        // bit-match tree_sum under the baseline (single-level) config on
-        // real encoded terms — zeros, normals and subnormals alike.
+        // The executor runs one kernel block per row through the plan's
+        // reducer; a single block is the radix-n operator, so the (e, m)
+        // field lifting plus reduction must bit-match tree_sum under the
+        // baseline (single-level) config on real encoded terms — zeros,
+        // normals and subnormals alike.
         let spec = AccSpec::truncated(16);
+        let plan = ReducePlan::builder(spec)
+            .backend_name("kernel")
+            .and_then(|b| b.block(32))
+            .and_then(|b| b.build())
+            .expect("valid plan");
         let cfg = RadixConfig::baseline(32);
         let mut rng = XorShift::new(0x2E0);
         let mut sig = vec![0i64; 32];
         let mut eff = vec![0i32; 32];
+        let mut reducer = plan.reducer();
         for _ in 0..200 {
             let terms: Vec<Fp> = (0..32)
                 .map(|_| {
@@ -140,7 +166,9 @@ mod tests {
                 eff[i] = t.eff_exp();
                 sig[i] = t.signed_sig();
             }
-            let got = block_state(&eff, &sig, spec);
+            reducer.reset();
+            reducer.ingest_decoded(&eff, &sig);
+            let got = reducer.finish();
             let want = tree_sum(&terms, &cfg, spec);
             assert_eq!(got, want);
         }

@@ -17,8 +17,8 @@
 
 use super::segment::{reduce_chunk_with, Segment};
 use super::shard::{ShardMap, Snapshot};
-use crate::arith::kernel::ReduceBackend;
 use crate::arith::AccSpec;
+use crate::reduce::{BackendSel, ReducePlan};
 use crate::coordinator::batcher::SubmitError;
 use crate::coordinator::metrics::{Counter, LatencyHistogram};
 use crate::coordinator::pool::ThreadPool;
@@ -42,11 +42,23 @@ pub struct EngineConfig {
     /// Accumulator datapath; exact specs give order/chunking/thread-count
     /// invariant results.
     pub spec: AccSpec,
-    /// Chunk-reduction backend ([`ReduceBackend::Auto`] resolves to the SoA
-    /// kernel on exact specs, the scalar fold on truncated ones). On exact
-    /// specs this is a pure throughput knob — the merged states are
-    /// bit-identical across backends.
-    pub backend: ReduceBackend,
+    /// Chunk-reduction backend: an explicit registry selection
+    /// ([`BackendSel`]), or `None` to let [`ReducePlan::negotiate`] pick
+    /// per spec (the SoA kernel on exact specs, the scalar fold on
+    /// truncated ones). On exact specs this is a pure throughput knob —
+    /// the merged states are bit-identical across backends.
+    pub backend: Option<BackendSel>,
+}
+
+impl EngineConfig {
+    /// The executable plan this configuration resolves to (inspect it via
+    /// [`ReducePlan::describe`]).
+    pub fn plan(&self) -> ReducePlan {
+        match self.backend {
+            Some(sel) => ReducePlan::with_backend(self.spec, sel),
+            None => ReducePlan::negotiate(self.spec),
+        }
+    }
 }
 
 impl Default for EngineConfig {
@@ -57,7 +69,7 @@ impl Default for EngineConfig {
             queue_depth: 4096,
             stripes: 16,
             spec: AccSpec::exact(BF16),
-            backend: ReduceBackend::Auto,
+            backend: None,
         }
     }
 }
@@ -113,6 +125,7 @@ fn note_done(p: &ProgressSync) {
 /// Multi-threaded streaming align-and-add engine.
 pub struct StreamEngine {
     cfg: EngineConfig,
+    plan: ReducePlan,
     shards: Arc<ShardMap>,
     metrics: Arc<EngineMetrics>,
     tx: Option<SyncSender<WorkItem>>,
@@ -122,6 +135,7 @@ pub struct StreamEngine {
 
 impl StreamEngine {
     pub fn new(cfg: EngineConfig) -> Self {
+        let plan = cfg.plan();
         let pool = ThreadPool::new(cfg.threads.max(1));
         let shards = Arc::new(ShardMap::new(cfg.stripes, cfg.spec));
         let metrics = Arc::new(EngineMetrics::default());
@@ -134,17 +148,18 @@ impl StreamEngine {
             let metrics = Arc::clone(&metrics);
             let progress = Arc::clone(&progress);
             let chunk = cfg.chunk.max(1);
-            let spec = cfg.spec;
-            let backend = cfg.backend.resolve(spec);
-            pool.submit(move || {
-                worker_loop(&rx, &shards, &metrics, &progress, chunk, spec, backend)
-            });
+            pool.submit(move || worker_loop(&rx, &shards, &metrics, &progress, chunk, plan));
         }
-        StreamEngine { cfg, shards, metrics, tx: Some(tx), progress, pool }
+        StreamEngine { cfg, plan, shards, metrics, tx: Some(tx), progress, pool }
     }
 
     pub fn config(&self) -> EngineConfig {
         self.cfg
+    }
+
+    /// The negotiated reduction plan every worker runs.
+    pub fn plan(&self) -> ReducePlan {
+        self.plan
     }
 
     pub fn metrics(&self) -> &EngineMetrics {
@@ -258,8 +273,7 @@ fn worker_loop(
     metrics: &EngineMetrics,
     progress: &ProgressSync,
     chunk: usize,
-    spec: AccSpec,
-    backend: ReduceBackend,
+    plan: ReducePlan,
 ) {
     loop {
         let item = {
@@ -279,11 +293,11 @@ fn worker_loop(
             let mut segments = 0u64;
             let mut merged = Segment::EMPTY;
             for c in item.terms.chunks(chunk) {
-                let seg = reduce_chunk_with(backend, c, spec);
+                let seg = reduce_chunk_with(&plan, c);
                 segments += 1;
                 // Batch-local pre-merge: one stripe-lock acquisition per
                 // batch rather than per segment (associativity again).
-                merged = merged.merge(&seg, spec);
+                merged = merged.merge(&seg, plan.spec());
             }
             if !item.terms.is_empty() {
                 shards.merge(&item.stream, merged);
@@ -363,23 +377,24 @@ mod tests {
 
     #[test]
     fn backend_is_a_pure_throughput_knob_on_exact_specs() {
+        use crate::reduce::registry;
         let spec = AccSpec::exact(BF16);
         let mut rng = XorShift::new(0x8ACE);
         let data = rows(&mut rng, 24, 48);
         let want = reference(&data, spec);
-        for backend in [
-            ReduceBackend::Scalar,
-            ReduceBackend::KERNEL,
-            ReduceBackend::Kernel { block: 5 },
-            ReduceBackend::Eia,
-            ReduceBackend::Auto,
-        ] {
+        // Every registered backend, an odd kernel block, and negotiation.
+        let mut backends: Vec<Option<BackendSel>> =
+            registry::entries().iter().map(|e| Some(e.sel())).collect();
+        backends.push(Some(registry::sel("kernel:5").unwrap()));
+        backends.push(None);
+        for backend in backends {
             let engine = StreamEngine::new(EngineConfig { backend, ..config(4, 16) });
             for r in &data {
                 engine.ingest_blocking("s", r.clone()).unwrap();
             }
             engine.quiesce();
-            assert_eq!(engine.snapshot("s").unwrap().state(), want, "{backend}");
+            let label = engine.plan().describe();
+            assert_eq!(engine.snapshot("s").unwrap().state(), want, "{label}");
         }
     }
 

@@ -34,7 +34,9 @@ pub mod segment;
 pub mod service;
 pub mod shard;
 
+#[allow(deprecated)]
 pub use crate::arith::kernel::ReduceBackend;
+pub use crate::reduce::{BackendSel, Partial, ReducePlan};
 pub use engine::{EngineConfig, EngineMetrics, StreamEngine};
 pub use segment::{
     reduce_chunk, reduce_chunk_with, segment_terms, segment_terms_with, Segment,

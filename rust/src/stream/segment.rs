@@ -16,10 +16,10 @@
 //! bit-deterministic only under exact specs — for deterministic truncated
 //! replay, feed segments through an assembler instead.)
 
-use crate::arith::kernel::ReduceBackend;
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::AccSpec;
 use crate::formats::Fp;
+use crate::reduce::{Partial, ReducePlan};
 use std::collections::BTreeMap;
 
 /// One reduced chunk of a stream: the merged `[λ; o]` state of `terms`
@@ -41,42 +41,49 @@ impl Segment {
             terms: self.terms + other.terms,
         }
     }
+
+    /// Resolve a backend-agnostic [`Partial`] (e.g. deserialized from a
+    /// peer shard through the unified codec) into a segment under `spec`.
+    pub fn from_partial(partial: &Partial, spec: AccSpec) -> Segment {
+        Segment { state: partial.resolve(spec), terms: partial.terms }
+    }
+
+    /// This segment as a mergeable, serializable [`Partial`].
+    pub fn partial(&self) -> Partial {
+        Partial::aligned(self.state, self.terms)
+    }
 }
 
-/// Reduce one chunk of finite terms into a segment with an explicit
-/// [`ReduceBackend`]: the batched SoA kernel on exact specs resolves to the
+/// Reduce one chunk of finite terms into a segment under an explicit
+/// [`ReducePlan`]: on exact specs every registered backend resolves to the
 /// same `[λ; acc; sticky]` bits as the scalar `⊙` fold (eq. 10), so the
-/// backend is a pure throughput knob there; on truncated specs the backends
-/// drop different low bits (each deterministically) — pick one and keep it
-/// for reproducible replay.
+/// plan's backend is a pure throughput knob there; on truncated specs the
+/// backends drop different low bits (each deterministically) — pick one
+/// plan and keep it for reproducible replay.
 ///
 /// Like [`crate::arith::tree::tree_sum`], callers screen Inf/NaN first
 /// (see [`crate::arith::adder`] for the screening rules).
-pub fn reduce_chunk_with(backend: ReduceBackend, terms: &[Fp], spec: AccSpec) -> Segment {
-    Segment { state: backend.reduce(terms, spec), terms: terms.len() as u64 }
+pub fn reduce_chunk_with(plan: &ReducePlan, terms: &[Fp]) -> Segment {
+    Segment { state: plan.reduce(terms), terms: terms.len() as u64 }
 }
 
-/// Reduce one chunk under the default backend ([`ReduceBackend::Auto`]):
-/// the kernel for exact specs, the scalar reference fold for truncated
-/// ones — bit-identical to the pre-kernel serial fold in both cases.
+/// Reduce one chunk under the negotiated plan for `spec`
+/// ([`ReducePlan::negotiate`]): the kernel for exact specs, the scalar
+/// reference fold for truncated ones — bit-identical to the pre-kernel
+/// serial fold in both cases.
 pub fn reduce_chunk(terms: &[Fp], spec: AccSpec) -> Segment {
-    reduce_chunk_with(ReduceBackend::Auto, terms, spec)
+    reduce_chunk_with(&ReducePlan::negotiate(spec), terms)
 }
 
 /// Split `terms` at `chunk`-sized boundaries and reduce each chunk.
 pub fn segment_terms(terms: &[Fp], chunk: usize, spec: AccSpec) -> Vec<Segment> {
-    segment_terms_with(ReduceBackend::Auto, terms, chunk, spec)
+    segment_terms_with(&ReducePlan::negotiate(spec), terms, chunk)
 }
 
-/// [`segment_terms`] with an explicit backend.
-pub fn segment_terms_with(
-    backend: ReduceBackend,
-    terms: &[Fp],
-    chunk: usize,
-    spec: AccSpec,
-) -> Vec<Segment> {
+/// [`segment_terms`] with an explicit plan.
+pub fn segment_terms_with(plan: &ReducePlan, terms: &[Fp], chunk: usize) -> Vec<Segment> {
     debug_assert!(chunk >= 1);
-    terms.chunks(chunk.max(1)).map(|c| reduce_chunk_with(backend, c, spec)).collect()
+    terms.chunks(chunk.max(1)).map(|c| reduce_chunk_with(plan, c)).collect()
 }
 
 /// Reassembles a stream of sequence-numbered segments into one state,
@@ -175,19 +182,25 @@ mod tests {
     }
 
     #[test]
-    fn kernel_and_scalar_backends_produce_identical_segments() {
+    fn every_registered_backend_produces_identical_segments_on_exact_specs() {
+        use crate::reduce::registry;
         let spec = AccSpec::exact(BF16);
         let mut rng = XorShift::new(0x5E6C);
         for n in [1usize, 17, 64, 200] {
             let terms = random_terms(&mut rng, n);
-            let want = reduce_chunk_with(ReduceBackend::Scalar, &terms, spec);
-            for backend in [
-                ReduceBackend::KERNEL,
-                ReduceBackend::Kernel { block: 3 },
-                ReduceBackend::Auto,
-            ] {
-                let got = reduce_chunk_with(backend, &terms, spec);
-                assert_eq!(got, want, "n={n} backend={backend}");
+            let want = reduce_chunk_with(
+                &ReducePlan::with_backend(spec, registry::sel("scalar").unwrap()),
+                &terms,
+            );
+            let mut plans: Vec<ReducePlan> = registry::entries()
+                .iter()
+                .map(|e| ReducePlan::with_backend(spec, e.sel()))
+                .collect();
+            plans.push(ReducePlan::with_backend(spec, registry::sel("kernel:3").unwrap()));
+            plans.push(ReducePlan::negotiate(spec));
+            for plan in &plans {
+                let got = reduce_chunk_with(plan, &terms);
+                assert_eq!(got, want, "n={n} backend={}", plan.backend());
             }
         }
     }

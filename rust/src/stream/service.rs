@@ -97,15 +97,15 @@ impl StreamService {
     }
 
     /// An exact-datapath service with an explicit chunk-reduction backend
-    /// (see [`crate::arith::kernel::ReduceBackend`]); with the exact spec
-    /// every backend yields bit-identical stream states, so this picks
-    /// throughput, not semantics.
-    pub fn exact_with_backend(
-        format: FpFormat,
-        backend: crate::arith::kernel::ReduceBackend,
-    ) -> Self {
-        let cfg =
-            EngineConfig { spec: AccSpec::exact(format), backend, ..Default::default() };
+    /// from the registry (see [`crate::reduce::BackendSel`]); with the
+    /// exact spec every registered backend yields bit-identical stream
+    /// states, so this picks throughput, not semantics.
+    pub fn exact_with_backend(format: FpFormat, backend: crate::reduce::BackendSel) -> Self {
+        let cfg = EngineConfig {
+            spec: AccSpec::exact(format),
+            backend: Some(backend),
+            ..Default::default()
+        };
         Self::new(format, cfg)
     }
 

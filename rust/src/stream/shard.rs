@@ -7,9 +7,9 @@
 //! stripe lock (which is all exact-mode `⊙` needs — any order, same bits).
 
 use super::segment::Segment;
-use crate::accum::EiaSnapshot;
 use crate::arith::operator::AlignAcc;
 use crate::arith::{AccSpec, WideInt};
+use crate::reduce::Partial;
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -45,6 +45,12 @@ impl Snapshot {
     /// Re-enter the operator domain as a segment (for restore/merge).
     pub fn segment(&self) -> Segment {
         Segment { state: self.state(), terms: self.terms }
+    }
+
+    /// This checkpoint as a backend-agnostic, wire-serializable
+    /// [`Partial`] (see [`Partial::to_bytes`]).
+    pub fn partial(&self) -> Partial {
+        self.segment().partial()
     }
 }
 
@@ -99,17 +105,16 @@ impl ShardMap {
         }
     }
 
-    /// Merge a deferred-alignment EIA checkpoint
-    /// ([`crate::accum::EiaSnapshot`], e.g. deserialized from a peer shard
-    /// via `EiaSnapshot::from_bytes`) into `id`'s stream state: the
-    /// snapshot reconciles (drains) under this map's spec and merges as an
-    /// ordinary segment. Under an exact spec this is bit-identical to
-    /// having ingested the snapshot's terms into this map directly — the
-    /// drain equals the scalar `⊙` fold over those terms, and `⊙` is
+    /// Merge a backend-agnostic [`Partial`] (e.g. deserialized from a peer
+    /// shard via [`Partial::from_bytes`] — the **one** wire codec,
+    /// whichever backend produced the state) into `id`'s stream state: the
+    /// partial resolves under this map's spec and merges as an ordinary
+    /// segment. Under an exact spec this is bit-identical to having
+    /// ingested the partial's terms into this map directly — deferred
+    /// partials drain to the scalar `⊙` fold's bits, and `⊙` is
     /// associative (eq. 10). Returns the stream's new term count.
-    pub fn merge_eia(&self, id: &str, snap: &EiaSnapshot) -> u64 {
-        let seg = Segment { state: snap.drain(self.spec), terms: snap.terms };
-        self.merge(id, seg)
+    pub fn merge_partial(&self, id: &str, partial: &Partial) -> u64 {
+        self.merge(id, Segment::from_partial(partial, self.spec))
     }
 
     /// Copy out `id`'s current checkpoint, if the stream exists.
@@ -232,22 +237,27 @@ mod tests {
     }
 
     #[test]
-    fn eia_snapshots_serialize_and_merge_across_shards() {
-        use crate::accum::{merge::snapshot_terms, EiaSnapshot};
+    fn partials_from_any_backend_serialize_and_merge_across_shards() {
+        use crate::reduce::{registry, ReducePlan, Reducer};
         let spec = AccSpec::exact(BF16);
         let mut rng = XorShift::new(4);
         let terms: Vec<Fp> = (0..120).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
         // Reference: the whole vector ingested directly as one segment.
         let reference = ShardMap::new(2, spec);
         reference.merge("s", reduce_chunk(&terms, spec));
-        // Two worker shards bank disjoint halves into EIAs, ship their
-        // snapshots as bytes, and the destination merges the deserialized
-        // checkpoints — same stream, same bits.
+        // Two worker shards reduce disjoint halves — each with a
+        // *different* backend — ship their partials as bytes through the
+        // one unified codec, and the destination merges the deserialized
+        // states: same stream, same bits. (This used to need a dedicated
+        // `merge_eia` special case.)
         let dst = ShardMap::new(4, spec);
-        for half in [&terms[..53], &terms[53..]] {
-            let wire = snapshot_terms(half).to_bytes();
-            let snap = EiaSnapshot::from_bytes(&wire).expect("valid checkpoint");
-            dst.merge_eia("s", &snap);
+        for (half, backend) in [(&terms[..53], "eia"), (&terms[53..], "kernel")] {
+            let plan = ReducePlan::with_backend(spec, registry::sel(backend).unwrap());
+            let mut reducer = plan.reducer();
+            reducer.ingest(half);
+            let wire = reducer.partial().to_bytes();
+            let partial = Partial::from_bytes(&wire).expect("valid partial");
+            dst.merge_partial("s", &partial);
         }
         let (want, got) = (reference.snapshot("s").unwrap(), dst.snapshot("s").unwrap());
         assert_eq!(got.state(), want.state());

@@ -7,10 +7,9 @@
 //! what the switching-activity power model consumes.
 
 use super::trace::Trace;
-use crate::arith::kernel::ReduceBackend;
 use crate::arith::normalize::normalize_round;
-use crate::arith::AccSpec;
 use crate::formats::{Fp, FpFormat};
+use crate::reduce::ReducePlan;
 use crate::util::prng::XorShift;
 
 /// Plain row-major f32 matmul (the reference workload kernel).
@@ -37,21 +36,21 @@ pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32
 /// Fused-adder matmul: every output element is the **once-rounded** sum of
 /// its K partial products (each product rounded into `fmt` exactly as
 /// [`partial_product_trace`] captures them), reduced through the
-/// [`ReduceBackend`] seam — this is the hot reduction path the SoA kernel
-/// accelerates. With [`AccSpec::exact`] the result per element is the
-/// correctly-rounded dot product regardless of backend; with a truncated
-/// spec it models the hardware datapath under the chosen backend's
-/// parenthesisation.
+/// [`ReducePlan`] API — this is the hot reduction path the SoA kernel
+/// accelerates. With an exact-spec plan the result per element is the
+/// correctly-rounded dot product regardless of the plan's backend; with a
+/// truncated spec it models the hardware datapath under the chosen
+/// backend's parenthesisation.
 pub fn matmul_fused(
     a: &[f32],
     b: &[f32],
     (m, k, n): (usize, usize, usize),
     fmt: FpFormat,
-    spec: AccSpec,
-    backend: ReduceBackend,
+    plan: &ReducePlan,
 ) -> Vec<Fp> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
+    let spec = plan.spec();
     let mut out = Vec::with_capacity(m * n);
     let mut prods: Vec<Fp> = Vec::with_capacity(k);
     for i in 0..m {
@@ -61,8 +60,7 @@ pub fn matmul_fused(
                 let p = (a[i * k + l] as f64) * (b[l * n + j] as f64);
                 prods.push(Fp::from_f64(p, fmt).finite_or_saturated());
             }
-            let state = backend.reduce(&prods, spec);
-            out.push(normalize_round(&state, spec, fmt));
+            out.push(normalize_round(&plan.reduce(&prods), spec, fmt));
         }
     }
     out
@@ -137,16 +135,30 @@ mod tests {
     fn fused_matmul_backends_agree_and_round_correctly() {
         use crate::arith::exact::exact_rounded_sum;
         use crate::formats::FP32;
+        use crate::reduce::registry;
         let (m, k, n) = (4usize, 40usize, 3usize);
         let mut rng = XorShift::new(0xFA5);
         let a: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32).collect();
         let b: Vec<f32> = (0..k * n).map(|_| rng.gauss() as f32).collect();
         let spec = crate::arith::AccSpec::exact(FP32);
-        let scalar = matmul_fused(&a, &b, (m, k, n), FP32, spec, ReduceBackend::Scalar);
-        let kernel = matmul_fused(&a, &b, (m, k, n), FP32, spec, ReduceBackend::KERNEL);
+        let scalar_plan = ReducePlan::with_backend(spec, registry::sel("scalar").unwrap());
+        let scalar = matmul_fused(&a, &b, (m, k, n), FP32, &scalar_plan);
         assert_eq!(scalar.len(), m * n);
-        for (s, kr) in scalar.iter().zip(&kernel) {
-            assert_eq!(s.bits, kr.bits, "backends must be bit-identical on exact specs");
+        // Every registered backend produces bit-identical elements.
+        let mut kernel = scalar.clone();
+        for entry in registry::entries() {
+            let plan = ReducePlan::with_backend(spec, entry.sel());
+            let got = matmul_fused(&a, &b, (m, k, n), FP32, &plan);
+            for (s, g) in scalar.iter().zip(&got) {
+                assert_eq!(
+                    s.bits, g.bits,
+                    "{}: backends must be bit-identical on exact specs",
+                    entry.name
+                );
+            }
+            if entry.name == "kernel" {
+                kernel = got;
+            }
         }
         // Spot-check one element against the independent correctly-rounded
         // oracle over the same rounded products.

@@ -13,10 +13,11 @@
 
 use online_fp_add::accum::{merge::snapshot_terms, reduce_terms_eia, Eia, EiaSnapshot};
 use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
-use online_fp_add::arith::kernel::{scalar_fold, ReduceBackend};
+use online_fp_add::arith::kernel::scalar_fold;
 use online_fp_add::arith::oracle::{reference_sum, DISTRIBUTIONS};
 use online_fp_add::arith::AccSpec;
 use online_fp_add::formats::{Fp, FpClass, FpFormat, BF16, FP32, PAPER_FORMATS};
+use online_fp_add::reduce::{registry, BackendSel, ReducePlan};
 use online_fp_add::util::prng::XorShift;
 
 /// Exact spec plus, where the format's exact frame fits the i128 fast
@@ -69,8 +70,12 @@ fn eia_oracle_gate_runs_clean_over_5k_vectors_per_format() {
             let terms = dist.gen_vector(&mut rng, fmt, n);
             let expected = reference_sum(&terms, fmt);
             for &spec in &specs {
-                let adder =
-                    MultiTermAdder { format: fmt, n_terms: n, spec, arch: Architecture::Eia };
+                let adder = MultiTermAdder {
+                    format: fmt,
+                    n_terms: n,
+                    spec,
+                    arch: Architecture::backend("eia").unwrap(),
+                };
                 checks += 1;
                 if adder.add(&terms).bits != expected.bits {
                     mismatches += 1;
@@ -174,25 +179,34 @@ fn eia_flows_through_every_seam_consumer() {
     let spec = AccSpec::exact(BF16);
     let mut rng = XorShift::new(0xE1A_0005);
 
-    // The backend spelling parses and resolves to itself on any spec.
-    let parsed: ReduceBackend = "eia".parse().unwrap();
-    assert_eq!(parsed, ReduceBackend::Eia);
-    assert_eq!(ReduceBackend::Eia.resolve(spec), ReduceBackend::Eia);
-    assert_eq!(ReduceBackend::Eia.resolve(AccSpec::truncated(4)), ReduceBackend::Eia);
-    assert_eq!(Architecture::parse("eia", 16).unwrap(), Architecture::Eia);
+    // The registry spelling parses through every addressing surface.
+    let sel: BackendSel = "eia".parse().unwrap();
+    assert_eq!(sel, registry::sel("eia").unwrap());
+    assert_eq!(ReducePlan::with_backend(spec, sel).backend().name(), "eia");
+    assert_eq!(Architecture::parse("eia", 16).unwrap(), Architecture::Backend(sel));
+    // Truncated EIA plans advertise (and the builder can require) the
+    // order-invariance capability no online backend has.
+    let trunc_plan = ReducePlan::builder(AccSpec::truncated(4))
+        .require_order_invariant()
+        .build()
+        .unwrap();
+    assert_eq!(trunc_plan.backend().name(), "eia");
 
     // stream::segment::reduce_chunk_with.
+    let scalar_plan = ReducePlan::with_backend(spec, registry::sel("scalar").unwrap());
+    let eia_plan = ReducePlan::with_backend(spec, sel);
     let terms: Vec<Fp> = (0..200).map(|_| rng.gen_fp_sparse(BF16, 0.1)).collect();
-    let want = reduce_chunk_with(ReduceBackend::Scalar, &terms, spec);
-    assert_eq!(reduce_chunk_with(ReduceBackend::Eia, &terms, spec), want);
+    let want = reduce_chunk_with(&scalar_plan, &terms);
+    assert_eq!(reduce_chunk_with(&eia_plan, &terms), want);
 
     // EngineConfig::backend — end to end through the threaded engine.
     let engine = StreamEngine::new(EngineConfig {
         threads: 4,
         chunk: 16,
-        backend: ReduceBackend::Eia,
+        backend: Some(sel),
         ..Default::default()
     });
+    assert_eq!(engine.plan().backend().name(), "eia");
     for row in terms.chunks(25) {
         engine.ingest_blocking("s", row.to_vec()).unwrap();
     }
@@ -204,8 +218,20 @@ fn eia_flows_through_every_seam_consumer() {
     let a: Vec<f32> = (0..m * k).map(|_| rng.gauss() as f32).collect();
     let b: Vec<f32> = (0..k * n).map(|_| rng.gauss() as f32).collect();
     let mspec = AccSpec::exact(FP32);
-    let scalar = matmul_fused(&a, &b, (m, k, n), FP32, mspec, ReduceBackend::Scalar);
-    let eia = matmul_fused(&a, &b, (m, k, n), FP32, mspec, ReduceBackend::Eia);
+    let scalar = matmul_fused(
+        &a,
+        &b,
+        (m, k, n),
+        FP32,
+        &ReducePlan::with_backend(mspec, registry::sel("scalar").unwrap()),
+    );
+    let eia = matmul_fused(
+        &a,
+        &b,
+        (m, k, n),
+        FP32,
+        &ReducePlan::with_backend(mspec, registry::sel("eia").unwrap()),
+    );
     for (s, e) in scalar.iter().zip(&eia) {
         assert_eq!(s.bits, e.bits, "matmul backends must be bit-identical on exact specs");
     }
@@ -213,7 +239,7 @@ fn eia_flows_through_every_seam_consumer() {
 
 #[test]
 fn eia_adder_screens_special_values_like_every_architecture() {
-    let adder = MultiTermAdder::exact(BF16, 4, Architecture::Eia);
+    let adder = MultiTermAdder::exact(BF16, 4, Architecture::backend("eia").unwrap());
     let inf = Fp::overflow(false, BF16);
     let ninf = Fp::overflow(true, BF16);
     let nan = Fp::nan(BF16);

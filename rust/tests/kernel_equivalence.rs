@@ -9,10 +9,11 @@
 //! through the kernel-backed adder exactly as `Fp` semantics dictate.
 
 use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
-use online_fp_add::arith::kernel::{reduce_terms, scalar_fold, ReduceBackend};
+use online_fp_add::arith::kernel::{reduce_terms, scalar_fold};
 use online_fp_add::arith::oracle::DISTRIBUTIONS;
 use online_fp_add::arith::AccSpec;
 use online_fp_add::formats::{Fp, FpClass, SpecialsMode, FP8_E4M3, FP8_E6M1, PAPER_FORMATS};
+use online_fp_add::reduce::{registry, ReducePlan};
 use online_fp_add::util::proptest::check;
 use online_fp_add::util::prng::XorShift;
 
@@ -108,8 +109,8 @@ fn prop_kernel_backend_rounds_identically_through_the_adder() {
         for fmt in PAPER_FORMATS {
             let n = 16usize;
             let terms = g.fp_full_vec(fmt, n);
-            let kernel =
-                MultiTermAdder::exact(fmt, n, Architecture::Kernel { block: 5 }).add(&terms);
+            let kernel = MultiTermAdder::exact(fmt, n, Architecture::backend("kernel:5").unwrap())
+                .add(&terms);
             let baseline = MultiTermAdder::exact(fmt, n, Architecture::Baseline).add(&terms);
             if kernel.bits != baseline.bits {
                 return Err(format!("{fmt}: {kernel:?} != {baseline:?}"));
@@ -125,7 +126,7 @@ fn special_values_propagate_identically_through_kernel_and_scalar_adders() {
     // both architectures must apply the same Fp semantics: NaN dominates,
     // opposite infinities are invalid (NaN), a lone Inf wins with its sign.
     for fmt in PAPER_FORMATS {
-        let kernel = MultiTermAdder::exact(fmt, 8, Architecture::Kernel { block: 3 });
+        let kernel = MultiTermAdder::exact(fmt, 8, Architecture::backend("kernel:3").unwrap());
         let scalar = MultiTermAdder::exact(fmt, 8, Architecture::Baseline);
         let one = Fp::from_f64(1.0, fmt);
         let nan = Fp::nan(fmt);
@@ -155,7 +156,7 @@ fn noinf_formats_saturate_identically_through_kernel_and_scalar_adders() {
     // maximum finite value in both backends, and the OCP NaN still
     // dominates.
     for fmt in [FP8_E4M3, FP8_E6M1] {
-        let kernel = MultiTermAdder::exact(fmt, 4, Architecture::Kernel { block: 2 });
+        let kernel = MultiTermAdder::exact(fmt, 4, Architecture::backend("kernel:2").unwrap());
         let scalar = MultiTermAdder::exact(fmt, 4, Architecture::Baseline);
         let max = Fp::pack(false, fmt.max_normal_exp(), fmt.max_finite_mant(), fmt);
         let sat = kernel.add(&[max, max, max, max]);
@@ -171,31 +172,49 @@ fn noinf_formats_saturate_identically_through_kernel_and_scalar_adders() {
 }
 
 #[test]
-fn kernel_backend_seam_resolves_and_reduces_consistently() {
-    // The ReduceBackend seam: Auto must route exact specs to the kernel and
-    // truncated specs to the scalar fold, and every concrete backend must
-    // agree bit-for-bit on exact specs.
+fn plan_negotiation_and_registry_backends_reduce_consistently() {
+    // The ReducePlan seam (the old ReduceBackend::Auto, now inspectable):
+    // negotiation must route exact specs to the kernel and truncated specs
+    // to the scalar fold, and every *registered* backend — iterated from
+    // the registry, not a hand list — must agree bit-for-bit on exact
+    // specs.
     let mut rng = XorShift::new(0x5EAC);
     for fmt in PAPER_FORMATS {
         let exact = AccSpec::exact(fmt);
-        assert_eq!(ReduceBackend::Auto.resolve(exact), ReduceBackend::KERNEL, "{fmt}");
+        assert_eq!(ReducePlan::negotiate(exact).backend().name(), "kernel", "{fmt}");
         let terms: Vec<Fp> = (0..97).map(|_| rng.gen_fp_full(fmt)).collect();
-        let want = ReduceBackend::Scalar.reduce(&terms, exact);
-        for backend in
-            [ReduceBackend::Auto, ReduceBackend::KERNEL, ReduceBackend::Kernel { block: 9 }]
-        {
-            assert_eq!(backend.reduce(&terms, exact), want, "{fmt} {backend}");
+        let want = scalar_fold(&terms, exact);
+        let mut plans = vec![
+            ReducePlan::negotiate(exact),
+            ReducePlan::with_backend(exact, registry::sel("kernel:9").unwrap()),
+        ];
+        plans.extend(
+            registry::entries().iter().map(|e| ReducePlan::with_backend(exact, e.sel())),
+        );
+        for plan in &plans {
+            assert_eq!(plan.reduce(&terms), want, "{fmt} {}", plan.backend());
         }
         let truncated = AccSpec::truncated(6);
+        let plan = ReducePlan::negotiate(truncated);
         assert_eq!(
-            ReduceBackend::Auto.resolve(truncated),
-            ReduceBackend::Scalar,
+            plan.backend().name(),
+            "scalar",
             "{fmt}: truncated frames keep the scalar reference"
         );
-        assert_eq!(
-            ReduceBackend::Auto.reduce(&terms, truncated),
-            scalar_fold(&terms, truncated),
-            "{fmt}"
-        );
+        assert!(plan.capabilities().fold_bit_identical);
+        assert_eq!(plan.reduce(&terms), scalar_fold(&terms, truncated), "{fmt}");
     }
+}
+
+#[test]
+fn zero_block_is_rejected_at_parse_and_plan_build_time() {
+    // The old seam silently clamped `Kernel { block: 0 }` to 1 deep in the
+    // kernel; the plan/parse layer now rejects it with a proper error.
+    let spec = AccSpec::exact(PAPER_FORMATS[0]);
+    let err = "kernel:0".parse::<online_fp_add::reduce::BackendSel>().unwrap_err();
+    assert!(err.contains("block must be >= 1"), "{err}");
+    assert!(ReducePlan::builder(spec).block(0).is_err());
+    assert!(ReducePlan::builder(spec).backend_name("kernel:0").is_err());
+    assert!(registry::sel("kernel").unwrap().with_block(0).is_err());
+    assert!(Architecture::parse("kernel:0", 16).is_err());
 }

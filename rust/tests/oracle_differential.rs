@@ -12,6 +12,7 @@ use online_fp_add::arith::adder::{Architecture, MultiTermAdder};
 use online_fp_add::arith::oracle::{reference_sum, run_oracle, OracleConfig, DISTRIBUTIONS};
 use online_fp_add::arith::AccSpec;
 use online_fp_add::formats::{FpClass, FP32, PAPER_FORMATS};
+use online_fp_add::reduce::registry;
 use online_fp_add::util::prng::XorShift;
 
 #[test]
@@ -41,13 +42,29 @@ fn oracle_runs_clean_over_10k_vectors_per_format() {
 }
 
 #[test]
-fn kernel_path_runs_clean_against_the_oracle_on_every_distribution() {
-    // The same adversarial distributions, driven explicitly through the
-    // SoA-kernel architecture (several block sizes, narrow and wide
-    // accumulator paths where the format offers both) with the same
-    // zero-mismatch gate against the big-int reference.
+fn every_registered_backend_runs_clean_against_the_oracle_on_every_distribution() {
+    // The same adversarial distributions, driven explicitly through every
+    // backend the registry knows — block-taking backends at several block
+    // sizes, narrow and wide accumulator paths where the format offers
+    // both — with the same zero-mismatch gate against the big-int
+    // reference. A newly registered backend is covered here with no edits.
     let mut rng = XorShift::new(0x4E61_D1FF);
     let n = 16usize;
+    let backend_archs: Vec<Architecture> = registry::entries()
+        .iter()
+        .flat_map(|entry| {
+            if entry.takes_block {
+                [1usize, 3, 8, 64, n]
+                    .iter()
+                    .map(|&b| {
+                        Architecture::Backend(entry.sel().with_block(b).expect("valid block"))
+                    })
+                    .collect::<Vec<_>>()
+            } else {
+                vec![Architecture::Backend(entry.sel())]
+            }
+        })
+        .collect();
     for fmt in PAPER_FORMATS {
         let exact = AccSpec::exact(fmt);
         let mut specs = vec![exact];
@@ -61,12 +78,12 @@ fn kernel_path_runs_clean_against_the_oracle_on_every_distribution() {
                 let terms = dist.gen_vector(&mut rng, fmt, n);
                 let expected = reference_sum(&terms, fmt);
                 for &spec in &specs {
-                    for block in [1usize, 3, 8, 64, n] {
+                    for arch in &backend_archs {
                         let adder = MultiTermAdder {
                             format: fmt,
                             n_terms: n,
                             spec,
-                            arch: Architecture::Kernel { block },
+                            arch: arch.clone(),
                         };
                         checks += 1;
                         if adder.add(&terms).bits != expected.bits {
@@ -76,8 +93,8 @@ fn kernel_path_runs_clean_against_the_oracle_on_every_distribution() {
                 }
             }
         }
-        assert_eq!(mismatches, 0, "{fmt}: kernel-path oracle mismatches");
-        assert!(checks >= 5_000, "{fmt}: only {checks} kernel checks ran");
+        assert_eq!(mismatches, 0, "{fmt}: backend-path oracle mismatches");
+        assert!(checks >= 5_000, "{fmt}: only {checks} backend checks ran");
     }
 }
 

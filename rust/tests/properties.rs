@@ -365,29 +365,33 @@ fn prop_narrow_fast_path_is_bit_identical_to_wide_path() {
 fn prop_backend_and_architecture_display_parse_roundtrip() {
     // CLI flags and config files address backends/architectures by their
     // printed form; the spelling must never drift from the parser — every
-    // `Display` output (including `kernel:<block>` and the new `eia`)
-    // reparses to the same value.
-    use online_fp_add::arith::kernel::ReduceBackend;
+    // `Display` output (including `kernel:<block>`) reparses to the same
+    // value. Backends are drawn from the registry, so a newly registered
+    // backend is round-trip-pinned automatically.
+    use online_fp_add::reduce::{registry, BackendSel};
     check("Display ↔ parse round-trip", 600, |g| {
-        let backend = match g.rng.below(4) {
-            0 => ReduceBackend::Auto,
-            1 => ReduceBackend::Scalar,
-            2 => ReduceBackend::Eia,
-            _ => ReduceBackend::Kernel { block: 1 + g.rng.below(4096) as usize },
+        let entries = registry::entries();
+        let entry = &entries[g.rng.below(entries.len() as u64) as usize];
+        let sel = if entry.takes_block {
+            entry
+                .sel()
+                .with_block(1 + g.rng.below(4096) as usize)
+                .map_err(|e| format!("block selection: {e}"))?
+        } else {
+            entry.sel()
         };
-        let printed = backend.to_string();
-        let reparsed: ReduceBackend =
-            printed.parse().map_err(|e| format!("backend {printed:?}: {e}"))?;
-        if reparsed != backend {
-            return Err(format!("backend {backend:?} printed {printed:?} reparsed {reparsed:?}"));
+        let printed = sel.to_string();
+        let reparsed: BackendSel =
+            printed.parse().map_err(|e: String| format!("backend {printed:?}: {e}"))?;
+        if reparsed != sel {
+            return Err(format!("backend {sel:?} printed {printed:?} reparsed {reparsed:?}"));
         }
         let n = [4u32, 8, 16, 32][g.rng.below(4) as usize];
-        let arch = match g.rng.below(6) {
+        let arch = match g.rng.below(5) {
             0 => Architecture::Baseline,
             1 => Architecture::Online,
             2 => Architecture::Exact,
-            3 => Architecture::Eia,
-            4 => Architecture::Kernel { block: 1 + g.rng.below(512) as usize },
+            3 => Architecture::Backend(sel),
             _ => {
                 let cfgs = enumerate_configs(n);
                 Architecture::Tree(cfgs[g.rng.below(cfgs.len() as u64) as usize].clone())
@@ -408,10 +412,10 @@ fn prop_monotone_growing_one_operand_never_decreases_the_sum() {
     // Monotonicity of multi-term adders (Mikaitis, 2023): a fused adder
     // that accumulates exactly and normalizes/rounds ONCE is monotone in
     // every operand — RNE is a monotone rounding and the exact datapath
-    // sums are ordered with the operands. Pin it across all three
-    // reduction backends (scalar ⊙ fold, SoA kernel, EIA) over the full
+    // sums are ordered with the operands. Pin it across **every backend
+    // the registry knows** (iterated, not hand-listed) over the full
     // operand space, subnormals and signed zeros included.
-    use online_fp_add::arith::kernel::ReduceBackend;
+    use online_fp_add::reduce::{registry, ReducePlan};
     check("monotone in each operand", 500, |g| {
         let fmt = random_fmt(&mut g.rng);
         let spec = AccSpec::exact(fmt);
@@ -420,15 +424,17 @@ fn prop_monotone_growing_one_operand_never_decreases_the_sum() {
         let i = g.rng.below(n as u64) as usize;
         let (a, b) = (terms[i], g.fp_full(fmt));
         let (small, large) = if a.to_f64() <= b.to_f64() { (a, b) } else { (b, a) };
-        for backend in [ReduceBackend::Scalar, ReduceBackend::KERNEL, ReduceBackend::Eia] {
+        for entry in registry::entries() {
+            let plan = ReducePlan::with_backend(spec, entry.sel());
             terms[i] = small;
-            let lo = normalize_round(&backend.reduce(&terms, spec), spec, fmt).to_f64();
+            let lo = normalize_round(&plan.reduce(&terms), spec, fmt).to_f64();
             terms[i] = large;
-            let hi = normalize_round(&backend.reduce(&terms, spec), spec, fmt).to_f64();
+            let hi = normalize_round(&plan.reduce(&terms), spec, fmt).to_f64();
             if hi < lo {
                 return Err(format!(
-                    "{fmt} {backend}: growing lane {i} from {small:?} to {large:?} \
-                     dropped the sum {lo} -> {hi}"
+                    "{fmt} {}: growing lane {i} from {small:?} to {large:?} \
+                     dropped the sum {lo} -> {hi}",
+                    entry.name
                 ));
             }
         }

@@ -1,0 +1,53 @@
+//! Registry conformance gate (DESIGN.md §Reducer): every backend the
+//! registry knows — present and future — runs the same acceptance battery
+//! with **zero** failures, across all five paper formats. The battery
+//! itself lives in `reduce::conformance` so the `repro conform` CLI and
+//! this gate share one implementation; registering a new backend (the
+//! SIMD kernel variant the ROADMAP names, a GPU fold, …) puts it in front
+//! of these gates with no test edits at all.
+
+use online_fp_add::formats::PAPER_FORMATS;
+use online_fp_add::reduce::conformance::{run_format, ConformanceConfig};
+use online_fp_add::reduce::registry;
+
+#[test]
+fn every_registered_backend_conforms_on_every_format() {
+    let cfg = ConformanceConfig::default();
+    for fmt in PAPER_FORMATS {
+        let reports = run_format(fmt, &cfg);
+        assert_eq!(
+            reports.len(),
+            registry::entries().len(),
+            "{fmt}: one report per registered backend"
+        );
+        for rep in reports {
+            assert!(
+                rep.clean(),
+                "{fmt} {}: reduce={} split={} merge={} codec={} specials={} ({} checks)",
+                rep.backend,
+                rep.reduce_mismatches,
+                rep.split_mismatches,
+                rep.merge_mismatches,
+                rep.codec_failures,
+                rep.specials_failures,
+                rep.checks,
+            );
+            assert!(rep.checks >= 400, "{fmt} {}: only {} checks ran", rep.backend, rep.checks);
+        }
+    }
+}
+
+#[test]
+fn conformance_is_deterministic_for_a_fixed_seed() {
+    // The battery is seeded: two runs must agree check-for-check, so a CI
+    // failure reproduces locally.
+    let cfg = ConformanceConfig { vectors: 5, max_terms: 48, seed: 0xD5EED };
+    let fmt = PAPER_FORMATS[0];
+    let a = run_format(fmt, &cfg);
+    let b = run_format(fmt, &cfg);
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.backend, rb.backend);
+        assert_eq!(ra.checks, rb.checks);
+        assert_eq!(ra.failures(), rb.failures());
+    }
+}

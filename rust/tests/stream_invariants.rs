@@ -178,29 +178,28 @@ fn prop_chunked_service_query_equals_exact_reference() {
     });
 }
 
-/// End-to-end stream oracle with the SoA-kernel and EIA backends: replay a
+/// End-to-end stream oracle across **every registered backend**: replay a
 /// real BERT partial-product trace through a [`StreamService`] whose
-/// chunks are reduced by the batched kernel (or banked into the
-/// exponent-indexed accumulator), and check every per-stream **query**
-/// (one rounding over the whole history) against the independent
-/// sign-magnitude big-int reference ([`reference_sum`]) bit for bit — and
-/// against a scalar-backend service replaying the same traffic.
+/// chunks are reduced by each registry entry in turn (plus an awkward
+/// kernel block size), and check every per-stream **query** (one rounding
+/// over the whole history) against the independent sign-magnitude big-int
+/// reference ([`reference_sum`]) bit for bit — and against a
+/// scalar-backend service replaying the same traffic.
 #[test]
-fn kernel_backend_service_queries_match_bigint_oracle_on_bert_trace() {
+fn every_registered_backend_service_queries_match_bigint_oracle_on_bert_trace() {
     use online_fp_add::arith::oracle::reference_sum;
-    use online_fp_add::stream::ReduceBackend;
+    use online_fp_add::reduce::registry;
 
     let trace = power_trace(BF16, 32, 96, 0x4E7);
     let streams = 6usize;
-    for backend in [
-        ReduceBackend::KERNEL,
-        ReduceBackend::Kernel { block: 5 },
-        ReduceBackend::Eia,
-    ] {
+    let mut backends: Vec<_> = registry::entries().iter().map(|e| e.sel()).collect();
+    backends.push(registry::sel("kernel:5").unwrap());
+    for backend in backends {
         let svc = StreamService::exact_with_backend(BF16, backend);
         let total = svc.replay_trace("kq", &trace, streams);
         assert_eq!(total, (trace.len() * 32) as u64);
-        let scalar_svc = StreamService::exact_with_backend(BF16, ReduceBackend::Scalar);
+        let scalar_svc =
+            StreamService::exact_with_backend(BF16, registry::sel("scalar").unwrap());
         scalar_svc.replay_trace("kq", &trace, streams);
         let mut per_stream: Vec<Vec<Fp>> = vec![Vec::new(); streams];
         for (i, row) in trace.vectors.iter().enumerate() {
