@@ -8,7 +8,8 @@
 //! Run: `cargo run --release --example stream_serve`
 //! Knobs: `--vectors 512 --streams 8 --clients 8 --threads 0` (0 = auto),
 //! `--backend scalar|kernel[:block]|eia` (chunk-reduction backend by
-//! registry name; omit to let the plan builder negotiate).
+//! registry name; omit to let the plan builder negotiate), `--stats`
+//! (dump the cross-tier telemetry as Prometheus text after the replay).
 
 use online_fp_add::arith::tree::{tree_sum, RadixConfig};
 use online_fp_add::arith::AccSpec;
@@ -113,6 +114,14 @@ fn main() {
                 snap.segments
             );
         }
+    }
+
+    // Cross-tier observability: `--stats` renders the global hub plus this
+    // service's `ofa_service_*` series in Prometheus text exposition — the
+    // same output `repro stats --prometheus` serves.
+    if args.has("stats") {
+        println!("\n--- telemetry (Prometheus exposition) ---");
+        print!("{}", svc.stats_prometheus());
     }
 
     // ---- invariance sweep: chunk × threads × shuffled arrival ----------

@@ -181,6 +181,63 @@ fn main() {
         );
     }
 
+    header("telemetry overhead (instrumented reduce hot path, BF16, exact)");
+    // The observability guardrail series: the cross-tier counters threaded
+    // through the reduce/kernel hot paths (DESIGN.md §Telemetry) must stay
+    // within a few percent of the disabled hub. Legs are interleaved and
+    // the best of three runs kept per leg, so a one-off scheduler hiccup in
+    // either leg cannot fake (or mask) a regression; CI gates the
+    // `overhead_vs_off` param at 1.03.
+    {
+        use online_fp_add::telemetry;
+        let spec = AccSpec::exact(BF16);
+        let terms: Vec<Fp> = {
+            let mut rng = XorShift::new(0x7E1E);
+            (0..1024).map(|_| rng.gen_fp_full(BF16)).collect()
+        };
+        let plan = ReducePlan::negotiate(spec);
+        let mut off_best: Option<online_fp_add::bench_util::BenchResult> = None;
+        let mut on_best: Option<online_fp_add::bench_util::BenchResult> = None;
+        let keep = |best: &mut Option<online_fp_add::bench_util::BenchResult>,
+                    r: online_fp_add::bench_util::BenchResult| {
+            if best.as_ref().map(|b| r.median_s < b.median_s).unwrap_or(true) {
+                *best = Some(r);
+            }
+        };
+        for _ in 0..3 {
+            telemetry::global().set_enabled(false);
+            let off = bench("telemetry overhead off BF16 n=1024", target_seconds(0.3), || {
+                black_box(plan.reduce(&terms));
+            });
+            telemetry::global().set_enabled(true);
+            let on = bench("telemetry overhead on BF16 n=1024", target_seconds(0.3), || {
+                black_box(plan.reduce(&terms));
+            });
+            keep(&mut off_best, off);
+            keep(&mut on_best, on);
+        }
+        let (off, on) = (off_best.expect("three runs"), on_best.expect("three runs"));
+        let off_tput = off.throughput(1024.0);
+        let on_tput = on.throughput(1024.0);
+        let overhead = off_tput / on_tput.max(1e-9);
+        println!("{}   [{:.1} M terms/s]", off.line(), off_tput / 1e6);
+        println!(
+            "{}   [{:.1} M terms/s, {:.3}x off time]",
+            on.line(),
+            on_tput / 1e6,
+            overhead
+        );
+        if overhead > 1.03 {
+            println!("WARN: telemetry counters measured >3% slower than the disabled hub");
+        }
+        records.push(BenchRecord::new(off).param("terms_per_s", off_tput));
+        records.push(
+            BenchRecord::new(on)
+                .param("terms_per_s", on_tput)
+                .param("overhead_vs_off", overhead),
+        );
+    }
+
     header("fused matmul workload (round-once dot products, BF16 16x64x16)");
     {
         use online_fp_add::workload::matmul::matmul_fused;

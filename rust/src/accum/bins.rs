@@ -18,6 +18,8 @@
 //! allocated lazily — an accumulator that never spills carries only the
 //! `i64` lanes.
 
+use crate::telemetry::{self, TraceEvent};
+
 /// Number of exponent bins: covers every paper format's effective-exponent
 /// range (`eff_exp` ∈ `[1, max_normal_exp]`, and `max_normal_exp ≤ 254`
 /// for 8-bit-exponent formats). Index 0 is the identity level and stays
@@ -98,6 +100,9 @@ impl ExpBins {
                 self.hi[e as usize] = self.hi[e as usize]
                     .checked_add(v)
                     .expect("EIA bin overflow: accumulator headroom exceeded");
+                if telemetry::enabled() {
+                    telemetry::global().accum.wide_banks.inc();
+                }
             }
         }
         self.min_e = self.min_e.min(e);
@@ -116,6 +121,10 @@ impl ExpBins {
             .checked_add(self.lo[idx] as i128)
             .expect("EIA bin overflow: accumulator headroom exceeded");
         self.lo[idx] = 0;
+        if telemetry::enabled() {
+            telemetry::global().accum.spills.inc();
+        }
+        telemetry::global().trace.record(TraceEvent::SpillPromoted { bin: idx });
     }
 
     /// The bin's exact value (`hi + lo`). The lanes are a carry-save

@@ -28,18 +28,39 @@
 use super::eia::Eia;
 use crate::arith::operator::AlignAcc;
 use crate::arith::{AccSpec, WideInt};
+use crate::telemetry::{self, TraceEvent};
+use std::cell::Cell;
 
 /// Drain an [`Eia`] into an [`AlignAcc`] (see the module docs for the
 /// equivalence contract).
 pub fn drain_eia(eia: &Eia, spec: AccSpec) -> AlignAcc {
     let lambda = eia.max_lambda();
+    // Count the occupied bins as the lazy sweep visits them, so the
+    // occupancy metric costs nothing beyond the drain itself.
+    let bins_seen = Cell::new(0u64);
     let parts = eia.bins().live_range().into_iter().flat_map(|(lo, hi)| {
         (lo..=hi).filter_map(|e| {
             let v = eia.bins().value(e);
-            (v != 0).then_some((e, v))
+            (v != 0).then(|| {
+                bins_seen.set(bins_seen.get() + 1);
+                (e, v)
+            })
         })
     });
-    drain_parts(lambda, parts, spec)
+    let out = drain_parts(lambda, parts, spec);
+    if telemetry::enabled() {
+        let accum = &telemetry::global().accum;
+        accum.drains.inc();
+        accum.drain_bins.add(bins_seen.get());
+        accum.occupancy.observe(bins_seen.get());
+        if out.sticky {
+            accum.drain_sticky.inc();
+        }
+    }
+    telemetry::global()
+        .trace
+        .record(TraceEvent::DrainReconciled { bins: bins_seen.get(), sticky: out.sticky });
+    out
 }
 
 /// Core drain over `(eff_exp, exact bin value)` parts. `lambda` must be at

@@ -48,6 +48,7 @@
 use super::operator::{op_combine, AlignAcc};
 use super::{AccSpec, WideInt};
 use crate::formats::Fp;
+use crate::telemetry;
 use std::fmt;
 use std::str::FromStr;
 
@@ -153,6 +154,26 @@ pub fn scalar_fold(terms: &[Fp], spec: AccSpec) -> AlignAcc {
     super::online::online_sum(terms, spec)
 }
 
+/// Flush one reduction's kernel-health tallies into the telemetry hub.
+/// Counts accumulate in locals during the hot loop and land here in a
+/// single gated burst of relaxed adds, keeping the per-lane cost at zero
+/// (the `telemetry overhead` bench series bounds the total in CI).
+#[inline]
+pub(crate) fn flush_kernel_health(lanes: usize, blocks: u64, sticky_blocks: u64, spec: AccSpec) {
+    if !telemetry::enabled() {
+        return;
+    }
+    let k = &telemetry::global().kernel;
+    k.block_sweeps.add(blocks);
+    k.lanes.add(lanes as u64);
+    if spec.narrow {
+        k.narrow_blocks.add(blocks);
+    } else {
+        k.wide_blocks.add(blocks);
+    }
+    k.sticky_activations.add(sticky_blocks);
+}
+
 /// Batched SoA reduction: decode once, reduce `block`-sized SoA slices with
 /// [`block_state`], combine the per-block partials with `⊙`.
 ///
@@ -173,13 +194,17 @@ pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
         let mut eff = [0i32; DEFAULT_BLOCK];
         let mut sig = [0i64; DEFAULT_BLOCK];
         let mut state = AlignAcc::IDENTITY;
+        let (mut blocks, mut sticky_blocks) = (0u64, 0u64);
         for chunk in terms.chunks(block) {
             for (i, t) in chunk.iter().enumerate() {
                 (eff[i], sig[i]) = decode_term(t);
             }
             let part = block_state(&eff[..chunk.len()], &sig[..chunk.len()], spec);
+            blocks += 1;
+            sticky_blocks += part.sticky as u64;
             state = op_combine(&state, &part, spec);
         }
+        flush_kernel_health(terms.len(), blocks, sticky_blocks, spec);
         return state;
     }
     // Oversized blocks: one block-sized buffer pair, reused (decode_soa
@@ -187,11 +212,15 @@ pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
     let mut eff = Vec::new();
     let mut sig = Vec::new();
     let mut state = AlignAcc::IDENTITY;
+    let (mut blocks, mut sticky_blocks) = (0u64, 0u64);
     for chunk in terms.chunks(block) {
         decode_soa(chunk, &mut eff, &mut sig);
         let part = block_state(&eff, &sig, spec);
+        blocks += 1;
+        sticky_blocks += part.sticky as u64;
         state = op_combine(&state, &part, spec);
     }
+    flush_kernel_health(terms.len(), blocks, sticky_blocks, spec);
     state
 }
 

@@ -1,111 +1,21 @@
-//! Lightweight metrics: counters and latency histograms for the batcher and
-//! the experiment coordinator.
+//! Thin alias of the [`crate::telemetry`] metric primitives, kept so the
+//! batcher/engine call sites (and anything downstream) keep compiling
+//! unchanged.
+//!
+//! The types used to live here; they were promoted to
+//! `telemetry::metrics` when the cross-tier observability layer landed —
+//! and the promotion fixed the old [`LatencyHistogram::observe`] hot-path
+//! defect of taking a `Mutex` per observation for min/max tracking (now a
+//! lock-free CAS loop; see `telemetry::metrics`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
-
-/// A monotonically increasing counter.
-#[derive(Default, Debug)]
-pub struct Counter(AtomicU64);
-
-impl Counter {
-    pub fn inc(&self) {
-        self.add(1);
-    }
-
-    pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
-    }
-
-    pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
-    }
-}
-
-/// Latency histogram with exponential buckets from 1 µs to ~17 s, plus
-/// exact min/max/sum for summary statistics.
-#[derive(Debug)]
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>, // bucket i: [2^i, 2^(i+1)) µs
-    count: AtomicU64,
-    sum_us: AtomicU64,
-    minmax: Mutex<(u64, u64)>,
-}
-
-const NBUCKETS: usize = 25;
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        LatencyHistogram {
-            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_us: AtomicU64::new(0),
-            minmax: Mutex::new((u64::MAX, 0)),
-        }
-    }
-}
-
-impl LatencyHistogram {
-    pub fn observe(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(NBUCKETS - 1);
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        let mut mm = self.minmax.lock().unwrap();
-        mm.0 = mm.0.min(us);
-        mm.1 = mm.1.max(us);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
-        }
-    }
-
-    /// Approximate quantile from the exponential buckets (upper bound of the
-    /// bucket containing the quantile rank).
-    pub fn quantile_us(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
-            return 0;
-        }
-        let rank = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= rank {
-                return 1u64 << (i + 1); // bucket upper bound
-            }
-        }
-        self.minmax.lock().unwrap().1
-    }
-
-    pub fn summary(&self) -> String {
-        let (min, max) = *self.minmax.lock().unwrap();
-        format!(
-            "n={} mean={:.0}µs p50≤{}µs p99≤{}µs min={}µs max={}µs",
-            self.count(),
-            self.mean_us(),
-            self.quantile_us(0.5),
-            self.quantile_us(0.99),
-            if min == u64::MAX { 0 } else { min },
-            max
-        )
-    }
-}
+pub use crate::telemetry::{Counter, Gauge, LatencyHistogram, ValueHistogram};
 
 #[cfg(test)]
 mod tests {
+    // The original tests of this module, kept verbatim: they pin that the
+    // re-exported primitives preserve the old API and semantics exactly.
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn counter_accumulates() {

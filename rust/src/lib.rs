@@ -30,6 +30,12 @@
 //!   split live traffic across chunks, threads and arrival orders with
 //!   bit-identical results in exact mode.
 //!
+//! Cutting across the tiers, [`telemetry`] is the observability layer:
+//! lock-free metric families recording each tier's numeric-health events
+//! (alignment sweeps, sticky activations, spill promotions, partial
+//! merges), a span/event trace ring, and Prometheus/JSON exposition —
+//! see DESIGN.md §Telemetry and `repro stats`.
+//!
 //! Most applications only need the [`prelude`].
 //!
 //! See `DESIGN.md` for the crate map and the experiment index (including
@@ -45,6 +51,7 @@ pub mod hw;
 pub mod reduce;
 pub mod runtime;
 pub mod stream;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 
@@ -61,6 +68,7 @@ pub use arith::{
 pub use formats::{Fp, FpClass, FpFormat};
 pub use reduce::{BackendSel, Partial, PlanBuilder, ReducePlan, Reducer};
 pub use stream::{EngineConfig, Snapshot, StreamEngine, StreamService};
+pub use telemetry::{TelemetrySnapshot, TraceEvent};
 
 /// The one-stop import for applications: formats, the accumulator spec,
 /// the reduction API tier (plan + registry + trait), the adder, and the

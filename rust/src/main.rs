@@ -12,6 +12,7 @@
 //! repro kernel [--format all] [--n 1024] [--blocks 1,8,64]  SoA-kernel check
 //! repro eia    [--format all] [--n 1024] [--vectors 64]     EIA backend check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
+//! repro stats  [--prometheus|--json|--trace] [--selftest]  live cross-tier telemetry
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
 //!
@@ -39,6 +40,7 @@ fn main() -> ExitCode {
         "kernel" => cmd_kernel(&args),
         "eia" => cmd_eia(&args),
         "sweep" => cmd_sweep(&args),
+        "stats" => cmd_stats(&args),
         "e2e" => cmd_e2e(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
@@ -96,6 +98,14 @@ commands:
                                           equal one-shot banking, and
                                           report ingest/drain throughput
   sweep   --format F --n N [--clock 1.0]  raw design-space dump for any N
+  stats   [--n 256] [--vectors 16] [--prometheus|--json|--trace] [--selftest]
+                                          exercise every registered backend,
+                                          plan negotiation and the stream
+                                          engine, then report the live
+                                          cross-tier telemetry (DESIGN.md
+                                          §Telemetry); --selftest exits
+                                          nonzero if any expected metric
+                                          family is absent or zero
   e2e     [--sentences 4] [--requests 256] PJRT BERT workload + batched serving demo
   serve   [--requests 2048] [--clients 8]  load-test the batched PJRT reduction path
   help                                    this text
@@ -512,6 +522,182 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Live cross-tier telemetry (DESIGN.md §Telemetry): exercise every
+/// registered backend through a full `Reducer` lifecycle, drive all four
+/// plan-negotiation rationales, light the kernel/EIA numeric-health
+/// counters with a crafted sticky pair, run a short multi-stream serving
+/// session (including a wire-codec partial merge), then report the hub.
+/// `--selftest` exits nonzero if any metric the workload is expected to
+/// drive is absent or zero — CI uses it as a liveness gate on the
+/// instrumentation itself.
+fn cmd_stats(args: &Args) -> Result<(), String> {
+    use online_fp_add::arith::AccSpec;
+    use online_fp_add::formats::BF16;
+    use online_fp_add::reduce::{registry, Partial, ReducePlan, Reducer};
+    use online_fp_add::stream::{EngineConfig, StreamService};
+    use online_fp_add::telemetry::{self, MetricValue};
+    use online_fp_add::util::prng::XorShift;
+
+    let n = args.get_usize("n", 256)?.max(4);
+    let vectors = args.get_usize("vectors", 16)?.max(1);
+    if args.has("trace") {
+        telemetry::global().trace.set_enabled(true);
+    }
+    let exact = AccSpec::exact(BF16);
+    let trunc = AccSpec::truncated(2);
+    let mut rng = XorShift::new(0x57A7_5EED);
+
+    // Every registered backend through the one-shot reduce path plus a full
+    // split-ingest lifecycle (ingest / partial / codec roundtrip / absorb /
+    // finish), so every per-backend `ofa_reduce_*` family has activity.
+    for entry in registry::entries() {
+        let plan = ReducePlan::with_backend(exact, entry.sel());
+        for _ in 0..vectors {
+            let terms: Vec<Fp> = (0..n).map(|_| rng.gen_fp_sparse(BF16, 0.2)).collect();
+            let _ = plan.reduce(&terms);
+            let mut head = plan.reducer();
+            head.ingest(&terms[..n / 2]);
+            let wire = head.partial().to_bytes();
+            let partial = Partial::from_bytes(&wire).map_err(|e| format!("partial codec: {e}"))?;
+            let mut rest = plan.reducer();
+            rest.ingest(&terms[n / 2..]);
+            rest.absorb(&partial);
+            let _ = rest.finish();
+        }
+    }
+
+    // All four plan rationales: the explicit plans above, plus the three
+    // negotiation outcomes.
+    let _ = ReducePlan::negotiate(exact);
+    let _ = ReducePlan::negotiate(trunc);
+    let eia_trunc = ReducePlan::builder(trunc)
+        .require_order_invariant()
+        .build()
+        .map_err(|e| format!("order-invariant negotiation: {e}"))?;
+
+    // Numeric-health probe: 2^20 + 1 in BF16 under a guard-2 frame drops
+    // live low bits, so one kernel block sweep and one EIA drain must each
+    // report sticky.
+    let sticky_pair = [Fp::from_f64(1048576.0, BF16), Fp::from_f64(1.0, BF16)];
+    let kernel_trunc = ReducePlan::with_backend(trunc, registry::sel("kernel")?);
+    let _ = kernel_trunc.reduce(&sticky_pair);
+    let _ = eia_trunc.reduce(&sticky_pair);
+
+    // Streaming tier: a short multi-stream serving session, including one
+    // cross-node partial merged in through the wire codec.
+    let svc = StreamService::new(BF16, EngineConfig { spec: exact, ..Default::default() });
+    for v in 0..vectors.max(4) {
+        let terms: Vec<Fp> = (0..n).map(|_| rng.gen_fp_sparse(BF16, 0.2)).collect();
+        svc.ingest(&format!("stats-{}", v % 4), terms)
+            .map_err(|e| format!("stream ingest: {e:?}"))?;
+    }
+    {
+        let mut peer = ReducePlan::with_backend(exact, registry::sel("eia")?).reducer();
+        peer.ingest(&[Fp::from_f64(0.5, BF16)]);
+        let wire = peer.partial().to_bytes();
+        let partial = Partial::from_bytes(&wire).map_err(|e| format!("partial codec: {e}"))?;
+        svc.engine().shards().merge_partial("stats-0", &partial);
+    }
+    for v in 0..4 {
+        let _ = svc.drain(&format!("stats-{v}"));
+    }
+
+    let snap = svc.telemetry_snapshot();
+
+    if args.has("selftest") {
+        let mut dead: Vec<String> = Vec::new();
+        for entry in registry::entries() {
+            for name in [
+                "ofa_reduce_ingest_calls",
+                "ofa_reduce_ingest_terms",
+                "ofa_reduce_absorbs",
+                "ofa_reduce_finishes",
+                "ofa_reduce_reduce_calls",
+            ] {
+                if snap.counter_labeled(name, "backend", entry.name) == 0 {
+                    dead.push(format!("{name}{{backend=\"{}\"}}", entry.name));
+                }
+            }
+        }
+        // Everything the workload above is guaranteed to drive. Deliberate
+        // omissions: spills / wide banks need crafted i128 snapshots (see
+        // tests/telemetry.rs), runtime counters need PJRT artifacts, and
+        // the trace ring is opt-in.
+        const EXPECT_NONZERO: &[&str] = &[
+            "ofa_plan_builds",
+            "ofa_plan_explicit",
+            "ofa_plan_negotiated_exact",
+            "ofa_plan_negotiated_truncated",
+            "ofa_plan_negotiated_order_invariant",
+            "ofa_accum_drains",
+            "ofa_accum_drain_bins",
+            "ofa_accum_drain_sticky",
+            "ofa_kernel_block_sweeps",
+            "ofa_kernel_lanes",
+            "ofa_kernel_narrow_blocks",
+            "ofa_kernel_wide_blocks",
+            "ofa_kernel_sticky_activations",
+            "ofa_stream_batches",
+            "ofa_stream_batch_terms",
+            "ofa_stream_partial_merges",
+            "ofa_stream_codec_bytes_out",
+            "ofa_stream_codec_bytes_in",
+            "ofa_stream_shard_merges",
+            "ofa_stream_shard_terms",
+            "ofa_service_batches",
+            "ofa_service_ingested_terms",
+            "ofa_service_segments",
+            "ofa_service_merges",
+            "ofa_service_drains",
+        ];
+        for name in EXPECT_NONZERO {
+            if snap.counter(name) == 0 {
+                dead.push((*name).to_string());
+            }
+        }
+        if !dead.is_empty() {
+            return Err(format!(
+                "telemetry selftest: {} expected metric(s) absent or zero: {}",
+                dead.len(),
+                dead.join(", ")
+            ));
+        }
+        println!("telemetry selftest: every expected metric family is live ✓");
+        return Ok(());
+    }
+    if args.has("prometheus") {
+        print!("{}", snap.to_prometheus());
+        return Ok(());
+    }
+    if args.has("json") {
+        println!("{}", snap.to_json());
+        return Ok(());
+    }
+    let mut t = online_fp_add::util::table::Table::new(vec!["metric", "labels", "value"]);
+    for s in &snap.samples {
+        let labels =
+            s.labels.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(",");
+        let value = match &s.value {
+            MetricValue::Counter(v) => v.to_string(),
+            MetricValue::Gauge(v) => v.to_string(),
+            MetricValue::Histogram(h) => {
+                format!("count={} sum={} min={} max={}", h.count, h.sum, h.min, h.max)
+            }
+        };
+        t.row(vec![s.name.to_string(), labels, value]);
+    }
+    println!("Live cross-tier telemetry — {} samples (DESIGN.md §Telemetry)\n", snap.samples.len());
+    println!("{}", t.render());
+    if args.has("trace") {
+        let ring = &telemetry::global().trace;
+        println!("trace ring ({} events recorded):", ring.total());
+        for span in ring.dump() {
+            println!("  {span}");
+        }
+    }
     Ok(())
 }
 

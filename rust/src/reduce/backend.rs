@@ -25,11 +25,13 @@
 //! survive.
 
 use super::partial::{Partial, PartialState};
+use super::registry::tele_family_named;
 use crate::accum::Eia;
 use crate::arith::kernel::{block_state, reduce_terms};
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::{AccSpec, WideInt};
 use crate::formats::Fp;
+use crate::telemetry;
 
 /// Lift one pre-decoded `(eff_exp, signed_sig)` lane into the operator
 /// domain — the runtime's `(e, m)` field convention: a zero significand is
@@ -85,11 +87,17 @@ pub struct FoldReducer {
     spec: AccSpec,
     state: AlignAcc,
     terms: u64,
+    tele: &'static telemetry::ReduceFamily,
 }
 
 impl FoldReducer {
     pub fn new(spec: AccSpec) -> Self {
-        FoldReducer { spec, state: AlignAcc::IDENTITY, terms: 0 }
+        FoldReducer {
+            spec,
+            state: AlignAcc::IDENTITY,
+            terms: 0,
+            tele: tele_family_named("scalar"),
+        }
     }
 }
 
@@ -108,6 +116,10 @@ impl Reducer for FoldReducer {
             self.state = op_combine(&self.state, &AlignAcc::leaf(*t, self.spec), self.spec);
         }
         self.terms += terms.len() as u64;
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(terms.len() as u64);
+        }
     }
 
     fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
@@ -116,11 +128,18 @@ impl Reducer for FoldReducer {
             self.state = op_combine(&self.state, &leaf_decoded(e, s, self.spec), self.spec);
         }
         self.terms += eff.len() as u64;
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(eff.len() as u64);
+        }
     }
 
     fn absorb(&mut self, partial: &Partial) {
         self.state = op_combine(&self.state, &partial.resolve(self.spec), self.spec);
         self.terms += partial.terms;
+        if telemetry::enabled() {
+            self.tele.absorbs.inc();
+        }
     }
 
     fn partial(&self) -> Partial {
@@ -128,6 +147,9 @@ impl Reducer for FoldReducer {
     }
 
     fn finish(&self) -> AlignAcc {
+        if telemetry::enabled() {
+            self.tele.finishes.inc();
+        }
         self.state
     }
 
@@ -152,6 +174,7 @@ pub struct KernelReducer {
     block: usize,
     state: AlignAcc,
     terms: u64,
+    tele: &'static telemetry::ReduceFamily,
 }
 
 impl KernelReducer {
@@ -159,7 +182,13 @@ impl KernelReducer {
     /// reducer is ever built.
     pub fn new(spec: AccSpec, block: usize) -> Self {
         debug_assert!(block >= 1, "kernel block must be >= 1 (enforced at plan build)");
-        KernelReducer { spec, block: block.max(1), state: AlignAcc::IDENTITY, terms: 0 }
+        KernelReducer {
+            spec,
+            block: block.max(1),
+            state: AlignAcc::IDENTITY,
+            terms: 0,
+            tele: tele_family_named("kernel"),
+        }
     }
 }
 
@@ -174,24 +203,50 @@ impl Reducer for KernelReducer {
 
     fn ingest(&mut self, terms: &[Fp]) {
         if !terms.is_empty() {
+            // Kernel-path health counters flush inside `reduce_terms`.
             let part = reduce_terms(terms, self.block, self.spec);
             self.state = op_combine(&self.state, &part, self.spec);
         }
         self.terms += terms.len() as u64;
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(terms.len() as u64);
+        }
     }
 
     fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
         debug_assert_eq!(eff.len(), sig.len());
+        // Accumulate per-call locals and flush once: the enabled path
+        // costs a handful of relaxed adds per *call*, not per block.
+        let (mut blocks, mut sticky) = (0u64, 0u64);
         for (e_chunk, s_chunk) in eff.chunks(self.block).zip(sig.chunks(self.block)) {
             let part = block_state(e_chunk, s_chunk, self.spec);
+            blocks += 1;
+            sticky += part.sticky as u64;
             self.state = op_combine(&self.state, &part, self.spec);
         }
         self.terms += eff.len() as u64;
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(eff.len() as u64);
+            let k = &telemetry::global().kernel;
+            k.block_sweeps.add(blocks);
+            k.lanes.add(eff.len() as u64);
+            if self.spec.narrow {
+                k.narrow_blocks.add(blocks);
+            } else {
+                k.wide_blocks.add(blocks);
+            }
+            k.sticky_activations.add(sticky);
+        }
     }
 
     fn absorb(&mut self, partial: &Partial) {
         self.state = op_combine(&self.state, &partial.resolve(self.spec), self.spec);
         self.terms += partial.terms;
+        if telemetry::enabled() {
+            self.tele.absorbs.inc();
+        }
     }
 
     fn partial(&self) -> Partial {
@@ -199,6 +254,9 @@ impl Reducer for KernelReducer {
     }
 
     fn finish(&self) -> AlignAcc {
+        if telemetry::enabled() {
+            self.tele.finishes.inc();
+        }
         self.state
     }
 
@@ -223,11 +281,18 @@ pub struct EiaReducer {
     eia: Eia,
     carry: AlignAcc,
     carry_terms: u64,
+    tele: &'static telemetry::ReduceFamily,
 }
 
 impl EiaReducer {
     pub fn new(spec: AccSpec) -> Self {
-        EiaReducer { spec, eia: Eia::new(), carry: AlignAcc::IDENTITY, carry_terms: 0 }
+        EiaReducer {
+            spec,
+            eia: Eia::new(),
+            carry: AlignAcc::IDENTITY,
+            carry_terms: 0,
+            tele: tele_family_named("eia"),
+        }
     }
 }
 
@@ -242,12 +307,20 @@ impl Reducer for EiaReducer {
 
     fn ingest(&mut self, terms: &[Fp]) {
         self.eia.ingest_terms(terms);
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(terms.len() as u64);
+        }
     }
 
     fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
         debug_assert_eq!(eff.len(), sig.len());
         for (&e, &s) in eff.iter().zip(sig) {
             self.eia.ingest_decoded(e, s);
+        }
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(eff.len() as u64);
         }
     }
 
@@ -258,6 +331,9 @@ impl Reducer for EiaReducer {
                 self.carry = op_combine(&self.carry, a, self.spec);
                 self.carry_terms += partial.terms;
             }
+        }
+        if telemetry::enabled() {
+            self.tele.absorbs.inc();
         }
     }
 
@@ -270,6 +346,9 @@ impl Reducer for EiaReducer {
     }
 
     fn finish(&self) -> AlignAcc {
+        if telemetry::enabled() {
+            self.tele.finishes.inc();
+        }
         let drained = self.eia.drain(self.spec);
         if self.carry.is_identity() {
             drained

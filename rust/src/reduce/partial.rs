@@ -29,6 +29,7 @@ use crate::accum::EiaSnapshot;
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::wide::LIMBS;
 use crate::arith::{AccSpec, WideInt};
+use crate::telemetry;
 
 /// The backend-domain payload of a [`Partial`].
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -133,6 +134,9 @@ impl Partial {
                 out.extend_from_slice(&s.to_bytes());
             }
         }
+        if telemetry::enabled() {
+            telemetry::global().stream.codec_bytes_out.add(out.len() as u64);
+        }
         out
     }
 
@@ -140,6 +144,9 @@ impl Partial {
     /// fail loudly — a garbage partial merged into a live stream would
     /// silently poison every later query.
     pub fn from_bytes(bytes: &[u8]) -> Result<Partial, String> {
+        if telemetry::enabled() {
+            telemetry::global().stream.codec_bytes_in.add(bytes.len() as u64);
+        }
         if bytes.len() < HEADER_LEN {
             return Err(format!("reduce partial too short: {} bytes", bytes.len()));
         }

@@ -13,6 +13,7 @@ use super::registry::{self, BackendSel, Capabilities};
 use crate::arith::operator::AlignAcc;
 use crate::arith::AccSpec;
 use crate::formats::Fp;
+use crate::telemetry::{self, TraceEvent};
 
 const EXPLICIT: &str = "explicit backend selection";
 const NEGOTIATED_EXACT: &str =
@@ -21,6 +22,23 @@ const NEGOTIATED_TRUNCATED: &str =
     "negotiated: truncated spec → scalar ⊙ fold (preserves the radix-2 dropped-bit pattern)";
 const NEGOTIATED_ORDER_INVARIANT: &str =
     "negotiated: truncated spec + order-invariance → exponent-indexed accumulator";
+
+/// Count a successfully built plan under its negotiation outcome and leave
+/// a trace span with the rationale (the trace ring gates itself).
+fn record_plan(sel: BackendSel, rationale: &'static str) {
+    if telemetry::enabled() {
+        let plan = &telemetry::global().plan;
+        plan.builds.inc();
+        match rationale {
+            EXPLICIT => plan.explicit.inc(),
+            NEGOTIATED_EXACT => plan.negotiated_exact.inc(),
+            NEGOTIATED_TRUNCATED => plan.negotiated_truncated.inc(),
+            NEGOTIATED_ORDER_INVARIANT => plan.negotiated_order_invariant.inc(),
+            _ => {}
+        }
+    }
+    telemetry::global().trace.record(TraceEvent::PlanNegotiated { backend: sel.name(), rationale });
+}
 
 /// An executable reduction plan: spec + backend + negotiated capabilities.
 ///
@@ -66,6 +84,7 @@ impl ReducePlan {
 
     /// A plan for an explicit, already-validated selection.
     pub fn with_backend(spec: AccSpec, sel: BackendSel) -> ReducePlan {
+        record_plan(sel, EXPLICIT);
         ReducePlan { spec, sel, caps: sel.capabilities(spec), rationale: EXPLICIT }
     }
 
@@ -241,6 +260,7 @@ impl PlanBuilder {
                  dropped-bit pattern under this spec; use \"scalar\" (or \"kernel:1\")"
             ));
         }
+        record_plan(sel, rationale);
         Ok(ReducePlan { spec: self.spec, sel, caps, rationale })
     }
 }

@@ -18,8 +18,10 @@ use crate::arith::kernel::DEFAULT_BLOCK;
 use crate::arith::operator::AlignAcc;
 use crate::arith::AccSpec;
 use crate::formats::Fp;
+use crate::telemetry;
 use std::fmt;
 use std::str::FromStr;
+use std::sync::Once;
 
 /// What a backend guarantees under a given [`AccSpec`] — the negotiation
 /// surface [`super::PlanBuilder`] matches requirements against.
@@ -164,6 +166,39 @@ pub fn entries() -> &'static [BackendEntry] {
     &REGISTRY
 }
 
+// ---- telemetry slot mapping -------------------------------------------
+//
+// Backend-indexed metrics live in fixed telemetry slots keyed by registry
+// position; the names are registered once so snapshots can label samples
+// `backend="scalar"` etc. Slot resolution is a scan over three entries —
+// cheap enough for the per-call dispatch path, and reducers cache the
+// returned `&'static` family at construction anyway.
+
+static TELE_SLOTS: Once = Once::new();
+
+fn tele_init() {
+    TELE_SLOTS.call_once(|| {
+        for (i, e) in REGISTRY.iter().enumerate() {
+            telemetry::global().register_backend_slot(i, e.name);
+        }
+    });
+}
+
+/// The telemetry metric family of a registry entry.
+fn tele_family(entry: &'static BackendEntry) -> &'static telemetry::ReduceFamily {
+    tele_init();
+    let slot = REGISTRY.iter().position(|e| std::ptr::eq(e, entry)).unwrap_or(0);
+    telemetry::global().reduce_slot(slot)
+}
+
+/// The telemetry metric family of a backend by registry name (unknown
+/// names map to slot 0; only in-tree reducers call this).
+pub(crate) fn tele_family_named(name: &str) -> &'static telemetry::ReduceFamily {
+    tele_init();
+    let slot = REGISTRY.iter().position(|e| e.name == name).unwrap_or(0);
+    telemetry::global().reduce_slot(slot)
+}
+
 /// Look a backend up by its registry name (case-sensitive, lowercase).
 pub fn by_name(name: &str) -> Option<&'static BackendEntry> {
     REGISTRY.iter().find(|e| e.name == name)
@@ -238,6 +273,11 @@ impl BackendSel {
 
     /// One-shot slice reduction — the direct (fn-pointer) dispatch path.
     pub fn reduce(&self, terms: &[Fp], spec: AccSpec) -> AlignAcc {
+        if telemetry::enabled() {
+            let fam = tele_family(self.entry);
+            fam.reduce_calls.inc();
+            fam.ingest_terms.add(terms.len() as u64);
+        }
         (self.entry.reduce_fn)(terms, spec, self.block)
     }
 

@@ -15,6 +15,7 @@
 use super::{LoadedArtifact, Result, Runtime, RuntimeError};
 use crate::arith::AccSpec;
 use crate::reduce::{ReducePlan, Reducer};
+use crate::telemetry;
 
 /// Output of one reduction batch: per-row `(λ, acc)` states.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -120,6 +121,11 @@ impl OnlineReduceExe {
             let state = reducer.finish();
             lambda.push(state.lambda);
             acc.push(state.acc.to_i128() as i64);
+        }
+        if telemetry::enabled() {
+            let rt_fam = &telemetry::global().runtime;
+            rt_fam.batches.inc();
+            rt_fam.rows.add(rows as u64);
         }
         Ok(ReduceOut { lambda, acc })
     }

@@ -23,6 +23,7 @@ use crate::coordinator::batcher::SubmitError;
 use crate::coordinator::metrics::{Counter, LatencyHistogram};
 use crate::coordinator::pool::ThreadPool;
 use crate::formats::{Fp, BF16};
+use crate::telemetry::{self, TraceEvent};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
@@ -216,6 +217,12 @@ impl StreamEngine {
             Ok(()) => {
                 self.metrics.batches.inc();
                 self.metrics.ingested_terms.add(n as u64);
+                if telemetry::enabled() {
+                    let s = &telemetry::global().stream;
+                    s.batches.inc();
+                    s.batch_terms.add(n as u64);
+                    s.queue_depth.inc();
+                }
                 Ok(n)
             }
             Err(e) => {
@@ -248,8 +255,9 @@ impl StreamEngine {
     /// Finalize one stream: remove it and return its last checkpoint.
     pub fn drain(&self, stream: &str) -> Option<Snapshot> {
         let snap = self.shards.drain(stream);
-        if snap.is_some() {
+        if let Some(s) = &snap {
             self.metrics.drains.inc();
+            telemetry::global().trace.record(TraceEvent::StreamDrained { terms: s.terms });
         }
         snap
     }
@@ -304,12 +312,18 @@ fn worker_loop(
                 metrics.merges.inc();
             }
             metrics.segments.add(segments);
+            telemetry::global()
+                .trace
+                .record(TraceEvent::BatchReduced { terms: item.terms.len() as u64, segments });
         }));
         if outcome.is_err() {
             eprintln!(
                 "stream worker: batch for stream {:?} panicked; its terms are lost",
                 item.stream
             );
+        }
+        if telemetry::enabled() {
+            telemetry::global().stream.queue_depth.dec();
         }
         metrics.ingest_latency.observe(item.submitted.elapsed());
         note_done(progress);

@@ -20,6 +20,7 @@ use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::AccSpec;
 use crate::formats::Fp;
 use crate::reduce::{Partial, ReducePlan};
+use crate::telemetry::{self, TraceEvent};
 use std::collections::BTreeMap;
 
 /// One reduced chunk of a stream: the merged `[λ; o]` state of `terms`
@@ -122,16 +123,21 @@ impl SegmentAssembler {
     /// both modes, release builds included.
     pub fn offer(&mut self, seq: u64, seg: Segment) {
         assert!(self.seen.insert(seq), "segment {seq} offered twice");
+        let trace = &telemetry::global().trace;
         if self.spec.exact {
+            trace.record(TraceEvent::SegmentOffered { seq, parked: false });
             self.merged = self.merged.merge(&seg, self.spec);
             self.merges += 1;
+            trace.record(TraceEvent::SegmentMerged { seq });
             self.next_seq = self.next_seq.max(seq + 1);
             return;
         }
+        trace.record(TraceEvent::SegmentOffered { seq, parked: seq != self.next_seq });
         self.pending.insert(seq, seg);
         while let Some(seg) = self.pending.remove(&self.next_seq) {
             self.merged = self.merged.merge(&seg, self.spec);
             self.merges += 1;
+            trace.record(TraceEvent::SegmentMerged { seq: self.next_seq });
             self.next_seq += 1;
         }
     }

@@ -20,6 +20,7 @@ use crate::arith::normalize::normalize_round;
 use crate::arith::AccSpec;
 use crate::coordinator::batcher::SubmitError;
 use crate::formats::{Fp, FpFormat};
+use crate::telemetry::{self, TelemetrySnapshot};
 use crate::workload::Trace;
 
 /// One client request.
@@ -196,6 +197,35 @@ impl StreamService {
     fn round(&self, snap: &Snapshot) -> Fp {
         normalize_round(&snap.state(), self.engine.config().spec, self.format)
     }
+
+    /// The full telemetry picture as seen from this service: the global
+    /// cross-tier hub ([`crate::telemetry::TELEMETRY`]) plus this engine's
+    /// own counters appended as `ofa_service_*` samples labeled with the
+    /// service format — so one scrape answers both "what is the reduction
+    /// stack doing" and "what is *this* serving front-end doing".
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        let mut snap = telemetry::global().snapshot();
+        let fmt = || vec![("format", self.format.name.to_string())];
+        let m = self.engine.metrics();
+        snap.push_counter("ofa_service_batches", fmt(), m.batches.get());
+        snap.push_counter("ofa_service_ingested_terms", fmt(), m.ingested_terms.get());
+        snap.push_counter("ofa_service_segments", fmt(), m.segments.get());
+        snap.push_counter("ofa_service_merges", fmt(), m.merges.get());
+        snap.push_counter("ofa_service_rejected", fmt(), m.rejected.get());
+        snap.push_counter("ofa_service_drains", fmt(), m.drains.get());
+        snap.push_histogram("ofa_service_ingest_latency_us", fmt(), m.ingest_latency.snapshot());
+        snap
+    }
+
+    /// [`Self::telemetry_snapshot`] rendered as Prometheus text exposition.
+    pub fn stats_prometheus(&self) -> String {
+        self.telemetry_snapshot().to_prometheus()
+    }
+
+    /// [`Self::telemetry_snapshot`] rendered as JSON.
+    pub fn stats_json(&self) -> String {
+        self.telemetry_snapshot().to_json()
+    }
 }
 
 fn screen(mut terms: Vec<Fp>, format: FpFormat) -> Result<Vec<Fp>, IngestError> {
@@ -328,6 +358,23 @@ mod tests {
         let (value, _) = svc.query("u").unwrap();
         assert_eq!(value.class(), FpClass::Normal);
         assert_eq!((value.raw_exp(), value.mant()), (1, 0));
+    }
+
+    #[test]
+    fn service_samples_ride_the_telemetry_snapshot_with_a_format_label() {
+        // Only the per-engine `ofa_service_*` samples are asserted — they
+        // come from this service's own metrics, so parallel tests touching
+        // the global hub cannot perturb them.
+        let svc = service();
+        let one = Fp::from_f64(1.0, BF16);
+        svc.ingest_blocking("t", vec![one; 5]).unwrap();
+        svc.query("t").unwrap();
+        let snap = svc.telemetry_snapshot();
+        assert_eq!(snap.counter_labeled("ofa_service_batches", "format", "BF16"), 1);
+        assert_eq!(snap.counter_labeled("ofa_service_ingested_terms", "format", "BF16"), 5);
+        let prom = svc.stats_prometheus();
+        assert!(prom.contains("ofa_service_batches_total{format=\"BF16\"} 1"), "{prom}");
+        assert!(svc.stats_json().contains("\"ofa_service_ingested_terms\""));
     }
 
     #[test]

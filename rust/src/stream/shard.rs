@@ -10,6 +10,7 @@ use super::segment::Segment;
 use crate::arith::operator::AlignAcc;
 use crate::arith::{AccSpec, WideInt};
 use crate::reduce::Partial;
+use crate::telemetry::{self, SHARD_SLOTS};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -82,16 +83,26 @@ impl ShardMap {
         self.stripes.len()
     }
 
-    fn stripe_for(&self, id: &str) -> &Stripe {
+    fn stripe_index(&self, id: &str) -> usize {
         let mut h = DefaultHasher::new();
         id.hash(&mut h);
-        &self.stripes[(h.finish() as usize) % self.stripes.len()]
+        (h.finish() as usize) % self.stripes.len()
+    }
+
+    fn stripe_for(&self, id: &str) -> &Stripe {
+        &self.stripes[self.stripe_index(id)]
     }
 
     /// Merge one segment into `id`'s state (creating the stream on first
     /// touch). Returns the stream's new term count.
     pub fn merge(&self, id: &str, seg: Segment) -> u64 {
-        let mut table = lock(self.stripe_for(id));
+        let stripe = self.stripe_index(id);
+        if telemetry::enabled() {
+            let s = &telemetry::global().stream;
+            s.shard_merges[stripe % SHARD_SLOTS].inc();
+            s.shard_terms[stripe % SHARD_SLOTS].add(seg.terms);
+        }
+        let mut table = lock(&self.stripes[stripe]);
         match table.get_mut(id) {
             Some(st) => {
                 st.seg = st.seg.merge(&seg, self.spec);
@@ -114,6 +125,9 @@ impl ShardMap {
     /// partials drain to the scalar `⊙` fold's bits, and `⊙` is
     /// associative (eq. 10). Returns the stream's new term count.
     pub fn merge_partial(&self, id: &str, partial: &Partial) -> u64 {
+        if telemetry::enabled() {
+            telemetry::global().stream.partial_merges.inc();
+        }
         self.merge(id, Segment::from_partial(partial, self.spec))
     }
 

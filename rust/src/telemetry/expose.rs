@@ -1,0 +1,175 @@
+//! Exposition: render a [`TelemetrySnapshot`] as Prometheus text format
+//! or JSON. Both renderers are pure functions of the snapshot — no live
+//! atomics, no allocation surprises, no external dependencies (the
+//! offline environment has no serde; the JSON is hand-rolled over a
+//! closed, known-safe value space).
+
+use super::metrics::HistogramSnapshot;
+use super::snapshot::{MetricSample, MetricValue, TelemetrySnapshot};
+use std::fmt::Write;
+
+/// Escape a label/string value for both exposition formats (the value
+/// space is metric/backend/format names — escaping is belt-and-braces).
+fn escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// `{k="v",…}` or the empty string; `extra` appends one more pair (used
+/// for histogram `le` bounds).
+fn label_block(labels: &[(&'static str, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape(v))).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn prom_histogram(
+    out: &mut String,
+    name: &str,
+    labels: &[(&'static str, String)],
+    h: &HistogramSnapshot,
+) {
+    let mut cum = 0u64;
+    for &(bound, n) in &h.buckets {
+        cum += n;
+        let lb = label_block(labels, Some(("le", &bound.to_string())));
+        let _ = writeln!(out, "{name}_bucket{lb} {cum}");
+    }
+    let lb_inf = label_block(labels, Some(("le", "+Inf")));
+    let _ = writeln!(out, "{name}_bucket{lb_inf} {}", h.count);
+    let lb = label_block(labels, None);
+    let _ = writeln!(out, "{name}_sum{lb} {}", h.sum);
+    let _ = writeln!(out, "{name}_count{lb} {}", h.count);
+}
+
+/// Prometheus text exposition format 0.0.4: one `# TYPE` line per metric
+/// name (samples of one name are contiguous in snapshot order), counters
+/// suffixed `_total`, histograms expanded to cumulative `_bucket{le=}` /
+/// `_sum` / `_count` series.
+pub fn prometheus(snap: &TelemetrySnapshot) -> String {
+    let mut out = String::new();
+    let mut last_name = "";
+    for s in &snap.samples {
+        let kind = match s.value {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+        };
+        if s.name != last_name {
+            let _ = writeln!(out, "# TYPE {} {kind}", s.name);
+            last_name = s.name;
+        }
+        match &s.value {
+            MetricValue::Counter(v) => {
+                let lb = label_block(&s.labels, None);
+                let _ = writeln!(out, "{}_total{lb} {v}", s.name);
+            }
+            MetricValue::Gauge(v) => {
+                let lb = label_block(&s.labels, None);
+                let _ = writeln!(out, "{}{lb} {v}", s.name);
+            }
+            MetricValue::Histogram(h) => prom_histogram(&mut out, s.name, &s.labels, h),
+        }
+    }
+    out
+}
+
+fn json_labels(labels: &[(&'static str, String)]) -> String {
+    let parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("\"{k}\":\"{}\"", escape(v))).collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+fn json_sample(s: &MetricSample) -> String {
+    let head = format!("{{\"name\":\"{}\",\"labels\":{}", s.name, json_labels(&s.labels));
+    match &s.value {
+        MetricValue::Counter(v) => format!("{head},\"type\":\"counter\",\"value\":{v}}}"),
+        MetricValue::Gauge(v) => format!("{head},\"type\":\"gauge\",\"value\":{v}}}"),
+        MetricValue::Histogram(h) => {
+            let buckets: Vec<String> =
+                h.buckets.iter().map(|&(bound, n)| format!("[{bound},{n}]")).collect();
+            format!(
+                "{head},\"type\":\"histogram\",\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"buckets\":[{}]}}",
+                h.count,
+                h.sum,
+                h.min,
+                h.max,
+                buckets.join(",")
+            )
+        }
+    }
+}
+
+/// JSON exposition: `{"samples":[…]}`, one object per sample, in snapshot
+/// order (deterministic for fixed inputs, like the snapshot itself).
+pub fn json(snap: &TelemetrySnapshot) -> String {
+    let body: Vec<String> = snap.samples.iter().map(|s| format!("  {}", json_sample(s))).collect();
+    format!("{{\"samples\":[\n{}\n]}}\n", body.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> TelemetrySnapshot {
+        let mut snap = TelemetrySnapshot::default();
+        snap.push_counter("ofa_reduce_ingest_terms", vec![("backend", "scalar".into())], 64);
+        snap.push_gauge("ofa_stream_queue_depth", vec![], -2);
+        snap.push_histogram(
+            "ofa_accum_bin_occupancy",
+            vec![],
+            HistogramSnapshot { count: 3, sum: 9, min: 1, max: 5, buckets: vec![(2, 1), (8, 2)] },
+        );
+        snap
+    }
+
+    #[test]
+    fn prometheus_renders_types_labels_and_cumulative_buckets() {
+        let text = prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE ofa_reduce_ingest_terms counter"), "{text}");
+        assert!(text.contains("ofa_reduce_ingest_terms_total{backend=\"scalar\"} 64"), "{text}");
+        assert!(text.contains("# TYPE ofa_stream_queue_depth gauge"), "{text}");
+        assert!(text.contains("ofa_stream_queue_depth -2"), "{text}");
+        assert!(text.contains("ofa_accum_bin_occupancy_bucket{le=\"2\"} 1"), "{text}");
+        assert!(text.contains("ofa_accum_bin_occupancy_bucket{le=\"8\"} 3"), "{text}");
+        assert!(text.contains("ofa_accum_bin_occupancy_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("ofa_accum_bin_occupancy_sum 9"), "{text}");
+        assert!(text.contains("ofa_accum_bin_occupancy_count 3"), "{text}");
+    }
+
+    #[test]
+    fn json_is_deterministic_and_structurally_sound() {
+        let (a, b) = (json(&sample_snapshot()), json(&sample_snapshot()));
+        assert_eq!(a, b);
+        assert!(a.contains("\"name\":\"ofa_reduce_ingest_terms\""), "{a}");
+        assert!(a.contains("\"labels\":{\"backend\":\"scalar\"}"), "{a}");
+        assert!(a.contains("\"type\":\"histogram\",\"count\":3,\"sum\":9"), "{a}");
+        assert!(a.contains("\"buckets\":[[2,1],[8,2]]"), "{a}");
+        // Balanced braces/brackets — cheap structural sanity without serde.
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let n_open = a.chars().filter(|&c| c == open).count();
+            let n_close = a.chars().filter(|&c| c == close).count();
+            assert_eq!(n_open, n_close, "{a}");
+        }
+    }
+
+    #[test]
+    fn label_values_escape_quotes_and_backslashes() {
+        assert_eq!(escape(r#"a"b\c"#), r#"a\"b\\c"#);
+    }
+}

@@ -1,0 +1,402 @@
+//! Lock-free metric primitives: counters, gauges and log2-bucket
+//! histograms, all const-constructible so whole metric families can live
+//! in `static`s with zero startup cost.
+//!
+//! Design rules (see DESIGN.md §Telemetry):
+//!
+//! * every update is a handful of `Relaxed` atomic RMWs — no locks, no
+//!   allocation, no syscalls on any record path (min/max tracking uses an
+//!   explicit compare-exchange loop instead of the `Mutex` the old
+//!   `coordinator::metrics` histogram took per observation);
+//! * reads are racy-but-coherent per cell: a snapshot taken while writers
+//!   run may split an update across cells (count vs sum), which is the
+//!   standard monitoring trade — quiesce writers for exact cuts;
+//! * `reset` is for tests and tools, not for concurrent use with writers.
+//!
+//! [`Counter`] and [`LatencyHistogram`] keep the exact API of the old
+//! `coordinator::metrics` module, which now re-exports them.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 histogram buckets: bucket `i` counts values in
+/// `[2^i, 2^(i+1))`, so the range spans 1 to ~33.5M (µs: 1µs to ~17s).
+pub const NBUCKETS: usize = 25;
+
+/// A monotonically increasing counter. One relaxed `fetch_add` per update.
+#[derive(Debug)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// A signed instantaneous value (queue depths, in-flight work).
+#[derive(Debug)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Lock-free monotone min: CAS loop, settles in one iteration when the
+/// current value already bounds `v` (the overwhelmingly common case).
+fn atomic_min(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v < cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Lock-free monotone max (see [`atomic_min`]).
+fn atomic_max(cell: &AtomicU64, v: u64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v > cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// An owned, comparable copy of a histogram's state — the exposition
+/// layer renders these without holding any reference to the live cells.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    /// 0 when the histogram is empty.
+    pub min: u64,
+    pub max: u64,
+    /// `(upper_bound, count)` per **non-empty** bucket, ascending; the
+    /// bound is exclusive (`2^(i+1)` for bucket `i`), counts are
+    /// per-bucket (not cumulative — Prometheus rendering cumulates).
+    pub buckets: Vec<(u64, u64)>,
+}
+
+/// Histogram of nonnegative values in fixed log2 buckets, with exact
+/// count/sum and CAS-tracked min/max.
+#[derive(Debug)]
+pub struct ValueHistogram {
+    buckets: [AtomicU64; NBUCKETS], // bucket i: [2^i, 2^(i+1))
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64, // u64::MAX while empty
+    max: AtomicU64,
+}
+
+impl ValueHistogram {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // array-init template
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        ValueHistogram {
+            buckets: [ZERO; NBUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value: five relaxed RMWs, no locks.
+    pub fn observe(&self, v: u64) {
+        let bucket = (63 - v.max(1).leading_zeros() as usize).min(NBUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        atomic_min(&self.min, v);
+        atomic_max(&self.max, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / c as f64
+        }
+    }
+
+    /// 0 while empty.
+    pub fn min(&self) -> u64 {
+        let m = self.min.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile: the upper bound of the bucket holding the
+    /// quantile rank (0 while empty, exact max past the last bucket).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return 1u64 << (i + 1); // bucket upper bound
+            }
+        }
+        self.max()
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then_some((1u64 << (i + 1), n))
+            })
+            .collect();
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            min: self.min(),
+            max: self.max(),
+            buckets,
+        }
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for ValueHistogram {
+    fn default() -> Self {
+        ValueHistogram::new()
+    }
+}
+
+/// Latency histogram over microseconds (1 µs to ~17 s): a
+/// [`ValueHistogram`] with `Duration` observation and the summary API the
+/// batcher/engine call sites have always used — minus the old
+/// per-observation `Mutex` for min/max, which is now the CAS loop.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    inner: ValueHistogram,
+}
+
+impl LatencyHistogram {
+    pub const fn new() -> Self {
+        LatencyHistogram { inner: ValueHistogram::new() }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        self.inner.observe(d.as_micros().max(1) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.count()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.inner.mean()
+    }
+
+    /// Approximate quantile in µs (see [`ValueHistogram::quantile`]).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        self.inner.quantile(q)
+    }
+
+    pub fn min_us(&self) -> u64 {
+        self.inner.min()
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.inner.max()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}µs p50≤{}µs p99≤{}µs min={}µs max={}µs",
+            self.count(),
+            self.mean_us(),
+            self.quantile_us(0.5),
+            self.quantile_us(0.99),
+            self.min_us(),
+            self.max_us()
+        )
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.inner.snapshot()
+    }
+
+    pub fn reset(&self) {
+        self.inner.reset();
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.reset();
+        assert_eq!(c.get(), 0);
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        g.add(-3);
+        assert_eq!(g.get(), -1);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn cas_minmax_tracks_exactly() {
+        let h = ValueHistogram::new();
+        assert_eq!(h.min(), 0); // empty
+        for v in [500u64, 3, 90, 3, 1_000_000] {
+            h.observe(v);
+        }
+        assert_eq!(h.min(), 3);
+        assert_eq!(h.max(), 1_000_000);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 500 + 3 + 90 + 3 + 1_000_000);
+    }
+
+    #[test]
+    fn value_histogram_buckets_and_quantiles() {
+        let h = ValueHistogram::new();
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.observe(v);
+        }
+        assert!((h.mean() - 220.0).abs() < 1.0);
+        let p50 = h.quantile(0.5);
+        assert!((32..=64).contains(&p50), "p50 bound {p50}");
+        assert!(h.quantile(0.99) >= 1024);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 5);
+        assert_eq!(snap.buckets.iter().map(|&(_, n)| n).sum::<u64>(), 5);
+        // Bucket bounds ascend and every recorded value fits under one.
+        assert!(snap.buckets.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+
+    #[test]
+    fn latency_histogram_preserves_the_old_contract() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 30, 40, 1000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 220.0).abs() < 1.0);
+        assert!((32..=64).contains(&h.quantile_us(0.5)));
+        assert!(h.quantile_us(0.99) >= 1024);
+        assert_eq!(h.min_us(), 10);
+        assert_eq!(h.max_us(), 1000);
+        let s = h.summary();
+        assert!(s.starts_with("n=5 "), "{s}");
+        let empty = LatencyHistogram::default();
+        assert_eq!(empty.quantile_us(0.99), 0);
+        assert_eq!(empty.mean_us(), 0.0);
+        assert!(empty.summary().contains("min=0µs"), "{}", empty.summary());
+    }
+
+    #[test]
+    fn zero_observation_lands_in_the_first_bucket() {
+        let h = ValueHistogram::new();
+        h.observe(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.snapshot().buckets, vec![(2, 1)]);
+    }
+}

@@ -1,0 +1,46 @@
+//! Cross-tier observability for the reduction stack: lock-free metrics,
+//! numeric-health tracing, and exposition.
+//!
+//! The paper's argument is about *where work happens* on the multi-term
+//! align-and-add path — incremental max-exponent tracking, alignment
+//! shifts, sticky-bit accumulation fused into `⊙` (eq. 7/8). This tier
+//! makes that work observable end to end: every hot tier records into one
+//! statically-allocated hub, and three surfaces read it back out.
+//!
+//! Layering:
+//!
+//! * [`metrics`] — const-constructible primitives: [`Counter`], [`Gauge`],
+//!   [`ValueHistogram`], [`LatencyHistogram`] (promoted from
+//!   `coordinator::metrics`, which now re-exports them). Updates are
+//!   relaxed atomic RMWs; min/max tracking is a CAS loop, never a lock.
+//! * [`registry`] — the metric families per tier (`reduce`, `plan`,
+//!   `accum`, `kernel`, `stream`, `runtime`) in the global [`TELEMETRY`]
+//!   hub, gated by one `enabled` flag (default **on**; the disabled path
+//!   is one relaxed load + a predictable branch per operation).
+//! * [`trace`] — the span/event ring ([`TraceRing`], default **off**):
+//!   plan-negotiation rationale, segment lifecycle, spill promotions,
+//!   drain reconciles — dump-on-demand with bounded memory.
+//! * [`snapshot`] — [`TelemetrySnapshot`]: a deterministic, typed,
+//!   ordered copy of every exported sample.
+//! * [`expose`] — Prometheus-text and JSON renderers over a snapshot
+//!   (served by `StreamService::stats_prometheus`/`stats_json` and the
+//!   `repro stats` CLI).
+//!
+//! Metric naming, the counter/span contract, the overhead budget and the
+//! full exported-metric table live in DESIGN.md §Telemetry. The
+//! instrumented-vs-disabled throughput gap is bounded in CI by the
+//! `telemetry overhead` series in `benches/perf.rs`.
+
+pub mod expose;
+pub mod metrics;
+pub mod registry;
+pub mod snapshot;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, HistogramSnapshot, LatencyHistogram, ValueHistogram};
+pub use registry::{
+    enabled, global, AccumFamily, KernelFamily, PlanFamily, ReduceFamily, RuntimeFamily,
+    StreamFamily, Telemetry, MAX_BACKEND_SLOTS, SHARD_SLOTS, TELEMETRY,
+};
+pub use snapshot::{MetricSample, MetricValue, TelemetrySnapshot};
+pub use trace::{SpanRecord, TraceEvent, TraceRing, TRACE_CAPACITY};

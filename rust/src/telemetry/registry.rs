@@ -1,0 +1,406 @@
+//! The global telemetry hub: statically-allocated metric families for
+//! every hot tier, one `enabled` gate, and the trace ring.
+//!
+//! Everything here is const-constructed into one `static` ([`TELEMETRY`])
+//! so instrumentation sites hold `&'static` handles with no lazy-init
+//! check: the enabled path is a relaxed atomic add per cell, the disabled
+//! path is one relaxed load and a predictable branch. Call sites gate on
+//! [`enabled`] **once** per operation and batch their updates (the kernel
+//! accumulates per-call locals and flushes ≤ 5 adds per reduce call) so
+//! the instrumented/uninstrumented throughput gap stays inside the CI
+//! overhead gate (see `telemetry overhead` in `benches/perf.rs`).
+//!
+//! Backend-indexed metrics live in fixed slots ([`MAX_BACKEND_SLOTS`])
+//! keyed by registry position; `reduce::registry` registers each slot's
+//! name once so snapshots can label samples `backend="scalar"` etc.
+
+use super::metrics::{Counter, Gauge, ValueHistogram};
+use super::snapshot::TelemetrySnapshot;
+use super::trace::TraceRing;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Fixed number of per-backend metric slots (the registry holds 3 today;
+/// extra slots are free — 64 B each — and keep registration lock-free).
+pub const MAX_BACKEND_SLOTS: usize = 8;
+
+/// Fixed number of per-shard-stripe metric slots; stripe `i` maps to slot
+/// `i % SHARD_SLOTS` (engines default to 16 stripes, a perfect fit).
+pub const SHARD_SLOTS: usize = 16;
+
+/// Per-backend reduction lifecycle counters (one slot per registered
+/// backend, cache-line aligned so backends don't false-share).
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct ReduceFamily {
+    /// `Reducer::ingest`/`ingest_decoded` calls.
+    pub ingest_calls: Counter,
+    /// Terms absorbed across ingest and one-shot reduce calls.
+    pub ingest_terms: Counter,
+    /// Partials absorbed (`Reducer::absorb`).
+    pub absorbs: Counter,
+    /// `Reducer::finish` resolutions.
+    pub finishes: Counter,
+    /// One-shot `BackendSel::reduce` calls (the plan fast path).
+    pub reduce_calls: Counter,
+}
+
+impl ReduceFamily {
+    pub const fn new() -> Self {
+        ReduceFamily {
+            ingest_calls: Counter::new(),
+            ingest_terms: Counter::new(),
+            absorbs: Counter::new(),
+            finishes: Counter::new(),
+            reduce_calls: Counter::new(),
+        }
+    }
+
+    fn reset(&self) {
+        self.ingest_calls.reset();
+        self.ingest_terms.reset();
+        self.absorbs.reset();
+        self.finishes.reset();
+        self.reduce_calls.reset();
+    }
+
+    /// True iff every counter in the slot is zero (slot never touched).
+    pub fn is_zero(&self) -> bool {
+        self.ingest_calls.get() == 0
+            && self.ingest_terms.get() == 0
+            && self.absorbs.get() == 0
+            && self.finishes.get() == 0
+            && self.reduce_calls.get() == 0
+    }
+}
+
+/// Plan-negotiation outcomes (`reduce::plan`), keyed by rationale.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct PlanFamily {
+    /// Every successfully built plan.
+    pub builds: Counter,
+    /// Explicit backend selections (`ReducePlan::with_backend`).
+    pub explicit: Counter,
+    /// Negotiated: exact spec → kernel.
+    pub negotiated_exact: Counter,
+    /// Negotiated: truncated spec → scalar reference fold.
+    pub negotiated_truncated: Counter,
+    /// Negotiated: order-invariance required → EIA.
+    pub negotiated_order_invariant: Counter,
+}
+
+impl PlanFamily {
+    pub const fn new() -> Self {
+        PlanFamily {
+            builds: Counter::new(),
+            explicit: Counter::new(),
+            negotiated_exact: Counter::new(),
+            negotiated_truncated: Counter::new(),
+            negotiated_order_invariant: Counter::new(),
+        }
+    }
+
+    fn reset(&self) {
+        self.builds.reset();
+        self.explicit.reset();
+        self.negotiated_exact.reset();
+        self.negotiated_truncated.reset();
+        self.negotiated_order_invariant.reset();
+    }
+}
+
+/// Exponent-indexed accumulator health (`accum/`).
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct AccumFamily {
+    /// Fast-lane `i64` → `i128` spill-lane promotions.
+    pub spills: Counter,
+    /// Values banked straight onto the wide lane (snapshot restores of
+    /// magnitudes an `i64` cannot hold).
+    pub wide_banks: Counter,
+    /// Reconcile-and-align drains.
+    pub drains: Counter,
+    /// Occupied bins reconciled across all drains.
+    pub drain_bins: Counter,
+    /// Drains whose aligned result carried a sticky bit.
+    pub drain_sticky: Counter,
+    /// Occupied-bin count per drain.
+    pub occupancy: ValueHistogram,
+}
+
+impl AccumFamily {
+    pub const fn new() -> Self {
+        AccumFamily {
+            spills: Counter::new(),
+            wide_banks: Counter::new(),
+            drains: Counter::new(),
+            drain_bins: Counter::new(),
+            drain_sticky: Counter::new(),
+            occupancy: ValueHistogram::new(),
+        }
+    }
+
+    fn reset(&self) {
+        self.spills.reset();
+        self.wide_banks.reset();
+        self.drains.reset();
+        self.drain_bins.reset();
+        self.drain_sticky.reset();
+        self.occupancy.reset();
+    }
+}
+
+/// SoA kernel path health (`arith::kernel`). Updated by one batched
+/// flush per reduce call, not per block — see the module docs.
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct KernelFamily {
+    /// Block-λ max sweeps (= blocks processed).
+    pub block_sweeps: Counter,
+    /// SoA lanes (terms) pushed through the kernel.
+    pub lanes: Counter,
+    /// Blocks taking the narrow `i128` accumulate path.
+    pub narrow_blocks: Counter,
+    /// Blocks taking the wide `WideInt` accumulate path.
+    pub wide_blocks: Counter,
+    /// Block partials that activated the sticky bit.
+    pub sticky_activations: Counter,
+}
+
+impl KernelFamily {
+    pub const fn new() -> Self {
+        KernelFamily {
+            block_sweeps: Counter::new(),
+            lanes: Counter::new(),
+            narrow_blocks: Counter::new(),
+            wide_blocks: Counter::new(),
+            sticky_activations: Counter::new(),
+        }
+    }
+
+    fn reset(&self) {
+        self.block_sweeps.reset();
+        self.lanes.reset();
+        self.narrow_blocks.reset();
+        self.wide_blocks.reset();
+        self.sticky_activations.reset();
+    }
+}
+
+/// Streaming tier health (`stream/`).
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct StreamFamily {
+    /// Batches accepted onto the ingest queue.
+    pub batches: Counter,
+    /// Terms accepted onto the ingest queue.
+    pub batch_terms: Counter,
+    /// Batches currently queued (accepted, not yet reduced).
+    pub queue_depth: Gauge,
+    /// Backend-agnostic `Partial`s merged into shard state.
+    pub partial_merges: Counter,
+    /// Checkpoint-codec bytes serialized (`Partial::to_bytes`).
+    pub codec_bytes_out: Counter,
+    /// Checkpoint-codec bytes parsed (`Partial::from_bytes`, valid only).
+    pub codec_bytes_in: Counter,
+    /// Segment merges per shard-stripe slot (stripe `i % SHARD_SLOTS`).
+    pub shard_merges: [Counter; SHARD_SLOTS],
+    /// Terms merged per shard-stripe slot.
+    pub shard_terms: [Counter; SHARD_SLOTS],
+}
+
+impl StreamFamily {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // array-init template
+        const C: Counter = Counter::new();
+        StreamFamily {
+            batches: Counter::new(),
+            batch_terms: Counter::new(),
+            queue_depth: Gauge::new(),
+            partial_merges: Counter::new(),
+            codec_bytes_out: Counter::new(),
+            codec_bytes_in: Counter::new(),
+            shard_merges: [C; SHARD_SLOTS],
+            shard_terms: [C; SHARD_SLOTS],
+        }
+    }
+
+    fn reset(&self) {
+        self.batches.reset();
+        self.batch_terms.reset();
+        self.queue_depth.reset();
+        self.partial_merges.reset();
+        self.codec_bytes_out.reset();
+        self.codec_bytes_in.reset();
+        for c in &self.shard_merges {
+            c.reset();
+        }
+        for c in &self.shard_terms {
+            c.reset();
+        }
+    }
+}
+
+/// Artifact-runtime reduction executor (`runtime::reduce`).
+#[repr(align(64))]
+#[derive(Debug, Default)]
+pub struct RuntimeFamily {
+    /// Batches executed by `OnlineReduceExe::run`.
+    pub batches: Counter,
+    /// Rows reduced across all batches.
+    pub rows: Counter,
+}
+
+impl RuntimeFamily {
+    pub const fn new() -> Self {
+        RuntimeFamily { batches: Counter::new(), rows: Counter::new() }
+    }
+
+    fn reset(&self) {
+        self.batches.reset();
+        self.rows.reset();
+    }
+}
+
+/// Every metric family plus the trace ring, behind one enabled gate.
+#[derive(Debug)]
+pub struct Telemetry {
+    enabled: AtomicBool,
+    slot_names: Mutex<[&'static str; MAX_BACKEND_SLOTS]>,
+    pub reduce: [ReduceFamily; MAX_BACKEND_SLOTS],
+    pub plan: PlanFamily,
+    pub accum: AccumFamily,
+    pub kernel: KernelFamily,
+    pub stream: StreamFamily,
+    pub runtime: RuntimeFamily,
+    pub trace: TraceRing,
+}
+
+impl Telemetry {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // array-init template
+        const RF: ReduceFamily = ReduceFamily::new();
+        Telemetry {
+            enabled: AtomicBool::new(true),
+            slot_names: Mutex::new([""; MAX_BACKEND_SLOTS]),
+            reduce: [RF; MAX_BACKEND_SLOTS],
+            plan: PlanFamily::new(),
+            accum: AccumFamily::new(),
+            kernel: KernelFamily::new(),
+            stream: StreamFamily::new(),
+            runtime: RuntimeFamily::new(),
+            trace: TraceRing::new(),
+        }
+    }
+
+    /// Master gate for metric recording. Instrumentation sites check this
+    /// once per operation; when false they skip every update.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The per-backend family for a registry slot (out-of-range indices
+    /// clamp to the last slot rather than panic on the hot path).
+    pub fn reduce_slot(&self, slot: usize) -> &ReduceFamily {
+        &self.reduce[slot.min(MAX_BACKEND_SLOTS - 1)]
+    }
+
+    /// Name a backend slot for snapshot labels (idempotent; called once
+    /// per backend by `reduce::registry`).
+    pub fn register_backend_slot(&self, slot: usize, name: &'static str) {
+        if slot < MAX_BACKEND_SLOTS {
+            self.slot_names()[slot] = name;
+        }
+    }
+
+    /// The registered backend name per slot (`""` = unregistered).
+    pub fn backend_slot_names(&self) -> [&'static str; MAX_BACKEND_SLOTS] {
+        *self.slot_names()
+    }
+
+    fn slot_names(&self) -> MutexGuard<'_, [&'static str; MAX_BACKEND_SLOTS]> {
+        self.slot_names.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// A deterministic point-in-time copy of every exported metric.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        super::snapshot::snapshot_of(self)
+    }
+
+    /// Zero every counter, gauge, histogram and the trace ring. Slot-name
+    /// registrations and both enabled gates survive. For tests/tools —
+    /// not safe to interleave with concurrent writers expecting exact
+    /// counts.
+    pub fn reset(&self) {
+        for fam in &self.reduce {
+            fam.reset();
+        }
+        self.plan.reset();
+        self.accum.reset();
+        self.kernel.reset();
+        self.stream.reset();
+        self.runtime.reset();
+        self.trace.reset();
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+/// The process-wide telemetry hub (const-initialized, always present).
+pub static TELEMETRY: Telemetry = Telemetry::new();
+
+/// The global hub — the handle every instrumentation site uses.
+pub fn global() -> &'static Telemetry {
+    &TELEMETRY
+}
+
+/// Shorthand for `global().enabled()`.
+pub fn enabled() -> bool {
+    TELEMETRY.enabled()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_hub_gates_and_resets() {
+        // A local (non-global) hub: tests of the global live in
+        // tests/telemetry.rs where they can serialize.
+        let t = Telemetry::new();
+        assert!(t.enabled());
+        t.stream.batches.add(3);
+        t.accum.occupancy.observe(4);
+        t.reduce_slot(1).ingest_calls.inc();
+        assert!(!t.reduce_slot(1).is_zero());
+        t.reset();
+        assert_eq!(t.stream.batches.get(), 0);
+        assert_eq!(t.accum.occupancy.count(), 0);
+        assert!(t.reduce_slot(1).is_zero());
+        t.set_enabled(false);
+        assert!(!t.enabled());
+    }
+
+    #[test]
+    fn slot_registration_is_bounded_and_idempotent() {
+        let t = Telemetry::new();
+        t.register_backend_slot(0, "scalar");
+        t.register_backend_slot(0, "scalar");
+        t.register_backend_slot(MAX_BACKEND_SLOTS + 5, "ignored");
+        let names = t.backend_slot_names();
+        assert_eq!(names[0], "scalar");
+        assert!(names[1..].iter().all(|n| n.is_empty()));
+        // Out-of-range slot access clamps instead of panicking.
+        t.reduce_slot(MAX_BACKEND_SLOTS + 5).ingest_calls.inc();
+        assert_eq!(t.reduce[MAX_BACKEND_SLOTS - 1].ingest_calls.get(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Point-in-time telemetry snapshots: a typed, ordered sample list that
+//! the exposition layer (text table, Prometheus, JSON) renders without
+//! touching live atomics.
+//!
+//! Determinism contract: with writers quiesced, two snapshots of the same
+//! hub are `==` — samples appear in fixed code order, backend slots in
+//! registry order, shard slots ascending, and only *labeled* slot samples
+//! with activity are emitted (unlabeled slots carry no information).
+
+use super::metrics::HistogramSnapshot;
+use super::registry::{Telemetry, MAX_BACKEND_SLOTS, SHARD_SLOTS};
+
+/// One exported metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(HistogramSnapshot),
+}
+
+/// One exported sample: a metric name (see DESIGN.md §Telemetry for the
+/// `ofa_<tier>_<name>` convention), its label set, and its value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricSample {
+    pub name: &'static str,
+    pub labels: Vec<(&'static str, String)>,
+    pub value: MetricValue,
+}
+
+/// An ordered snapshot of every exported metric.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    pub samples: Vec<MetricSample>,
+}
+
+impl TelemetrySnapshot {
+    pub fn push_counter(
+        &mut self,
+        name: &'static str,
+        labels: Vec<(&'static str, String)>,
+        v: u64,
+    ) {
+        self.samples.push(MetricSample { name, labels, value: MetricValue::Counter(v) });
+    }
+
+    pub fn push_gauge(&mut self, name: &'static str, labels: Vec<(&'static str, String)>, v: i64) {
+        self.samples.push(MetricSample { name, labels, value: MetricValue::Gauge(v) });
+    }
+
+    pub fn push_histogram(
+        &mut self,
+        name: &'static str,
+        labels: Vec<(&'static str, String)>,
+        h: HistogramSnapshot,
+    ) {
+        self.samples.push(MetricSample { name, labels, value: MetricValue::Histogram(h) });
+    }
+
+    /// First sample with this metric name.
+    pub fn get(&self, name: &str) -> Option<&MetricSample> {
+        self.samples.iter().find(|s| s.name == name)
+    }
+
+    /// Sum of every counter sample with this name, across all label sets.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name)
+            .map(|s| match s.value {
+                MetricValue::Counter(v) => v,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// The counter sample with this name carrying label `key="value"`.
+    pub fn counter_labeled(&self, name: &str, key: &str, value: &str) -> u64 {
+        self.samples
+            .iter()
+            .filter(|s| s.name == name && s.labels.iter().any(|(k, v)| *k == key && v == value))
+            .map(|s| match s.value {
+                MetricValue::Counter(v) => v,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Prometheus text exposition (see [`super::expose::prometheus`]).
+    pub fn to_prometheus(&self) -> String {
+        super::expose::prometheus(self)
+    }
+
+    /// JSON exposition (see [`super::expose::json`]).
+    pub fn to_json(&self) -> String {
+        super::expose::json(self)
+    }
+}
+
+fn label(key: &'static str, value: &str) -> Vec<(&'static str, String)> {
+    vec![(key, value.to_string())]
+}
+
+/// Build the canonical snapshot of a hub (used by `Telemetry::snapshot`).
+pub fn snapshot_of(t: &Telemetry) -> TelemetrySnapshot {
+    let mut out = TelemetrySnapshot::default();
+
+    // -- reduce: one counter set per *named* backend slot ----------------
+    let names = t.backend_slot_names();
+    for slot in 0..MAX_BACKEND_SLOTS {
+        let name = names[slot];
+        if name.is_empty() {
+            continue;
+        }
+        let fam = t.reduce_slot(slot);
+        out.push_counter("ofa_reduce_ingest_calls", label("backend", name), fam.ingest_calls.get());
+        out.push_counter("ofa_reduce_ingest_terms", label("backend", name), fam.ingest_terms.get());
+        out.push_counter("ofa_reduce_absorbs", label("backend", name), fam.absorbs.get());
+        out.push_counter("ofa_reduce_finishes", label("backend", name), fam.finishes.get());
+        out.push_counter("ofa_reduce_reduce_calls", label("backend", name), fam.reduce_calls.get());
+    }
+
+    // -- plan negotiation ------------------------------------------------
+    out.push_counter("ofa_plan_builds", vec![], t.plan.builds.get());
+    out.push_counter("ofa_plan_explicit", vec![], t.plan.explicit.get());
+    out.push_counter("ofa_plan_negotiated_exact", vec![], t.plan.negotiated_exact.get());
+    out.push_counter("ofa_plan_negotiated_truncated", vec![], t.plan.negotiated_truncated.get());
+    out.push_counter(
+        "ofa_plan_negotiated_order_invariant",
+        vec![],
+        t.plan.negotiated_order_invariant.get(),
+    );
+
+    // -- accum (EIA) numeric health --------------------------------------
+    out.push_counter("ofa_accum_spills", vec![], t.accum.spills.get());
+    out.push_counter("ofa_accum_wide_banks", vec![], t.accum.wide_banks.get());
+    out.push_counter("ofa_accum_drains", vec![], t.accum.drains.get());
+    out.push_counter("ofa_accum_drain_bins", vec![], t.accum.drain_bins.get());
+    out.push_counter("ofa_accum_drain_sticky", vec![], t.accum.drain_sticky.get());
+    out.push_histogram("ofa_accum_bin_occupancy", vec![], t.accum.occupancy.snapshot());
+
+    // -- kernel path health ----------------------------------------------
+    out.push_counter("ofa_kernel_block_sweeps", vec![], t.kernel.block_sweeps.get());
+    out.push_counter("ofa_kernel_lanes", vec![], t.kernel.lanes.get());
+    out.push_counter("ofa_kernel_narrow_blocks", vec![], t.kernel.narrow_blocks.get());
+    out.push_counter("ofa_kernel_wide_blocks", vec![], t.kernel.wide_blocks.get());
+    out.push_counter("ofa_kernel_sticky_activations", vec![], t.kernel.sticky_activations.get());
+
+    // -- streaming tier ---------------------------------------------------
+    out.push_counter("ofa_stream_batches", vec![], t.stream.batches.get());
+    out.push_counter("ofa_stream_batch_terms", vec![], t.stream.batch_terms.get());
+    out.push_gauge("ofa_stream_queue_depth", vec![], t.stream.queue_depth.get());
+    out.push_counter("ofa_stream_partial_merges", vec![], t.stream.partial_merges.get());
+    out.push_counter("ofa_stream_codec_bytes_out", vec![], t.stream.codec_bytes_out.get());
+    out.push_counter("ofa_stream_codec_bytes_in", vec![], t.stream.codec_bytes_in.get());
+    for slot in 0..SHARD_SLOTS {
+        let (merges, terms) = (t.stream.shard_merges[slot].get(), t.stream.shard_terms[slot].get());
+        if merges == 0 && terms == 0 {
+            continue; // untouched stripes carry no information
+        }
+        let shard = slot.to_string();
+        out.push_counter("ofa_stream_shard_merges", label("shard", &shard), merges);
+        out.push_counter("ofa_stream_shard_terms", label("shard", &shard), terms);
+    }
+
+    // -- runtime executor -------------------------------------------------
+    out.push_counter("ofa_runtime_batches", vec![], t.runtime.batches.get());
+    out.push_counter("ofa_runtime_rows", vec![], t.runtime.rows.get());
+
+    // -- tracing ----------------------------------------------------------
+    out.push_counter("ofa_trace_events", vec![], t.trace.total());
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshots_of_a_quiesced_hub_are_equal_and_queryable() {
+        let t = Telemetry::new();
+        t.register_backend_slot(0, "scalar");
+        t.reduce_slot(0).ingest_terms.add(64);
+        t.stream.shard_merges[3].inc();
+        t.stream.shard_terms[3].add(9);
+        t.accum.occupancy.observe(5);
+        let (a, b) = (snapshot_of(&t), snapshot_of(&t));
+        assert_eq!(a, b);
+        assert_eq!(a.counter_labeled("ofa_reduce_ingest_terms", "backend", "scalar"), 64);
+        assert_eq!(a.counter_labeled("ofa_stream_shard_merges", "shard", "3"), 1);
+        assert_eq!(a.counter("ofa_stream_shard_terms"), 9);
+        // Untouched stripes are not emitted; registered-but-idle backend
+        // samples are (they are part of the stable surface).
+        assert!(!a.samples.iter().any(|s| s.labels.contains(&("shard", "0".to_string()))));
+        assert_eq!(a.counter_labeled("ofa_reduce_absorbs", "backend", "scalar"), 0);
+        match &a.get("ofa_accum_bin_occupancy").unwrap().value {
+            MetricValue::Histogram(h) => assert_eq!((h.count, h.sum), (1, 5)),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+}

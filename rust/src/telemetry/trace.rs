@@ -1,0 +1,186 @@
+//! Structured span/event tracing: a fixed-capacity ring buffer of
+//! numeric-health events, dumped on demand.
+//!
+//! Tracing is **off by default** and independently gated from the metric
+//! counters: when disabled, [`TraceRing::record`] is one relaxed load and
+//! an early return, so hot paths can call it unconditionally. When
+//! enabled, each record takes the ring's mutex briefly — tracing is a
+//! diagnostic mode, not a production-hot-path mode, and the capacity
+//! bound keeps memory flat no matter how long the process runs.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Ring capacity: old events are overwritten once this many are live.
+pub const TRACE_CAPACITY: usize = 1024;
+
+/// One numeric-health event on the reduction path. Payloads are small
+/// `Copy` scalars — recording never allocates beyond the ring slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A `ReducePlan` was built: which backend won and why.
+    PlanNegotiated { backend: &'static str, rationale: &'static str },
+    /// A sequence-numbered segment reached an assembler (`parked` =
+    /// buffered waiting for a predecessor under a truncated spec).
+    SegmentOffered { seq: u64, parked: bool },
+    /// An assembler merged segment `seq` into its running state.
+    SegmentMerged { seq: u64 },
+    /// A stream-engine worker reduced one ingest batch.
+    BatchReduced { terms: u64, segments: u64 },
+    /// An accumulator bin's fast `i64` lane promoted into the `i128`
+    /// spill lane (bin index within the accumulator's window).
+    SpillPromoted { bin: usize },
+    /// An EIA drain reconciled `bins` occupied bins; `sticky` reports
+    /// whether alignment dropped any bits.
+    DrainReconciled { bins: u64, sticky: bool },
+    /// A stream was drained from the shard map with this many terms.
+    StreamDrained { terms: u64 },
+}
+
+impl fmt::Display for TraceEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            TraceEvent::PlanNegotiated { backend, rationale } => {
+                write!(f, "plan-negotiated backend={backend} rationale={rationale:?}")
+            }
+            TraceEvent::SegmentOffered { seq, parked } => {
+                write!(f, "segment-offered seq={seq} parked={parked}")
+            }
+            TraceEvent::SegmentMerged { seq } => write!(f, "segment-merged seq={seq}"),
+            TraceEvent::BatchReduced { terms, segments } => {
+                write!(f, "batch-reduced terms={terms} segments={segments}")
+            }
+            TraceEvent::SpillPromoted { bin } => write!(f, "spill-promoted bin={bin}"),
+            TraceEvent::DrainReconciled { bins, sticky } => {
+                write!(f, "drain-reconciled bins={bins} sticky={sticky}")
+            }
+            TraceEvent::StreamDrained { terms } => write!(f, "stream-drained terms={terms}"),
+        }
+    }
+}
+
+/// A recorded event with its global sequence number (records only — the
+/// sequence does not advance while tracing is disabled).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub seq: u64,
+    pub event: TraceEvent,
+}
+
+impl fmt::Display for SpanRecord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{:<6} {}", self.seq, self.event)
+    }
+}
+
+/// Poison-tolerant lock: a panicked recorder must not kill tracing.
+fn lock(ring: &Mutex<Vec<SpanRecord>>) -> MutexGuard<'_, Vec<SpanRecord>> {
+    ring.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Fixed-capacity event ring, const-constructible for `static` use.
+#[derive(Debug)]
+pub struct TraceRing {
+    enabled: AtomicBool,
+    seq: AtomicU64,
+    ring: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceRing {
+    pub const fn new() -> Self {
+        TraceRing {
+            enabled: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Record one event (no-op unless tracing is enabled). Events past
+    /// capacity overwrite the oldest slots.
+    pub fn record(&self, event: TraceEvent) {
+        if !self.enabled() {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let rec = SpanRecord { seq, event };
+        let mut ring = lock(&self.ring);
+        if ring.len() < TRACE_CAPACITY {
+            ring.push(rec);
+        } else {
+            ring[(seq as usize) % TRACE_CAPACITY] = rec;
+        }
+    }
+
+    /// Total events ever recorded (including any overwritten in the ring).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Copy out the live records in sequence order.
+    pub fn dump(&self) -> Vec<SpanRecord> {
+        let mut out = lock(&self.ring).clone();
+        out.sort_by_key(|r| r.seq);
+        out
+    }
+
+    /// Drop all records and restart the sequence (leaves `enabled` as-is).
+    pub fn reset(&self) {
+        lock(&self.ring).clear();
+        self.seq.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        TraceRing::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let ring = TraceRing::new();
+        ring.record(TraceEvent::SegmentMerged { seq: 0 });
+        assert_eq!(ring.total(), 0);
+        assert!(ring.dump().is_empty());
+    }
+
+    #[test]
+    fn ring_keeps_sequence_order_and_caps_memory() {
+        let ring = TraceRing::new();
+        ring.set_enabled(true);
+        for i in 0..(TRACE_CAPACITY as u64 + 10) {
+            ring.record(TraceEvent::SegmentMerged { seq: i });
+        }
+        assert_eq!(ring.total(), TRACE_CAPACITY as u64 + 10);
+        let dump = ring.dump();
+        assert_eq!(dump.len(), TRACE_CAPACITY);
+        // Oldest 10 overwritten; the rest survive in ascending order.
+        assert_eq!(dump[0].seq, 10);
+        assert!(dump.windows(2).all(|w| w[0].seq < w[1].seq));
+        ring.reset();
+        assert_eq!(ring.total(), 0);
+        assert!(ring.dump().is_empty());
+    }
+
+    #[test]
+    fn events_render_for_dumps() {
+        let e = TraceEvent::DrainReconciled { bins: 3, sticky: true };
+        assert_eq!(e.to_string(), "drain-reconciled bins=3 sticky=true");
+        let r = SpanRecord { seq: 7, event: TraceEvent::SpillPromoted { bin: 12 } };
+        assert!(r.to_string().contains("#7"));
+        assert!(r.to_string().contains("spill-promoted bin=12"));
+    }
+}

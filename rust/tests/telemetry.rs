@@ -1,0 +1,315 @@
+//! Telemetry-tier integration battery (DESIGN.md §Telemetry).
+//!
+//! Two kinds of tests live here:
+//!
+//! * **Primitive/local-hub tests** — concurrency exactness of the lock-free
+//!   cells, histogram quantile bracketing, and snapshot/exposition golden
+//!   output against a *local* [`Telemetry`] hub. These touch no shared
+//!   state and run freely in parallel.
+//! * **Global-hub tests** — numeric-health counters (kernel sticky/narrow
+//!   paths, EIA drains, spill promotions) asserted as **exact deltas**
+//!   against the process-wide hub. The instrumented code paths only ever
+//!   write to [`telemetry::global`], so these serialize on one mutex; all
+//!   assertions are before/after differences, never absolute values, so
+//!   they stay correct regardless of what ran earlier in the process.
+
+use online_fp_add::accum::{EiaSnapshot, ExpBins};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, BF16};
+use online_fp_add::reduce::{registry, Partial, ReducePlan, Reducer};
+use online_fp_add::stream::StreamService;
+use online_fp_add::telemetry::{self, Counter, Gauge, MetricValue, Telemetry, ValueHistogram};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::thread;
+
+/// Serializes every test that reads or writes the global hub. A poisoned
+/// lock (a failed sibling) must not cascade — the guard is all we need.
+static GLOBAL_HUB: Mutex<()> = Mutex::new(());
+
+fn hub_lock() -> MutexGuard<'static, ()> {
+    GLOBAL_HUB.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The sticky probe pair: 2^20 against 1.0 in BF16 under a 2-bit guard
+/// drops the small term's bits into sticky on every backend (the same
+/// fixture `accum::drain`'s unit tests pin bit-for-bit).
+fn sticky_pair() -> [Fp; 2] {
+    [Fp::from_f64(1048576.0, BF16), Fp::from_f64(1.0, BF16)]
+}
+
+/// The registered telemetry slot of a backend, after instrumentation has
+/// initialized the registry's slot names (building any reducer does).
+fn backend_slot(name: &str) -> usize {
+    telemetry::global()
+        .backend_slot_names()
+        .iter()
+        .position(|n| *n == name)
+        .unwrap_or_else(|| panic!("backend slot {name:?} not registered"))
+}
+
+#[test]
+fn concurrent_counter_and_gauge_updates_are_exact() {
+    // The metrics contract is exactness, not sampling: N threads hammering
+    // one counter must land every single update. 8 threads × 10k rounds of
+    // (inc + add 2) = 240k, reconstructed without loss.
+    let c = Counter::new();
+    let g = Gauge::new();
+    thread::scope(|s| {
+        for worker in 0..8 {
+            s.spawn(|| {
+                for _ in 0..10_000 {
+                    c.inc();
+                    c.add(2);
+                }
+            });
+            // Half the workers push the gauge up, half pull it down by the
+            // same total — concurrent inc/dec must cancel to exactly zero.
+            if worker % 2 == 0 {
+                s.spawn(|| {
+                    for _ in 0..2_000 {
+                        g.add(5);
+                    }
+                });
+            } else {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        g.dec();
+                    }
+                });
+            }
+        }
+    });
+    assert_eq!(c.get(), 8 * 10_000 * 3);
+    assert_eq!(g.get(), 0);
+    c.reset();
+    g.set(-7);
+    assert_eq!((c.get(), g.get()), (0, -7));
+}
+
+#[test]
+fn histogram_quantiles_bracket_the_true_order_statistic() {
+    // Log2 buckets quantize upward: for a true quantile value v in
+    // [2^i, 2^(i+1)), quantile() reports the bucket upper bound 2^(i+1),
+    // so the estimate is strictly above v and at most 2v. Feed the exact
+    // population 1..=1000 and check the bracket at several ranks.
+    let h = ValueHistogram::new();
+    for v in 1..=1000u64 {
+        h.observe(v);
+    }
+    assert_eq!(h.count(), 1000);
+    assert_eq!(h.sum(), 500_500);
+    assert_eq!(h.min(), 1);
+    assert_eq!(h.max(), 1000);
+    assert!((h.mean() - 500.5).abs() < 1e-9);
+    for q in [0.01, 0.25, 0.5, 0.9, 0.99, 1.0] {
+        let true_v = (1000.0 * q).ceil() as u64; // rank k ⇒ value k here
+        let est = h.quantile(q);
+        assert!(
+            true_v < est && est <= 2 * true_v,
+            "q={q}: estimate {est} outside ({true_v}, {}]",
+            2 * true_v
+        );
+    }
+    // Concretely: the median (500) lives in [256, 512) ⇒ 512 reported.
+    assert_eq!(h.quantile(0.5), 512);
+    h.reset();
+    assert_eq!((h.count(), h.min(), h.max()), (0, 0, 0));
+    assert_eq!(h.quantile(0.5), 0, "empty histograms report 0");
+}
+
+#[test]
+fn local_hub_snapshots_are_deterministic_and_exposition_is_golden() {
+    // A local hub with known traffic: snapshots must be equal (the
+    // determinism contract) and both expositions must render the exact
+    // documented shapes — labeled counters with `_total`, bare gauges,
+    // cumulative histogram buckets.
+    let t = Telemetry::new();
+    t.register_backend_slot(0, "scalar");
+    t.register_backend_slot(1, "kernel");
+    t.reduce_slot(0).ingest_terms.add(64);
+    t.reduce_slot(0).reduce_calls.inc();
+    t.plan.builds.add(2);
+    t.accum.occupancy.observe(5);
+    t.kernel.lanes.add(7);
+    t.stream.queue_depth.set(2);
+    t.stream.shard_merges[3].inc();
+    t.stream.shard_terms[3].add(9);
+
+    let (a, b) = (t.snapshot(), t.snapshot());
+    assert_eq!(a, b);
+    assert_eq!(a.counter_labeled("ofa_reduce_ingest_terms", "backend", "scalar"), 64);
+    assert_eq!(a.counter("ofa_reduce_ingest_terms"), 64);
+    match &a.get("ofa_accum_bin_occupancy").expect("histogram sample").value {
+        MetricValue::Histogram(h) => assert_eq!((h.count, h.sum, h.min, h.max), (1, 5, 5, 5)),
+        other => panic!("expected a histogram, got {other:?}"),
+    }
+
+    let prom = a.to_prometheus();
+    assert_eq!(prom, b.to_prometheus());
+    assert!(prom.contains("# TYPE ofa_reduce_ingest_terms counter"), "{prom}");
+    assert!(prom.contains("ofa_reduce_ingest_terms_total{backend=\"scalar\"} 64"), "{prom}");
+    // Registered-but-idle slots are part of the stable surface…
+    assert!(prom.contains("ofa_reduce_ingest_terms_total{backend=\"kernel\"} 0"), "{prom}");
+    // …while unregistered slots and untouched shard stripes are absent.
+    assert!(!prom.contains("backend=\"\""), "{prom}");
+    assert!(!prom.contains("shard=\"0\""), "{prom}");
+    assert!(prom.contains("ofa_plan_builds_total 2"), "{prom}");
+    assert!(prom.contains("ofa_kernel_lanes_total 7"), "{prom}");
+    assert!(prom.contains("# TYPE ofa_stream_queue_depth gauge"), "{prom}");
+    assert!(prom.contains("ofa_stream_queue_depth 2"), "{prom}");
+    assert!(prom.contains("ofa_stream_shard_merges_total{shard=\"3\"} 1"), "{prom}");
+    assert!(prom.contains("ofa_stream_shard_terms_total{shard=\"3\"} 9"), "{prom}");
+    // observe(5) lands in bucket [4, 8) ⇒ cumulative le="8" carries it.
+    assert!(prom.contains("ofa_accum_bin_occupancy_bucket{le=\"8\"} 1"), "{prom}");
+    assert!(prom.contains("ofa_accum_bin_occupancy_bucket{le=\"+Inf\"} 1"), "{prom}");
+    assert!(prom.contains("ofa_accum_bin_occupancy_sum 5"), "{prom}");
+    assert!(prom.contains("ofa_accum_bin_occupancy_count 1"), "{prom}");
+
+    let js = a.to_json();
+    assert_eq!(js, b.to_json());
+    assert!(js.contains("\"name\":\"ofa_reduce_ingest_terms\""), "{js}");
+    assert!(js.contains("\"labels\":{\"backend\":\"scalar\"}"), "{js}");
+    assert!(js.contains("\"labels\":{\"shard\":\"3\"}"), "{js}");
+    for (open, close) in [('{', '}'), ('[', ']')] {
+        let n_open = js.chars().filter(|&c| c == open).count();
+        let n_close = js.chars().filter(|&c| c == close).count();
+        assert_eq!(n_open, n_close, "unbalanced {open}{close} in {js}");
+    }
+}
+
+#[test]
+fn kernel_health_counters_are_exactly_predicted() {
+    let _hub = hub_lock();
+    let t = telemetry::global();
+    // truncated(2) is a narrow frame (f + sig + headroom fits i128), so
+    // one 2-term reduce is exactly one narrow block sweep over two lanes,
+    // and the dropped small term activates sticky on that one block.
+    let spec = AccSpec::truncated(2);
+    let plan = ReducePlan::with_backend(spec, registry::sel("kernel").expect("registered"));
+    let _warm = plan.reducer(); // forces backend-slot registration
+    let fam = t.reduce_slot(backend_slot("kernel"));
+    let k = &t.kernel;
+    let before = (
+        k.block_sweeps.get(),
+        k.lanes.get(),
+        k.narrow_blocks.get(),
+        k.wide_blocks.get(),
+        k.sticky_activations.get(),
+        fam.reduce_calls.get(),
+        fam.ingest_terms.get(),
+    );
+    let out = plan.reduce(&sticky_pair());
+    assert!(out.sticky, "the probe pair must drop bits");
+    assert_eq!(k.block_sweeps.get() - before.0, 1, "one block sweep");
+    assert_eq!(k.lanes.get() - before.1, 2, "two SoA lanes");
+    assert_eq!(k.narrow_blocks.get() - before.2, 1, "narrow i128 path");
+    assert_eq!(k.wide_blocks.get() - before.3, 0, "wide path untouched");
+    assert_eq!(k.sticky_activations.get() - before.4, 1, "one sticky block");
+    assert_eq!(fam.reduce_calls.get() - before.5, 1);
+    assert_eq!(fam.ingest_terms.get() - before.6, 2);
+}
+
+#[test]
+fn eia_drain_health_counters_are_exactly_predicted() {
+    let _hub = hub_lock();
+    let t = telemetry::global();
+    let spec = AccSpec::truncated(2);
+    // Order-invariance under a truncated spec negotiates to the EIA; the
+    // build itself must land in exactly one plan-rationale bucket.
+    let p = &t.plan;
+    let before_builds = p.builds.get();
+    let before_oi = p.negotiated_order_invariant.get();
+    let plan = ReducePlan::builder(spec)
+        .require_order_invariant()
+        .build()
+        .expect("eia satisfies order-invariance");
+    assert_eq!(plan.backend().name(), "eia");
+    assert_eq!(p.builds.get() - before_builds, 1);
+    assert_eq!(p.negotiated_order_invariant.get() - before_oi, 1);
+    // One reduce = one drain reconciling both occupied bins (the two terms
+    // bank at distinct effective exponents), with sticky from the dropped
+    // small term; the occupancy histogram sees exactly one observation.
+    let a = &t.accum;
+    let before = (a.drains.get(), a.drain_bins.get(), a.drain_sticky.get(), a.occupancy.count());
+    let out = plan.reduce(&sticky_pair());
+    assert!(out.sticky, "the probe pair must drop bits");
+    assert_eq!(a.drains.get() - before.0, 1, "one reconcile-and-align drain");
+    assert_eq!(a.drain_bins.get() - before.1, 2, "two occupied bins swept");
+    assert_eq!(a.drain_sticky.get() - before.2, 1, "the drain carried sticky");
+    assert_eq!(a.occupancy.count() - before.3, 1, "one occupancy observation");
+}
+
+#[test]
+fn spill_and_wide_bank_promotions_count_exactly() {
+    let _hub = hub_lock();
+    let t = telemetry::global();
+    let a = &t.accum;
+
+    // Storage layer, driven directly: two banks of 2^61 + 1 stay on the
+    // fast i64 lane individually but cross the 2^62 spill threshold on the
+    // second add — exactly one promotion. A value an i64 cannot hold banks
+    // straight onto the wide lane — exactly one wide bank.
+    let before = (a.spills.get(), a.wide_banks.get());
+    let mut bins = ExpBins::new();
+    let step = (1i128 << 61) + 1;
+    bins.bank_wide(3, step);
+    assert_eq!(a.spills.get() - before.0, 0, "first bank stays on the fast lane");
+    bins.bank_wide(3, step);
+    assert_eq!(a.spills.get() - before.0, 1, "second bank promotes exactly once");
+    assert_eq!(a.wide_banks.get() - before.1, 0, "fast-lane traffic never banks wide");
+    bins.bank_wide(5, 1i128 << 70);
+    assert_eq!(a.wide_banks.get() - before.1, 1, "i64-overflowing value banks wide");
+    assert_eq!(bins.value(3), 2 * step, "the promotion loses no bits");
+    assert_eq!(bins.value(5), 1i128 << 70);
+
+    // Backend route: absorbing the same deferred peer checkpoint twice
+    // accumulates its bin onto the reducer's fast lane, crossing the
+    // threshold inside the second merge — the spill counter must move by
+    // exactly one, and both absorbs land on the eia lifecycle slot.
+    let plan = ReducePlan::with_backend(AccSpec::truncated(2), registry::sel("eia").expect("eia"));
+    let mut r = plan.reducer();
+    let fam = t.reduce_slot(backend_slot("eia"));
+    let snap = || EiaSnapshot { max_lambda: 80, terms: 2, bins: vec![(60, step)] };
+    let before = (a.spills.get(), a.wide_banks.get(), fam.absorbs.get());
+    r.absorb(&Partial::deferred(snap()));
+    r.absorb(&Partial::deferred(snap()));
+    assert_eq!(a.spills.get() - before.0, 1, "the second absorb crosses 2^62");
+    assert_eq!(a.wide_banks.get() - before.1, 0);
+    assert_eq!(fam.absorbs.get() - before.2, 2);
+    assert_eq!(r.terms(), 4, "checkpoint term counts accumulate");
+}
+
+#[test]
+fn stream_service_exposition_carries_format_and_shard_labels() {
+    let _hub = hub_lock();
+    // The one test allowed to reset the hub: service-level Prometheus
+    // output is goldened on absolute values, and the lock guarantees no
+    // concurrent writer (every instrumented path in this binary runs under
+    // the same mutex).
+    telemetry::global().reset();
+    let svc = StreamService::exact(BF16);
+    let terms: Vec<Fp> = (0..5).map(|i| Fp::from_f64(i as f64 + 0.5, BF16)).collect();
+    svc.ingest("telemetry-labels", terms).expect("queue accepts one batch");
+    let drained = svc.drain("telemetry-labels");
+    assert!(drained.is_some(), "the ingested stream must exist");
+
+    let snap = svc.telemetry_snapshot();
+    assert_eq!(snap.counter_labeled("ofa_service_batches", "format", "BF16"), 1);
+    assert_eq!(snap.counter_labeled("ofa_service_ingested_terms", "format", "BF16"), 5);
+    assert_eq!(snap.counter_labeled("ofa_service_drains", "format", "BF16"), 1);
+    // The engine negotiated the kernel backend (exact spec); its slot saw
+    // at least the five ingested terms (merge traffic may add more).
+    assert!(snap.counter_labeled("ofa_reduce_ingest_terms", "backend", "kernel") >= 5);
+
+    let prom = svc.stats_prometheus();
+    assert!(prom.contains("ofa_service_batches_total{format=\"BF16\"} 1"), "{prom}");
+    assert!(prom.contains("ofa_service_ingested_terms_total{format=\"BF16\"} 5"), "{prom}");
+    assert!(prom.contains("ofa_stream_batches_total 1"), "{prom}");
+    assert!(prom.contains("ofa_stream_batch_terms_total 5"), "{prom}");
+    // Drain quiesces the queue before reporting, so the gauge settles.
+    assert!(prom.contains("ofa_stream_queue_depth 0"), "{prom}");
+    // The segment merged into some shard stripe; which one is a hash
+    // detail, but the labeled series must exist.
+    assert!(prom.contains("shard=\""), "{prom}");
+    assert!(svc.stats_json().contains("\"ofa_service_ingested_terms\""));
+}
