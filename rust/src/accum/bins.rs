@@ -18,6 +18,11 @@
 //! allocated lazily — an accumulator that never spills carries only the
 //! `i64` lanes.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
+use crate::arith::SIG_BOUND_BITS;
 use crate::telemetry::{self, TraceEvent};
 
 /// Number of exponent bins: covers every paper format's effective-exponent
@@ -26,10 +31,16 @@ use crate::telemetry::{self, TraceEvent};
 /// untouched.
 pub const MAX_BINS: usize = 256;
 
+/// log2 of the fast-lane spill threshold — published so the `analysis`
+/// tier can prove the no-overflow obligation (`eia-fast-lane`): a lane at
+/// `SPILL_LIMIT − 1` plus one `< 2^SIG_BOUND_BITS` ingest needs
+/// `max(62, 25) + 2 = 64` bits, exactly an `i64`.
+pub const SPILL_LIMIT_LOG2: u32 = 62;
+
 /// Fast-lane spill threshold: once `|lo|` reaches this, the lane is folded
 /// into the wide lane. Leaves 2^25 of headroom below `i64::MAX`, so a
 /// single post-threshold ingest can never overflow the fast lane.
-const SPILL_LIMIT: u64 = 1 << 62;
+const SPILL_LIMIT: u64 = 1 << SPILL_LIMIT_LOG2;
 
 /// Per-exponent-bin carry-save storage (see the module docs).
 #[derive(Clone, Debug)]
@@ -63,7 +74,10 @@ impl ExpBins {
             "effective exponent {e} outside the bin range"
         );
         debug_assert!(sig != 0, "zero significands never reach a bin");
-        debug_assert!(sig.unsigned_abs() < (1 << 25), "significand wider than any paper format");
+        debug_assert!(
+            sig.unsigned_abs() < (1 << SIG_BOUND_BITS),
+            "significand wider than any paper format"
+        );
         let slot = &mut self.lo[e as usize];
         // |lo| < SPILL_LIMIT and |sig| < 2^25, so this add cannot overflow.
         *slot += sig;

@@ -25,6 +25,10 @@
 //! its dropped-bit pattern is the "defer everything" parenthesisation,
 //! deliberately distinct from the radix-2 fold's.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::eia::Eia;
 use crate::arith::operator::AlignAcc;
 use crate::arith::{AccSpec, WideInt};
@@ -116,6 +120,7 @@ pub(crate) fn drain_parts(
     AlignAcc { lambda, acc, sticky }
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::*;

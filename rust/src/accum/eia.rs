@@ -10,6 +10,10 @@
 //! all and a state that merges associatively across shards
 //! ([`crate::accum::merge::EiaSnapshot`]).
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::bins::ExpBins;
 use super::drain;
 use super::merge::EiaSnapshot;
@@ -130,6 +134,7 @@ pub fn reduce_terms_eia(terms: &[Fp], spec: AccSpec) -> AlignAcc {
     eia.drain(spec)
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,6 +14,10 @@
 //! [`crate::reduce::Partial`] codec consumed by
 //! `stream::shard::ShardMap::merge_partial`.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::drain::drain_parts;
 use super::eia::Eia;
 use crate::arith::operator::AlignAcc;
@@ -191,6 +195,7 @@ pub fn snapshot_terms(terms: &[crate::formats::Fp]) -> EiaSnapshot {
     eia.snapshot()
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -42,6 +42,6 @@ pub mod drain;
 pub mod eia;
 pub mod merge;
 
-pub use bins::{ExpBins, MAX_BINS};
+pub use bins::{ExpBins, MAX_BINS, SPILL_LIMIT_LOG2};
 pub use eia::{reduce_terms_eia, Eia};
 pub use merge::EiaSnapshot;

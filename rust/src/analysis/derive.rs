@@ -1,0 +1,452 @@
+//! Per-(format × backend) width derivations: the obligation generator.
+//!
+//! [`StorageEnv`] captures every storage width the datapath actually uses
+//! — normally read straight off the real constants
+//! ([`StorageEnv::actual`]), or perturbed by a named fault
+//! ([`StorageEnv::with_fault`]) so CI can prove the gate *can* fail.
+//! [`derive_obligations`] then walks every paper format and every
+//! registered backend and emits one [`Obligation`] per intermediate whose
+//! width the exactness argument depends on: `required_bits` is the bound
+//! the abstract interpretation ([`super::domain`]) derives, and
+//! `provided_bits` is what the implementation provisions. An obligation
+//! passes iff `required ≤ provided`.
+//!
+//! All derivations are taken at the analyzer's proof ceiling of
+//! `2^PROVED_TERMS_LOG2` terms per accumulator (far above any in-tree
+//! workload; the runtime cross-check in [`super`] keeps it honest) and
+//! under the exact [`AccSpec`] of each format — the widest frame the
+//! datapath ever runs.
+
+use super::domain::{clog2, MagBits};
+use crate::accum::{MAX_BINS, SPILL_LIMIT_LOG2};
+use crate::arith::{wide, AccSpec, PROVED_TERMS_LOG2, SIG_BOUND_BITS};
+use crate::formats::FpFormat;
+use crate::hw::datapath::DatapathParams;
+use crate::reduce::registry;
+
+/// The kernel's narrow-path alignment-shift clamp
+/// (`(lambda - e).clamp(0, 127)` in `arith::kernel::block_state`).
+const SHIFT_CLAMP: u32 = 127;
+
+/// Every storage width the obligations are checked against. One struct so
+/// a seeded fault can narrow any single width without touching the
+/// derivations themselves.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct StorageEnv {
+    /// `WideInt` width ([`wide::WIDE_BITS`]).
+    pub wide_bits: u32,
+    /// Narrow fast-path lane width (`i128`).
+    pub narrow_bits: u32,
+    /// Exponent bins in the EIA store ([`MAX_BINS`]).
+    pub max_bins: u32,
+    /// log2 of the EIA fast-lane spill threshold ([`SPILL_LIMIT_LOG2`]).
+    pub spill_limit_log2: u32,
+    /// Per-term significand magnitude bound ([`SIG_BOUND_BITS`]).
+    pub sig_bound_bits: u32,
+    /// Kernel narrow-path alignment-shift clamp.
+    pub shift_clamp: u32,
+}
+
+impl StorageEnv {
+    /// The widths the shipped implementation actually uses.
+    pub fn actual() -> Self {
+        StorageEnv {
+            wide_bits: wide::WIDE_BITS as u32,
+            narrow_bits: 128,
+            max_bins: MAX_BINS as u32,
+            spill_limit_log2: SPILL_LIMIT_LOG2,
+            sig_bound_bits: SIG_BOUND_BITS,
+            shift_clamp: SHIFT_CLAMP,
+        }
+    }
+
+    /// The actual environment with one named width narrowed (or, for the
+    /// spill threshold, raised) past its proved bound — CI seeds each of
+    /// these to demonstrate the gate fails loudly.
+    pub fn with_fault(name: &str) -> Result<Self, String> {
+        let mut env = StorageEnv::actual();
+        match name {
+            // Too few exponent bins for the 8-bit-exponent formats.
+            "eia-bins" => env.max_bins = 64,
+            // Narrow fast path squeezed to an i64: e6m1's exact frame
+            // (2 + 63 + 16 = 81 value bits) no longer fits.
+            "narrow-i128" => env.narrow_bits = 64,
+            // WideInt cut to three limbs: FP32's exact window overflows.
+            "wide-acc" => env.wide_bits = 192,
+            // Spill threshold raised by one: a post-threshold ingest now
+            // needs 65 bits — one more than the i64 fast lane has.
+            "spill-threshold" => env.spill_limit_log2 = 63,
+            // Shift clamp below e6m1's live magnitude span (2 + 63 = 65).
+            "shift-clamp" => env.shift_clamp = 63,
+            other => {
+                return Err(format!(
+                    "unknown fault {other:?} (known: {})",
+                    Self::fault_names().join(", ")
+                ))
+            }
+        }
+        Ok(env)
+    }
+
+    /// Every fault name [`Self::with_fault`] accepts.
+    pub fn fault_names() -> Vec<&'static str> {
+        vec!["eia-bins", "narrow-i128", "wide-acc", "spill-threshold", "shift-clamp"]
+    }
+}
+
+/// One statically checked width bound: an intermediate's derived
+/// requirement against the storage the implementation provisions.
+#[derive(Clone, Debug)]
+pub struct Obligation {
+    /// Stable obligation identifier (see DESIGN.md §Analysis for the
+    /// catalogue).
+    pub id: &'static str,
+    /// Format name (`FpFormat::name`).
+    pub format: String,
+    /// Registry backend name, or `"-"` for format-level obligations.
+    pub backend: String,
+    /// Bits the abstract interpretation proves the intermediate needs.
+    pub required_bits: u32,
+    /// Bits the implementation provisions for it.
+    pub provided_bits: u32,
+    /// One-line human explanation of what is being bounded.
+    pub detail: String,
+}
+
+impl Obligation {
+    pub fn pass(&self) -> bool {
+        self.required_bits <= self.provided_bits
+    }
+
+    /// Spare bits (negative on failure).
+    pub fn margin(&self) -> i64 {
+        self.provided_bits as i64 - self.required_bits as i64
+    }
+}
+
+fn ob(
+    id: &'static str,
+    fmt: FpFormat,
+    backend: &str,
+    required_bits: u32,
+    provided_bits: u32,
+    detail: String,
+) -> Obligation {
+    Obligation {
+        id,
+        format: fmt.name.to_string(),
+        backend: backend.to_string(),
+        required_bits,
+        provided_bits,
+        detail,
+    }
+}
+
+/// The storage lane a spec accumulates in, as the environment sizes it.
+fn storage_bits(env: &StorageEnv, spec: AccSpec) -> u32 {
+    if spec.narrow {
+        env.narrow_bits
+    } else {
+        env.wide_bits
+    }
+}
+
+/// Signed accumulator bits after summing `2^terms_log2` aligned terms of
+/// `fmt` in a frame with `f` guard bits: term → lift → sum → sign.
+fn acc_bits(fmt: FpFormat, f: u32, terms_log2: u32) -> u32 {
+    MagBits::term(fmt.sig_bits()).shl(f).sum(terms_log2).signed_bits()
+}
+
+/// Derive the full obligation list for every paper format × every
+/// registered backend, in a fixed deterministic order (format outer,
+/// format-level obligations first, then backends in registry order).
+pub fn derive_obligations(env: &StorageEnv) -> Vec<Obligation> {
+    let mut out = Vec::new();
+    for fmt in crate::formats::PAPER_FORMATS {
+        let spec = AccSpec::exact(fmt);
+        let mne = fmt.max_normal_exp() as u32;
+        let sig = fmt.sig_bits();
+        let f = spec.f;
+        let t = PROVED_TERMS_LOG2;
+
+        // ---- format-level: the shared frame and the hw model ----------
+        out.push(ob(
+            "lambda-bin-range",
+            fmt,
+            "-",
+            mne + 1,
+            env.max_bins,
+            format!("eff_exp 1..={mne} must index ExpBins (identity at 0)"),
+        ));
+        out.push(ob(
+            "sig-magnitude",
+            fmt,
+            "-",
+            sig,
+            env.sig_bound_bits,
+            format!("|signed_sig| < 2^{sig} fits the 2^{} per-term ingest bound", env.sig_bound_bits),
+        ));
+        out.push(ob(
+            "exact-guard-alignment",
+            fmt,
+            "-",
+            mne,
+            f,
+            format!("f={f} covers the worst alignment shift {} with >=1 LSB margin", mne - 1),
+        ));
+        out.push(ob(
+            "acc-wide-fit",
+            fmt,
+            "-",
+            spec.acc_width(fmt, 1usize << t),
+            env.wide_bits,
+            format!("exact acc_width at 2^{t} terms vs WideInt"),
+        ));
+        if spec.narrow {
+            out.push(ob(
+                "acc-narrow-fit",
+                fmt,
+                "-",
+                acc_bits(fmt, f, t),
+                env.narrow_bits,
+                format!("exact narrow-lane value bits at 2^{t} terms vs i128"),
+            ));
+        }
+        let hw = DatapathParams::new(fmt, 64, spec);
+        out.push(ob(
+            "hw-shifter-range",
+            fmt,
+            "-",
+            mne - 1,
+            hw.max_shift(),
+            "hw shifter depth covers the effective-exponent range".to_string(),
+        ));
+        out.push(ob(
+            "hw-root-width",
+            fmt,
+            "-",
+            hw.leaf_frac_w() + clog2(64),
+            spec.acc_width(fmt, 64),
+            "netlist root fraction width (leaf + clog2(64)) inside acc_width(64)".to_string(),
+        ));
+
+        // ---- per-backend obligations, registry order ------------------
+        for entry in registry::entries() {
+            let caps = entry.sel().capabilities(spec);
+            let lane = storage_bits(env, spec);
+            match entry.name {
+                "scalar" => {
+                    out.push(ob(
+                        "fold-acc-width",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, t),
+                        lane,
+                        format!("scalar fold accumulator at 2^{t} terms vs its storage lane"),
+                    ));
+                }
+                "kernel" => {
+                    let block = caps.block.unwrap_or(1) as u64;
+                    let b_log2 = clog2(block);
+                    out.push(ob(
+                        "kernel-lane-lift",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, 0),
+                        lane,
+                        "single-lane (sig << f) lift vs the block accumulator lane".to_string(),
+                    ));
+                    out.push(ob(
+                        "kernel-block-acc",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, b_log2),
+                        lane,
+                        format!("per-block accumulator with clog2(block={block}) carry headroom"),
+                    ));
+                    out.push(ob(
+                        "kernel-combine-acc",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, t),
+                        lane,
+                        format!("cross-block combine accumulator at 2^{t} terms"),
+                    ));
+                    // Narrow path clamps d at SHIFT_CLAMP; that is sound
+                    // only if every live magnitude bit is below the clamp.
+                    // The wide d > f arm shifts a bare significand instead.
+                    let live = if spec.narrow { sig + f } else { sig };
+                    out.push(ob(
+                        "kernel-shift-clamp",
+                        fmt,
+                        entry.name,
+                        live,
+                        env.shift_clamp,
+                        format!(
+                            "live magnitude bits below the {}-bit alignment-shift clamp",
+                            env.shift_clamp
+                        ),
+                    ));
+                }
+                "eia" => {
+                    out.push(ob(
+                        "eia-bin-index",
+                        fmt,
+                        entry.name,
+                        mne + 1,
+                        env.max_bins,
+                        "max effective exponent must stay inside MAX_BINS".to_string(),
+                    ));
+                    out.push(ob(
+                        "eia-fast-lane",
+                        fmt,
+                        entry.name,
+                        env.spill_limit_log2.max(env.sig_bound_bits) + 2,
+                        64,
+                        "post-threshold fast-lane ingest must fit i64".to_string(),
+                    ));
+                    out.push(ob(
+                        "eia-spill-lane",
+                        fmt,
+                        entry.name,
+                        MagBits::term(env.sig_bound_bits).sum(t).signed_bits(),
+                        env.narrow_bits,
+                        format!("per-bin spill value at 2^{t} terms vs i128"),
+                    ));
+                    out.push(ob(
+                        "eia-drain-shift",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, t),
+                        lane,
+                        format!("reconcile-and-align drain accumulator at 2^{t} terms"),
+                    ));
+                    out.push(ob(
+                        "eia-occupancy",
+                        fmt,
+                        entry.name,
+                        mne,
+                        env.max_bins.saturating_sub(1),
+                        "occupied bins per drain (telemetry cross-checked bound)".to_string(),
+                    ));
+                }
+                other => {
+                    // A backend registered after this analyzer froze gets a
+                    // deliberately failing obligation: extend the analyzer
+                    // before shipping the backend.
+                    out.push(ob(
+                        "unmodeled-backend",
+                        fmt,
+                        other,
+                        u32::MAX,
+                        0,
+                        format!("backend {other:?} has no width derivation yet"),
+                    ));
+                }
+            }
+            // Registry capability cross-checks, common to every backend.
+            out.push(ob(
+                "caps-proved-width",
+                fmt,
+                entry.name,
+                acc_bits(fmt, f, t),
+                caps.proved_acc_bits,
+                "registry proved_acc_bits must cover the derived bound".to_string(),
+            ));
+            out.push(ob(
+                "caps-storage-width",
+                fmt,
+                entry.name,
+                caps.proved_acc_bits,
+                caps.storage_acc_bits,
+                "registry proved_acc_bits must fit storage_acc_bits".to_string(),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP32, FP8_E6M1};
+
+    #[test]
+    fn actual_env_reads_the_real_constants() {
+        let env = StorageEnv::actual();
+        assert_eq!(env.wide_bits, 384);
+        assert_eq!(env.narrow_bits, 128);
+        assert_eq!(env.max_bins, 256);
+        assert_eq!(env.spill_limit_log2, 62);
+        assert_eq!(env.sig_bound_bits, 25);
+        assert_eq!(env.shift_clamp, 127);
+    }
+
+    #[test]
+    fn every_obligation_passes_on_the_actual_env() {
+        for o in derive_obligations(&StorageEnv::actual()) {
+            assert!(
+                o.pass(),
+                "{}/{}/{}: required {} > provided {}",
+                o.format,
+                o.backend,
+                o.id,
+                o.required_bits,
+                o.provided_bits
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_obligation_count_and_coverage() {
+        let obs = derive_obligations(&StorageEnv::actual());
+        // 22 per wide format (FP32, BF16) + 23 per narrow FP8 format.
+        assert_eq!(obs.len(), 2 * 22 + 3 * 23);
+        for fmt in crate::formats::PAPER_FORMATS {
+            for backend in registry::names() {
+                assert!(
+                    obs.iter().any(|o| o.format == fmt.name && o.backend == backend),
+                    "no obligation covers {} x {}",
+                    fmt.name,
+                    backend
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn each_named_fault_breaks_at_least_one_obligation() {
+        for fault in StorageEnv::fault_names() {
+            let env = StorageEnv::with_fault(fault).unwrap();
+            let failed: Vec<_> = derive_obligations(&env)
+                .into_iter()
+                .filter(|o| !o.pass())
+                .collect();
+            assert!(!failed.is_empty(), "fault {fault} went undetected");
+        }
+        assert!(StorageEnv::with_fault("no-such-fault").is_err());
+    }
+
+    #[test]
+    fn spot_check_key_margins() {
+        let obs = derive_obligations(&StorageEnv::actual());
+        let find = |id: &str, fmt: &str| {
+            obs.iter().find(|o| o.id == id && o.format == fmt).unwrap()
+        };
+        // FP32 exact window: 24 + 254 + 17 = 295 of 384 WideInt bits.
+        let wide = find("acc-wide-fit", FP32.name);
+        assert_eq!((wide.required_bits, wide.provided_bits), (295, 384));
+        // e6m1 narrow lane: 2 + 63 + 15 + 1 = 81 of 128 i128 bits.
+        let narrow = find("acc-narrow-fit", FP8_E6M1.name);
+        assert_eq!((narrow.required_bits, narrow.provided_bits), (81, 128));
+        // EIA fast lane sits exactly at the i64 boundary: margin 0.
+        let fast = obs
+            .iter()
+            .find(|o| o.id == "eia-fast-lane" && o.format == FP32.name)
+            .unwrap();
+        assert_eq!(fast.margin(), 0);
+        // hw root width: the netlist grows one bit less than acc_width.
+        let root = find("hw-root-width", FP32.name);
+        assert_eq!(root.margin(), 1);
+    }
+}

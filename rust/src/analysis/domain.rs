@@ -1,0 +1,89 @@
+//! Abstract domains for the static verifier: magnitude-bit intervals.
+//!
+//! The verifier never evaluates a datapath — it pushes *bit-width bounds*
+//! through the same structure the datapath has. The single abstraction is
+//! [`MagBits`]: "every value this wire can carry satisfies
+//! `|v| < 2^bits`". The transfer functions below mirror the three
+//! operations every align-and-add intermediate is built from — loading a
+//! significand, lifting it by a shift, and summing a bounded number of
+//! terms — and each one is a one-line sound bound:
+//!
+//! * load: a term's signed significand obeys the format bound
+//!   (`|sig| < 2^sig_bits`);
+//! * shift left by `k`: `|v·2^k| < 2^(bits+k)`;
+//! * sum of `2^n` terms: `|Σ v_i| < 2^(bits+n)` (triangle inequality);
+//! * two's-complement storage: a value with `|v| < 2^bits` needs
+//!   `bits + 1` storage bits (sign included).
+//!
+//! Alignment *right* shifts never widen a magnitude, so they are the
+//! identity in this domain — which is exactly why the derivations in
+//! [`super::derive`] only ever add the load/lift/sum contributions.
+
+/// Ceiling log2 over `u64` (`clog2(1) = 0`, `clog2(n) = ⌈log2 n⌉`).
+pub fn clog2(n: u64) -> u32 {
+    u64::BITS - (n.max(1) - 1).leading_zeros()
+}
+
+/// A magnitude-bit bound: every value on the wire satisfies `|v| < 2^0`
+/// … `2^bits`. The domain is a join-semilattice under `max`, but the
+/// datapath derivations only ever need the monotone transfer functions.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct MagBits(pub u32);
+
+impl MagBits {
+    /// A loaded term: `|signed_sig| < 2^sig_bits`.
+    pub fn term(sig_bits: u32) -> Self {
+        MagBits(sig_bits)
+    }
+
+    /// Lift by a left shift of `k` bits (the `sig << f` load).
+    pub fn shl(self, k: u32) -> Self {
+        MagBits(self.0 + k)
+    }
+
+    /// Sum of at most `2^n_log2` values with this bound.
+    pub fn sum(self, n_log2: u32) -> Self {
+        MagBits(self.0 + n_log2)
+    }
+
+    /// Two's-complement storage bits needed (one sign bit on top).
+    pub fn signed_bits(self) -> u32 {
+        self.0 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clog2_matches_ceil_log2() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(64), 6);
+        assert_eq!(clog2(65), 7);
+        assert_eq!(clog2(1 << 15), 15);
+    }
+
+    #[test]
+    fn transfer_functions_compose() {
+        // A BF16 term (9 magnitude bits incl. hidden bit? no — sig_bits=8)
+        // lifted by 4 guard bits and summed 2^6 times needs 8+4+6+1 bits.
+        let b = MagBits::term(8).shl(4).sum(6);
+        assert_eq!(b, MagBits(18));
+        assert_eq!(b.signed_bits(), 19);
+    }
+
+    #[test]
+    fn soundness_on_concrete_extremes() {
+        // 2^6 copies of the most negative 8-bit-bounded value, lifted by 4:
+        // |Σ| = 2^6 · (2^8 − 1) · 2^4 < 2^18 — the derived bound holds and
+        // is tight to within one value.
+        let worst: i64 = -((1 << 8) - 1);
+        let total: i64 = worst * (1 << 4) * (1 << 6);
+        let bound = MagBits::term(8).shl(4).sum(6);
+        assert!(total.unsigned_abs() < 1u64 << bound.0);
+        assert!(total.unsigned_abs() > 1u64 << (bound.0 - 2));
+    }
+}

@@ -1,0 +1,145 @@
+//! Static datapath width/overflow verifier (DESIGN.md §Analysis).
+//!
+//! Every other tier in this crate *measures*; this tier *proves*. The
+//! paper's exactness argument rests on derived no-overflow ranges — the
+//! `AccSpec::exact` guard bound, the kernel's per-block i128 narrow path,
+//! the EIA's carry-save lanes — and until now those ranges were enforced
+//! only dynamically, by differential oracles over sampled vectors and by
+//! scattered `debug_assert`s. This tier closes the gap between "tested on
+//! 10k vectors" and "proved for the whole operand space":
+//!
+//! * [`domain`] — the abstract domain: magnitude-bit intervals with sound
+//!   transfer functions for load / lift / bounded sum.
+//! * [`derive`] — per-(format × backend) derivations over the registry:
+//!   every intermediate whose width the exactness argument depends on
+//!   becomes an [`Obligation`] (`required_bits ≤ provided_bits`), checked
+//!   against the storage widths, the registry [`Capabilities`] claims,
+//!   and the `hw::datapath` geometry.
+//! * [`report`] — the proof artifact: a byte-deterministic
+//!   `ANALYSIS_report.json` plus the human table behind `repro analyze`.
+//!
+//! The static pass is complemented by a **runtime cross-check**
+//! ([`runtime_check`]): the telemetry hub's occupancy and lane-width
+//! histograms record what the datapath actually saw, and CI asserts the
+//! observed maxima never exceed the statically proved bounds — if the
+//! implementation ever drifts from the model the analyzer interprets,
+//! the gate trips even though both sides individually "pass".
+//!
+//! [`Capabilities`]: crate::reduce::Capabilities
+//! [`Obligation`]: derive::Obligation
+
+pub mod derive;
+pub mod domain;
+pub mod report;
+
+pub use derive::{Obligation, StorageEnv};
+pub use report::AnalysisReport;
+
+use crate::arith::{AccSpec, PROVED_TERMS_LOG2};
+use crate::formats::PAPER_FORMATS;
+use crate::reduce::registry;
+use crate::telemetry::Telemetry;
+use crate::util::prng::XorShift;
+
+/// Run the full static pass against `env` (normally
+/// [`StorageEnv::actual`]; a named fault for gate self-tests).
+pub fn analyze(env: &StorageEnv) -> AnalysisReport {
+    AnalysisReport { env: *env, obligations: derive::derive_obligations(env) }
+}
+
+/// One runtime observation checked against a statically proved bound.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeBound {
+    /// What was observed (telemetry metric semantics).
+    pub name: &'static str,
+    /// Maximum the telemetry histograms recorded.
+    pub observed: u64,
+    /// The statically proved ceiling.
+    pub bound: u64,
+}
+
+impl RuntimeBound {
+    pub fn pass(&self) -> bool {
+        self.observed <= self.bound
+    }
+}
+
+/// Cross-check the telemetry hub's observed maxima against the report's
+/// proved bounds. An empty histogram observes 0 and trivially passes —
+/// callers that want liveness run [`exercise_backends`] first.
+pub fn runtime_check(report: &AnalysisReport, t: &Telemetry) -> Vec<RuntimeBound> {
+    // The EIA occupancy ceiling: the widest `eia-occupancy` obligation
+    // (254 occupied bins for the 8-bit-exponent formats).
+    let occupancy_bound = report
+        .obligations
+        .iter()
+        .filter(|o| o.id == "eia-occupancy")
+        .map(|o| o.required_bits as u64)
+        .max()
+        .unwrap_or(0);
+    vec![
+        RuntimeBound {
+            name: "ofa_accum_bin_occupancy.max",
+            observed: t.accum.occupancy.max(),
+            bound: occupancy_bound,
+        },
+        RuntimeBound {
+            name: "ofa_kernel_block_lanes.max",
+            observed: t.kernel.block_lanes.max(),
+            bound: 1u64 << PROVED_TERMS_LOG2,
+        },
+    ]
+}
+
+/// Drive every registered backend over every paper format and every
+/// oracle distribution so the telemetry histograms the runtime cross-check
+/// reads are live. Deterministic (fixed seed), cheap (a few thousand
+/// terms per combination), and registry-driven — a newly registered
+/// backend is exercised automatically.
+pub fn exercise_backends(terms_per_vector: usize, vectors: usize) -> u64 {
+    let mut rng = XorShift::new(0xA11A_1752);
+    let mut reduced = 0u64;
+    for fmt in PAPER_FORMATS {
+        let spec = AccSpec::exact(fmt);
+        for dist in crate::arith::oracle::DISTRIBUTIONS {
+            for entry in registry::entries() {
+                for _ in 0..vectors {
+                    let terms = dist.gen_vector(&mut rng, fmt, terms_per_vector);
+                    let state = entry.sel().reduce(&terms, spec);
+                    reduced += terms.len() as u64;
+                    // Keep the reduction observable (and un-elided).
+                    std::hint::black_box(&state);
+                }
+            }
+        }
+    }
+    reduced
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analyze_actual_env_is_all_green() {
+        let report = analyze(&StorageEnv::actual());
+        assert!(report.failed().is_empty());
+        for fmt in PAPER_FORMATS {
+            for backend in registry::names() {
+                assert!(report.covers(fmt.name, backend), "{} x {backend}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_check_on_a_quiet_hub_passes_trivially() {
+        let report = analyze(&StorageEnv::actual());
+        let hub = Telemetry::new();
+        let bounds = runtime_check(&report, &hub);
+        assert_eq!(bounds.len(), 2);
+        assert!(bounds.iter().all(|b| b.pass() && b.observed == 0));
+        // And a synthetic out-of-bound observation trips it.
+        hub.accum.occupancy.observe(100_000);
+        assert!(runtime_check(&report, &hub).iter().any(|b| !b.pass()));
+    }
+}

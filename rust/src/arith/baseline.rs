@@ -59,6 +59,7 @@ pub fn baseline_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
     AlignAcc { lambda, acc, sticky }
 }
 
+#[allow(clippy::disallowed_methods)] // f64 reference sums (clippy.toml)
 #[cfg(test)]
 mod tests {
     use super::*;

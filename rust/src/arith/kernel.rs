@@ -45,6 +45,10 @@
 //! rotation, alongside every other architecture) and the stream
 //! end-to-end oracle test pin these guarantees bit-for-bit.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::operator::{op_combine, AlignAcc};
 use super::{AccSpec, WideInt};
 use crate::formats::Fp;
@@ -158,14 +162,27 @@ pub fn scalar_fold(terms: &[Fp], spec: AccSpec) -> AlignAcc {
 /// Counts accumulate in locals during the hot loop and land here in a
 /// single gated burst of relaxed adds, keeping the per-lane cost at zero
 /// (the `telemetry overhead` bench series bounds the total in CI).
+/// The widest block's lane count (`lanes.min(block)`) also feeds the
+/// `ofa_kernel_block_lanes` histogram so the `analysis` runtime cross-check
+/// can assert observed lane widths never exceed the statically proved
+/// per-block carry headroom.
 #[inline]
-pub(crate) fn flush_kernel_health(lanes: usize, blocks: u64, sticky_blocks: u64, spec: AccSpec) {
+pub(crate) fn flush_kernel_health(
+    lanes: usize,
+    block: usize,
+    blocks: u64,
+    sticky_blocks: u64,
+    spec: AccSpec,
+) {
     if !telemetry::enabled() {
         return;
     }
     let k = &telemetry::global().kernel;
     k.block_sweeps.add(blocks);
     k.lanes.add(lanes as u64);
+    if lanes > 0 {
+        k.block_lanes.observe(lanes.min(block) as u64);
+    }
     if spec.narrow {
         k.narrow_blocks.add(blocks);
     } else {
@@ -183,10 +200,12 @@ pub(crate) fn flush_kernel_health(lanes: usize, blocks: u64, sticky_blocks: u64,
 ///
 /// `block` must be ≥ 1: the plan/parse layer
 /// ([`crate::reduce::ReducePlan`], [`crate::reduce::BackendSel`]) rejects a
-/// zero block with a proper error before it can reach this function.
+/// zero block with a proper error before it can reach this function, and the
+/// assertion below keeps the contract loud in release builds too (a zero
+/// block would silently yield empty chunks — the `analysis` tier lists this
+/// as a checked invariant rather than a debug-only one).
 pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
-    debug_assert!(block >= 1, "kernel block must be >= 1 (rejected at plan build/parse)");
-    let block = block.max(1);
+    assert!(block >= 1, "kernel block must be >= 1 (rejected at plan build/parse)");
     if block <= DEFAULT_BLOCK {
         // Zero-allocation path for hardware-sized blocks (the default
         // geometry, any input length): decode each block into stack lanes,
@@ -204,7 +223,7 @@ pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
             sticky_blocks += part.sticky as u64;
             state = op_combine(&state, &part, spec);
         }
-        flush_kernel_health(terms.len(), blocks, sticky_blocks, spec);
+        flush_kernel_health(terms.len(), block, blocks, sticky_blocks, spec);
         return state;
     }
     // Oversized blocks: one block-sized buffer pair, reused (decode_soa
@@ -220,7 +239,7 @@ pub fn reduce_terms(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
         sticky_blocks += part.sticky as u64;
         state = op_combine(&state, &part, spec);
     }
-    flush_kernel_health(terms.len(), blocks, sticky_blocks, spec);
+    flush_kernel_health(terms.len(), block, blocks, sticky_blocks, spec);
     state
 }
 
@@ -355,7 +374,12 @@ impl FromStr for ReduceBackend {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
+#[allow(
+    deprecated,
+    clippy::float_arithmetic,
+    clippy::cast_precision_loss,
+    clippy::disallowed_methods
+)]
 mod tests {
     use super::*;
     use crate::arith::operator::op_combine_many;
@@ -471,6 +495,16 @@ mod tests {
         let mut sig = Vec::new();
         decode_soa(terms, &mut eff, &mut sig);
         block_state(&eff, &sig, spec)
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel block must be >= 1")]
+    fn zero_block_is_rejected_in_release_builds_too() {
+        // The plan/parse layer already refuses block == 0; this pins the
+        // defense-in-depth assertion at the kernel entry itself (analysis
+        // checked invariant, not just a debug_assert).
+        let spec = AccSpec::exact(BF16);
+        let _ = reduce_terms(&[Fp::zero(BF16)], 0, spec);
     }
 
     #[test]

@@ -33,6 +33,21 @@ use crate::formats::FpFormat;
 pub use kernel::ReduceBackend;
 pub use wide::WideInt;
 
+/// Proof ceiling for the static verifier (`crate::analysis`): every width
+/// bound derived there covers reductions of up to `2^PROVED_TERMS_LOG2`
+/// terms per accumulator. 15 matches the carry headroom the `narrow`
+/// predicates reserve (15 term bits + 1 sign bit inside the 16-bit
+/// margin of [`AccSpec::exact`]), and sits far above any in-tree workload
+/// (benches top out at 2^12 terms per reduction).
+pub const PROVED_TERMS_LOG2: u32 = 15;
+
+/// Per-term signed-significand magnitude bound shared by every datapath:
+/// `|signed_sig| < 2^SIG_BOUND_BITS` for all supported formats (FP32's
+/// 24-bit significand plus sign is the widest). The EIA fast-lane ingest
+/// ([`crate::accum::ExpBins::bank`]) and the analyzer's carry derivations
+/// both build on this single constant.
+pub const SIG_BOUND_BITS: u32 = 25;
+
 /// Accumulator datapath geometry: how many fractional extension bits `f`
 /// sit below the significand when a term is loaded.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -94,6 +109,26 @@ impl AccSpec {
     pub fn acc_width(&self, format: FpFormat, n_terms: usize) -> u32 {
         let log_n = usize::BITS - (n_terms.max(2) - 1).leading_zeros();
         format.sig_bits() + 1 + log_n + 1 + self.f
+    }
+
+    /// Accumulator bits this geometry is *proved* to need at the analyzer's
+    /// term ceiling: the [`SIG_BOUND_BITS`] per-term magnitude lifted by `f`
+    /// guard bits, [`PROVED_TERMS_LOG2`] carry bits, and one sign bit. This
+    /// is the bound the registry publishes as `Capabilities::proved_acc_bits`
+    /// and the `analysis` tier checks against [`Self::storage_width`].
+    pub fn proved_width(&self) -> u32 {
+        self.f + SIG_BOUND_BITS + PROVED_TERMS_LOG2 + 1
+    }
+
+    /// Width of the storage lane the `⊙` operators actually use for this
+    /// geometry: the `i128` narrow fast path when [`Self::narrow`], the full
+    /// [`WideInt`] otherwise.
+    pub fn storage_width(&self) -> u32 {
+        if self.narrow {
+            128
+        } else {
+            wide::WIDE_BITS as u32
+        }
     }
 }
 

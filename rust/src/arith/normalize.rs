@@ -105,6 +105,7 @@ pub fn normalize_round(state: &AlignAcc, spec: AccSpec, fmt: FpFormat) -> Fp {
     Fp::pack(sign, r as i32, mant, fmt)
 }
 
+#[allow(clippy::disallowed_methods)] // f64 reference sums (clippy.toml)
 #[cfg(test)]
 mod tests {
     use super::super::baseline::baseline_sum;

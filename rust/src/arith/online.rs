@@ -11,6 +11,10 @@
 //! The derivation (eqs. 4-6) shows `o'_N = o_N`, i.e. the online result is
 //! identical to the baseline — which the tests here pin down bit-exactly.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::operator::{op_combine, AlignAcc};
 use super::AccSpec;
 use crate::formats::Fp;
@@ -29,6 +33,7 @@ pub fn online_sum(terms: &[Fp], spec: AccSpec) -> AlignAcc {
     state
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::super::baseline::baseline_sum;

@@ -11,6 +11,10 @@
 //! terms ([`AlignAcc::leaf`]); eq. 9 states that any parenthesisation of
 //! `⊙` over the N leaves yields the final `(max exponent, aligned sum)`.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::{AccSpec, WideInt};
 use crate::formats::{Fp, FpClass};
 
@@ -145,6 +149,7 @@ fn shift_for(p: &AlignAcc, lambda: i32) -> (WideInt, bool) {
     p.acc.shr_sticky(d)
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::*;

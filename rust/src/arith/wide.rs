@@ -7,6 +7,11 @@
 //! second. Arithmetic right shifts report whether any dropped bit was
 //! nonzero (the hardware *sticky* signal).
 
+// Exact-datapath module: no native float arithmetic or lossy casts may
+// appear here (see clippy.toml and DESIGN.md §Analysis). The single
+// diagnostic escape hatch is `to_f64_lossy`, allowed explicitly below.
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 /// Number of 64-bit limbs.
 pub const LIMBS: usize = 6;
 /// Total width in bits.
@@ -236,19 +241,19 @@ impl WideInt {
     }
 
     /// Narrow load: low two limbs as `i128`. Only valid when the value is
-    /// known to fit (the `AccSpec::narrow` invariant); a debug assertion
-    /// checks that limbs 2.. are pure sign fill so a mis-set
-    /// `AccSpec::narrow` fails loudly in tests instead of corrupting sums.
+    /// known to fit (the `AccSpec::narrow` invariant, statically proved by
+    /// the `analysis` tier as obligation `acc-narrow-fit`). The sign-fill
+    /// check runs in release builds too: a mis-set `AccSpec::narrow` must
+    /// fail loudly instead of corrupting sums. The scan of four limbs
+    /// against a broadcast fill is branch-free and cheap next to the i128
+    /// arithmetic it guards.
     #[inline]
     pub fn to_i128_narrow(&self) -> i128 {
         let v = (self.limbs[0] as u128 | ((self.limbs[1] as u128) << 64)) as i128;
-        debug_assert!(
-            {
-                let fill = if v < 0 { u64::MAX } else { 0 };
-                self.limbs[2..].iter().all(|&l| l == fill)
-            },
-            "to_i128_narrow on a value wider than i128 (AccSpec::narrow mis-set?)"
-        );
+        let fill = if v < 0 { u64::MAX } else { 0 };
+        if self.limbs[2..].iter().any(|&l| l != fill) {
+            narrow_overflow();
+        }
         v
     }
 
@@ -276,6 +281,7 @@ impl WideInt {
 
     /// Exact conversion to `f64` would lose bits; this returns the closest
     /// `f64` (used only for diagnostics, never for correctness decisions).
+    #[allow(clippy::float_arithmetic, clippy::cast_precision_loss)]
     pub fn to_f64_lossy(&self) -> f64 {
         let neg = self.is_negative();
         let mag = self.abs();
@@ -289,6 +295,14 @@ impl WideInt {
             v
         }
     }
+}
+
+/// Cold panic path for [`WideInt::to_i128_narrow`]: kept out of line so the
+/// release-mode invariant check stays a compare-and-branch in the hot loop.
+#[cold]
+#[inline(never)]
+fn narrow_overflow() -> ! {
+    panic!("to_i128_narrow on a value wider than i128 (AccSpec::narrow mis-set?)")
 }
 
 impl std::cmp::Ord for WideInt {
@@ -328,6 +342,7 @@ impl std::fmt::Debug for WideInt {
 }
 
 #[cfg(test)]
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 mod tests {
     use super::*;
 
@@ -419,12 +434,19 @@ mod tests {
     }
 
     #[test]
-    #[cfg(debug_assertions)]
     #[should_panic(expected = "to_i128_narrow")]
     fn narrow_load_rejects_wide_values() {
         // A value with live bits above limb 1 violates the narrow
-        // invariant and must fail loudly rather than silently truncate.
+        // invariant and must fail loudly rather than silently truncate —
+        // in release builds too (analysis obligation `acc-narrow-fit`).
         let _ = w(1).shl(200).to_i128_narrow();
+    }
+
+    #[test]
+    #[should_panic(expected = "to_i128_narrow")]
+    fn narrow_load_rejects_wide_negative_values() {
+        // Negative wide values have non-sign-fill high limbs as well.
+        let _ = w(-3).shl(200).to_i128_narrow();
     }
 
     #[test]

@@ -173,6 +173,7 @@ impl Fp {
     /// Round an `f64` into the format (round-to-nearest-even, gradual
     /// underflow into the subnormal range, saturation per [`SpecialsMode`]
     /// on overflow).
+    #[allow(clippy::disallowed_methods)] // THE decode boundary (clippy.toml)
     pub fn from_f64(x: f64, format: FpFormat) -> Self {
         if x.is_nan() {
             return Self::nan(format);
@@ -279,6 +280,7 @@ impl std::fmt::Debug for Fp {
 
 /// Exact powers of two as f64 (handles the full exponent range we need).
 #[inline]
+#[allow(clippy::disallowed_methods)] // THE encode boundary (clippy.toml)
 pub fn pow2(e: i32) -> f64 {
     // f64 covers 2^±1074 comfortably for every paper format.
     f64::from_bits(if e >= -1022 && e <= 1023 {
@@ -289,6 +291,7 @@ pub fn pow2(e: i32) -> f64 {
 }
 
 /// Round a positive f64 to the nearest integer, ties to even.
+#[allow(clippy::disallowed_methods)] // THE decode boundary (clippy.toml)
 fn round_half_even(x: f64) -> u64 {
     let floor = x.floor();
     let frac = x - floor;

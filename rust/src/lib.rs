@@ -36,12 +36,19 @@
 //! merges), a span/event trace ring, and Prometheus/JSON exposition —
 //! see DESIGN.md §Telemetry and `repro stats`.
 //!
+//! Sitting on top of all of them, [`analysis`] is the static verifier: an
+//! abstract-interpretation pass deriving per-(format × backend) width
+//! bounds for every datapath intermediate and checking them against the
+//! storage actually provisioned — emitted as the checked-in proof
+//! artifact `ANALYSIS_report.json` (`repro analyze`, DESIGN.md §Analysis).
+//!
 //! Most applications only need the [`prelude`].
 //!
 //! See `DESIGN.md` for the crate map and the experiment index (including
 //! the perf and calibration notes the code comments cite).
 
 pub mod accum;
+pub mod analysis;
 pub mod arith;
 pub mod bench_util;
 pub mod coordinator;
@@ -56,6 +63,7 @@ pub mod util;
 pub mod workload;
 
 pub use accum::{Eia, EiaSnapshot};
+pub use analysis::{AnalysisReport, StorageEnv};
 #[allow(deprecated)]
 pub use arith::kernel::ReduceBackend;
 pub use arith::{

@@ -13,6 +13,7 @@
 //! repro eia    [--format all] [--n 1024] [--vectors 64]     EIA backend check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
 //! repro stats  [--prometheus|--json|--trace] [--selftest]  live cross-tier telemetry
+//! repro analyze [--gate|--json] [--fault NAME]         static width/overflow proof
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
 //!
@@ -41,6 +42,7 @@ fn main() -> ExitCode {
         "eia" => cmd_eia(&args),
         "sweep" => cmd_sweep(&args),
         "stats" => cmd_stats(&args),
+        "analyze" => cmd_analyze(&args),
         "e2e" => cmd_e2e(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
@@ -106,6 +108,19 @@ commands:
                                           §Telemetry); --selftest exits
                                           nonzero if any expected metric
                                           family is absent or zero
+  analyze [--gate] [--json] [--fault NAME]
+                                          static datapath width/overflow
+                                          verifier (DESIGN.md §Analysis):
+                                          derive the no-overflow obligation
+                                          set for every format x backend and
+                                          check it against the provisioned
+                                          storage; --json emits the proof
+                                          artifact ANALYSIS_report.json;
+                                          --gate additionally exercises every
+                                          backend and cross-checks telemetry
+                                          maxima against the proved bounds;
+                                          --fault injects a named storage
+                                          fault (self-test; must fail)
   e2e     [--sentences 4] [--requests 256] PJRT BERT workload + batched serving demo
   serve   [--requests 2048] [--clients 8]  load-test the batched PJRT reduction path
   help                                    this text
@@ -284,6 +299,82 @@ fn cmd_backends(args: &Args) -> Result<(), String> {
     println!("\nnegotiated plans (the old `auto`):");
     println!("  exact({fmt}):   {}", ReducePlan::negotiate(exact).describe());
     println!("  truncated({guard}): {}", ReducePlan::negotiate(trunc).describe());
+    Ok(())
+}
+
+/// Static datapath width/overflow verifier (DESIGN.md §Analysis): derive
+/// the no-overflow obligation set for every paper format × registered
+/// backend and check it against the provisioned storage, the registry's
+/// published `Capabilities` widths and the `hw::datapath` geometry.
+/// `--json` prints the byte-deterministic proof artifact and always exits
+/// zero (CI diffs the bytes); the default and `--gate` modes exit nonzero
+/// on any failed obligation, and `--gate` additionally drives every
+/// backend over every oracle distribution and cross-checks the telemetry
+/// occupancy / lane-width maxima against the statically proved bounds.
+fn cmd_analyze(args: &Args) -> Result<(), String> {
+    use online_fp_add::analysis::{self, StorageEnv};
+
+    let env = match args.get("fault") {
+        Some(name) => StorageEnv::with_fault(name)?,
+        None => StorageEnv::actual(),
+    };
+    let report = analysis::analyze(&env);
+
+    if args.has("json") {
+        // Machine mode: emit the artifact verbatim and let CI judge it —
+        // a faulted report must still serialize so the self-test can
+        // inspect it.
+        print!("{}", report.to_json());
+        return Ok(());
+    }
+
+    println!("Static datapath width/overflow proof — obligations per format x backend\n");
+    print!("{}", report.render_table());
+    let failed = report.failed();
+    println!(
+        "\n{} obligations, {} passed, {} failed (env: wide={} narrow={} bins={} clamp={})",
+        report.obligations.len(),
+        report.obligations.len() - failed.len(),
+        failed.len(),
+        env.wide_bits,
+        env.narrow_bits,
+        env.max_bins,
+        env.shift_clamp,
+    );
+
+    if args.has("gate") {
+        let terms = args.get_usize("terms", 96)?.max(1);
+        let vectors = args.get_usize("vectors", 4)?.max(1);
+        let reduced = analysis::exercise_backends(terms, vectors);
+        let bounds = analysis::runtime_check(&report, online_fp_add::telemetry::global());
+        println!("\nruntime cross-check ({reduced} terms reduced across all backends):");
+        let mut bad = 0usize;
+        for b in &bounds {
+            println!(
+                "  {:<32} observed {:>8}  proved bound {:>8}  {}",
+                b.name,
+                b.observed,
+                b.bound,
+                if b.pass() { "ok" } else { "FAIL" }
+            );
+            if !b.pass() {
+                bad += 1;
+            }
+        }
+        if bad > 0 {
+            return Err(format!("{bad} runtime bounds exceeded the proved widths"));
+        }
+    }
+
+    if !failed.is_empty() {
+        let ids: Vec<String> =
+            failed.iter().map(|o| format!("{}/{}", o.format, o.id)).collect();
+        return Err(format!(
+            "{} width obligations failed: {}",
+            failed.len(),
+            ids.join(", ")
+        ));
+    }
     Ok(())
 }
 

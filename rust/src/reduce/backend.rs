@@ -24,6 +24,10 @@
 //! additional guarantees (fold-identical dropped bits, order invariance)
 //! survive.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::partial::{Partial, PartialState};
 use super::registry::tele_family_named;
 use crate::accum::Eia;
@@ -179,12 +183,13 @@ pub struct KernelReducer {
 
 impl KernelReducer {
     /// `block` must be ≥ 1 — the plan/parse layer rejects 0 before a
-    /// reducer is ever built.
+    /// reducer is ever built; the assertion keeps the contract loud in
+    /// release builds (analysis checked invariant).
     pub fn new(spec: AccSpec, block: usize) -> Self {
-        debug_assert!(block >= 1, "kernel block must be >= 1 (enforced at plan build)");
+        assert!(block >= 1, "kernel block must be >= 1 (enforced at plan build)");
         KernelReducer {
             spec,
-            block: block.max(1),
+            block,
             state: AlignAcc::IDENTITY,
             terms: 0,
             tele: tele_family_named("kernel"),
@@ -232,6 +237,9 @@ impl Reducer for KernelReducer {
             let k = &telemetry::global().kernel;
             k.block_sweeps.add(blocks);
             k.lanes.add(eff.len() as u64);
+            if !eff.is_empty() {
+                k.block_lanes.observe(eff.len().min(self.block) as u64);
+            }
             if self.spec.narrow {
                 k.narrow_blocks.add(blocks);
             } else {
@@ -379,6 +387,7 @@ pub fn reduce_once(reducer: &mut dyn Reducer, terms: &[Fp]) -> AlignAcc {
 }
 
 #[cfg(test)]
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 mod tests {
     use super::*;
     use crate::arith::kernel::scalar_fold;

@@ -25,6 +25,10 @@
 //! under a truncated spec each grouping is its own deterministic
 //! parenthesisation, exactly as for the backends themselves.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use crate::accum::EiaSnapshot;
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::wide::LIMBS;
@@ -206,6 +210,7 @@ impl Default for Partial {
     }
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,6 +8,10 @@
 //! `repro backends` listing can answer "which code will run and what does
 //! it promise" without reading the dispatch code.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::backend::Reducer;
 use super::registry::{self, BackendSel, Capabilities};
 use crate::arith::operator::AlignAcc;
@@ -265,6 +269,7 @@ impl PlanBuilder {
     }
 }
 
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -13,6 +13,10 @@
 //! `Display`/`FromStr` grammar (`"scalar"`, `"kernel"`, `"kernel:<block>"`,
 //! `"eia"`) is the one spelling used everywhere.
 
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
 use super::backend::{EiaReducer, FoldReducer, KernelReducer, Reducer};
 use crate::arith::kernel::DEFAULT_BLOCK;
 use crate::arith::operator::AlignAcc;
@@ -46,6 +50,15 @@ pub struct Capabilities {
     pub lossless_merge: bool,
     /// SoA lanes per block, when the backend is batched.
     pub block: Option<usize>,
+    /// Accumulator bits the backend is statically proved to need under
+    /// this spec at the analyzer's `2^PROVED_TERMS_LOG2` term ceiling
+    /// ([`AccSpec::proved_width`]); checked against
+    /// [`Self::storage_acc_bits`] by `repro analyze`.
+    pub proved_acc_bits: u32,
+    /// Bits of the storage lane the backend actually accumulates in under
+    /// this spec ([`AccSpec::storage_width`]: `i128` narrow fast path or
+    /// the full `WideInt`).
+    pub storage_acc_bits: u32,
 }
 
 /// One registered reduction backend.
@@ -83,6 +96,8 @@ fn scalar_caps(spec: AccSpec, _block: Option<usize>) -> Capabilities {
         order_invariant: spec.exact,
         lossless_merge: spec.exact,
         block: None,
+        proved_acc_bits: spec.proved_width(),
+        storage_acc_bits: spec.storage_width(),
     }
 }
 
@@ -101,6 +116,8 @@ fn kernel_caps(spec: AccSpec, block: Option<usize>) -> Capabilities {
         order_invariant: spec.exact,
         lossless_merge: spec.exact,
         block: Some(b),
+        proved_acc_bits: spec.proved_width(),
+        storage_acc_bits: spec.storage_width(),
     }
 }
 
@@ -120,6 +137,8 @@ fn eia_caps(spec: AccSpec, _block: Option<usize>) -> Capabilities {
         order_invariant: true,
         lossless_merge: true,
         block: None,
+        proved_acc_bits: spec.proved_width(),
+        storage_acc_bits: spec.storage_width(),
     }
 }
 
@@ -394,5 +413,25 @@ mod tests {
         assert!(k1.fold_bit_identical, "block=1 degenerates to the fold");
         let eia = BackendSel::named("eia").unwrap().capabilities(trunc);
         assert!(!eia.fold_bit_identical && eia.order_invariant && eia.lossless_merge);
+    }
+
+    #[test]
+    fn capabilities_publish_consistent_proved_widths() {
+        // Every backend must claim a proved bound that fits its storage
+        // lane — the same inequality `repro analyze` gates in CI.
+        for spec in [AccSpec::exact(BF16), AccSpec::truncated(4)] {
+            for e in entries() {
+                let c = e.sel().capabilities(spec);
+                assert_eq!(c.proved_acc_bits, spec.proved_width(), "{}", e.name);
+                assert_eq!(c.storage_acc_bits, spec.storage_width(), "{}", e.name);
+                assert!(
+                    c.proved_acc_bits <= c.storage_acc_bits,
+                    "{}: proved {} > storage {}",
+                    e.name,
+                    c.proved_acc_bits,
+                    c.storage_acc_bits
+                );
+            }
+        }
     }
 }

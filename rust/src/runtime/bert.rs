@@ -24,6 +24,7 @@ pub struct BertWeights {
 
 impl BertWeights {
     /// Xavier-style random initialisation from a seed (deterministic).
+    #[allow(clippy::disallowed_methods)] // weight init, not datapath
     pub fn random(seed: u64) -> Self {
         let mut rng = XorShift::new(seed);
         let mut mk = |rows: usize, cols: usize| -> Vec<f32> {
@@ -66,6 +67,7 @@ impl BertLayerExe {
     }
 
     /// Run the layer on `(SEQ, DMODEL)` activations.
+    #[allow(clippy::disallowed_methods)] // f32 reference model, not the exact path
     pub fn run(&self, rt: &Runtime, x: &[f32], w: &BertWeights) -> Result<BertActivations> {
         let _ = rt; // execution is native; the runtime only gates loading
         if x.len() != SEQ * DMODEL {

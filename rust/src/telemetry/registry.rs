@@ -166,6 +166,11 @@ pub struct KernelFamily {
     pub wide_blocks: Counter,
     /// Block partials that activated the sticky bit.
     pub sticky_activations: Counter,
+    /// Widest block's lane count per reduce call — the runtime side of the
+    /// `analysis` tier's per-block carry-headroom bound (`kernel-block-acc`):
+    /// CI asserts the observed max never exceeds the statically proved
+    /// `2^PROVED_TERMS_LOG2` term ceiling.
+    pub block_lanes: ValueHistogram,
 }
 
 impl KernelFamily {
@@ -176,6 +181,7 @@ impl KernelFamily {
             narrow_blocks: Counter::new(),
             wide_blocks: Counter::new(),
             sticky_activations: Counter::new(),
+            block_lanes: ValueHistogram::new(),
         }
     }
 
@@ -185,6 +191,7 @@ impl KernelFamily {
         self.narrow_blocks.reset();
         self.wide_blocks.reset();
         self.sticky_activations.reset();
+        self.block_lanes.reset();
     }
 }
 

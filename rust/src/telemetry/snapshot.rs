@@ -144,6 +144,7 @@ pub fn snapshot_of(t: &Telemetry) -> TelemetrySnapshot {
     out.push_counter("ofa_kernel_narrow_blocks", vec![], t.kernel.narrow_blocks.get());
     out.push_counter("ofa_kernel_wide_blocks", vec![], t.kernel.wide_blocks.get());
     out.push_counter("ofa_kernel_sticky_activations", vec![], t.kernel.sticky_activations.get());
+    out.push_histogram("ofa_kernel_block_lanes", vec![], t.kernel.block_lanes.snapshot());
 
     // -- streaming tier ---------------------------------------------------
     out.push_counter("ofa_stream_batches", vec![], t.stream.batches.get());

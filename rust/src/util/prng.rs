@@ -55,6 +55,7 @@ impl XorShift {
     }
 
     /// Standard normal via Box-Muller (one value per call).
+    #[allow(clippy::disallowed_methods)] // generator, not datapath
     pub fn gauss(&mut self) -> f64 {
         let u1 = self.unit_f64().max(1e-300);
         let u2 = self.unit_f64();

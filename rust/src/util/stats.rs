@@ -10,6 +10,7 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// Population standard deviation.
+#[allow(clippy::disallowed_methods)] // stats harness: sqrt is the point
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

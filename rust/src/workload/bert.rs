@@ -34,6 +34,7 @@ impl Default for BertDims {
 /// Row-wise softmax, shared by this trace generator and the native
 /// `bert_layer` executor in [`crate::runtime`] (one implementation, so the
 /// two paths cannot drift numerically).
+#[allow(clippy::disallowed_methods)] // f32 reference model, not the exact path
 pub(crate) fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
     for r in 0..rows {
         let row = &mut x[r * cols..(r + 1) * cols];
@@ -56,6 +57,7 @@ pub(crate) fn gelu(x: f32) -> f32 {
 
 /// Run one encoder layer on embedded GLUE-like input and collect every
 /// matmul's operand matrices.
+#[allow(clippy::disallowed_methods)] // trace generator, not the exact path
 pub fn bert_layer_trace(dims: BertDims, seed: u64) -> BertTrace {
     let corpus = GlueCorpus::new(
         GlueConfig { seq: dims.seq, d_model: dims.d, ..Default::default() },

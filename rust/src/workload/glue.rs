@@ -34,6 +34,7 @@ pub struct GlueCorpus {
 }
 
 impl GlueCorpus {
+    #[allow(clippy::disallowed_methods)] // corpus generator, not datapath
     pub fn new(cfg: GlueConfig, seed: u64) -> Self {
         let mut rng = XorShift::new(seed ^ 0x617E5);
         let mut embeddings = Vec::with_capacity(cfg.vocab * cfg.d_model);
@@ -85,6 +86,7 @@ impl GlueCorpus {
 
     /// Embed one sentence: `(seq, d_model)` row-major activations with a
     /// sinusoidal positional component.
+    #[allow(clippy::disallowed_methods)] // corpus generator, not datapath
     pub fn embed_sentence(&self, rng: &mut XorShift) -> Vec<f32> {
         let toks = self.sample_tokens(rng);
         let d = self.cfg.d_model;

@@ -1,0 +1,105 @@
+//! Analysis-tier gate (DESIGN.md §Analysis): the CI-facing battery behind
+//! `repro analyze --gate`.
+//!
+//! Four properties, mirroring the acceptance criteria of the analysis
+//! tier:
+//!
+//! 1. **All green on the shipped widths** — every derived obligation
+//!    passes on [`StorageEnv::actual`], and the obligation set covers
+//!    every registered backend under every paper format.
+//! 2. **The proof artifact is byte-deterministic** — two renders of the
+//!    same report are byte-identical, so CI can `cmp` the checked-in
+//!    `ANALYSIS_report.json` against a fresh run.
+//! 3. **The gate can fail** — each named storage fault breaks at least
+//!    one obligation (a gate that cannot fail proves nothing).
+//! 4. **The proved bounds hold at runtime** — after driving every
+//!    registered backend over every oracle distribution, the telemetry
+//!    hub's observed occupancy / kernel-lane maxima stay within the
+//!    statically derived ceilings.
+
+use online_fp_add::analysis::{self, AnalysisReport, StorageEnv};
+use online_fp_add::formats::PAPER_FORMATS;
+use online_fp_add::reduce::registry;
+use online_fp_add::telemetry;
+
+fn actual_report() -> AnalysisReport {
+    analysis::analyze(&StorageEnv::actual())
+}
+
+#[test]
+fn every_obligation_passes_and_covers_all_backends_and_formats() {
+    let report = actual_report();
+    let failed = report.failed();
+    assert!(
+        failed.is_empty(),
+        "static width obligations failed: {:?}",
+        failed.iter().map(|o| format!("{}/{}/{}", o.format, o.backend, o.id)).collect::<Vec<_>>()
+    );
+    for fmt in PAPER_FORMATS {
+        // Format-level obligations (shared frame + hw model) and one set
+        // per registered backend.
+        assert!(report.covers(fmt.name, "-"), "no format-level obligations for {}", fmt.name);
+        for backend in registry::names() {
+            assert!(
+                report.covers(fmt.name, backend),
+                "no obligation covers {} x {backend}",
+                fmt.name
+            );
+        }
+    }
+}
+
+#[test]
+fn proof_artifact_is_byte_deterministic() {
+    let (a, b) = (actual_report().to_json(), actual_report().to_json());
+    assert_eq!(a, b, "two analyzer runs rendered different artifacts");
+    assert!(a.contains("\"schema\": \"ofa-analysis-v1\""));
+    assert!(a.contains("\"failed\": 0"));
+    assert!(a.ends_with("}\n"));
+}
+
+#[test]
+fn every_seeded_fault_trips_the_gate() {
+    for fault in StorageEnv::fault_names() {
+        let env = StorageEnv::with_fault(fault).expect("known fault name");
+        let report = analysis::analyze(&env);
+        assert!(
+            !report.failed().is_empty(),
+            "seeded fault {fault:?} left every obligation green"
+        );
+        // The faulted artifact must still serialize (CI inspects it).
+        assert!(report.to_json().contains("\"pass\": false"));
+    }
+}
+
+/// The runtime cross-check: exercise every registered backend over every
+/// oracle distribution and paper format, then assert the telemetry
+/// maxima the datapath actually produced sit inside the statically
+/// proved bounds. Liveness is asserted too — a gate reading empty
+/// histograms would pass vacuously.
+#[test]
+fn telemetry_observed_maxima_stay_within_proved_bounds() {
+    let report = actual_report();
+    let reduced = analysis::exercise_backends(96, 4);
+    assert!(reduced > 0, "exercise loop reduced no terms");
+
+    let hub = telemetry::global();
+    assert!(
+        hub.kernel.block_lanes.max() > 0,
+        "kernel lane-width histogram stayed empty — observation site lost?"
+    );
+    assert!(
+        hub.accum.occupancy.max() > 0,
+        "EIA occupancy histogram stayed empty — observation site lost?"
+    );
+
+    for bound in analysis::runtime_check(&report, hub) {
+        assert!(
+            bound.pass(),
+            "{}: observed {} exceeds the proved bound {}",
+            bound.name,
+            bound.observed,
+            bound.bound
+        );
+    }
+}
