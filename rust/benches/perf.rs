@@ -63,6 +63,7 @@ fn main() {
     records.push(BenchRecord::new(r.clone()).param("terms_per_s", r.throughput(256.0 * 32.0)));
 
     header("SoA kernel vs scalar ⊙ fold (hot reduction path, exact specs)");
+    println!("simd dispatch: {}", online_fp_add::arith::simd::active_paths());
     // The acceptance series: one record per (backend, format, block size),
     // names carrying the `reduce scalar` / `reduce kernel` series labels CI
     // asserts on. 1024-term chunks, full-operand-space terms (maximal
@@ -96,6 +97,36 @@ fn main() {
             );
             let r = bench(
                 &format!("reduce kernel {fname} n={n_reduce} b={block}"),
+                target_seconds(0.6),
+                || {
+                    black_box(online_fp_add::stream::reduce_chunk_with(&plan, &terms));
+                },
+            );
+            let tput = r.throughput(n_reduce as f64);
+            println!(
+                "{}   [{:.1} M terms/s, {:.2}x scalar]",
+                r.line(),
+                tput / 1e6,
+                tput / scalar_tput
+            );
+            records.push(
+                BenchRecord::new(r)
+                    .param("n", n_reduce as f64)
+                    .param("block", block as f64)
+                    .param("terms_per_s", tput)
+                    .param("speedup_vs_scalar", tput / scalar_tput),
+            );
+        }
+        // The vectorized kernel: same blocks as the scalar kernel so the
+        // two series read side by side; speedup_vs_scalar is the
+        // acceptance param the issue gates on.
+        for block in [8usize, 64, 256] {
+            let plan = ReducePlan::with_backend(
+                spec,
+                registry::sel("simd").unwrap().with_block(block).unwrap(),
+            );
+            let r = bench(
+                &format!("reduce simd {fname} n={n_reduce} b={block}"),
                 target_seconds(0.6),
                 || {
                     black_box(online_fp_add::stream::reduce_chunk_with(&plan, &terms));

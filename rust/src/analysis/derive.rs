@@ -19,7 +19,7 @@
 
 use super::domain::{clog2, MagBits};
 use crate::accum::{MAX_BINS, SPILL_LIMIT_LOG2};
-use crate::arith::{wide, AccSpec, PROVED_TERMS_LOG2, SIG_BOUND_BITS};
+use crate::arith::{simd, wide, AccSpec, PROVED_TERMS_LOG2, SIG_BOUND_BITS};
 use crate::formats::FpFormat;
 use crate::hw::datapath::DatapathParams;
 use crate::reduce::registry;
@@ -330,6 +330,68 @@ pub fn derive_obligations(env: &StorageEnv) -> Vec<Obligation> {
                         "occupied bins per drain (telemetry cross-checked bound)".to_string(),
                     ));
                 }
+                "simd" => {
+                    // The vectorized kernel shares the scalar kernel's
+                    // datapath bit-for-bit (same lift, same block/combine
+                    // accumulators, same clamp), so its first four
+                    // obligations mirror the kernel's exactly. The one new
+                    // intermediate is the 8-lane i64 chunk sum of the
+                    // portable-SIMD narrow sub-path, which is only entered
+                    // when f <= VEC_NARROW_MAX_F.
+                    let block = caps.block.unwrap_or(1) as u64;
+                    let b_log2 = clog2(block);
+                    out.push(ob(
+                        "simd-lane-lift",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, 0),
+                        lane,
+                        "single-lane (sig << f) lift vs the block accumulator lane".to_string(),
+                    ));
+                    out.push(ob(
+                        "simd-block-acc",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, b_log2),
+                        lane,
+                        format!("per-block accumulator with clog2(block={block}) carry headroom"),
+                    ));
+                    out.push(ob(
+                        "simd-combine-acc",
+                        fmt,
+                        entry.name,
+                        acc_bits(fmt, f, t),
+                        lane,
+                        format!("cross-block combine accumulator at 2^{t} terms"),
+                    ));
+                    let live = if spec.narrow { sig + f } else { sig };
+                    out.push(ob(
+                        "simd-shift-clamp",
+                        fmt,
+                        entry.name,
+                        live,
+                        env.shift_clamp,
+                        format!(
+                            "live magnitude bits below the {}-bit alignment-shift clamp",
+                            env.shift_clamp
+                        ),
+                    ));
+                    // Vector sub-path lane bound: sig_bound + max vector f
+                    // + clog2(LANES) carry + sign must fit the i64 lanes
+                    // (25 + 35 + 3 + 1 = 64 — a designed margin of zero).
+                    out.push(ob(
+                        "simd-vector-lane",
+                        fmt,
+                        entry.name,
+                        env.sig_bound_bits + simd::VEC_NARROW_MAX_F + clog2(simd::LANES as u64) + 1,
+                        64,
+                        format!(
+                            "{}-lane i64 chunk sum at the f<={} vector-path ceiling",
+                            simd::LANES,
+                            simd::VEC_NARROW_MAX_F
+                        ),
+                    ));
+                }
                 other => {
                     // A backend registered after this analyzer froze gets a
                     // deliberately failing obligation: extend the analyzer
@@ -400,8 +462,9 @@ mod tests {
     #[test]
     fn fixed_obligation_count_and_coverage() {
         let obs = derive_obligations(&StorageEnv::actual());
-        // 22 per wide format (FP32, BF16) + 23 per narrow FP8 format.
-        assert_eq!(obs.len(), 2 * 22 + 3 * 23);
+        // 29 per wide format (FP32, BF16) + 30 per narrow FP8 format
+        // (7 simd obligations per format since the "simd" registration).
+        assert_eq!(obs.len(), 2 * 29 + 3 * 30);
         for fmt in crate::formats::PAPER_FORMATS {
             for backend in registry::names() {
                 assert!(

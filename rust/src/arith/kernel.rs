@@ -66,7 +66,7 @@ pub const DEFAULT_BLOCK: usize = 64;
 /// identity's λ and never lift a block max) and the signed significand.
 /// The single source of truth for the lane-encoding convention.
 #[inline]
-fn decode_term(t: &Fp) -> (i32, i64) {
+pub(crate) fn decode_term(t: &Fp) -> (i32, i64) {
     debug_assert!(t.is_finite(), "kernel lanes must be finite (screen specials first)");
     let s = t.signed_sig();
     // Zero lanes carry (0, 0): λ = 0 is the identity level, below every
@@ -112,9 +112,12 @@ pub fn block_state(eff: &[i32], sig: &[i64], spec: AccSpec) -> AlignAcc {
         let mut dropped = 0u128;
         for (&e, &s) in eff.iter().zip(sig) {
             let m = (s as i128) << f;
-            // Clamps: d ≥ 128 is pure sign fill either way, and a dead
-            // lane's arbitrary `eff` must not underflow the cast.
-            let d = (lambda - e).clamp(0, 127) as u32;
+            // Clamps: d ≥ 128 is pure sign fill either way (every narrow
+            // magnitude sits below bit 127). The subtraction runs widened
+            // to i64: dead (sig == 0) lanes carry *arbitrary* `eff`
+            // entries (the runtime field encoding relies on it), and
+            // `lambda - i32::MIN` overflows a bare i32 in debug builds.
+            let d = (lambda as i64 - e as i64).clamp(0, 127) as u32;
             acc += m >> d;
             dropped |= (m as u128) & ((1u128 << d) - 1);
         }
@@ -126,21 +129,24 @@ pub fn block_state(eff: &[i32], sig: &[i64], spec: AccSpec) -> AlignAcc {
     // composition, no dropped bits), so each lane is one cheap
     // `from_i64_shl` + add — no full-width right shifts. Exact frames have
     // `f = exp_range ≥ d` always, so they never leave this arm.
-    let f = spec.f as i32;
+    let f = spec.f as i64;
     let mut acc = WideInt::ZERO;
     let mut sticky = false;
     for (&e, &s) in eff.iter().zip(sig) {
         if s == 0 {
             continue;
         }
-        let d = (lambda - e).max(0);
+        // Widened like the narrow path so the distance arithmetic can
+        // never overflow, whatever a (live) exponent field holds.
+        let d = (lambda as i64 - e as i64).max(0);
         if d <= f {
             acc = acc.add(&WideInt::from_i64_shl(s, (f - d) as u32));
         } else {
             // Truncating wide frame: the net right shift runs on i128 (a
             // signed significand always fits i64), sticky from the bits it
             // drops — the same bits `(m << f).shr_sticky(d)` would report.
-            let sh = ((d - f) as u32).min(127);
+            // min(127) is sign-fill-equivalent past 63 for any i64 lane.
+            let sh = ((d - f) as u64).min(127) as u32;
             sticky |= (s as u128) & ((1u128 << sh) - 1) != 0;
             acc = acc.add(&WideInt::from_i128((s as i128) >> sh));
         }
@@ -429,6 +435,22 @@ mod tests {
         assert_eq!(st.lambda, 5);
         assert!(!st.sticky);
         assert_eq!(st.acc, WideInt::from_i64_shl(3, spec.f));
+    }
+
+    #[test]
+    fn dead_lane_extreme_exponents_do_not_overflow_the_distance() {
+        // The bugfix this PR pins: the narrow path computes `lambda - e`
+        // on dead lanes whose `eff` entry is arbitrary; `e = i32::MIN`
+        // used to overflow the i32 subtraction in debug builds. Extreme
+        // entries must be plain identities on both accumulator paths.
+        for spec in [AccSpec::truncated(16), AccSpec::exact(BF16)] {
+            let eff = [i32::MIN, 7, i32::MAX, i32::MIN + 1];
+            let sig = [0i64, 3, 0, 0];
+            let st = block_state(&eff, &sig, spec);
+            assert_eq!(st.lambda, 7, "{spec:?}");
+            assert!(!st.sticky, "{spec:?}");
+            assert_eq!(st.acc, WideInt::from_i64_shl(3, spec.f), "{spec:?}");
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod normalize;
 pub mod online;
 pub mod operator;
 pub mod oracle;
+pub mod simd;
 pub mod tree;
 pub mod wide;
 

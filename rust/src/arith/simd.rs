@@ -1,0 +1,499 @@
+//! Vectorized SoA align-and-add kernel: the `"simd"` entry of the
+//! reduction-backend registry (DESIGN.md §Kernel, SIMD subsection).
+//!
+//! Same block geometry and bit-identical semantics as
+//! [`super::kernel::block_state`] — the paper's observation that the fused
+//! incremental align-and-add step has *no serial dependence inside a block*
+//! (one λ, then every lane aligns independently) is exactly what makes the
+//! block body data-parallel. Two loops vectorize:
+//!
+//! 1. **Block-λ max sweep** — dead lanes (`sig == 0`) are masked to the
+//!    identity level into a stack staging buffer, then the max runs
+//!    8-lanes-wide. Dispatch, per process, in priority order:
+//!    * AVX2 (`_mm256_max_epi32`), detected **at runtime** on x86_64 and
+//!      cached — no compile-time feature or `-C target-cpu` required;
+//!    * portable `std::simd` (`i32x8::simd_max`), when the crate is built
+//!      with the nightly-gated `simd` cargo feature;
+//!    * a scalar fold — the guaranteed fallback on every platform.
+//! 2. **Narrow-path align-accumulate** — lane-parallel `(sig << f) >> d`
+//!    with the dropped-bit masks OR-folded across the vector
+//!    (`std::simd` only: x86 lacks a 64-bit arithmetic variable shift
+//!    below AVX-512, so there is no AVX2 leg for this loop). The vector
+//!    sub-path is entered only when `f <=` [`VEC_NARROW_MAX_F`] and the
+//!    chunk's maximum shift distance is ≤ [`VEC_NARROW_MAX_SHIFT`]; any
+//!    other chunk falls back to the scalar mirror of the kernel formula.
+//!    Per-chunk lane sums stay inside i64 by the bound
+//!    `SIG_BOUND_BITS + VEC_NARROW_MAX_F + log2(LANES) + 1 = 64` — pinned
+//!    as the `simd-vector-lane` obligation in `analysis::derive`.
+//!
+//! The wide (`WideInt`) path and every scalar fallback mirror the kernel's
+//! formulas verbatim, so `"simd"` is **bit-identical to `"kernel"` at every
+//! `(spec, block)`** — not just on exact specs — and inherits the kernel's
+//! capability surface. `tests/simd_edge.rs` pins lane tails, sub-vector
+//! blocks, all-dead-lane vectors and mixed narrow/wide specs across all
+//! five paper formats; the registry rotation puts it under the conformance
+//! suite and the differential oracle automatically.
+
+// Exact-datapath module: native float arithmetic and lossy casts are
+// forbidden here (clippy.toml, DESIGN.md §Analysis).
+#![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
+
+use super::kernel::{decode_soa, decode_term, flush_kernel_health, DEFAULT_BLOCK};
+use super::operator::{op_combine, AlignAcc};
+use super::{AccSpec, WideInt};
+use crate::formats::Fp;
+
+/// Vector width (i32/i64 lanes per SIMD op): one AVX2 register of i32s,
+/// one `i64x8` for the portable align path.
+pub const LANES: usize = 8;
+
+/// The vectorized narrow align-accumulate only engages when the frame's
+/// guard `f` is at most this: `SIG_BOUND_BITS (25) + 35 + clog2(LANES) (3)
+/// + 1 sign = 64` keeps an 8-lane chunk sum exactly inside an i64 lane
+/// (the `simd-vector-lane` analysis obligation, margin 0). Every exact
+/// spec and wider truncated frame takes the scalar mirror instead.
+pub const VEC_NARROW_MAX_F: u32 = 35;
+
+/// Maximum per-chunk alignment distance the vector sub-path handles; a
+/// chunk whose max distance exceeds this (possible up to the kernel's 127
+/// clamp) falls back to the scalar mirror for that chunk. 62 keeps every
+/// vector shift strictly inside the i64 lane width.
+pub const VEC_NARROW_MAX_SHIFT: u32 = 62;
+
+// ---- block-λ max sweep -------------------------------------------------
+
+/// Scalar max fold — the guaranteed fallback, and the tail handler for
+/// both vector legs.
+#[inline]
+fn max_scalar(vals: &[i32]) -> i32 {
+    vals.iter().copied().fold(0, i32::max)
+}
+
+/// Runtime AVX2 probe, cached per process (one `cpuid` ever; probing
+/// twice under a race is harmless — both writers store the same answer).
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unprobed, 1 = available, 2 = absent.
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+    match AVX2.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = is_x86_feature_detected!("avx2");
+            AVX2.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+/// AVX2 leg of the λ sweep: 8-wide `max_epi32` accumulator, scalar tail.
+///
+/// # Safety
+/// The caller must have verified AVX2 support at runtime
+/// ([`avx2_available`]).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_avx2(vals: &[i32]) -> i32 {
+    use std::arch::x86_64::{_mm256_loadu_si256, _mm256_max_epi32, _mm256_storeu_si256};
+    debug_assert!(vals.len() >= LANES);
+    let ptr = vals.as_ptr();
+    // Unaligned loads: the staging buffer is a plain [i32; 64] on the
+    // stack with no 32-byte alignment guarantee.
+    let mut acc = _mm256_loadu_si256(ptr.cast());
+    let mut i = LANES;
+    while i + LANES <= vals.len() {
+        acc = _mm256_max_epi32(acc, _mm256_loadu_si256(ptr.add(i).cast()));
+        i += LANES;
+    }
+    let mut lanes = [0i32; LANES];
+    _mm256_storeu_si256(lanes.as_mut_ptr().cast(), acc);
+    let mut m = max_scalar(&lanes);
+    if i < vals.len() {
+        m = m.max(max_scalar(&vals[i..]));
+    }
+    m
+}
+
+/// Portable `std::simd` leg of the λ sweep (nightly `simd` feature).
+#[cfg(feature = "simd")]
+fn max_portable(vals: &[i32]) -> i32 {
+    use std::simd::prelude::*;
+    debug_assert!(vals.len() >= LANES);
+    let mut acc = i32x8::from_slice(&vals[..LANES]);
+    let mut i = LANES;
+    while i + LANES <= vals.len() {
+        acc = acc.simd_max(i32x8::from_slice(&vals[i..i + LANES]));
+        i += LANES;
+    }
+    let mut m = acc.reduce_max().max(0);
+    if i < vals.len() {
+        m = m.max(max_scalar(&vals[i..]));
+    }
+    m
+}
+
+/// Max of a pre-masked (dead lanes already zeroed) staging slice, through
+/// whichever vector leg this process/build has. All legs compute the same
+/// exact maximum — dispatch is a pure speed choice.
+fn masked_max(vals: &[i32]) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    if vals.len() >= LANES && avx2_available() {
+        // SAFETY: AVX2 support was verified at runtime just above.
+        return unsafe { max_avx2(vals) };
+    }
+    #[cfg(feature = "simd")]
+    if vals.len() >= LANES {
+        return max_portable(vals);
+    }
+    max_scalar(vals)
+}
+
+/// Block-λ sweep: mask dead lanes to the identity level into a stack
+/// staging buffer ([`DEFAULT_BLOCK`] wide — oversize blocks sweep in
+/// stages), then take the vectorized max. Bit-identical to the kernel's
+/// branch-free scalar sweep: a masked dead lane contributes 0, exactly
+/// what `if s == 0 { 0 } else { e }` contributes.
+fn block_lambda(eff: &[i32], sig: &[i64]) -> i32 {
+    let mut lambda = 0i32;
+    let mut buf = [0i32; DEFAULT_BLOCK];
+    for (e_chunk, s_chunk) in eff.chunks(DEFAULT_BLOCK).zip(sig.chunks(DEFAULT_BLOCK)) {
+        for ((b, &e), &s) in buf.iter_mut().zip(e_chunk).zip(s_chunk) {
+            *b = if s == 0 { 0 } else { e };
+        }
+        lambda = lambda.max(masked_max(&buf[..e_chunk.len()]));
+    }
+    lambda
+}
+
+// ---- narrow align-accumulate ------------------------------------------
+
+/// The kernel's scalar narrow-path formula, verbatim (the bit-identity
+/// contract): widened distance so dead lanes' arbitrary `eff` entries
+/// cannot overflow, 127 clamp (pure sign fill past it — every narrow
+/// magnitude sits below bit 127), dropped bits OR-folded.
+#[inline]
+fn narrow_lane(lambda: i32, e: i32, s: i64, f: u32, acc: &mut i128, dropped: &mut u128) {
+    let m = (s as i128) << f;
+    let d = (lambda as i64 - e as i64).clamp(0, 127) as u32;
+    *acc += m >> d;
+    *dropped |= (m as u128) & ((1u128 << d) - 1);
+}
+
+/// Vectorized prefix of the narrow align-accumulate: processes the
+/// longest multiple-of-[`LANES`] prefix and returns how many lanes it
+/// covered (the caller mops up the tail with [`narrow_lane`]). Chunks
+/// whose max distance exceeds [`VEC_NARROW_MAX_SHIFT`] run the scalar
+/// mirror inline, so the return value is always the full prefix.
+#[cfg(feature = "simd")]
+fn narrow_vec_prefix(
+    lambda: i32,
+    eff: &[i32],
+    sig: &[i64],
+    f: u32,
+    acc: &mut i128,
+    dropped: &mut u128,
+) -> usize {
+    use std::simd::prelude::*;
+    debug_assert!(f <= VEC_NARROW_MAX_F, "caller gates the vector sub-path on f");
+    let lam = i64x8::splat(lambda as i64);
+    let zero = i64x8::splat(0);
+    let clamp = i64x8::splat(127);
+    let fv = i64x8::splat(f as i64);
+    let ones = u64x8::splat(1);
+    let mut done = 0usize;
+    while done + LANES <= eff.len() {
+        let e: i64x8 = i32x8::from_slice(&eff[done..done + LANES]).cast();
+        let d = (lam - e).simd_clamp(zero, clamp);
+        if d.reduce_max() > VEC_NARROW_MAX_SHIFT as i64 {
+            // Far-spread chunk (d can reach the kernel's 127 clamp, past
+            // the i64 lane width): scalar mirror for these 8 lanes, the
+            // vector path resumes on the next chunk.
+            for (&le, &ls) in eff[done..done + LANES].iter().zip(&sig[done..done + LANES]) {
+                narrow_lane(lambda, le, ls, f, acc, dropped);
+            }
+            done += LANES;
+            continue;
+        }
+        // All shifts in [0, 62]: `(sig << f) >> d` stays exact per lane
+        // (|sig| < 2^25, f <= 35) and the 8-lane sum fits i64 with margin
+        // 0 (the `simd-vector-lane` obligation), so one horizontal
+        // reduce_sum per chunk lands in the i128 accumulator losslessly.
+        let m = i64x8::from_slice(&sig[done..done + LANES]) << fv;
+        let shifted = m >> d;
+        let mask = (ones << d.cast::<u64>()) - ones;
+        let bits = m.cast::<u64>() & mask;
+        *acc += i128::from(shifted.reduce_sum());
+        *dropped |= u128::from(bits.reduce_or());
+        done += LANES;
+    }
+    done
+}
+
+/// Stable-build stand-in: no vector prefix, the caller's scalar tail loop
+/// covers everything. Keeps [`narrow_state`] branch-free of `cfg` blocks.
+#[cfg(not(feature = "simd"))]
+#[inline]
+fn narrow_vec_prefix(
+    _lambda: i32,
+    _eff: &[i32],
+    _sig: &[i64],
+    _f: u32,
+    _acc: &mut i128,
+    _dropped: &mut u128,
+) -> usize {
+    0
+}
+
+fn narrow_state(lambda: i32, eff: &[i32], sig: &[i64], spec: AccSpec) -> AlignAcc {
+    let f = spec.f;
+    let mut acc = 0i128;
+    let mut dropped = 0u128;
+    let tail = if f <= VEC_NARROW_MAX_F {
+        narrow_vec_prefix(lambda, eff, sig, f, &mut acc, &mut dropped)
+    } else {
+        0
+    };
+    for (&e, &s) in eff[tail..].iter().zip(&sig[tail..]) {
+        narrow_lane(lambda, e, s, f, &mut acc, &mut dropped);
+    }
+    let sticky = dropped != 0;
+    debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+    AlignAcc { lambda, acc: WideInt::from_i128(acc), sticky }
+}
+
+/// Wide path: the kernel's formulas verbatim (see
+/// [`super::kernel::block_state`] for the shift-composition argument).
+/// Exact frames always have `d <= f`, so this is one `from_i64_shl` + add
+/// per live lane — memory-bound, with nothing left to vectorize that the
+/// λ sweep has not already covered.
+fn wide_state(lambda: i32, eff: &[i32], sig: &[i64], spec: AccSpec) -> AlignAcc {
+    let f = spec.f as i64;
+    let mut acc = WideInt::ZERO;
+    let mut sticky = false;
+    for (&e, &s) in eff.iter().zip(sig) {
+        if s == 0 {
+            continue;
+        }
+        let d = (lambda as i64 - e as i64).max(0);
+        if d <= f {
+            acc = acc.add(&WideInt::from_i64_shl(s, (f - d) as u32));
+        } else {
+            let sh = ((d - f) as u64).min(127) as u32;
+            sticky |= (s as u128) & ((1u128 << sh) - 1) != 0;
+            acc = acc.add(&WideInt::from_i128((s as i128) >> sh));
+        }
+    }
+    debug_assert!(!(spec.exact && sticky), "exact datapath must never drop bits");
+    AlignAcc { lambda, acc, sticky }
+}
+
+/// Vectorized [`super::kernel::block_state`]: bit-identical at every
+/// `(eff, sig, spec)` — the conformance/equivalence batteries and
+/// `tests/simd_edge.rs` pin this, and the registry publishes the kernel's
+/// capability surface for it.
+pub fn block_state_simd(eff: &[i32], sig: &[i64], spec: AccSpec) -> AlignAcc {
+    debug_assert_eq!(eff.len(), sig.len());
+    let lambda = block_lambda(eff, sig);
+    if spec.narrow {
+        return narrow_state(lambda, eff, sig, spec);
+    }
+    wide_state(lambda, eff, sig, spec)
+}
+
+/// Batched SoA reduction through [`block_state_simd`] — the `"simd"`
+/// registry entry's reduce path, mirroring
+/// [`super::kernel::reduce_terms`] (same staging, same block chaining,
+/// same telemetry flush: the simd backend *is* the kernel datapath
+/// geometry, vectorized, so it shares the kernel-health instrumentation
+/// the analysis runtime cross-check reads).
+pub fn reduce_terms_simd(terms: &[Fp], block: usize, spec: AccSpec) -> AlignAcc {
+    assert!(block >= 1, "simd block must be >= 1 (rejected at plan build/parse)");
+    if block <= DEFAULT_BLOCK {
+        let mut eff = [0i32; DEFAULT_BLOCK];
+        let mut sig = [0i64; DEFAULT_BLOCK];
+        let mut state = AlignAcc::IDENTITY;
+        let (mut blocks, mut sticky_blocks) = (0u64, 0u64);
+        for chunk in terms.chunks(block) {
+            for (i, t) in chunk.iter().enumerate() {
+                (eff[i], sig[i]) = decode_term(t);
+            }
+            let part = block_state_simd(&eff[..chunk.len()], &sig[..chunk.len()], spec);
+            blocks += 1;
+            sticky_blocks += part.sticky as u64;
+            state = op_combine(&state, &part, spec);
+        }
+        flush_kernel_health(terms.len(), block, blocks, sticky_blocks, spec);
+        return state;
+    }
+    let mut eff = Vec::new();
+    let mut sig = Vec::new();
+    let mut state = AlignAcc::IDENTITY;
+    let (mut blocks, mut sticky_blocks) = (0u64, 0u64);
+    for chunk in terms.chunks(block) {
+        decode_soa(chunk, &mut eff, &mut sig);
+        let part = block_state_simd(&eff, &sig, spec);
+        blocks += 1;
+        sticky_blocks += part.sticky as u64;
+        state = op_combine(&state, &part, spec);
+    }
+    flush_kernel_health(terms.len(), block, blocks, sticky_blocks, spec);
+    state
+}
+
+/// Which dispatch legs this process actually runs — for bench headers and
+/// `repro backends` so a recorded speedup is attributable to a concrete
+/// code path.
+pub fn active_paths() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return if cfg!(feature = "simd") {
+                "avx2 λ-sweep + portable-simd align"
+            } else {
+                "avx2 λ-sweep + scalar align"
+            };
+        }
+    }
+    if cfg!(feature = "simd") {
+        "portable-simd λ-sweep + portable-simd align"
+    } else {
+        "scalar λ-sweep + scalar align (guaranteed fallback)"
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::float_arithmetic, clippy::cast_precision_loss, clippy::disallowed_methods)]
+mod tests {
+    use super::*;
+    use crate::arith::kernel::{block_state, reduce_terms, scalar_fold};
+    use crate::formats::{FpFormat, BF16, FP8_E5M2, PAPER_FORMATS};
+    use crate::util::prng::XorShift;
+
+    fn mixed_terms(rng: &mut XorShift, fmt: FpFormat, n: usize) -> Vec<Fp> {
+        (0..n)
+            .map(|_| match rng.below(8) {
+                0 => Fp::zero(fmt),
+                1 | 2 => rng.gen_fp_subnormal(fmt),
+                _ => rng.gen_fp_full(fmt),
+            })
+            .collect()
+    }
+
+    /// The load-bearing invariant: simd ≡ kernel bit-for-bit in EVERY
+    /// spec (exact, forced-wide, truncated narrow both sides of the
+    /// vector-path `f` ceiling), at lengths that exercise lane tails.
+    #[test]
+    fn block_state_simd_is_bit_identical_to_the_kernel_in_every_spec() {
+        let mut rng = XorShift::new(0x51D0);
+        for fmt in PAPER_FORMATS {
+            let exact = AccSpec::exact(fmt);
+            let specs = [
+                exact,
+                AccSpec { narrow: false, ..exact },
+                AccSpec::truncated(3),
+                AccSpec::truncated(16),
+                // f = 40 > VEC_NARROW_MAX_F: narrow scalar mirror.
+                AccSpec::truncated(40),
+            ];
+            for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 31, 64, 130] {
+                let terms = mixed_terms(&mut rng, fmt, n);
+                let mut eff = Vec::new();
+                let mut sig = Vec::new();
+                decode_soa(&terms, &mut eff, &mut sig);
+                for spec in specs {
+                    assert_eq!(
+                        block_state_simd(&eff, &sig, spec),
+                        block_state(&eff, &sig, spec),
+                        "{fmt} n={n} {spec:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_terms_simd_matches_the_kernel_and_the_scalar_fold() {
+        let mut rng = XorShift::new(0x51D1);
+        for fmt in PAPER_FORMATS {
+            let exact = AccSpec::exact(fmt);
+            for n in [1usize, 5, 9, 63, 200] {
+                let terms = mixed_terms(&mut rng, fmt, n);
+                let want = scalar_fold(&terms, exact);
+                for block in [1usize, 3, 5, 8, 64, n] {
+                    assert_eq!(
+                        reduce_terms_simd(&terms, block, exact),
+                        want,
+                        "{fmt} n={n} block={block} (exact ≡ fold)"
+                    );
+                }
+                // Truncated specs: simd must still equal the kernel's
+                // [block; block; ...] parenthesisation bit-for-bit.
+                for spec in [AccSpec::truncated(2), AccSpec::truncated(16)] {
+                    for block in [1usize, 3, 8, 64] {
+                        assert_eq!(
+                            reduce_terms_simd(&terms, block, spec),
+                            reduce_terms(&terms, block, spec),
+                            "{fmt} n={n} block={block} {spec:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_lane_adversarial_exponents_are_identities() {
+        // The runtime field encoding pads dead lanes with arbitrary
+        // exponent entries — i32::MIN included (the debug-overflow bug
+        // this PR fixes in the kernel). Both paths, all specs.
+        for spec in [AccSpec::truncated(16), AccSpec::exact(BF16), AccSpec::exact(FP8_E5M2)] {
+            let eff = [i32::MIN, 7, i32::MAX, i32::MIN + 1, 0, -1];
+            let sig = [0i64, 3, 0, 0, 0, 0];
+            let st = block_state_simd(&eff, &sig, spec);
+            assert_eq!(st.lambda, 7, "{spec:?}");
+            assert!(!st.sticky, "{spec:?}");
+            assert_eq!(st.acc, WideInt::from_i64_shl(3, spec.f), "{spec:?}");
+            assert_eq!(st, block_state(&eff, &sig, spec), "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn all_dead_lane_vectors_and_empty_blocks_are_the_identity() {
+        let spec = AccSpec::exact(BF16);
+        assert!(block_state_simd(&[], &[], spec).is_identity());
+        // A full staging buffer of dead lanes with hostile exponents.
+        let eff = vec![i32::MIN; 70];
+        let sig = vec![0i64; 70];
+        assert!(block_state_simd(&eff, &sig, spec).is_identity());
+        let zeros = vec![Fp::zero(BF16); 19];
+        assert!(reduce_terms_simd(&zeros, 8, spec).is_identity());
+        assert!(reduce_terms_simd(&[], 64, spec).is_identity());
+    }
+
+    #[test]
+    fn far_spread_chunks_take_the_fallback_consistently() {
+        // One chunk mixing near (d = 0) and far (d > VEC_NARROW_MAX_SHIFT,
+        // up to past the 127 clamp) lanes forces the per-chunk fallback;
+        // the result must not depend on which leg ran.
+        let spec = AccSpec::truncated(16);
+        assert!(spec.narrow && spec.f <= VEC_NARROW_MAX_F);
+        for far in [63i32, 100, 127, 128, 200, 253] {
+            let lam = 1 + far;
+            let eff = [lam, 1, lam, 1, 1, 1, 1, 1, lam, 1];
+            let sig = [9i64, -5, 3, 7, -7, 1, -1, 5, 2, -3];
+            let got = block_state_simd(&eff, &sig, spec);
+            assert_eq!(got, block_state(&eff, &sig, spec), "far={far}");
+            assert_eq!(got.lambda, lam, "far={far}");
+            assert!(got.sticky, "far={far}: far lanes must drop bits");
+        }
+    }
+
+    #[test]
+    fn active_paths_reports_a_live_dispatch() {
+        let p = active_paths();
+        assert!(p.contains("sweep"), "{p}");
+        // Dispatch probing must be stable across calls.
+        assert_eq!(p, active_paths());
+    }
+}

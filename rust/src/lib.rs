@@ -47,6 +47,12 @@
 //! See `DESIGN.md` for the crate map and the experiment index (including
 //! the perf and calibration notes the code comments cite).
 
+// The portable-SIMD leg of the `"simd"` reduction backend (`arith::simd`)
+// uses the nightly `portable_simd` std API; the off-by-default cargo
+// feature gates it so stable builds compile the runtime-dispatched
+// AVX2/scalar legs unchanged (DESIGN.md §Kernel, SIMD subsection).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod accum;
 pub mod analysis;
 pub mod arith;

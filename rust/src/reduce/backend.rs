@@ -1,5 +1,5 @@
 //! The [`Reducer`] trait — the one lifecycle contract every reduction
-//! backend implements (DESIGN.md §Reducer) — plus the three in-tree
+//! backend implements (DESIGN.md §Reducer) — plus the four in-tree
 //! implementations the registry ships.
 //!
 //! The lifecycle is `ingest → partial → merge/absorb → finish`:
@@ -32,6 +32,7 @@ use super::partial::{Partial, PartialState};
 use super::registry::tele_family_named;
 use crate::accum::Eia;
 use crate::arith::kernel::{block_state, reduce_terms};
+use crate::arith::simd::{block_state_simd, reduce_terms_simd};
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::{AccSpec, WideInt};
 use crate::formats::Fp;
@@ -278,6 +279,112 @@ impl Reducer for KernelReducer {
     }
 }
 
+/// The vectorized SoA kernel backend: [`KernelReducer`]'s exact lifecycle
+/// over the SIMD block datapath ([`reduce_terms_simd`] /
+/// [`block_state_simd`]) — bit-identical to the kernel at every
+/// `(spec, block)` by construction, so everything the kernel's docs say
+/// about ingest seams and block boundaries applies verbatim.
+pub struct SimdReducer {
+    spec: AccSpec,
+    block: usize,
+    state: AlignAcc,
+    terms: u64,
+    tele: &'static telemetry::ReduceFamily,
+}
+
+impl SimdReducer {
+    /// `block` must be ≥ 1 (same contract as [`KernelReducer::new`]).
+    pub fn new(spec: AccSpec, block: usize) -> Self {
+        assert!(block >= 1, "simd block must be >= 1 (enforced at plan build)");
+        SimdReducer {
+            spec,
+            block,
+            state: AlignAcc::IDENTITY,
+            terms: 0,
+            tele: tele_family_named("simd"),
+        }
+    }
+}
+
+impl Reducer for SimdReducer {
+    fn backend_name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn spec(&self) -> AccSpec {
+        self.spec
+    }
+
+    fn ingest(&mut self, terms: &[Fp]) {
+        if !terms.is_empty() {
+            // Kernel-path health counters flush inside `reduce_terms_simd`.
+            let part = reduce_terms_simd(terms, self.block, self.spec);
+            self.state = op_combine(&self.state, &part, self.spec);
+        }
+        self.terms += terms.len() as u64;
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(terms.len() as u64);
+        }
+    }
+
+    fn ingest_decoded(&mut self, eff: &[i32], sig: &[i64]) {
+        debug_assert_eq!(eff.len(), sig.len());
+        let (mut blocks, mut sticky) = (0u64, 0u64);
+        for (e_chunk, s_chunk) in eff.chunks(self.block).zip(sig.chunks(self.block)) {
+            let part = block_state_simd(e_chunk, s_chunk, self.spec);
+            blocks += 1;
+            sticky += part.sticky as u64;
+            self.state = op_combine(&self.state, &part, self.spec);
+        }
+        self.terms += eff.len() as u64;
+        if telemetry::enabled() {
+            self.tele.ingest_calls.inc();
+            self.tele.ingest_terms.add(eff.len() as u64);
+            let k = &telemetry::global().kernel;
+            k.block_sweeps.add(blocks);
+            k.lanes.add(eff.len() as u64);
+            if !eff.is_empty() {
+                k.block_lanes.observe(eff.len().min(self.block) as u64);
+            }
+            if self.spec.narrow {
+                k.narrow_blocks.add(blocks);
+            } else {
+                k.wide_blocks.add(blocks);
+            }
+            k.sticky_activations.add(sticky);
+        }
+    }
+
+    fn absorb(&mut self, partial: &Partial) {
+        self.state = op_combine(&self.state, &partial.resolve(self.spec), self.spec);
+        self.terms += partial.terms;
+        if telemetry::enabled() {
+            self.tele.absorbs.inc();
+        }
+    }
+
+    fn partial(&self) -> Partial {
+        Partial::aligned(self.state, self.terms)
+    }
+
+    fn finish(&self) -> AlignAcc {
+        if telemetry::enabled() {
+            self.tele.finishes.inc();
+        }
+        self.state
+    }
+
+    fn terms(&self) -> u64 {
+        self.terms
+    }
+
+    fn reset(&mut self) {
+        self.state = AlignAcc::IDENTITY;
+        self.terms = 0;
+    }
+}
+
 /// The deferred-alignment backend: terms bank into an exponent-indexed
 /// accumulator ([`Eia`]) and the alignment bill is paid once at `finish`.
 /// Deferred partials absorbed from peers merge losslessly (exact pointwise
@@ -408,6 +515,7 @@ mod tests {
         vec![
             Box::new(FoldReducer::new(spec)),
             Box::new(KernelReducer::new(spec, 7)),
+            Box::new(SimdReducer::new(spec, 7)),
             Box::new(EiaReducer::new(spec)),
         ]
     }
@@ -474,6 +582,7 @@ mod tests {
             for mut r in [
                 Box::new(FoldReducer::new(spec)) as Box<dyn Reducer>,
                 Box::new(KernelReducer::new(spec, 48)),
+                Box::new(SimdReducer::new(spec, 48)),
                 Box::new(EiaReducer::new(spec)),
             ] {
                 let by_terms = reduce_once(&mut *r, &ts);

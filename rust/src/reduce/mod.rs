@@ -4,13 +4,14 @@
 //!
 //! The paper's associativity result (eq. 10) makes max-exponent search,
 //! alignment and addition composable in any order — which is why this
-//! crate grew three interchangeable backends (the scalar `⊙` fold, the
-//! batched SoA kernel, the exponent-indexed accumulator). This module is
+//! crate grew four interchangeable backends (the scalar `⊙` fold, the
+//! batched SoA kernel, its vectorized SIMD variant, the exponent-indexed
+//! accumulator). This module is
 //! the seam that keeps them interchangeable *by construction* instead of
 //! by hand-maintained pattern matches:
 //!
 //! * [`backend`] — the [`Reducer`] trait: the
-//!   `ingest → partial → merge → finish` lifecycle plus the three in-tree
+//!   `ingest → partial → merge → finish` lifecycle plus the four in-tree
 //!   implementations.
 //! * [`partial`] — [`Partial`], the backend-agnostic mergeable state with
 //!   the **one** byte codec that ships reduction state across shard and
@@ -35,7 +36,7 @@ pub mod partial;
 pub mod plan;
 pub mod registry;
 
-pub use backend::{EiaReducer, FoldReducer, KernelReducer, Reducer};
+pub use backend::{EiaReducer, FoldReducer, KernelReducer, Reducer, SimdReducer};
 pub use partial::{Partial, PartialState};
 pub use plan::{PlanBuilder, ReducePlan};
 pub use registry::{BackendEntry, BackendSel, Capabilities};

@@ -4,20 +4,20 @@
 //! CLI parsing (`repro --backend`, `Architecture::parse`), the
 //! differential-oracle rotation, the equivalence batteries and the
 //! conformance suite all iterate [`entries`] instead of hand-maintained
-//! lists — registering a new backend here (e.g. the planned SIMD kernel
-//! variant) automatically puts it in front of every gate and every CLI
-//! surface.
+//! lists — registering a new backend here automatically puts it in front
+//! of every gate and every CLI surface (the `"simd"` entry landed exactly
+//! that way: zero consumer edits).
 //!
 //! A [`BackendSel`] is a validated selection of one registry entry plus
 //! its parameters; it is the `Copy` value configs and plans carry, and its
 //! `Display`/`FromStr` grammar (`"scalar"`, `"kernel"`, `"kernel:<block>"`,
-//! `"eia"`) is the one spelling used everywhere.
+//! `"eia"`, `"simd[:<block>]"`) is the one spelling used everywhere.
 
 // Exact-datapath module: native float arithmetic and lossy casts are
 // forbidden here (clippy.toml, DESIGN.md §Analysis).
 #![deny(clippy::float_arithmetic, clippy::cast_precision_loss)]
 
-use super::backend::{EiaReducer, FoldReducer, KernelReducer, Reducer};
+use super::backend::{EiaReducer, FoldReducer, KernelReducer, Reducer, SimdReducer};
 use crate::arith::kernel::DEFAULT_BLOCK;
 use crate::arith::operator::AlignAcc;
 use crate::arith::AccSpec;
@@ -88,7 +88,7 @@ impl BackendEntry {
     }
 }
 
-// ---- the three in-tree backends --------------------------------------
+// ---- the four in-tree backends ---------------------------------------
 
 fn scalar_caps(spec: AccSpec, _block: Option<usize>) -> Capabilities {
     Capabilities {
@@ -129,6 +129,21 @@ fn kernel_make(spec: AccSpec, block: Option<usize>) -> Box<dyn Reducer> {
     Box::new(KernelReducer::new(spec, block.unwrap_or(DEFAULT_BLOCK)))
 }
 
+fn simd_caps(spec: AccSpec, block: Option<usize>) -> Capabilities {
+    // Bit-identical to the kernel at every (spec, block) by construction
+    // (same block-λ/align semantics, vectorized — see arith::simd), so it
+    // publishes exactly the kernel's capability surface.
+    kernel_caps(spec, block)
+}
+
+fn simd_reduce(terms: &[Fp], spec: AccSpec, block: Option<usize>) -> AlignAcc {
+    crate::arith::simd::reduce_terms_simd(terms, block.unwrap_or(DEFAULT_BLOCK), spec)
+}
+
+fn simd_make(spec: AccSpec, block: Option<usize>) -> Box<dyn Reducer> {
+    Box::new(SimdReducer::new(spec, block.unwrap_or(DEFAULT_BLOCK)))
+}
+
 fn eia_caps(spec: AccSpec, _block: Option<usize>) -> Capabilities {
     Capabilities {
         fold_bit_identical: spec.exact,
@@ -150,7 +165,7 @@ fn eia_make(spec: AccSpec, _block: Option<usize>) -> Box<dyn Reducer> {
     Box::new(EiaReducer::new(spec))
 }
 
-static REGISTRY: [BackendEntry; 3] = [
+static REGISTRY: [BackendEntry; 4] = [
     BackendEntry {
         name: "scalar",
         summary: "serial radix-2 ⊙ fold (Algorithm 3) — the reference",
@@ -178,6 +193,15 @@ static REGISTRY: [BackendEntry; 3] = [
         reduce_fn: eia_reduce,
         make_fn: eia_make,
     },
+    BackendEntry {
+        name: "simd",
+        summary: "vectorized SoA kernel (runtime AVX2 λ-sweep, lane-parallel align)",
+        takes_block: true,
+        default_block: Some(DEFAULT_BLOCK),
+        caps_fn: simd_caps,
+        reduce_fn: simd_reduce,
+        make_fn: simd_make,
+    },
 ];
 
 /// All registered backends, in registration order.
@@ -189,7 +213,7 @@ pub fn entries() -> &'static [BackendEntry] {
 //
 // Backend-indexed metrics live in fixed telemetry slots keyed by registry
 // position; the names are registered once so snapshots can label samples
-// `backend="scalar"` etc. Slot resolution is a scan over three entries —
+// `backend="scalar"` etc. Slot resolution is a scan over four entries —
 // cheap enough for the per-call dispatch path, and reducers cache the
 // returned `&'static` family at construction anyway.
 
@@ -360,28 +384,33 @@ mod tests {
     use crate::formats::BF16;
 
     #[test]
-    fn registry_lists_all_three_backends() {
-        assert_eq!(names(), vec!["scalar", "kernel", "eia"]);
+    fn registry_lists_all_four_backends() {
+        assert_eq!(names(), vec!["scalar", "kernel", "eia", "simd"]);
         for e in entries() {
             assert!(by_name(e.name).is_some());
             assert_eq!(e.sel().name(), e.name);
         }
-        assert!(by_name("simd").is_none());
+        assert!(by_name("avx2").is_none());
     }
 
     #[test]
     fn selection_parse_display_roundtrip() {
-        for s in ["scalar", "kernel:64", "kernel:3", "eia"] {
+        for s in ["scalar", "kernel:64", "kernel:3", "eia", "simd:8", "simd:64"] {
             let parsed: BackendSel = s.parse().unwrap();
             assert_eq!(parsed.to_string(), s);
             assert_eq!(parsed.to_string().parse::<BackendSel>().unwrap(), parsed);
         }
-        // Bare "kernel" fills the default block in the canonical spelling.
+        // Bare block-taking names fill the default block in the canonical
+        // spelling.
         let k: BackendSel = "kernel".parse().unwrap();
         assert_eq!(k.block(), Some(DEFAULT_BLOCK));
         assert_eq!(k.to_string(), format!("kernel:{DEFAULT_BLOCK}"));
-        assert!("simd".parse::<BackendSel>().is_err());
+        let v: BackendSel = "simd".parse().unwrap();
+        assert_eq!(v.block(), Some(DEFAULT_BLOCK));
+        assert_eq!(v.to_string(), format!("simd:{DEFAULT_BLOCK}"));
+        assert!("avx2".parse::<BackendSel>().is_err());
         assert!("kernel:x".parse::<BackendSel>().is_err());
+        assert!("simd:0".parse::<BackendSel>().is_err());
     }
 
     #[test]
@@ -413,6 +442,12 @@ mod tests {
         assert!(k1.fold_bit_identical, "block=1 degenerates to the fold");
         let eia = BackendSel::named("eia").unwrap().capabilities(trunc);
         assert!(!eia.fold_bit_identical && eia.order_invariant && eia.lossless_merge);
+        // simd mirrors the kernel's contract exactly, block semantics
+        // included (bit-identical to the kernel at every spec).
+        let simd = BackendSel::named("simd").unwrap().capabilities(trunc);
+        assert_eq!(simd, BackendSel::named("kernel").unwrap().capabilities(trunc));
+        let v1 = sel("simd:1").unwrap().capabilities(trunc);
+        assert!(v1.fold_bit_identical, "block=1 degenerates to the fold");
     }
 
     #[test]

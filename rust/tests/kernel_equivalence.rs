@@ -207,6 +207,97 @@ fn plan_negotiation_and_registry_backends_reduce_consistently() {
 }
 
 #[test]
+fn shift_clamp_edges_pin_kernel_and_simd_to_the_scalar_fold() {
+    // The clamp boundary itself: alignment distances {126, 127, 128, 200}
+    // straddle the narrow path's `clamp(0, 127)` and the wide path's
+    // `min(127)` — exactly where an off-by-one would silently truncate one
+    // live bit or lose a sticky. Anchor-first term vectors keep λ constant
+    // after the first combine, so the kernel's block-parenthesised reduce
+    // equals the radix-2 fold even in truncated frames, making the fold
+    // the pinning reference at every block size.
+    use online_fp_add::arith::simd::reduce_terms_simd;
+    use online_fp_add::formats::FP32;
+
+    let narrow = AccSpec::truncated(16);
+    assert!(narrow.narrow);
+    let wide = AccSpec { narrow: false, ..narrow };
+    for d in [126i32, 127, 128, 200] {
+        assert!(1 + d <= FP32.max_normal_exp(), "anchor exponent stays finite");
+        let anchor = Fp::pack(false, 1 + d, 0x2a_aaaa, FP32);
+        // All three smalls sit at effective exponent 1, distance d from
+        // the anchor: the minimal subnormal, the maximal negative
+        // subnormal, and the negative minimal-exponent normal.
+        let smalls = [
+            Fp::pack(false, 0, 1, FP32),
+            Fp::pack(true, 0, 0x7f_ffff, FP32),
+            Fp::pack(true, 1, 0x55_5555, FP32),
+        ];
+        for small in smalls {
+            let terms = vec![anchor, small, small];
+            for spec in [narrow, wide] {
+                let want = scalar_fold(&terms, spec);
+                // Every live bit of the small term sits below the clamp at
+                // these distances, so its whole magnitude must land in
+                // sticky — on both accumulator paths.
+                assert!(want.sticky, "d={d} narrow={}: sticky edge lost", spec.narrow);
+                for block in [1usize, 2, 3, 8] {
+                    assert_eq!(
+                        reduce_terms(&terms, block, spec),
+                        want,
+                        "kernel d={d} block={block} narrow={}",
+                        spec.narrow
+                    );
+                    assert_eq!(
+                        reduce_terms_simd(&terms, block, spec),
+                        want,
+                        "simd d={d} block={block} narrow={}",
+                        spec.narrow
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decoded_dead_lanes_with_adversarial_exponents_are_inert_in_every_backend() {
+    // `ingest_decoded` lanes with sig == 0 are dead regardless of what eff
+    // says — including i32::MIN, which used to overflow the kernel's bare
+    // i32 `lambda - e` distance in debug builds. Every registered backend
+    // must treat such lanes as exact identities.
+    use online_fp_add::arith::wide::WideInt;
+
+    let eff = [i32::MIN, 9, i32::MAX, i32::MIN + 1, 0];
+    let sig = [0i64, 5, 0, 0, 0];
+    for fmt in PAPER_FORMATS {
+        let mut specs = exact_specs(fmt);
+        specs.push(AccSpec::truncated(16));
+        for spec in specs {
+            let mut results = Vec::new();
+            for entry in registry::entries() {
+                let mut r = entry.sel().reducer(spec);
+                r.ingest_decoded(&eff, &sig);
+                let got = r.finish();
+                assert_eq!(got.lambda, 9, "{fmt} {} narrow={}", entry.name, spec.narrow);
+                assert!(!got.sticky, "{fmt} {} narrow={}", entry.name, spec.narrow);
+                assert_eq!(
+                    got.acc,
+                    WideInt::from_i64_shl(5, spec.f),
+                    "{fmt} {} narrow={}",
+                    entry.name,
+                    spec.narrow
+                );
+                results.push((entry.name, got));
+            }
+            let (ref_name, ref_acc) = results[0];
+            for (name, acc) in &results[1..] {
+                assert_eq!(acc, &ref_acc, "{fmt}: {name} != {ref_name}");
+            }
+        }
+    }
+}
+
+#[test]
 fn zero_block_is_rejected_at_parse_and_plan_build_time() {
     // The old seam silently clamped `Kernel { block: 0 }` to 1 deep in the
     // kernel; the plan/parse layer now rejects it with a proper error.

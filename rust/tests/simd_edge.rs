@@ -1,0 +1,230 @@
+//! SIMD-backend edge battery (DESIGN.md §Kernel, SIMD subsection): the
+//! vectorized kernel must be **bit-identical** — full `[λ; acc; sticky]`
+//! state — to the scalar SoA kernel at every (spec, block) pair, and to
+//! the scalar `⊙` fold wherever the kernel is. The edges this file owns
+//! are the ones vectorization invents: lane tails at non-multiple-of-8
+//! lengths, blocks smaller than one vector, all-dead-lane vectors, the
+//! far-spread chunk fallback, and the narrow/wide path boundary. Whatever
+//! dispatch leg the host machine selects (AVX2, portable-SIMD, scalar
+//! fallback), the same bits must come out.
+
+use online_fp_add::arith::kernel::{reduce_terms, scalar_fold, DEFAULT_BLOCK};
+use online_fp_add::arith::oracle::DISTRIBUTIONS;
+use online_fp_add::arith::simd::{
+    active_paths, block_state_simd, reduce_terms_simd, LANES, VEC_NARROW_MAX_F,
+};
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, PAPER_FORMATS};
+use online_fp_add::reduce::{registry, KernelReducer, Reducer, SimdReducer};
+use online_fp_add::util::prng::XorShift;
+
+/// The exact spec plus its forced-wide twin, plus truncated frames that
+/// bracket the vector sub-path ceiling (f <= VEC_NARROW_MAX_F) from both
+/// sides — the battery must cross the path boundary, not sit on one side.
+fn specs_under_test(fmt: online_fp_add::formats::FpFormat) -> Vec<AccSpec> {
+    let exact = AccSpec::exact(fmt);
+    let mut specs = vec![exact];
+    if exact.narrow {
+        specs.push(AccSpec { narrow: false, ..exact });
+    }
+    specs.push(AccSpec::truncated(3));
+    specs.push(AccSpec::truncated(16));
+    specs.push(AccSpec::truncated(VEC_NARROW_MAX_F + 5));
+    specs
+}
+
+#[test]
+fn simd_is_registered_and_parses_with_blocks() {
+    assert!(registry::names().contains(&"simd"));
+    let sel = registry::sel("simd:8").unwrap();
+    assert_eq!(sel.name(), "simd");
+    assert_eq!(sel.block(), Some(8));
+    assert_eq!(registry::sel("simd").unwrap().block(), Some(DEFAULT_BLOCK));
+    // Capabilities are the kernel's: same proved widths, same honesty
+    // about truncated-frame fold identity at block > 1.
+    for fmt in PAPER_FORMATS {
+        let spec = AccSpec::exact(fmt);
+        let simd = registry::sel("simd:7").unwrap().capabilities(spec);
+        let kernel = registry::sel("kernel:7").unwrap().capabilities(spec);
+        assert_eq!(simd.proved_acc_bits, kernel.proved_acc_bits, "{fmt}");
+        assert_eq!(simd.storage_acc_bits, kernel.storage_acc_bits, "{fmt}");
+        assert_eq!(simd.fold_bit_identical, kernel.fold_bit_identical, "{fmt}");
+    }
+    // The dispatch report names at least one live leg.
+    assert!(!active_paths().is_empty(), "dispatch: {}", active_paths());
+}
+
+#[test]
+fn lane_tails_and_tiny_blocks_match_the_kernel_bit_for_bit() {
+    // Lengths that straddle every tail shape around the 8-lane vector
+    // width, crossed with blocks smaller than one vector (1..7), at one
+    // vector (8), and beyond — against the scalar kernel at the same
+    // block, which is the bit-identity contract at *every* (spec, block).
+    let mut rng = XorShift::new(0x51D0);
+    let lens: Vec<usize> =
+        vec![0, 1, 2, 5, 7, 8, 9, 15, 16, 17, 23, 31, 33, 63, 64, 65, 100, 130];
+    for fmt in PAPER_FORMATS {
+        for spec in specs_under_test(fmt) {
+            for &n in &lens {
+                let terms: Vec<Fp> = (0..n).map(|_| rng.gen_fp_full(fmt)).collect();
+                for block in [1usize, 2, 3, 5, 7, 8, 13, 64, n.max(1)] {
+                    assert_eq!(
+                        reduce_terms_simd(&terms, block, spec),
+                        reduce_terms(&terms, block, spec),
+                        "{fmt} n={n} block={block} f={} narrow={}",
+                        spec.f,
+                        spec.narrow
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_matches_the_scalar_fold_wherever_the_kernel_does() {
+    // Exact specs: the kernel is fold-bit-identical at every block, so the
+    // SIMD backend must be too — against the fold directly, all 5 formats.
+    let mut rng = XorShift::new(0xF01D);
+    for fmt in PAPER_FORMATS {
+        let spec = AccSpec::exact(fmt);
+        for n in [1usize, 7, 9, 64, 131] {
+            let terms: Vec<Fp> = (0..n).map(|_| rng.gen_fp_full(fmt)).collect();
+            let want = scalar_fold(&terms, spec);
+            for block in [1usize, 3, 8, 64, n] {
+                assert_eq!(
+                    reduce_terms_simd(&terms, block, spec),
+                    want,
+                    "{fmt} n={n} block={block}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_distributions_cannot_split_simd_from_the_kernel() {
+    // The oracle's adversarial generators (subnormal-dense, cancellation,
+    // near-overflow) through the vector path, the far-spread fallback and
+    // the wide path — zero state mismatches against the scalar kernel.
+    let mut rng = XorShift::new(0xADE5);
+    for fmt in PAPER_FORMATS {
+        for dist in DISTRIBUTIONS {
+            for spec in specs_under_test(fmt) {
+                for _ in 0..20 {
+                    let n = 61; // deliberately not a lane multiple
+                    let terms = dist.gen_vector(&mut rng, fmt, n);
+                    for block in [1usize, 7, 8, 64] {
+                        assert_eq!(
+                            reduce_terms_simd(&terms, block, spec),
+                            reduce_terms(&terms, block, spec),
+                            "{fmt} {} block={block} narrow={}",
+                            dist.name(),
+                            spec.narrow
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_dead_lane_vectors_and_adversarial_exponents_are_identities() {
+    // Whole vectors of sig == 0 lanes — including eff values a decoder
+    // would never emit (i32::MIN, i32::MAX) — must produce the identity,
+    // and a single live lane among 15 dead ones must produce exactly that
+    // lane's lift, through both the block sweep and the Reducer lifecycle.
+    let spec = AccSpec::truncated(16);
+    let dead_eff: Vec<i32> =
+        (0..16).map(|i| [i32::MIN, -1, 0, i32::MAX][i % 4]).collect();
+    let dead_sig = vec![0i64; 16];
+    let acc = block_state_simd(&dead_eff, &dead_sig, spec);
+    assert!(acc.is_identity(), "all-dead vector must be the identity: {acc:?}");
+
+    let mut eff = dead_eff.clone();
+    let mut sig = dead_sig.clone();
+    eff[11] = 42;
+    sig[11] = -7;
+    let one = block_state_simd(&eff, &sig, spec);
+    assert_eq!(one.lambda, 42);
+    assert!(!one.sticky);
+
+    for fmt in PAPER_FORMATS {
+        for spec in specs_under_test(fmt) {
+            for block in [1usize, 3, 8, 48] {
+                let mut s = SimdReducer::new(spec, block);
+                let mut k = KernelReducer::new(spec, block);
+                s.ingest_decoded(&eff, &sig);
+                k.ingest_decoded(&eff, &sig);
+                assert_eq!(
+                    s.finish(),
+                    k.finish(),
+                    "{fmt} block={block} narrow={}",
+                    spec.narrow
+                );
+                assert_eq!(s.finish(), one, "{fmt} block={block} narrow={}", spec.narrow);
+            }
+        }
+    }
+}
+
+#[test]
+fn reducer_lifecycle_matches_the_kernel_reducer_over_mixed_ingests() {
+    // Interleaved slice ingests of ragged lengths (block boundaries
+    // restart per ingest), partial round-trips, and finish — the stateful
+    // surface the stream tier drives — against KernelReducer at the same
+    // block.
+    let mut rng = XorShift::new(0xC0DE);
+    for fmt in PAPER_FORMATS {
+        for spec in specs_under_test(fmt) {
+            for block in [1usize, 5, 8, 64] {
+                let mut s = SimdReducer::new(spec, block);
+                let mut k = KernelReducer::new(spec, block);
+                for len in [3usize, 17, 1, 8, 29] {
+                    let terms: Vec<Fp> = (0..len).map(|_| rng.gen_fp_full(fmt)).collect();
+                    s.ingest(&terms);
+                    k.ingest(&terms);
+                }
+                assert_eq!(s.terms(), k.terms());
+                assert_eq!(
+                    s.partial().resolve(spec),
+                    k.partial().resolve(spec),
+                    "{fmt} block={block} narrow={}",
+                    spec.narrow
+                );
+                assert_eq!(s.finish(), k.finish(), "{fmt} block={block} narrow={}", spec.narrow);
+            }
+        }
+    }
+}
+
+#[test]
+fn oracle_scale_differential_simd_vs_kernel_and_fold() {
+    // The >=5k-vector differential sweep the issue gates on: randomized
+    // lengths and blocks, exact and truncated frames, SIMD vs kernel
+    // everywhere and vs the fold on exact frames. LANES is compile-time 8;
+    // keep the sweep crossing its multiples.
+    assert_eq!(LANES, 8);
+    let mut rng = XorShift::new(0x5CA1E);
+    let mut vectors = 0usize;
+    while vectors < 5200 {
+        for fmt in PAPER_FORMATS {
+            let n = 1 + rng.below(97) as usize;
+            let terms: Vec<Fp> = (0..n).map(|_| rng.gen_fp_full(fmt)).collect();
+            let block = 1 + rng.below(70) as usize;
+            let exact = AccSpec::exact(fmt);
+            let got = reduce_terms_simd(&terms, block, exact);
+            assert_eq!(got, reduce_terms(&terms, block, exact), "{fmt} n={n} block={block}");
+            assert_eq!(got, scalar_fold(&terms, exact), "{fmt} n={n} block={block}");
+            let trunc = AccSpec::truncated(1 + rng.below(40) as u32);
+            assert_eq!(
+                reduce_terms_simd(&terms, block, trunc),
+                reduce_terms(&terms, block, trunc),
+                "{fmt} n={n} block={block} f={}",
+                trunc.f
+            );
+            vectors += 2;
+        }
+    }
+}
