@@ -9,7 +9,9 @@
 //! Knobs: `--vectors 512 --streams 8 --clients 8 --threads 0` (0 = auto),
 //! `--backend scalar|kernel[:block]|eia` (chunk-reduction backend by
 //! registry name; omit to let the plan builder negotiate), `--stats`
-//! (dump the cross-tier telemetry as Prometheus text after the replay).
+//! (dump the cross-tier telemetry as Prometheus text after the replay),
+//! `--provenance` (print each verified stream's numeric audit record —
+//! spec, plan, work counts, resolved state, order-invariant hash).
 
 use online_fp_add::arith::tree::{tree_sum, RadixConfig};
 use online_fp_add::arith::AccSpec;
@@ -122,6 +124,18 @@ fn main() {
     if args.has("stats") {
         println!("\n--- telemetry (Prometheus exposition) ---");
         print!("{}", svc.stats_prometheus());
+    }
+
+    // Numeric provenance: the audit record behind each served sum. The
+    // hash covers value facts only, so re-running with any --backend,
+    // --threads or client count prints the same hash per stream.
+    if args.has("provenance") {
+        println!("\n--- numeric provenance (first {} streams) ---", streams.min(4));
+        for s in 0..streams.min(4) {
+            if let Some((_, rec)) = svc.query_with_provenance(&format!("bert-{s}")) {
+                println!("{}", rec.render());
+            }
+        }
     }
 
     // ---- invariance sweep: chunk × threads × shuffled arrival ----------

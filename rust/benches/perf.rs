@@ -214,13 +214,15 @@ fn main() {
 
     header("telemetry overhead (instrumented reduce hot path, BF16, exact)");
     // The observability guardrail series: the cross-tier counters threaded
-    // through the reduce/kernel hot paths (DESIGN.md §Telemetry) must stay
-    // within a few percent of the disabled hub. Legs are interleaved and
-    // the best of three runs kept per leg, so a one-off scheduler hiccup in
-    // either leg cannot fake (or mask) a regression; CI gates the
-    // `overhead_vs_off` param at 1.03.
+    // through the reduce/kernel hot paths (DESIGN.md §Observability) must
+    // stay within a few percent of the disabled hub — and so must the
+    // second-generation layer: the lock-free trace ring recording reduce
+    // lifecycle events, and span allocation + ambient-span threading on
+    // top of it. Legs are interleaved and the best of three runs kept per
+    // leg, so a one-off scheduler hiccup in any leg cannot fake (or mask)
+    // a regression; CI gates every `overhead_vs_off` param at 1.03.
     {
-        use online_fp_add::telemetry;
+        use online_fp_add::telemetry::{self, span, SpanContext};
         let spec = AccSpec::exact(BF16);
         let terms: Vec<Fp> = {
             let mut rng = XorShift::new(0x7E1E);
@@ -229,6 +231,8 @@ fn main() {
         let plan = ReducePlan::negotiate(spec);
         let mut off_best: Option<online_fp_add::bench_util::BenchResult> = None;
         let mut on_best: Option<online_fp_add::bench_util::BenchResult> = None;
+        let mut trace_best: Option<online_fp_add::bench_util::BenchResult> = None;
+        let mut span_best: Option<online_fp_add::bench_util::BenchResult> = None;
         let keep = |best: &mut Option<online_fp_add::bench_util::BenchResult>,
                     r: online_fp_add::bench_util::BenchResult| {
             if best.as_ref().map(|b| r.median_s < b.median_s).unwrap_or(true) {
@@ -244,29 +248,48 @@ fn main() {
             let on = bench("telemetry overhead on BF16 n=1024", target_seconds(0.3), || {
                 black_box(plan.reduce(&terms));
             });
+            telemetry::global().trace.set_enabled(true);
+            let tr = bench("telemetry overhead trace on BF16 n=1024", target_seconds(0.3), || {
+                black_box(plan.reduce(&terms));
+            });
+            let sp = bench("telemetry overhead spans on BF16 n=1024", target_seconds(0.3), || {
+                // The serving tier's per-batch pattern: allocate a child
+                // span, enter it, reduce under the ambient span.
+                let _g = span::enter(SpanContext::for_stream("bench").child());
+                black_box(plan.reduce(&terms));
+            });
+            telemetry::global().trace.set_enabled(false);
             keep(&mut off_best, off);
             keep(&mut on_best, on);
+            keep(&mut trace_best, tr);
+            keep(&mut span_best, sp);
         }
-        let (off, on) = (off_best.expect("three runs"), on_best.expect("three runs"));
+        let off = off_best.expect("three runs");
         let off_tput = off.throughput(1024.0);
-        let on_tput = on.throughput(1024.0);
-        let overhead = off_tput / on_tput.max(1e-9);
         println!("{}   [{:.1} M terms/s]", off.line(), off_tput / 1e6);
-        println!(
-            "{}   [{:.1} M terms/s, {:.3}x off time]",
-            on.line(),
-            on_tput / 1e6,
-            overhead
-        );
-        if overhead > 1.03 {
-            println!("WARN: telemetry counters measured >3% slower than the disabled hub");
-        }
         records.push(BenchRecord::new(off).param("terms_per_s", off_tput));
-        records.push(
-            BenchRecord::new(on)
-                .param("terms_per_s", on_tput)
-                .param("overhead_vs_off", overhead),
-        );
+        for (leg, what) in [
+            (on_best.expect("three runs"), "telemetry counters"),
+            (trace_best.expect("three runs"), "trace-ring records"),
+            (span_best.expect("three runs"), "span threading"),
+        ] {
+            let tput = leg.throughput(1024.0);
+            let overhead = off_tput / tput.max(1e-9);
+            println!(
+                "{}   [{:.1} M terms/s, {:.3}x off time]",
+                leg.line(),
+                tput / 1e6,
+                overhead
+            );
+            if overhead > 1.03 {
+                println!("WARN: {what} measured >3% slower than the disabled hub");
+            }
+            records.push(
+                BenchRecord::new(leg)
+                    .param("terms_per_s", tput)
+                    .param("overhead_vs_off", overhead),
+            );
+        }
     }
 
     header("fused matmul workload (round-once dot products, BF16 16x64x16)");

@@ -34,7 +34,7 @@
 //! lock-free metric families recording each tier's numeric-health events
 //! (alignment sweeps, sticky activations, spill promotions, partial
 //! merges), a span/event trace ring, and Prometheus/JSON exposition —
-//! see DESIGN.md §Telemetry and `repro stats`.
+//! see DESIGN.md §Observability and `repro stats`.
 //!
 //! Sitting on top of all of them, [`analysis`] is the static verifier: an
 //! abstract-interpretation pass deriving per-(format × backend) width

@@ -12,7 +12,7 @@
 //! repro kernel [--format all] [--n 1024] [--blocks 1,8,64]  SoA-kernel check
 //! repro eia    [--format all] [--n 1024] [--vectors 64]     EIA backend check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
-//! repro stats  [--prometheus|--json|--trace] [--selftest]  live cross-tier telemetry
+//! repro stats  [--prometheus|--json|--trace|--provenance] [--selftest]  live cross-tier telemetry
 //! repro analyze [--gate|--json] [--fault NAME]         static width/overflow proof
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
@@ -100,14 +100,19 @@ commands:
                                           equal one-shot banking, and
                                           report ingest/drain throughput
   sweep   --format F --n N [--clock 1.0]  raw design-space dump for any N
-  stats   [--n 256] [--vectors 16] [--prometheus|--json|--trace] [--selftest]
+  stats   [--n 256] [--vectors 16] [--prometheus|--json|--trace|--provenance] [--selftest]
                                           exercise every registered backend,
                                           plan negotiation and the stream
                                           engine, then report the live
                                           cross-tier telemetry (DESIGN.md
-                                          §Telemetry); --selftest exits
-                                          nonzero if any expected metric
-                                          family is absent or zero
+                                          §Observability); --provenance
+                                          prints the drained streams' audit
+                                          records; --selftest exits nonzero
+                                          if any expected metric family is
+                                          dead, the trace ring records
+                                          nothing, spans are unthreaded, or
+                                          an injected panic leaves no
+                                          flight-recorder postmortem
   analyze [--gate] [--json] [--fault NAME]
                                           static datapath width/overflow
                                           verifier (DESIGN.md §Analysis):
@@ -616,14 +621,17 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Live cross-tier telemetry (DESIGN.md §Telemetry): exercise every
+/// Live cross-tier telemetry (DESIGN.md §Observability): exercise every
 /// registered backend through a full `Reducer` lifecycle, drive all four
 /// plan-negotiation rationales, light the kernel/EIA numeric-health
 /// counters with a crafted sticky pair, run a short multi-stream serving
 /// session (including a wire-codec partial merge), then report the hub.
+/// `--provenance` prints the drained streams' numeric audit records.
 /// `--selftest` exits nonzero if any metric the workload is expected to
-/// drive is absent or zero — CI uses it as a liveness gate on the
-/// instrumentation itself.
+/// drive is absent or zero, if the (force-enabled) trace ring recorded
+/// nothing or no record carries a span, or if an injected panic fails to
+/// leave a flight-recorder postmortem — CI uses it as a liveness gate on
+/// the instrumentation itself.
 fn cmd_stats(args: &Args) -> Result<(), String> {
     use online_fp_add::arith::AccSpec;
     use online_fp_add::formats::BF16;
@@ -634,7 +642,7 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
 
     let n = args.get_usize("n", 256)?.max(4);
     let vectors = args.get_usize("vectors", 16)?.max(1);
-    if args.has("trace") {
+    if args.has("trace") || args.has("selftest") {
         telemetry::global().trace.set_enabled(true);
     }
     let exact = AccSpec::exact(BF16);
@@ -692,8 +700,11 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         let partial = Partial::from_bytes(&wire).map_err(|e| format!("partial codec: {e}"))?;
         svc.engine().shards().merge_partial("stats-0", &partial);
     }
+    let mut provenance = Vec::new();
     for v in 0..4 {
-        let _ = svc.drain(&format!("stats-{v}"));
+        if let Some((_, rec)) = svc.drain_with_provenance(&format!("stats-{v}")) {
+            provenance.push(rec);
+        }
     }
 
     let snap = svc.telemetry_snapshot();
@@ -715,8 +726,8 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         }
         // Everything the workload above is guaranteed to drive. Deliberate
         // omissions: spills / wide banks need crafted i128 snapshots (see
-        // tests/telemetry.rs), runtime counters need PJRT artifacts, and
-        // the trace ring is opt-in.
+        // tests/telemetry.rs) and runtime counters need PJRT artifacts;
+        // the trace ring and flight recorder are asserted separately below.
         const EXPECT_NONZERO: &[&str] = &[
             "ofa_plan_builds",
             "ofa_plan_explicit",
@@ -756,7 +767,54 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
                 dead.join(", ")
             ));
         }
+        // Span/trace liveness: the ring was force-enabled above, so the
+        // serving session must have left span-tagged records behind.
+        let ring = &telemetry::global().trace;
+        let dump = ring.dump();
+        if ring.total() == 0 || dump.is_empty() {
+            return Err("telemetry selftest: trace ring enabled but recorded nothing".into());
+        }
+        if !dump.iter().any(|r| r.span.trace_id != 0) {
+            return Err(
+                "telemetry selftest: no trace record carries a span — span threading is dead"
+                    .into(),
+            );
+        }
+        // Flight-recorder liveness: an injected (and caught) panic must
+        // leave a postmortem. Quiet the base hook first so the deliberate
+        // panic does not spray a backtrace into CI logs; ours chains it.
+        std::panic::set_hook(Box::new(|_| {}));
+        telemetry::flight::install_panic_hook();
+        let _ = std::panic::catch_unwind(|| panic!("stats selftest crash"));
+        let _ = std::panic::take_hook();
+        let path = telemetry::flight::dump_dir()
+            .join(telemetry::flight::dump_file_name("panic: stats selftest crash"));
+        let body = std::fs::read_to_string(&path).map_err(|e| {
+            format!("telemetry selftest: no postmortem at {}: {e}", path.display())
+        })?;
+        if !body.contains("stats selftest crash") || !body.contains("\"trace_tail\"") {
+            return Err(format!(
+                "telemetry selftest: postmortem at {} lacks the panic reason or trace tail",
+                path.display()
+            ));
+        }
         println!("telemetry selftest: every expected metric family is live ✓");
+        println!(
+            "telemetry selftest: trace ring live ({} records), spans threaded, \
+             flight recorder dumped {} ✓",
+            ring.total(),
+            path.display()
+        );
+        return Ok(());
+    }
+    if args.has("provenance") {
+        println!(
+            "Numeric provenance — {} streams drained (DESIGN.md §Observability)\n",
+            provenance.len()
+        );
+        for rec in &provenance {
+            println!("{}\n", rec.render());
+        }
         return Ok(());
     }
     if args.has("prometheus") {
@@ -780,7 +838,10 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         };
         t.row(vec![s.name.to_string(), labels, value]);
     }
-    println!("Live cross-tier telemetry — {} samples (DESIGN.md §Telemetry)\n", snap.samples.len());
+    println!(
+        "Live cross-tier telemetry — {} samples (DESIGN.md §Observability)\n",
+        snap.samples.len()
+    );
     println!("{}", t.render());
     if args.has("trace") {
         let ring = &telemetry::global().trace;

@@ -36,7 +36,7 @@ use crate::arith::simd::{block_state_simd, reduce_terms_simd};
 use crate::arith::operator::{op_combine, AlignAcc};
 use crate::arith::{AccSpec, WideInt};
 use crate::formats::Fp;
-use crate::telemetry;
+use crate::telemetry::{self, TraceEvent};
 
 /// Lift one pre-decoded `(eff_exp, signed_sig)` lane into the operator
 /// domain — the runtime's `(e, m)` field convention: a zero significand is
@@ -47,6 +47,13 @@ fn leaf_decoded(eff: i32, sig: i64, spec: AccSpec) -> AlignAcc {
         return AlignAcc::IDENTITY;
     }
     AlignAcc { lambda: eff, acc: WideInt::from_i64_shl(sig, spec.f), sticky: false }
+}
+
+/// Trace one reducer-lifecycle resolution under the caller's ambient
+/// span (no-op while the ring is off) — the `reduce::backend` leg of
+/// the causal trace.
+fn trace_finish(backend: &'static str, terms: u64) {
+    telemetry::global().trace.record(TraceEvent::ReduceFinished { backend, terms });
 }
 
 /// A stateful reduction backend (see the module docs for the lifecycle and
@@ -155,6 +162,7 @@ impl Reducer for FoldReducer {
         if telemetry::enabled() {
             self.tele.finishes.inc();
         }
+        trace_finish(self.backend_name(), self.terms);
         self.state
     }
 
@@ -266,6 +274,7 @@ impl Reducer for KernelReducer {
         if telemetry::enabled() {
             self.tele.finishes.inc();
         }
+        trace_finish(self.backend_name(), self.terms);
         self.state
     }
 
@@ -372,6 +381,7 @@ impl Reducer for SimdReducer {
         if telemetry::enabled() {
             self.tele.finishes.inc();
         }
+        trace_finish(self.backend_name(), self.terms);
         self.state
     }
 
@@ -464,6 +474,7 @@ impl Reducer for EiaReducer {
         if telemetry::enabled() {
             self.tele.finishes.inc();
         }
+        trace_finish(self.backend_name(), self.terms());
         let drained = self.eia.drain(self.spec);
         if self.carry.is_identity() {
             drained

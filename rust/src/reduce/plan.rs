@@ -123,6 +123,20 @@ impl ReducePlan {
         self.rationale
     }
 
+    /// The rationale compressed to a stable machine-friendly key
+    /// (`"explicit"`, `"exact"`, `"truncated"`, `"order-invariant"`) —
+    /// what provenance records and dashboards key on, while
+    /// [`Self::rationale`] stays the full human-readable sentence.
+    pub fn rationale_key(&self) -> &'static str {
+        match self.rationale {
+            EXPLICIT => "explicit",
+            NEGOTIATED_EXACT => "exact",
+            NEGOTIATED_TRUNCATED => "truncated",
+            NEGOTIATED_ORDER_INVARIANT => "order-invariant",
+            _ => "unknown",
+        }
+    }
+
     /// One-shot slice reduction on the direct (fn-pointer) dispatch path —
     /// what the old `ReduceBackend::reduce` enum match compiled to.
     pub fn reduce(&self, terms: &[Fp]) -> AlignAcc {

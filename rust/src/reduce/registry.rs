@@ -22,7 +22,7 @@ use crate::arith::kernel::DEFAULT_BLOCK;
 use crate::arith::operator::AlignAcc;
 use crate::arith::AccSpec;
 use crate::formats::Fp;
-use crate::telemetry;
+use crate::telemetry::{self, TraceEvent};
 use std::fmt;
 use std::str::FromStr;
 use std::sync::Once;
@@ -321,7 +321,14 @@ impl BackendSel {
             fam.reduce_calls.inc();
             fam.ingest_terms.add(terms.len() as u64);
         }
-        (self.entry.reduce_fn)(terms, spec, self.block)
+        let out = (self.entry.reduce_fn)(terms, spec, self.block);
+        // Span-tagged via the caller's ambient span (e.g. the worker
+        // batch): one record per resolved one-shot reduction.
+        telemetry::global().trace.record(TraceEvent::ReduceFinished {
+            backend: self.entry.name,
+            terms: terms.len() as u64,
+        });
+        out
     }
 
     /// Build a stateful [`Reducer`] for this selection.

@@ -23,7 +23,7 @@ use crate::coordinator::batcher::SubmitError;
 use crate::coordinator::metrics::{Counter, LatencyHistogram};
 use crate::coordinator::pool::ThreadPool;
 use crate::formats::{Fp, BF16};
-use crate::telemetry::{self, TraceEvent};
+use crate::telemetry::{self, span, SpanContext, TraceEvent};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
@@ -98,6 +98,9 @@ struct WorkItem {
     stream: String,
     terms: Vec<Fp>,
     submitted: Instant,
+    /// Worker-batch span, a child of the ingest root span ([`SpanContext::NONE`]
+    /// when tracing is off — span ids are only allocated while the ring is live).
+    span: SpanContext,
 }
 
 /// Monotone ingest progress: `done` converges on `accepted` (rejected and
@@ -198,8 +201,17 @@ impl StreamEngine {
     ) -> Result<usize, SubmitError> {
         let n = terms.len();
         self.note_accepted();
-        let item =
-            WorkItem { stream: stream.to_string(), terms, submitted: Instant::now() };
+        // Causal spans: one root per ingest on the stream's deterministic
+        // trace, one child for the worker batch. Allocated only while the
+        // ring is live so the traced-off hot path stays span-free.
+        let tracing = telemetry::global().trace.enabled();
+        let root = if tracing { SpanContext::for_stream(stream) } else { SpanContext::NONE };
+        let item = WorkItem {
+            stream: stream.to_string(),
+            terms,
+            submitted: Instant::now(),
+            span: if tracing { root.child() } else { SpanContext::NONE },
+        };
         let tx = self.tx.as_ref().expect("engine alive");
         let sent = if blocking {
             tx.send(item).map_err(|_| SubmitError::Closed)
@@ -223,6 +235,9 @@ impl StreamEngine {
                     s.batch_terms.add(n as u64);
                     s.queue_depth.inc();
                 }
+                telemetry::global()
+                    .trace
+                    .record_with(root, TraceEvent::BatchQueued { terms: n as u64 });
                 Ok(n)
             }
             Err(e) => {
@@ -257,7 +272,13 @@ impl StreamEngine {
         let snap = self.shards.drain(stream);
         if let Some(s) = &snap {
             self.metrics.drains.inc();
-            telemetry::global().trace.record(TraceEvent::StreamDrained { terms: s.terms });
+            let trace = &telemetry::global().trace;
+            if trace.enabled() {
+                trace.record_with(
+                    SpanContext::for_stream(stream),
+                    TraceEvent::StreamDrained { terms: s.terms },
+                );
+            }
         }
         snap
     }
@@ -296,6 +317,10 @@ fn worker_loop(
         // progress accounting (which would wedge quiesce forever): contain
         // it, count the batch done, keep serving.
         let outcome = catch_unwind(AssertUnwindSafe(|| {
+            // Everything this batch touches — chunk reductions, backend
+            // finishes, the shard merge — inherits the batch span, so one
+            // trace id reconstructs the stream's whole life.
+            let _span = span::enter(item.span);
             // Chunked reduction outside any lock; only the merge serializes
             // on the stream's stripe.
             let mut segments = 0u64;

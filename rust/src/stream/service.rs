@@ -20,8 +20,9 @@ use crate::arith::normalize::normalize_round;
 use crate::arith::AccSpec;
 use crate::coordinator::batcher::SubmitError;
 use crate::formats::{Fp, FpFormat};
-use crate::telemetry::{self, TelemetrySnapshot};
+use crate::telemetry::{self, flight, LatencyFamily, ProvenanceRecord, TelemetrySnapshot};
 use crate::workload::Trace;
+use std::time::Instant;
 
 /// One client request.
 #[derive(Clone, Debug)]
@@ -80,6 +81,8 @@ pub enum Response {
 pub struct StreamService {
     engine: StreamEngine,
     format: FpFormat,
+    /// This format's slot in the hub-wide `ofa_stream_latency` SLO family.
+    lat_slot: usize,
 }
 
 impl StreamService {
@@ -88,7 +91,8 @@ impl StreamService {
     /// [`AccSpec::exact`]`(format)` every query is the correctly-rounded
     /// sum of the stream's entire history.
     pub fn new(format: FpFormat, cfg: EngineConfig) -> Self {
-        StreamService { engine: StreamEngine::new(cfg), format }
+        let lat_slot = telemetry::global().latency.register_format(format.name);
+        StreamService { engine: StreamEngine::new(cfg), format, lat_slot }
     }
 
     /// An exact-datapath service with default engine geometry.
@@ -147,22 +151,43 @@ impl StreamService {
     /// saturated/zeroed ([`Fp::finite_or_saturated`]) before they reach
     /// the datapath, mirroring trace capture.
     pub fn ingest(&self, stream: &str, terms: Vec<Fp>) -> Result<usize, IngestError> {
+        let start = Instant::now();
         let terms = screen(terms, self.format)?;
-        self.engine.ingest(stream, terms).map_err(IngestError::from)
+        let out = self.engine.ingest(stream, terms).map_err(IngestError::from);
+        self.observe(LatencyFamily::OP_INGEST, start);
+        out
     }
 
     /// Append a batch, blocking while the queue is full (trace replay).
     pub fn ingest_blocking(&self, stream: &str, terms: Vec<Fp>) -> Result<usize, IngestError> {
+        let start = Instant::now();
         let terms = screen(terms, self.format)?;
-        self.engine.ingest_blocking(stream, terms).map_err(IngestError::from)
+        let out = self.engine.ingest_blocking(stream, terms).map_err(IngestError::from);
+        self.observe(LatencyFamily::OP_INGEST, start);
+        out
     }
 
     /// The stream's sum so far, rounded once into the service format, with
     /// the checkpoint it was rounded from. Waits for queued batches first.
     pub fn query(&self, stream: &str) -> Option<(Fp, Snapshot)> {
+        let start = Instant::now();
         self.engine.quiesce();
         let snap = self.engine.snapshot(stream)?;
-        Some((self.round(&snap), snap))
+        let out = (self.round(&snap), snap);
+        self.observe(LatencyFamily::OP_QUERY, start);
+        Some(out)
+    }
+
+    /// [`Self::query`] plus the stream's [`ProvenanceRecord`]: the audit
+    /// trail (spec, plan, work counts, numeric-health events, resolved
+    /// state, order-invariant hash) behind the served value. The record is
+    /// also noted in the flight recorder's in-flight ring so a later
+    /// postmortem can explain what was being served.
+    pub fn query_with_provenance(&self, stream: &str) -> Option<(Fp, ProvenanceRecord)> {
+        let (value, snap) = self.query(stream)?;
+        let rec = self.provenance(stream, &snap);
+        flight::note_provenance(&rec);
+        Some((value, rec))
     }
 
     /// The stream's exact mergeable state. Waits for queued batches first.
@@ -173,9 +198,53 @@ impl StreamService {
 
     /// Finalize a stream: wait, remove, and return `(value, checkpoint)`.
     pub fn drain(&self, stream: &str) -> Option<(Fp, Snapshot)> {
+        let start = Instant::now();
         self.engine.quiesce();
         let snap = self.engine.drain(stream)?;
-        Some((self.round(&snap), snap))
+        let out = (self.round(&snap), snap);
+        self.observe(LatencyFamily::OP_DRAIN, start);
+        Some(out)
+    }
+
+    /// [`Self::drain`] plus the final [`ProvenanceRecord`] — the complete
+    /// audit trail of the finalized stream (the record is cut from the
+    /// drained checkpoint, after the stream is gone).
+    pub fn drain_with_provenance(&self, stream: &str) -> Option<(Fp, ProvenanceRecord)> {
+        let start = Instant::now();
+        self.engine.quiesce();
+        let snap = self.engine.drain(stream)?;
+        let value = self.round(&snap);
+        self.observe(LatencyFamily::OP_DRAIN, start);
+        let rec = self.provenance(stream, &snap);
+        flight::note_provenance(&rec);
+        Some((value, rec))
+    }
+
+    /// Cut a provenance record for `stream` from a checkpoint of it.
+    fn provenance(&self, stream: &str, snap: &Snapshot) -> ProvenanceRecord {
+        let plan = self.engine.plan();
+        let hub = telemetry::global();
+        ProvenanceRecord::new(
+            stream,
+            self.format.name,
+            plan.spec(),
+            plan.backend().name(),
+            plan.rationale(),
+            snap.terms,
+            snap.segments,
+            self.engine.metrics().merges.get(),
+            hub.kernel.sticky_activations.get() + hub.accum.drain_sticky.get(),
+            hub.accum.spills.get(),
+            snap.lambda,
+            snap.acc,
+            snap.sticky,
+        )
+    }
+
+    fn observe(&self, op: usize, start: Instant) {
+        if telemetry::enabled() {
+            telemetry::global().latency.observe(self.lat_slot, op, start.elapsed());
+        }
     }
 
     /// Replay a workload trace as live traffic: row `i` goes to stream
@@ -375,6 +444,30 @@ mod tests {
         let prom = svc.stats_prometheus();
         assert!(prom.contains("ofa_service_batches_total{format=\"BF16\"} 1"), "{prom}");
         assert!(svc.stats_json().contains("\"ofa_service_ingested_terms\""));
+    }
+
+    #[test]
+    fn provenance_rides_query_and_drain_and_matches_the_value_facts() {
+        use crate::telemetry::provenance_hash;
+        let svc = service();
+        let one = Fp::from_f64(1.0, BF16);
+        svc.ingest_blocking("p", vec![one; 6]).unwrap();
+        let (value, rec) = svc.query_with_provenance("p").unwrap();
+        assert_eq!(value.to_f64(), 6.0);
+        assert_eq!(rec.stream, "p");
+        assert_eq!(rec.format, BF16.name);
+        assert_eq!(rec.terms, 6);
+        assert!(rec.exact);
+        let spec = svc.engine().config().spec;
+        assert_eq!(
+            rec.hash,
+            provenance_hash(BF16.name, spec, rec.terms, rec.lambda, &rec.acc, rec.sticky)
+        );
+        // Drain cuts the same value facts, so the same hash.
+        let (dvalue, drec) = svc.drain_with_provenance("p").unwrap();
+        assert_eq!(dvalue.bits, value.bits);
+        assert_eq!(drec.hash, rec.hash);
+        assert!(svc.query_with_provenance("p").is_none());
     }
 
     #[test]

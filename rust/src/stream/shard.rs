@@ -10,7 +10,7 @@ use super::segment::Segment;
 use crate::arith::operator::AlignAcc;
 use crate::arith::{AccSpec, WideInt};
 use crate::reduce::Partial;
-use crate::telemetry::{self, SHARD_SLOTS};
+use crate::telemetry::{self, TraceEvent, SHARD_SLOTS};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -102,6 +102,11 @@ impl ShardMap {
             s.shard_merges[stripe % SHARD_SLOTS].inc();
             s.shard_terms[stripe % SHARD_SLOTS].add(seg.terms);
         }
+        // Span-tagged via the caller's ambient span (the worker batch),
+        // tying the stripe merge into the stream's causal trace.
+        telemetry::global()
+            .trace
+            .record(TraceEvent::ShardMerged { stripe, terms: seg.terms });
         let mut table = lock(&self.stripes[stripe]);
         match table.get_mut(id) {
             Some(st) => {

@@ -10,7 +10,8 @@ use std::fmt::Write;
 
 /// Escape a label/string value for both exposition formats (the value
 /// space is metric/backend/format names — escaping is belt-and-braces).
-fn escape(v: &str) -> String {
+/// Also reused by the provenance/flight JSON emitters.
+pub(crate) fn escape(v: &str) -> String {
     let mut out = String::with_capacity(v.len());
     for c in v.chars() {
         match c {

@@ -1,0 +1,234 @@
+//! The crash flight recorder: when the serving tier dies, leave behind
+//! enough deterministic evidence to reconstruct what it was doing.
+//!
+//! A postmortem is one JSON document with three sections:
+//!
+//! * `"telemetry"` — the full [`super::TelemetrySnapshot`] (same JSON
+//!   renderer as `repro stats --json`);
+//! * `"trace_tail"` — the newest [`TAIL_LEN`] records of the global
+//!   trace ring, span tags included;
+//! * `"provenance"` — the bounded ring of the most recently cut
+//!   [`ProvenanceRecord`]s ([`note_provenance`]), i.e. the streams that
+//!   were in flight.
+//!
+//! Determinism: the document is a pure function of recorded state — no
+//! wall-clock timestamps, no pointers, no environment echoes — so two
+//! crashes after identical event histories dump identical files, and
+//! CI can archive them as artifacts without noise.
+//!
+//! The panic hook is **opt-in** ([`install_panic_hook`], idempotent): it
+//! chains the previously installed hook and fires even for panics later
+//! swallowed by `catch_unwind`, which is exactly what covers the stream
+//! engine's worker isolation. Dumps land in `$OFA_FLIGHT_DIR` (read at
+//! install/dump time) or `target/flight/`, under a deterministic
+//! reason-derived file name.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, Once, PoisonError};
+
+use super::provenance::ProvenanceRecord;
+
+/// Trace-ring records preserved in a postmortem.
+pub const TAIL_LEN: usize = 64;
+
+/// In-flight provenance records preserved (newest win).
+pub const PROVENANCE_RING: usize = 16;
+
+static INSTALL: Once = Once::new();
+static RECENT: Mutex<VecDeque<ProvenanceRecord>> = Mutex::new(VecDeque::new());
+
+fn recent() -> MutexGuard<'static, VecDeque<ProvenanceRecord>> {
+    RECENT.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Remember a freshly cut provenance record so a later postmortem can
+/// report the streams that were in flight. Bounded: keeps the newest
+/// [`PROVENANCE_RING`] records.
+pub fn note_provenance(rec: &ProvenanceRecord) {
+    let mut ring = recent();
+    if ring.len() == PROVENANCE_RING {
+        ring.pop_front();
+    }
+    ring.push_back(rec.clone());
+}
+
+/// The in-flight provenance ring, oldest first (tests/postmortems).
+pub fn recent_provenance() -> Vec<ProvenanceRecord> {
+    recent().iter().cloned().collect()
+}
+
+/// Clear the in-flight provenance ring (tests).
+pub fn reset_provenance() {
+    recent().clear();
+}
+
+/// Where dumps land: `$OFA_FLIGHT_DIR`, else `target/flight`.
+pub fn dump_dir() -> PathBuf {
+    match std::env::var_os("OFA_FLIGHT_DIR") {
+        Some(dir) if !dir.is_empty() => PathBuf::from(dir),
+        _ => PathBuf::from("target").join("flight"),
+    }
+}
+
+/// Deterministic file name for a dump reason: `postmortem-<slug>.json`
+/// with the reason lowercased and squeezed to `[a-z0-9-]`.
+pub fn dump_file_name(reason: &str) -> String {
+    let mut slug = String::new();
+    for c in reason.chars().take(48) {
+        if c.is_ascii_alphanumeric() {
+            slug.push(c.to_ascii_lowercase());
+        } else if !slug.ends_with('-') && !slug.is_empty() {
+            slug.push('-');
+        }
+    }
+    let slug = slug.trim_matches('-');
+    if slug.is_empty() {
+        "postmortem.json".to_string()
+    } else {
+        format!("postmortem-{slug}.json")
+    }
+}
+
+/// Render the postmortem JSON document for the global hub.
+pub fn postmortem(reason: &str) -> String {
+    let hub = super::registry::global();
+    let mut out = String::new();
+    out.push_str("{\"reason\":\"");
+    out.push_str(&super::expose::escape(reason));
+    out.push_str("\",\n\"trace_total\":");
+    let _ = write!(out, "{}", hub.trace.total());
+    out.push_str(",\n\"trace_tail\":[\n");
+    let tail = hub.trace.tail(TAIL_LEN);
+    for (i, rec) in tail.iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        let _ = write!(
+            out,
+            "  {{\"seq\":{},\"trace_id\":\"0x{:016x}\",\"span_id\":{},\"parent_id\":{},\"event\":\"{}\"}}",
+            rec.seq,
+            rec.span.trace_id,
+            rec.span.span_id,
+            rec.span.parent_id,
+            super::expose::escape(&rec.event.to_string()),
+        );
+    }
+    out.push_str("\n],\n\"provenance\":[\n");
+    for (i, rec) in recent().iter().enumerate() {
+        if i > 0 {
+            out.push_str(",\n");
+        }
+        out.push_str("  ");
+        out.push_str(&rec.to_json());
+    }
+    out.push_str("\n],\n\"telemetry\":");
+    out.push_str(&hub.snapshot().to_json());
+    out.push_str("}\n");
+    out
+}
+
+/// Write the postmortem for `reason` into `dir`, returning the path.
+pub fn dump_to(dir: &Path, reason: &str) -> io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(dump_file_name(reason));
+    std::fs::write(&path, postmortem(reason))?;
+    Ok(path)
+}
+
+/// Dump into the default directory (see [`dump_dir`]).
+pub fn dump(reason: &str) -> io::Result<PathBuf> {
+    dump_to(&dump_dir(), reason)
+}
+
+/// Install the flight-recorder panic hook (idempotent; chains whatever
+/// hook was installed before, so default backtrace printing survives).
+/// Opt-in because panic hooks are process-global: the CLI and the fault
+/// tests install it; `#[should_panic]` unit tests stay unaffected.
+pub fn install_panic_hook() {
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let reason = match info.payload().downcast_ref::<&str>() {
+                Some(s) => format!("panic: {s}"),
+                None => match info.payload().downcast_ref::<String>() {
+                    Some(s) => format!("panic: {s}"),
+                    None => "panic".to_string(),
+                },
+            };
+            let _ = dump(&reason);
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{AccSpec, WideInt};
+
+    fn rec(stream: &str, terms: u64) -> ProvenanceRecord {
+        ProvenanceRecord::new(
+            stream,
+            "bf16",
+            AccSpec { f: 24, exact: true, narrow: false },
+            "kernel",
+            "why",
+            terms,
+            1,
+            1,
+            0,
+            0,
+            0,
+            WideInt { limbs: [terms, 0, 0, 0, 0, 0] },
+            false,
+        )
+    }
+
+    #[test]
+    fn file_names_are_deterministic_slugs() {
+        assert_eq!(
+            dump_file_name("panic: index out of bounds"),
+            "postmortem-panic-index-out-of-bounds.json"
+        );
+        assert_eq!(dump_file_name(""), "postmortem.json");
+        assert_eq!(dump_file_name("???"), "postmortem.json");
+        assert_eq!(dump_file_name("selftest"), "postmortem-selftest.json");
+    }
+
+    #[test]
+    fn provenance_ring_is_bounded_and_fifo() {
+        reset_provenance();
+        for i in 0..(PROVENANCE_RING as u64 + 3) {
+            note_provenance(&rec(&format!("s{i}"), i));
+        }
+        let recent = recent_provenance();
+        assert_eq!(recent.len(), PROVENANCE_RING);
+        assert_eq!(recent[0].stream, "s3");
+        assert_eq!(recent.last().unwrap().stream, format!("s{}", PROVENANCE_RING + 2));
+        reset_provenance();
+        assert!(recent_provenance().is_empty());
+    }
+
+    #[test]
+    fn postmortem_is_deterministic_and_structurally_sound() {
+        reset_provenance();
+        note_provenance(&rec("pm-stream", 42));
+        let (a, b) = (postmortem("unit"), postmortem("unit"));
+        // Global-hub counters may move under concurrent tests, but the
+        // document structure and the provenance section are stable.
+        assert!(a.contains("\"reason\":\"unit\""));
+        assert!(a.contains("\"stream\":\"pm-stream\""));
+        assert!(a.contains("\"trace_tail\":["));
+        assert!(a.contains("\"telemetry\":{\"samples\":["));
+        assert!(b.contains("\"stream\":\"pm-stream\""));
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let n_open = a.chars().filter(|&c| c == open).count();
+            let n_close = a.chars().filter(|&c| c == close).count();
+            assert_eq!(n_open, n_close, "{a}");
+        }
+        reset_provenance();
+    }
+}

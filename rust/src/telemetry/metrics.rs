@@ -2,7 +2,7 @@
 //! histograms, all const-constructible so whole metric families can live
 //! in `static`s with zero startup cost.
 //!
-//! Design rules (see DESIGN.md §Telemetry):
+//! Design rules (see DESIGN.md §Observability):
 //!
 //! * every update is a handful of `Relaxed` atomic RMWs — no locks, no
 //!   allocation, no syscalls on any record path (min/max tracking uses an

@@ -17,9 +17,19 @@
 //!   `accum`, `kernel`, `stream`, `runtime`) in the global [`TELEMETRY`]
 //!   hub, gated by one `enabled` flag (default **on**; the disabled path
 //!   is one relaxed load + a predictable branch per operation).
-//! * [`trace`] — the span/event ring ([`TraceRing`], default **off**):
-//!   plan-negotiation rationale, segment lifecycle, spill promotions,
-//!   drain reconciles — dump-on-demand with bounded memory.
+//! * [`span`] — causal span contexts ([`SpanContext`], ambient
+//!   thread-local current span behind an RAII guard): the identity that
+//!   lets a trace dump reconstruct one stream's life end-to-end.
+//! * [`trace`] — the lock-free span/event ring ([`TraceRing`], default
+//!   **off**): plan-negotiation rationale, segment lifecycle, batch and
+//!   shard causality, spill promotions, drain reconciles — every record
+//!   span-tagged, dump-on-demand with bounded memory.
+//! * [`provenance`] — [`ProvenanceRecord`]: the per-stream numeric audit
+//!   record returned by `query`/`drain`, carrying an order-invariant
+//!   provenance hash over the resolved `[λ; acc; sticky]` state.
+//! * [`flight`] — the crash flight recorder: a chained panic hook that
+//!   dumps a deterministic JSON postmortem (telemetry snapshot +
+//!   trace-ring tail + in-flight provenance) to disk.
 //! * [`snapshot`] — [`TelemetrySnapshot`]: a deterministic, typed,
 //!   ordered copy of every exported sample.
 //! * [`expose`] — Prometheus-text and JSON renderers over a snapshot
@@ -27,20 +37,26 @@
 //!   `repro stats` CLI).
 //!
 //! Metric naming, the counter/span contract, the overhead budget and the
-//! full exported-metric table live in DESIGN.md §Telemetry. The
+//! full exported-metric table live in DESIGN.md §Observability. The
 //! instrumented-vs-disabled throughput gap is bounded in CI by the
 //! `telemetry overhead` series in `benches/perf.rs`.
 
 pub mod expose;
+pub mod flight;
 pub mod metrics;
+pub mod provenance;
 pub mod registry;
 pub mod snapshot;
+pub mod span;
 pub mod trace;
 
 pub use metrics::{Counter, Gauge, HistogramSnapshot, LatencyHistogram, ValueHistogram};
+pub use provenance::{provenance_hash, ProvenanceRecord};
 pub use registry::{
-    enabled, global, AccumFamily, KernelFamily, PlanFamily, ReduceFamily, RuntimeFamily,
-    StreamFamily, Telemetry, MAX_BACKEND_SLOTS, SHARD_SLOTS, TELEMETRY,
+    enabled, global, AccumFamily, KernelFamily, LatencyFamily, PlanFamily, ReduceFamily,
+    RuntimeFamily, StreamFamily, Telemetry, FORMAT_SLOTS, MAX_BACKEND_SLOTS, SHARD_SLOTS,
+    TELEMETRY,
 };
 pub use snapshot::{MetricSample, MetricValue, TelemetrySnapshot};
+pub use span::SpanContext;
 pub use trace::{SpanRecord, TraceEvent, TraceRing, TRACE_CAPACITY};

@@ -1,0 +1,295 @@
+//! Numeric provenance records: the per-stream audit trail behind every
+//! served sum.
+//!
+//! A [`ProvenanceRecord`] explains *why a result is trustworthy*: which
+//! format and spec governed the arithmetic, which backend the plan chose
+//! and why, how much work flowed through (terms / segments / merges),
+//! which numeric-health events fired (sticky activations, spill
+//! promotions), the resolved `[λ; acc; sticky]` state, and a
+//! deterministic **provenance hash**.
+//!
+//! ## The hash and its reproducibility contract
+//!
+//! The hash is FNV-1a 64 over a canonical byte encoding of the
+//! **order-invariant value facts only**:
+//!
+//! ```text
+//! format name ‖ 0x00 ‖ spec.f ‖ spec.exact ‖ terms ‖ λ ‖ acc limbs ‖ sticky
+//! ```
+//!
+//! Execution-shape facts — backend, plan rationale, segment/merge
+//! counts, sticky/spill event counts — ride along in the record for
+//! humans but are deliberately **excluded** from the hash. That is what
+//! makes the contract checkable: on an exact spec, `⊙` associativity and
+//! commutativity (eq. 10) guarantee the resolved `[λ; acc; sticky]`
+//! state is bit-identical under any arrival order, chunking, shard
+//! split, or backend — so the hash must collapse to a single value per
+//! (multiset of terms, format, spec). `tests/observability.rs` enforces
+//! exactly that, ≥1k shuffled trials per format × backend.
+
+use std::fmt::Write as _;
+
+use super::span;
+use crate::arith::{AccSpec, WideInt};
+
+/// The audit record returned alongside `query`/`drain` results
+/// (`StreamService::query_with_provenance` / `drain_with_provenance`)
+/// and printed by `repro stats --provenance`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProvenanceRecord {
+    /// Stream id this record describes.
+    pub stream: String,
+    /// Format name (e.g. `"bf16"`).
+    pub format: &'static str,
+    /// Accumulator fraction width `f` of the governing spec.
+    pub spec_f: u32,
+    /// Exact (full-width) vs truncated accumulation.
+    pub exact: bool,
+    /// Backend the plan resolved to.
+    pub backend: &'static str,
+    /// The plan's full negotiation rationale.
+    pub rationale: &'static str,
+    /// Terms absorbed into the stream.
+    pub terms: u64,
+    /// Reduced segments merged into the stream's shard state.
+    pub segments: u64,
+    /// Shard merges applied engine-wide when the record was cut.
+    pub merges: u64,
+    /// Sticky-bit activations observed hub-wide when the record was cut.
+    pub sticky_events: u64,
+    /// EIA spill promotions observed hub-wide when the record was cut.
+    pub spill_events: u64,
+    /// Resolved max-exponent λ.
+    pub lambda: i32,
+    /// Resolved accumulator significand.
+    pub acc: WideInt,
+    /// Resolved sticky bit.
+    pub sticky: bool,
+    /// Deterministic trace id of the stream (FNV-1a of the id).
+    pub trace_id: u64,
+    /// Order-invariant provenance hash (see the module docs).
+    pub hash: u64,
+}
+
+/// Incremental FNV-1a over the canonical encoding.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(span::fnv1a(b""))
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// The order-invariant provenance hash of a resolved stream state.
+/// Covers value facts only (format identity, spec width/exactness, term
+/// count, resolved `[λ; acc; sticky]`) — never execution shape — so on
+/// exact specs any arrival order, chunking, or backend yields the same
+/// hash for the same multiset of terms.
+pub fn provenance_hash(
+    format: &str,
+    spec: AccSpec,
+    terms: u64,
+    lambda: i32,
+    acc: &WideInt,
+    sticky: bool,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.update(format.as_bytes());
+    h.update(&[0]);
+    h.update(&spec.f.to_le_bytes());
+    h.update(&[u8::from(spec.exact)]);
+    h.update(&terms.to_le_bytes());
+    h.update(&(lambda as u32).to_le_bytes());
+    for limb in &acc.limbs {
+        h.update(&limb.to_le_bytes());
+    }
+    h.update(&[u8::from(sticky)]);
+    h.0
+}
+
+impl ProvenanceRecord {
+    /// Build a record from a resolved stream state plus execution-shape
+    /// context, computing the hash and the deterministic trace id.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        stream: &str,
+        format: &'static str,
+        spec: AccSpec,
+        backend: &'static str,
+        rationale: &'static str,
+        terms: u64,
+        segments: u64,
+        merges: u64,
+        sticky_events: u64,
+        spill_events: u64,
+        lambda: i32,
+        acc: WideInt,
+        sticky: bool,
+    ) -> ProvenanceRecord {
+        ProvenanceRecord {
+            stream: stream.to_string(),
+            format,
+            spec_f: spec.f,
+            exact: spec.exact,
+            backend,
+            rationale,
+            terms,
+            segments,
+            merges,
+            sticky_events,
+            spill_events,
+            lambda,
+            acc,
+            sticky,
+            trace_id: span::trace_id_for(stream),
+            hash: provenance_hash(format, spec, terms, lambda, &acc, sticky),
+        }
+    }
+
+    /// Human-readable multi-line rendering (CLI `--provenance` output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "provenance stream={:?} trace={:016x} hash={:016x}",
+            self.stream, self.trace_id, self.hash
+        );
+        let _ = writeln!(
+            out,
+            "  format={} f={} exact={} backend={} terms={} segments={} merges={}",
+            self.format, self.spec_f, self.exact, self.backend, self.terms, self.segments,
+            self.merges
+        );
+        let _ = writeln!(
+            out,
+            "  lambda={} sticky={} sticky_events={} spill_events={}",
+            self.lambda, self.sticky, self.sticky_events, self.spill_events
+        );
+        let _ = writeln!(out, "  acc={:?}", self.acc.limbs);
+        let _ = write!(out, "  rationale={:?}", self.rationale);
+        out
+    }
+
+    /// Deterministic JSON object fragment (flight-recorder postmortems).
+    pub fn to_json(&self) -> String {
+        let mut limbs = String::new();
+        for (i, l) in self.acc.limbs.iter().enumerate() {
+            if i > 0 {
+                limbs.push(',');
+            }
+            let _ = write!(limbs, "\"0x{l:016x}\"");
+        }
+        format!(
+            concat!(
+                "{{\"stream\":\"{}\",\"format\":\"{}\",\"f\":{},\"exact\":{},",
+                "\"backend\":\"{}\",\"rationale\":\"{}\",\"terms\":{},\"segments\":{},",
+                "\"merges\":{},\"sticky_events\":{},\"spill_events\":{},\"lambda\":{},",
+                "\"sticky\":{},\"acc\":[{}],\"trace_id\":\"0x{:016x}\",\"hash\":\"0x{:016x}\"}}"
+            ),
+            super::expose::escape(&self.stream),
+            super::expose::escape(self.format),
+            self.spec_f,
+            self.exact,
+            super::expose::escape(self.backend),
+            super::expose::escape(self.rationale),
+            self.terms,
+            self.segments,
+            self.merges,
+            self.sticky_events,
+            self.spill_events,
+            self.lambda,
+            self.sticky,
+            limbs,
+            self.trace_id,
+            self.hash,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(f: u32, exact: bool) -> AccSpec {
+        AccSpec { f, exact, narrow: false }
+    }
+
+    fn acc(limbs: [u64; crate::arith::wide::LIMBS]) -> WideInt {
+        WideInt { limbs }
+    }
+
+    #[test]
+    fn hash_depends_on_value_facts_only() {
+        let a = acc([1, 2, 3, 0, 0, 0]);
+        let base = provenance_hash("bf16", spec(24, true), 100, -5, &a, false);
+        // Same value facts => same hash, regardless of who computed it.
+        assert_eq!(base, provenance_hash("bf16", spec(24, true), 100, -5, &a, false));
+        // Every value fact perturbs the hash.
+        assert_ne!(base, provenance_hash("fp16", spec(24, true), 100, -5, &a, false));
+        assert_ne!(base, provenance_hash("bf16", spec(25, true), 100, -5, &a, false));
+        assert_ne!(base, provenance_hash("bf16", spec(24, false), 100, -5, &a, false));
+        assert_ne!(base, provenance_hash("bf16", spec(24, true), 101, -5, &a, false));
+        assert_ne!(base, provenance_hash("bf16", spec(24, true), 100, -4, &a, false));
+        assert_ne!(base, provenance_hash("bf16", spec(24, true), 100, -5, &a, true));
+        let a2 = acc([1, 2, 4, 0, 0, 0]);
+        assert_ne!(base, provenance_hash("bf16", spec(24, true), 100, -5, &a2, false));
+        // `narrow` is an execution-width choice, not a value fact.
+        let narrow = AccSpec { f: 24, exact: true, narrow: true };
+        assert_eq!(base, provenance_hash("bf16", narrow, 100, -5, &a, false));
+    }
+
+    #[test]
+    fn record_seals_hash_and_trace_id_and_renders() {
+        let rec = ProvenanceRecord::new(
+            "stream-a",
+            "bf16",
+            spec(24, true),
+            "kernel",
+            "why",
+            10,
+            2,
+            2,
+            0,
+            0,
+            3,
+            acc([7, 0, 0, 0, 0, 0]),
+            false,
+        );
+        assert_eq!(rec.trace_id, span::trace_id_for("stream-a"));
+        assert_eq!(
+            rec.hash,
+            provenance_hash("bf16", spec(24, true), 10, 3, &acc([7, 0, 0, 0, 0, 0]), false)
+        );
+        let text = rec.render();
+        assert!(text.contains("stream=\"stream-a\""));
+        assert!(text.contains("backend=kernel"));
+        assert!(text.contains(&format!("hash={:016x}", rec.hash)));
+        let json = rec.to_json();
+        assert!(json.contains("\"backend\":\"kernel\""));
+        assert!(json.contains("\"acc\":[\"0x0000000000000007\""));
+        // Execution shape must not move the hash.
+        let rec2 = ProvenanceRecord::new(
+            "stream-a",
+            "bf16",
+            spec(24, true),
+            "eia",
+            "other",
+            10,
+            7,
+            9,
+            4,
+            2,
+            3,
+            acc([7, 0, 0, 0, 0, 0]),
+            false,
+        );
+        assert_eq!(rec.hash, rec2.hash);
+    }
+}

@@ -14,11 +14,12 @@
 //! keyed by registry position; `reduce::registry` registers each slot's
 //! name once so snapshots can label samples `backend="scalar"` etc.
 
-use super::metrics::{Counter, Gauge, ValueHistogram};
+use super::metrics::{Counter, Gauge, LatencyHistogram, ValueHistogram};
 use super::snapshot::TelemetrySnapshot;
 use super::trace::TraceRing;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
 
 /// Fixed number of per-backend metric slots (the registry holds 3 today;
 /// extra slots are free — 64 B each — and keep registration lock-free).
@@ -27,6 +28,10 @@ pub const MAX_BACKEND_SLOTS: usize = 8;
 /// Fixed number of per-shard-stripe metric slots; stripe `i` maps to slot
 /// `i % SHARD_SLOTS` (engines default to 16 stripes, a perfect fit).
 pub const SHARD_SLOTS: usize = 16;
+
+/// Fixed number of per-format serving-latency slots (five formats ship
+/// today; spare slots keep registration allocation-free).
+pub const FORMAT_SLOTS: usize = 8;
 
 /// Per-backend reduction lifecycle counters (one slot per registered
 /// backend, cache-line aligned so backends don't false-share).
@@ -249,6 +254,83 @@ impl StreamFamily {
     }
 }
 
+/// Per-(format × op) serving-latency SLO histograms (`stream::service`):
+/// the `ofa_stream_latency{format=...,op=...}` exposition family.
+/// Format slots register-or-find by name (like backend slots) so any
+/// number of services over the same format share one slot.
+#[derive(Debug)]
+pub struct LatencyFamily {
+    names: Mutex<[&'static str; FORMAT_SLOTS]>,
+    hist: [[LatencyHistogram; LatencyFamily::OPS.len()]; FORMAT_SLOTS],
+}
+
+impl LatencyFamily {
+    /// Served operations, in exposition order.
+    pub const OPS: [&'static str; 3] = ["ingest", "query", "drain"];
+    pub const OP_INGEST: usize = 0;
+    pub const OP_QUERY: usize = 1;
+    pub const OP_DRAIN: usize = 2;
+
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)] // array-init template
+        const H: LatencyHistogram = LatencyHistogram::new();
+        #[allow(clippy::declare_interior_mutable_const)] // array-init template
+        const ROW: [LatencyHistogram; 3] = [H; 3];
+        LatencyFamily { names: Mutex::new([""; FORMAT_SLOTS]), hist: [ROW; FORMAT_SLOTS] }
+    }
+
+    fn names(&self) -> MutexGuard<'_, [&'static str; FORMAT_SLOTS]> {
+        self.names.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Find or claim the slot for a format name. Once per service
+    /// construction — never on the serving path. When every slot is
+    /// taken by other names, overflow formats share the last slot
+    /// (clamped, like `reduce_slot`) rather than panic.
+    pub fn register_format(&self, name: &'static str) -> usize {
+        let mut names = self.names();
+        for (i, n) in names.iter_mut().enumerate() {
+            if *n == name {
+                return i;
+            }
+            if n.is_empty() {
+                *n = name;
+                return i;
+            }
+        }
+        FORMAT_SLOTS - 1
+    }
+
+    /// The registered format name per slot (`""` = unregistered).
+    pub fn format_names(&self) -> [&'static str; FORMAT_SLOTS] {
+        *self.names()
+    }
+
+    /// Record one served operation (indices clamp rather than panic).
+    pub fn observe(&self, slot: usize, op: usize, elapsed: Duration) {
+        self.hist[slot.min(FORMAT_SLOTS - 1)][op.min(Self::OPS.len() - 1)].observe(elapsed);
+    }
+
+    /// The histogram for one (slot, op) cell (indices clamp).
+    pub fn cell(&self, slot: usize, op: usize) -> &LatencyHistogram {
+        &self.hist[slot.min(FORMAT_SLOTS - 1)][op.min(Self::OPS.len() - 1)]
+    }
+
+    fn reset(&self) {
+        for row in &self.hist {
+            for h in row {
+                h.reset();
+            }
+        }
+    }
+}
+
+impl Default for LatencyFamily {
+    fn default() -> Self {
+        LatencyFamily::new()
+    }
+}
+
 /// Artifact-runtime reduction executor (`runtime::reduce`).
 #[repr(align(64))]
 #[derive(Debug, Default)]
@@ -280,6 +362,7 @@ pub struct Telemetry {
     pub accum: AccumFamily,
     pub kernel: KernelFamily,
     pub stream: StreamFamily,
+    pub latency: LatencyFamily,
     pub runtime: RuntimeFamily,
     pub trace: TraceRing,
 }
@@ -296,6 +379,7 @@ impl Telemetry {
             accum: AccumFamily::new(),
             kernel: KernelFamily::new(),
             stream: StreamFamily::new(),
+            latency: LatencyFamily::new(),
             runtime: RuntimeFamily::new(),
             trace: TraceRing::new(),
         }
@@ -351,6 +435,7 @@ impl Telemetry {
         self.accum.reset();
         self.kernel.reset();
         self.stream.reset();
+        self.latency.reset();
         self.runtime.reset();
         self.trace.reset();
     }
@@ -409,5 +494,27 @@ mod tests {
         // Out-of-range slot access clamps instead of panicking.
         t.reduce_slot(MAX_BACKEND_SLOTS + 5).ingest_calls.inc();
         assert_eq!(t.reduce[MAX_BACKEND_SLOTS - 1].ingest_calls.get(), 1);
+    }
+
+    #[test]
+    fn latency_slots_register_find_and_reset() {
+        let t = Telemetry::new();
+        let a = t.latency.register_format("bf16");
+        let b = t.latency.register_format("fp32");
+        assert_eq!(t.latency.register_format("bf16"), a);
+        assert_ne!(a, b);
+        assert_eq!(t.latency.format_names()[a], "bf16");
+        t.latency.observe(a, LatencyFamily::OP_QUERY, Duration::from_micros(250));
+        assert_eq!(t.latency.cell(a, LatencyFamily::OP_QUERY).count(), 1);
+        assert_eq!(t.latency.cell(a, LatencyFamily::OP_INGEST).count(), 0);
+        t.reset();
+        // Histograms clear; name registrations survive (like backends).
+        assert_eq!(t.latency.cell(a, LatencyFamily::OP_QUERY).count(), 0);
+        assert_eq!(t.latency.format_names()[b], "fp32");
+        // Registration saturates at the last slot instead of panicking.
+        for i in 0..2 * FORMAT_SLOTS {
+            t.latency.register_format(["x0", "x1", "x2", "x3", "x4", "x5", "x6", "x7"][i % 8]);
+        }
+        assert!(t.latency.register_format("overflow") < FORMAT_SLOTS);
     }
 }

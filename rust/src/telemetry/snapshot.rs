@@ -8,7 +8,7 @@
 //! with activity are emitted (unlabeled slots carry no information).
 
 use super::metrics::HistogramSnapshot;
-use super::registry::{Telemetry, MAX_BACKEND_SLOTS, SHARD_SLOTS};
+use super::registry::{LatencyFamily, Telemetry, FORMAT_SLOTS, MAX_BACKEND_SLOTS, SHARD_SLOTS};
 
 /// One exported metric value.
 #[derive(Clone, Debug, PartialEq)]
@@ -18,7 +18,7 @@ pub enum MetricValue {
     Histogram(HistogramSnapshot),
 }
 
-/// One exported sample: a metric name (see DESIGN.md §Telemetry for the
+/// One exported sample: a metric name (see DESIGN.md §Observability for the
 /// `ofa_<tier>_<name>` convention), its label set, and its value.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetricSample {
@@ -161,6 +161,22 @@ pub fn snapshot_of(t: &Telemetry) -> TelemetrySnapshot {
         let shard = slot.to_string();
         out.push_counter("ofa_stream_shard_merges", label("shard", &shard), merges);
         out.push_counter("ofa_stream_shard_terms", label("shard", &shard), terms);
+    }
+
+    // -- serving-latency SLOs: one histogram per (named format × op) ------
+    let formats = t.latency.format_names();
+    for slot in 0..FORMAT_SLOTS {
+        let format = formats[slot];
+        if format.is_empty() {
+            continue;
+        }
+        for (op_idx, op) in LatencyFamily::OPS.iter().enumerate() {
+            out.push_histogram(
+                "ofa_stream_latency",
+                vec![("format", format.to_string()), ("op", op.to_string())],
+                t.latency.cell(slot, op_idx).snapshot(),
+            );
+        }
     }
 
     // -- runtime executor -------------------------------------------------

@@ -1,0 +1,172 @@
+//! Causal span contexts: the identity half of the tracing layer.
+//!
+//! A [`SpanContext`] names one unit of work on a stream's life —
+//! an ingest batch, a worker reduction, a drain — and links it to its
+//! parent so the trace ring can reconstruct a single stream end-to-end.
+//! Three design rules keep it cheap enough for the hot path:
+//!
+//! * **`Copy`, three words.** `{trace_id, span_id, parent_id}` — no
+//!   allocation, no refcount. Passing a context through a queue or a
+//!   thread boundary is a struct copy.
+//! * **Deterministic trace ids.** `trace_id` is the FNV-1a hash of the
+//!   stream id, so any tier that knows the stream name can compute the
+//!   trace id without plumbing — and two runs over the same streams
+//!   produce the same trace ids.
+//! * **Ambient current span.** The active span lives in a thread-local
+//!   cell behind an RAII [`SpanGuard`]. [`super::TraceRing::record`]
+//!   captures it automatically after the enabled gate, so existing
+//!   record sites get span-tagged with zero call-site churn. The ring's
+//!   per-record sequence number doubles as the monotonic clock that
+//!   orders events within and across spans.
+//!
+//! Span ids come from one process-global counter: unique and monotone
+//! in allocation order, never meaningful in absolute value.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte string — the repo-wide deterministic 64-bit hash
+/// (also the base of the provenance hash in [`super::provenance`]).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The causal identity of one unit of work. `trace_id` groups every
+/// span of one stream's life; `parent_id` is the `span_id` of the span
+/// that caused this one (0 = root). A zeroed context means "no span".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanContext {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+}
+
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_span_id() -> u64 {
+    NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Deterministic trace id for a stream: FNV-1a of the id bytes, nudged
+/// off 0 (0 is reserved for "no span").
+pub fn trace_id_for(stream: &str) -> u64 {
+    let h = fnv1a(stream.as_bytes());
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+impl SpanContext {
+    pub const NONE: SpanContext = SpanContext { trace_id: 0, span_id: 0, parent_id: 0 };
+
+    pub fn is_none(&self) -> bool {
+        self.trace_id == 0 && self.span_id == 0
+    }
+
+    /// A fresh root span on the given trace.
+    pub fn root(trace_id: u64) -> SpanContext {
+        SpanContext { trace_id, span_id: next_span_id(), parent_id: 0 }
+    }
+
+    /// A fresh root span on the stream's deterministic trace.
+    pub fn for_stream(stream: &str) -> SpanContext {
+        SpanContext::root(trace_id_for(stream))
+    }
+
+    /// A fresh child span: same trace, parented to `self`.
+    pub fn child(&self) -> SpanContext {
+        SpanContext {
+            trace_id: self.trace_id,
+            span_id: next_span_id(),
+            parent_id: self.span_id,
+        }
+    }
+}
+
+thread_local! {
+    static CURRENT: Cell<SpanContext> = const { Cell::new(SpanContext::NONE) };
+}
+
+/// The thread's ambient span (`NONE` outside any [`SpanGuard`]).
+pub fn current() -> SpanContext {
+    CURRENT.with(Cell::get)
+}
+
+/// RAII scope for the ambient span: restores the previous span on drop,
+/// so guards nest correctly through re-entrant reduce/drain paths.
+#[must_use = "dropping the guard immediately exits the span"]
+pub struct SpanGuard {
+    prev: SpanContext,
+}
+
+/// Make `ctx` the thread's ambient span until the guard drops.
+pub fn enter(ctx: SpanContext) -> SpanGuard {
+    let prev = CURRENT.with(|c| c.replace(ctx));
+    SpanGuard { prev }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        CURRENT.with(|c| c.set(self.prev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn trace_ids_are_deterministic_and_nonzero() {
+        assert_eq!(trace_id_for("stats-0"), trace_id_for("stats-0"));
+        assert_ne!(trace_id_for("stats-0"), trace_id_for("stats-1"));
+        assert_ne!(trace_id_for(""), 0);
+    }
+
+    #[test]
+    fn children_link_to_parents_on_the_same_trace() {
+        let root = SpanContext::for_stream("s");
+        let child = root.child();
+        let grandchild = child.child();
+        assert_eq!(root.parent_id, 0);
+        assert_eq!(child.trace_id, root.trace_id);
+        assert_eq!(child.parent_id, root.span_id);
+        assert_eq!(grandchild.parent_id, child.span_id);
+        assert_ne!(child.span_id, root.span_id);
+        assert_ne!(grandchild.span_id, child.span_id);
+    }
+
+    #[test]
+    fn guards_set_and_restore_the_ambient_span() {
+        assert!(current().is_none());
+        let outer = SpanContext::for_stream("outer");
+        {
+            let _g = enter(outer);
+            assert_eq!(current(), outer);
+            let inner = outer.child();
+            {
+                let _g2 = enter(inner);
+                assert_eq!(current(), inner);
+            }
+            assert_eq!(current(), outer);
+        }
+        assert!(current().is_none());
+    }
+}

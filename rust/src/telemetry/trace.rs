@@ -1,19 +1,45 @@
-//! Structured span/event tracing: a fixed-capacity ring buffer of
-//! numeric-health events, dumped on demand.
+//! Structured span/event tracing: a fixed-capacity, **lock-free** ring
+//! of numeric-health events, dumped on demand.
 //!
 //! Tracing is **off by default** and independently gated from the metric
 //! counters: when disabled, [`TraceRing::record`] is one relaxed load and
 //! an early return, so hot paths can call it unconditionally. When
-//! enabled, each record takes the ring's mutex briefly — tracing is a
-//! diagnostic mode, not a production-hot-path mode, and the capacity
-//! bound keeps memory flat no matter how long the process runs.
+//! enabled, a record is an atomic slot claim plus a handful of relaxed
+//! word stores — no mutex anywhere on the path. Each record is
+//! automatically tagged with the thread's ambient [`SpanContext`]
+//! (see [`super::span`]), so a dump reconstructs a stream's life
+//! end-to-end: ingest → queued batch → worker reduce → shard merge →
+//! drain, all sharing one `trace_id`.
+//!
+//! ## Slot protocol (seqlock over atomics — no `unsafe` data races)
+//!
+//! Every slot is a group of atomic words guarded by a `version` word:
+//! `0` = never written, odd = writer inside, even ≠ 0 = stable. A writer
+//! claims the global sequence number (the ring's monotonic clock), CASes
+//! the slot's version even→odd, stores the payload words relaxed, and
+//! releases with `version + 2`. A reader snapshots the version, reads
+//! the words, and keeps the record only if the version is unchanged,
+//! even, and nonzero — torn reads are *discarded before decoding*, so
+//! the `&'static str` payloads (stored as provenance-preserving
+//! `AtomicPtr` + length pairs) are only ever materialized from a
+//! consistent write. Under pathological contention a writer gives up
+//! after a bounded spin and drops its record — never tears one —
+//! while [`TraceRing::total`] still counts it.
 
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::ptr;
+use std::sync::atomic::{fence, AtomicBool, AtomicPtr, AtomicU64, Ordering};
+
+use super::span::{self, SpanContext};
 
 /// Ring capacity: old events are overwritten once this many are live.
 pub const TRACE_CAPACITY: usize = 1024;
+
+/// Bounded writer spin before a contended record is dropped (not torn).
+const MAX_CLAIM_SPINS: usize = 256;
+
+/// Bounded reader retries against a slot mid-write.
+const MAX_READ_RETRIES: usize = 64;
 
 /// One numeric-health event on the reduction path. Payloads are small
 /// `Copy` scalars — recording never allocates beyond the ring slot.
@@ -26,8 +52,14 @@ pub enum TraceEvent {
     SegmentOffered { seq: u64, parked: bool },
     /// An assembler merged segment `seq` into its running state.
     SegmentMerged { seq: u64 },
+    /// An ingest batch was accepted onto the engine queue.
+    BatchQueued { terms: u64 },
     /// A stream-engine worker reduced one ingest batch.
     BatchReduced { terms: u64, segments: u64 },
+    /// A shard stripe absorbed a reduced segment into a stream's state.
+    ShardMerged { stripe: usize, terms: u64 },
+    /// A registry backend resolved a reduction to its final state.
+    ReduceFinished { backend: &'static str, terms: u64 },
     /// An accumulator bin's fast `i64` lane promoted into the `i128`
     /// spill lane (bin index within the accumulator's window).
     SpillPromoted { bin: usize },
@@ -48,8 +80,15 @@ impl fmt::Display for TraceEvent {
                 write!(f, "segment-offered seq={seq} parked={parked}")
             }
             TraceEvent::SegmentMerged { seq } => write!(f, "segment-merged seq={seq}"),
+            TraceEvent::BatchQueued { terms } => write!(f, "batch-queued terms={terms}"),
             TraceEvent::BatchReduced { terms, segments } => {
                 write!(f, "batch-reduced terms={terms} segments={segments}")
+            }
+            TraceEvent::ShardMerged { stripe, terms } => {
+                write!(f, "shard-merged stripe={stripe} terms={terms}")
+            }
+            TraceEvent::ReduceFinished { backend, terms } => {
+                write!(f, "reduce-finished backend={backend} terms={terms}")
             }
             TraceEvent::SpillPromoted { bin } => write!(f, "spill-promoted bin={bin}"),
             TraceEvent::DrainReconciled { bins, sticky } => {
@@ -60,39 +99,280 @@ impl fmt::Display for TraceEvent {
     }
 }
 
-/// A recorded event with its global sequence number (records only — the
-/// sequence does not advance while tracing is disabled).
+/// A recorded event with its global sequence number and the span it
+/// happened under. The sequence is the ring's monotonic clock (records
+/// only — it does not advance while tracing is disabled).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SpanRecord {
     pub seq: u64,
+    pub span: SpanContext,
     pub event: TraceEvent,
 }
 
 impl fmt::Display for SpanRecord {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "#{:<6} {}", self.seq, self.event)
+        write!(f, "#{:<6} {}", self.seq, self.event)?;
+        if !self.span.is_none() {
+            write!(
+                f,
+                " trace={:016x} span={} parent={}",
+                self.span.trace_id, self.span.span_id, self.span.parent_id
+            )?;
+        }
+        Ok(())
     }
 }
 
-/// Poison-tolerant lock: a panicked recorder must not kill tracing.
-fn lock(ring: &Mutex<Vec<SpanRecord>>) -> MutexGuard<'_, Vec<SpanRecord>> {
-    ring.lock().unwrap_or_else(PoisonError::into_inner)
+// Event wire tags for the slot encoding (0 = empty/invalid).
+const TAG_PLAN: u64 = 1;
+const TAG_SEG_OFFERED: u64 = 2;
+const TAG_SEG_MERGED: u64 = 3;
+const TAG_BATCH_QUEUED: u64 = 4;
+const TAG_BATCH_REDUCED: u64 = 5;
+const TAG_SHARD_MERGED: u64 = 6;
+const TAG_REDUCE_FINISHED: u64 = 7;
+const TAG_SPILL: u64 = 8;
+const TAG_DRAIN: u64 = 9;
+const TAG_STREAM_DRAINED: u64 = 10;
+
+/// A `&'static str` flattened to plain words for atomic storage.
+#[derive(Clone, Copy)]
+struct RawStr {
+    ptr: *const u8,
+    len: u64,
 }
 
-/// Fixed-capacity event ring, const-constructible for `static` use.
+const NO_STR: RawStr = RawStr { ptr: ptr::null(), len: 0 };
+
+impl RawStr {
+    fn of(s: &'static str) -> RawStr {
+        RawStr { ptr: s.as_ptr(), len: s.len() as u64 }
+    }
+
+    /// Rebuild the `&'static str`. Only called on word pairs that
+    /// passed the slot's version check, i.e. that were stored together
+    /// from one writer's `RawStr::of(&'static str)`.
+    fn get(self) -> &'static str {
+        if self.ptr.is_null() {
+            return "";
+        }
+        // SAFETY: `ptr`/`len` were derived from a live `&'static str`
+        // by `RawStr::of` and read back consistently (the caller's
+        // version check rejects torn pairs before this runs). The
+        // AtomicPtr round-trip preserves provenance, the bytes are
+        // 'static, and they were valid UTF-8 when flattened.
+        unsafe {
+            std::str::from_utf8_unchecked(std::slice::from_raw_parts(self.ptr, self.len as usize))
+        }
+    }
+}
+
+/// The payload words of one event, pre-validation.
+#[derive(Clone, Copy)]
+struct RawEvent {
+    tag: u64,
+    a: u64,
+    b: u64,
+    s0: RawStr,
+    s1: RawStr,
+}
+
+fn encode(event: TraceEvent) -> RawEvent {
+    let (tag, a, b, s0, s1) = match event {
+        TraceEvent::PlanNegotiated { backend, rationale } => {
+            (TAG_PLAN, 0, 0, RawStr::of(backend), RawStr::of(rationale))
+        }
+        TraceEvent::SegmentOffered { seq, parked } => {
+            (TAG_SEG_OFFERED, seq, u64::from(parked), NO_STR, NO_STR)
+        }
+        TraceEvent::SegmentMerged { seq } => (TAG_SEG_MERGED, seq, 0, NO_STR, NO_STR),
+        TraceEvent::BatchQueued { terms } => (TAG_BATCH_QUEUED, terms, 0, NO_STR, NO_STR),
+        TraceEvent::BatchReduced { terms, segments } => {
+            (TAG_BATCH_REDUCED, terms, segments, NO_STR, NO_STR)
+        }
+        TraceEvent::ShardMerged { stripe, terms } => {
+            (TAG_SHARD_MERGED, stripe as u64, terms, NO_STR, NO_STR)
+        }
+        TraceEvent::ReduceFinished { backend, terms } => {
+            (TAG_REDUCE_FINISHED, terms, 0, RawStr::of(backend), NO_STR)
+        }
+        TraceEvent::SpillPromoted { bin } => (TAG_SPILL, bin as u64, 0, NO_STR, NO_STR),
+        TraceEvent::DrainReconciled { bins, sticky } => {
+            (TAG_DRAIN, bins, u64::from(sticky), NO_STR, NO_STR)
+        }
+        TraceEvent::StreamDrained { terms } => (TAG_STREAM_DRAINED, terms, 0, NO_STR, NO_STR),
+    };
+    RawEvent { tag, a, b, s0, s1 }
+}
+
+fn decode(raw: RawEvent) -> Option<TraceEvent> {
+    Some(match raw.tag {
+        TAG_PLAN => TraceEvent::PlanNegotiated { backend: raw.s0.get(), rationale: raw.s1.get() },
+        TAG_SEG_OFFERED => TraceEvent::SegmentOffered { seq: raw.a, parked: raw.b != 0 },
+        TAG_SEG_MERGED => TraceEvent::SegmentMerged { seq: raw.a },
+        TAG_BATCH_QUEUED => TraceEvent::BatchQueued { terms: raw.a },
+        TAG_BATCH_REDUCED => TraceEvent::BatchReduced { terms: raw.a, segments: raw.b },
+        TAG_SHARD_MERGED => TraceEvent::ShardMerged { stripe: raw.a as usize, terms: raw.b },
+        TAG_REDUCE_FINISHED => {
+            TraceEvent::ReduceFinished { backend: raw.s0.get(), terms: raw.a }
+        }
+        TAG_SPILL => TraceEvent::SpillPromoted { bin: raw.a as usize },
+        TAG_DRAIN => TraceEvent::DrainReconciled { bins: raw.a, sticky: raw.b != 0 },
+        TAG_STREAM_DRAINED => TraceEvent::StreamDrained { terms: raw.a },
+        _ => return None,
+    })
+}
+
+/// One ring slot: a version-guarded group of atomic words. All payload
+/// state is atomic, so even racy access is defined behavior; the
+/// version protocol only decides which reads are *kept*.
+#[derive(Debug)]
+struct Slot {
+    /// 0 = empty, odd = writer inside, even ≠ 0 = stable.
+    version: AtomicU64,
+    seq: AtomicU64,
+    tag: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    s0_ptr: AtomicPtr<u8>,
+    s0_len: AtomicU64,
+    s1_ptr: AtomicPtr<u8>,
+    s1_len: AtomicU64,
+    trace_id: AtomicU64,
+    span_id: AtomicU64,
+    parent_id: AtomicU64,
+}
+
+impl Slot {
+    const fn new() -> Self {
+        Slot {
+            version: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            tag: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+            s0_ptr: AtomicPtr::new(ptr::null_mut()),
+            s0_len: AtomicU64::new(0),
+            s1_ptr: AtomicPtr::new(ptr::null_mut()),
+            s1_len: AtomicU64::new(0),
+            trace_id: AtomicU64::new(0),
+            span_id: AtomicU64::new(0),
+            parent_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim the write section: CAS the version even→odd. Returns the
+    /// prior (even) version, or `None` after a bounded spin.
+    fn claim(&self) -> Option<u64> {
+        let mut v = self.version.load(Ordering::Relaxed);
+        for _ in 0..MAX_CLAIM_SPINS {
+            if v % 2 == 0 {
+                match self.version.compare_exchange_weak(
+                    v,
+                    v + 1,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => return Some(v),
+                    Err(cur) => v = cur,
+                }
+            } else {
+                std::hint::spin_loop();
+                v = self.version.load(Ordering::Relaxed);
+            }
+        }
+        None
+    }
+
+    fn write(&self, seq: u64, span: SpanContext, raw: RawEvent) {
+        let Some(v) = self.claim() else {
+            return; // contended past the spin bound: drop, never tear
+        };
+        // Monotone guard: a writer delayed past a full ring wrap must
+        // not clobber the newer record that took its slot.
+        if v != 0 && self.seq.load(Ordering::Relaxed) > seq {
+            self.version.store(v, Ordering::Release);
+            return;
+        }
+        self.seq.store(seq, Ordering::Relaxed);
+        self.tag.store(raw.tag, Ordering::Relaxed);
+        self.a.store(raw.a, Ordering::Relaxed);
+        self.b.store(raw.b, Ordering::Relaxed);
+        self.s0_ptr.store(raw.s0.ptr.cast_mut(), Ordering::Relaxed);
+        self.s0_len.store(raw.s0.len, Ordering::Relaxed);
+        self.s1_ptr.store(raw.s1.ptr.cast_mut(), Ordering::Relaxed);
+        self.s1_len.store(raw.s1.len, Ordering::Relaxed);
+        self.trace_id.store(span.trace_id, Ordering::Relaxed);
+        self.span_id.store(span.span_id, Ordering::Relaxed);
+        self.parent_id.store(span.parent_id, Ordering::Relaxed);
+        self.version.store(v + 2, Ordering::Release);
+    }
+
+    /// Read the slot's record, or `None` if empty / mid-write past the
+    /// retry bound / holding an unknown tag.
+    fn read(&self) -> Option<SpanRecord> {
+        for _ in 0..MAX_READ_RETRIES {
+            let v1 = self.version.load(Ordering::Acquire);
+            if v1 == 0 {
+                return None;
+            }
+            if v1 % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let seq = self.seq.load(Ordering::Relaxed);
+            let raw = RawEvent {
+                tag: self.tag.load(Ordering::Relaxed),
+                a: self.a.load(Ordering::Relaxed),
+                b: self.b.load(Ordering::Relaxed),
+                s0: RawStr {
+                    ptr: self.s0_ptr.load(Ordering::Relaxed),
+                    len: self.s0_len.load(Ordering::Relaxed),
+                },
+                s1: RawStr {
+                    ptr: self.s1_ptr.load(Ordering::Relaxed),
+                    len: self.s1_len.load(Ordering::Relaxed),
+                },
+            };
+            let span = SpanContext {
+                trace_id: self.trace_id.load(Ordering::Relaxed),
+                span_id: self.span_id.load(Ordering::Relaxed),
+                parent_id: self.parent_id.load(Ordering::Relaxed),
+            };
+            fence(Ordering::Acquire);
+            if self.version.load(Ordering::Relaxed) == v1 {
+                // Consistent snapshot — only now is decoding (incl. the
+                // &'static str rebuild) allowed.
+                return decode(raw).map(|event| SpanRecord { seq, span, event });
+            }
+        }
+        None
+    }
+
+    fn clear(&self) {
+        self.tag.store(0, Ordering::Relaxed);
+        self.seq.store(0, Ordering::Relaxed);
+        self.version.store(0, Ordering::Release);
+    }
+}
+
+/// Fixed-capacity lock-free event ring, const-constructible for
+/// `static` use.
 #[derive(Debug)]
 pub struct TraceRing {
     enabled: AtomicBool,
     seq: AtomicU64,
-    ring: Mutex<Vec<SpanRecord>>,
+    ring: [Slot; TRACE_CAPACITY],
 }
 
 impl TraceRing {
     pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const EMPTY: Slot = Slot::new();
         TraceRing {
             enabled: AtomicBool::new(false),
             seq: AtomicU64::new(0),
-            ring: Mutex::new(Vec::new()),
+            ring: [EMPTY; TRACE_CAPACITY],
         }
     }
 
@@ -104,37 +384,58 @@ impl TraceRing {
         self.enabled.store(on, Ordering::Relaxed);
     }
 
-    /// Record one event (no-op unless tracing is enabled). Events past
-    /// capacity overwrite the oldest slots.
+    /// Record one event under the thread's ambient span (no-op unless
+    /// tracing is enabled). Events past capacity overwrite the oldest
+    /// slots; the claim is a global `fetch_add` plus one slot CAS —
+    /// no lock anywhere.
     pub fn record(&self, event: TraceEvent) {
         if !self.enabled() {
             return;
         }
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let rec = SpanRecord { seq, event };
-        let mut ring = lock(&self.ring);
-        if ring.len() < TRACE_CAPACITY {
-            ring.push(rec);
-        } else {
-            ring[(seq as usize) % TRACE_CAPACITY] = rec;
-        }
+        self.record_with(span::current(), event);
     }
 
-    /// Total events ever recorded (including any overwritten in the ring).
+    /// Record under an explicit span (no-op unless tracing is enabled).
+    pub fn record_with(&self, span: SpanContext, event: TraceEvent) {
+        if !self.enabled() {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.ring[(seq as usize) % TRACE_CAPACITY];
+        slot.write(seq, span, encode(event));
+    }
+
+    /// Total events ever recorded (including any overwritten in the
+    /// ring or dropped under write contention).
     pub fn total(&self) -> u64 {
         self.seq.load(Ordering::Relaxed)
     }
 
-    /// Copy out the live records in sequence order.
+    /// Copy out the live records in sequence order. Concurrent with
+    /// writers this is a consistent *sample*: every returned record is
+    /// whole (never torn), sequence numbers are unique and ascending.
     pub fn dump(&self) -> Vec<SpanRecord> {
-        let mut out = lock(&self.ring).clone();
+        let mut out: Vec<SpanRecord> = self.ring.iter().filter_map(Slot::read).collect();
         out.sort_by_key(|r| r.seq);
         out
     }
 
-    /// Drop all records and restart the sequence (leaves `enabled` as-is).
+    /// The newest `n` records in sequence order (flight-recorder tail).
+    pub fn tail(&self, n: usize) -> Vec<SpanRecord> {
+        let mut out = self.dump();
+        if out.len() > n {
+            out.drain(..out.len() - n);
+        }
+        out
+    }
+
+    /// Drop all records and restart the sequence (leaves `enabled`
+    /// as-is). Not meant to race with writers: a writer mid-record may
+    /// survive the sweep, which the next `dump()` tolerates.
     pub fn reset(&self) {
-        lock(&self.ring).clear();
+        for slot in &self.ring {
+            slot.clear();
+        }
         self.seq.store(0, Ordering::Relaxed);
     }
 }
@@ -148,6 +449,7 @@ impl Default for TraceRing {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn disabled_ring_records_nothing() {
@@ -179,8 +481,102 @@ mod tests {
     fn events_render_for_dumps() {
         let e = TraceEvent::DrainReconciled { bins: 3, sticky: true };
         assert_eq!(e.to_string(), "drain-reconciled bins=3 sticky=true");
-        let r = SpanRecord { seq: 7, event: TraceEvent::SpillPromoted { bin: 12 } };
+        let r = SpanRecord {
+            seq: 7,
+            span: SpanContext::NONE,
+            event: TraceEvent::SpillPromoted { bin: 12 },
+        };
         assert!(r.to_string().contains("#7"));
         assert!(r.to_string().contains("spill-promoted bin=12"));
+        assert!(!r.to_string().contains("trace="));
+    }
+
+    #[test]
+    fn records_carry_the_ambient_span_and_str_payloads_survive() {
+        let ring = TraceRing::new();
+        ring.set_enabled(true);
+        let root = SpanContext::for_stream("span-test");
+        {
+            let _g = span::enter(root);
+            ring.record(TraceEvent::PlanNegotiated { backend: "kernel", rationale: "why" });
+        }
+        ring.record(TraceEvent::SegmentMerged { seq: 1 });
+        let dump = ring.dump();
+        assert_eq!(dump.len(), 2);
+        assert_eq!(dump[0].span, root);
+        assert_eq!(
+            dump[0].event,
+            TraceEvent::PlanNegotiated { backend: "kernel", rationale: "why" }
+        );
+        assert!(dump[0].to_string().contains("trace="));
+        // Outside the guard, records are span-free.
+        assert!(dump[1].span.is_none());
+    }
+
+    /// Satellite pin: concurrent writers + a concurrent reader. Every
+    /// dumped record must be whole (payload invariant intact), sequence
+    /// numbers unique and ascending, capacity respected — both while
+    /// writers run and after they finish.
+    #[test]
+    fn concurrent_records_are_never_torn_and_stay_ordered() {
+        const THREADS: u64 = 4;
+        const PER_THREAD: u64 = 2 * TRACE_CAPACITY as u64;
+        let ring = Arc::new(TraceRing::new());
+        ring.set_enabled(true);
+
+        let check = |dump: &[SpanRecord]| {
+            assert!(dump.len() <= TRACE_CAPACITY);
+            assert!(dump.windows(2).all(|w| w[0].seq < w[1].seq), "dump not ascending");
+            for r in dump {
+                match r.event {
+                    // Writers only ever store pairs with b == a ^ 0x5a:
+                    // a torn record would break the invariant.
+                    TraceEvent::BatchReduced { terms, segments } => {
+                        assert_eq!(segments, terms ^ 0x5a, "torn record at seq {}", r.seq);
+                    }
+                    ref other => panic!("unexpected event in dump: {other}"),
+                }
+            }
+        };
+
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let ring = Arc::clone(&ring);
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        let a = t * PER_THREAD + i;
+                        ring.record(TraceEvent::BatchReduced { terms: a, segments: a ^ 0x5a });
+                    }
+                });
+            }
+            // Sample concurrently with the writers.
+            for _ in 0..20 {
+                check(&ring.dump());
+                std::thread::yield_now();
+            }
+        });
+
+        assert_eq!(ring.total(), THREADS * PER_THREAD);
+        let dump = ring.dump();
+        check(&dump);
+        // Quiesced: every surviving slot holds a decodable record, and
+        // the newest record made it in (its writer was last to finish
+        // claiming, so nothing newer could have dropped it).
+        assert!(!dump.is_empty());
+        assert!(dump.iter().all(|r| r.seq < THREADS * PER_THREAD));
+    }
+
+    #[test]
+    fn tail_returns_newest_records() {
+        let ring = TraceRing::new();
+        ring.set_enabled(true);
+        for i in 0..10 {
+            ring.record(TraceEvent::SegmentMerged { seq: i });
+        }
+        let tail = ring.tail(3);
+        assert_eq!(tail.len(), 3);
+        assert_eq!(tail[0].seq, 7);
+        assert_eq!(tail[2].seq, 9);
+        assert_eq!(ring.tail(100).len(), 10);
     }
 }

@@ -1,6 +1,8 @@
 //! Failure-injection tests for the L3 coordinator: the serving path must
 //! degrade loudly and safely (no hangs, no silent corruption) when its
-//! executor or clients misbehave.
+//! executor or clients misbehave. The crash flight recorder is exercised
+//! here too — an injected panic must leave a postmortem behind (CI
+//! uploads `target/flight/*.json` as an artifact when a job fails).
 
 use online_fp_add::coordinator::batcher::{Batcher, BatcherConfig, SubmitError};
 use online_fp_add::coordinator::pool::ThreadPool;
@@ -104,6 +106,41 @@ fn missing_artifact_is_an_error_not_a_crash() {
             assert!(msg.contains("no_such_artifact"), "{msg}");
         }
     }
+}
+
+#[test]
+fn injected_panic_leaves_a_flight_postmortem() {
+    use online_fp_add::telemetry::flight;
+    // Chains the harness's own hook, so normal failure reporting for the
+    // other tests in this binary is preserved.
+    flight::install_panic_hook();
+    let _ = std::panic::catch_unwind(|| panic!("flight recorder injected fault"));
+    let path = flight::dump_dir()
+        .join(flight::dump_file_name("panic: flight recorder injected fault"));
+    let body = std::fs::read_to_string(&path).expect("postmortem written by the panic hook");
+    assert!(body.contains("flight recorder injected fault"), "{body}");
+    assert!(body.contains("\"trace_tail\":["), "{body}");
+    assert!(body.contains("\"telemetry\":"), "{body}");
+}
+
+#[test]
+fn flight_dump_api_captures_in_flight_provenance() {
+    use online_fp_add::formats::{Fp, BF16};
+    use online_fp_add::stream::StreamService;
+    use online_fp_add::telemetry::flight;
+    let svc = StreamService::exact(BF16);
+    svc.ingest_blocking("flight-s", vec![Fp::from_f64(1.5, BF16); 4]).unwrap();
+    let (_, rec) = svc.query_with_provenance("flight-s").expect("stream exists");
+    let dir = std::path::PathBuf::from("target").join("flight-test");
+    let path = flight::dump_to(&dir, "api probe").expect("dump writes");
+    assert_eq!(path.file_name().unwrap(), "postmortem-api-probe.json");
+    let body = std::fs::read_to_string(&path).unwrap();
+    assert!(body.contains("\"reason\":\"api probe\""), "{body}");
+    // The record cut by query_with_provenance rides the in-flight ring
+    // into the postmortem, hash included.
+    assert!(body.contains("\"stream\":\"flight-s\""), "{body}");
+    assert!(body.contains(&format!("0x{:016x}", rec.hash)), "{body}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

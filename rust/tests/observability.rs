@@ -1,0 +1,154 @@
+//! Observability gate (DESIGN.md §Observability): the provenance hash's
+//! reproducibility contract, enforced end to end.
+//!
+//! On an exact spec the fused `⊙` operator is associative and commutative
+//! (eq. 10), so a stream's resolved `[λ; acc; sticky]` state — and
+//! therefore its provenance hash, which covers exactly the value facts —
+//! must be **bit-identical** under any arrival order, chunk split, shard
+//! geometry, or registered backend. Each gate below shuffles one of those
+//! execution axes ≥1000 times and requires a single unique hash and zero
+//! state mismatches.
+
+use std::collections::HashSet;
+
+use online_fp_add::arith::operator::AlignAcc;
+use online_fp_add::arith::AccSpec;
+use online_fp_add::formats::{Fp, FpFormat, PAPER_FORMATS};
+use online_fp_add::reduce::{registry, ReducePlan};
+use online_fp_add::stream::{EngineConfig, StreamService};
+use online_fp_add::telemetry::provenance_hash;
+use online_fp_add::util::prng::XorShift;
+
+const TERMS: usize = 48;
+const TRIALS: usize = 1000;
+
+fn workload(fmt: FpFormat, seed: u64) -> Vec<Fp> {
+    let mut rng = XorShift::new(seed);
+    (0..TERMS).map(|_| rng.gen_fp_sparse(fmt, 0.1)).collect()
+}
+
+/// Reduce `terms` through `plan` in random-sized chunks (a fresh reducer,
+/// chunk boundaries drawn from `rng`), returning the resolved state.
+fn chunked_reduce(plan: &ReducePlan, terms: &[Fp], rng: &mut XorShift) -> AlignAcc {
+    let mut reducer = plan.reducer();
+    let mut rest = terms;
+    while !rest.is_empty() {
+        let take = 1 + rng.below(rest.len().min(17) as u64) as usize;
+        reducer.ingest(&rest[..take]);
+        rest = &rest[take..];
+    }
+    assert_eq!(reducer.terms(), terms.len() as u64);
+    reducer.finish()
+}
+
+#[test]
+fn provenance_hash_is_invariant_to_arrival_order_and_chunking() {
+    for (f, fmt) in PAPER_FORMATS.iter().enumerate() {
+        let spec = AccSpec::exact(*fmt);
+        let base = workload(*fmt, 0xAB5EED ^ ((f as u64) << 8));
+        for entry in registry::entries() {
+            let plan = ReducePlan::with_backend(spec, entry.sel());
+            let mut rng = XorShift::new(0xC0FFEE ^ (f as u64));
+            let mut terms = base.clone();
+            let reference = chunked_reduce(&plan, &terms, &mut rng);
+            let mut hashes = HashSet::new();
+            let mut mismatches = 0usize;
+            for _ in 0..TRIALS {
+                rng.shuffle(&mut terms);
+                let out = chunked_reduce(&plan, &terms, &mut rng);
+                if out != reference {
+                    mismatches += 1;
+                }
+                hashes.insert(provenance_hash(
+                    fmt.name,
+                    spec,
+                    terms.len() as u64,
+                    out.lambda,
+                    &out.acc,
+                    out.sticky,
+                ));
+            }
+            assert_eq!(mismatches, 0, "{} {}: shuffled states diverged", fmt.name, entry.name);
+            assert_eq!(
+                hashes.len(),
+                1,
+                "{} {}: {TRIALS} shuffled trials produced {} distinct provenance hashes",
+                fmt.name,
+                entry.name,
+                hashes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn provenance_hash_is_invariant_across_backends() {
+    // The same multiset of terms through every registered backend must
+    // collapse to one hash per format — the backend is execution shape,
+    // not a value fact.
+    for (f, fmt) in PAPER_FORMATS.iter().enumerate() {
+        let spec = AccSpec::exact(*fmt);
+        let terms = workload(*fmt, 0xBAC6E ^ ((f as u64) << 4));
+        let mut rng = XorShift::new(0x5EED ^ (f as u64));
+        let hashes: HashSet<u64> = registry::entries()
+            .iter()
+            .map(|entry| {
+                let plan = ReducePlan::with_backend(spec, entry.sel());
+                let out = chunked_reduce(&plan, &terms, &mut rng);
+                provenance_hash(
+                    fmt.name,
+                    spec,
+                    terms.len() as u64,
+                    out.lambda,
+                    &out.acc,
+                    out.sticky,
+                )
+            })
+            .collect();
+        assert_eq!(hashes.len(), 1, "{}: backends disagree on the provenance hash", fmt.name);
+    }
+}
+
+#[test]
+fn served_provenance_is_invariant_to_ingest_order_shard_split_and_backend() {
+    use online_fp_add::formats::BF16;
+    let spec = AccSpec::exact(BF16);
+    let terms = workload(BF16, 0x0B5E);
+    let mut rng = XorShift::new(0x51AB);
+    let mut hashes = HashSet::new();
+    let mut values = HashSet::new();
+    // Every registered backend × several engine geometries × shuffled
+    // batching of the same multiset: the served value and its audit hash
+    // must never move.
+    for entry in registry::entries() {
+        for (threads, stripes) in [(1usize, 1usize), (2, 3), (4, 8)] {
+            let cfg = EngineConfig {
+                threads,
+                stripes,
+                spec,
+                backend: Some(entry.sel()),
+                ..Default::default()
+            };
+            let svc = StreamService::new(BF16, cfg);
+            let mut order = terms.clone();
+            rng.shuffle(&mut order);
+            let mut rest = &order[..];
+            while !rest.is_empty() {
+                let take = 1 + rng.below(rest.len().min(11) as u64) as usize;
+                svc.ingest_blocking("obs", rest[..take].to_vec()).expect("engine alive");
+                rest = &rest[take..];
+            }
+            let (value, rec) = svc.query_with_provenance("obs").expect("stream exists");
+            assert_eq!(rec.terms, terms.len() as u64);
+            assert_eq!(rec.backend, entry.name);
+            // Draining re-cuts the record from the same final state.
+            let (dvalue, drec) = svc.drain_with_provenance("obs").expect("stream exists");
+            assert_eq!(dvalue.bits, value.bits);
+            assert_eq!(drec.hash, rec.hash);
+            hashes.insert(rec.hash);
+            values.insert(value.bits);
+        }
+    }
+    assert_eq!(hashes.len(), 1, "served provenance hash moved across execution shapes");
+    assert_eq!(values.len(), 1, "served value moved across execution shapes");
+}

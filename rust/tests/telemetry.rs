@@ -1,4 +1,4 @@
-//! Telemetry-tier integration battery (DESIGN.md §Telemetry).
+//! Telemetry-tier integration battery (DESIGN.md §Observability).
 //!
 //! Two kinds of tests live here:
 //!
