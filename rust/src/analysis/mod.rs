@@ -30,6 +30,7 @@
 
 pub mod derive;
 pub mod domain;
+pub mod netlist;
 pub mod report;
 
 pub use derive::{Obligation, StorageEnv};
@@ -45,6 +46,19 @@ use crate::util::prng::XorShift;
 /// [`StorageEnv::actual`]; a named fault for gate self-tests).
 pub fn analyze(env: &StorageEnv) -> AnalysisReport {
     AnalysisReport { env: *env, obligations: derive::derive_obligations(env) }
+}
+
+/// [`analyze`] plus the netlist tier: the `netlist-*` obligation families
+/// over the generated radix-N adder suite are appended after the software
+/// derivations, optionally under a seeded [`netlist::NetlistFault`]. This
+/// is what `repro analyze --netlist` (and the CI gate) runs.
+pub fn analyze_netlist(
+    env: &StorageEnv,
+    fault: Option<netlist::NetlistFault>,
+) -> AnalysisReport {
+    let mut obligations = derive::derive_obligations(env);
+    obligations.extend(netlist::derive_netlist_obligations(fault));
+    AnalysisReport { env: *env, obligations }
 }
 
 /// One runtime observation checked against a statically proved bound.

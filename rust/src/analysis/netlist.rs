@@ -1,0 +1,827 @@
+//! Netlist-level static verifier: graph lints, STA, and width-obligation
+//! bridging over generated radix-N align-and-add adders.
+//!
+//! Every area/delay/power number the `dse/` tier reports is computed *from
+//! a graph* — a malformed netlist (combinational cycle, width-mismatched
+//! bus, dangling node, mis-wired component) would corrupt all of them
+//! silently. This pass closes that gap the same way `analysis::derive`
+//! closed the software one: it re-derives what the graph must satisfy and
+//! emits [`Obligation`]s into the same byte-deterministic report.
+//!
+//! Three layers, each independent of the machinery it checks:
+//!
+//! * **Structural lints** ([`lint`]) — edge-endpoint validity (second line
+//!   of defense behind [`Netlist::add_edge`]), combinational-cycle
+//!   detection via Kahn toposort, dangling/unreachable nodes, fan-in arity
+//!   per component kind, and bus-width consistency along chain edges.
+//! * **Static timing analysis** ([`sta`]) — ASAP *and* ALAP schedules,
+//!   per-node slack, and a named critical path; unlike
+//!   [`Netlist::schedule_asap`] it never mutates the graph and reports a
+//!   cycle as a value instead of panicking.
+//! * **Width-obligation bridge** — the [`MagBits`] magnitude bounds the
+//!   software verifier derives for a (format × term-count) are pushed onto
+//!   the hardware fraction-spine taps ([`OperatorTap`]): every partial-sum
+//!   bus must be at least as wide as the proved signed magnitude.
+//!
+//! On top sit two pipeline audits re-checking `hw::pipeline` output from
+//! first principles: stage monotonicity along every edge and an
+//! independent recount of the register bits crossing stage cuts.
+//!
+//! The obligations run over the generated suite ([`generate_suite`]) —
+//! serial baseline plus radix-{2,4,8} online trees at [`VERIFY_TERMS`]
+//! terms for every paper format — and CI seeds [`NetlistFault`]s (injected
+//! cycle, narrowed bus, dropped stage register, dangling node) to prove
+//! the gate can fail.
+//!
+//! [`OperatorTap`]: crate::hw::datapath::OperatorTap
+//! [`generate_suite`]: crate::hw::generate::generate_suite
+
+use super::derive::Obligation;
+use super::domain::{clog2, MagBits};
+use crate::hw::components::Comp;
+use crate::hw::datapath::AdderNetlist;
+use crate::hw::generate;
+use crate::hw::netlist::{Edge, Netlist, NodeId};
+use crate::hw::pipeline;
+
+/// Term count of the verified suite. 16 keeps the 20-netlist sweep cheap
+/// enough for every `cargo test` while still exercising multi-level trees
+/// (the DSE tier separately sweeps the paper's n=32 design points).
+pub const VERIFY_TERMS: u32 = 16;
+
+// ---------------------------------------------------------------------------
+// Structural lints
+// ---------------------------------------------------------------------------
+
+/// What a structural lint found.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum LintKind {
+    /// An edge references a missing node, loops on itself, or has width 0
+    /// (possible despite [`Netlist::add_edge`] because the fields are
+    /// public — the lint is the second line of defense).
+    EdgeEndpoint,
+    /// The graph is not a DAG; the node sits on a combinational cycle.
+    Cycle,
+    /// A node with no edges at all: it contributes area but no function.
+    Dangling,
+    /// A node no primary input can reach (only checked on acyclic graphs
+    /// that have `in.*` sources).
+    Unreachable,
+    /// A node's in-degree contradicts its component kind.
+    FanInArity,
+    /// Consecutive chain edges (`*.p{k} -> *.p{k+1}`, `*.s{k} -> *.s{k+1}`)
+    /// carry different bus widths.
+    BusWidth,
+}
+
+/// One structural finding, anchored to a node where that makes sense.
+#[derive(Clone, Debug)]
+pub struct Lint {
+    pub kind: LintKind,
+    pub node: Option<NodeId>,
+    pub detail: String,
+}
+
+/// Expected in-degree for a component kind, from the `hw::datapath` node
+/// naming conventions. `None` means "any positive fan-in".
+fn expected_fanin(kind: &str) -> Option<(u32, u32)> {
+    if kind.starts_with("in.") {
+        return Some((0, 0));
+    }
+    if kind.contains("unpack") || kind.ends_with(".absdiff") || kind == "norm.abs" {
+        return Some((1, 1));
+    }
+    if kind.ends_with(".emax") || kind.ends_with(".swap") {
+        return Some((3, 3)); // select + two data buses
+    }
+    if kind.contains(".max.l") {
+        return Some((2, 2));
+    }
+    if kind == "norm.pack" {
+        return Some((2, 2)); // mantissa + adjusted exponent
+    }
+    if kind.contains(".csa.l") {
+        return Some((3, u32::MAX)); // >= one 3:2 compressor trio
+    }
+    if let Some((_, tail, idx)) = split_chain(kind) {
+        return Some(match (tail, idx) {
+            ('s', 0) => (2, 2),       // data + shift amount
+            ('s', _) => (1, 1),       // shifter chain link
+            ('p', 0) => (1, 3),       // prefix-chain head takes its feeds
+            ('p', _) => (1, 1),       // prefix-chain link
+            _ => unreachable!(),
+        });
+    }
+    None // unknown kind: any positive fan-in
+}
+
+/// Split `"<head>.p<K>"` / `"<head>.s<K>"` chain names.
+fn split_chain(kind: &str) -> Option<(&str, char, u32)> {
+    let (head, last) = kind.rsplit_once('.')?;
+    let mut chars = last.chars();
+    let tag = chars.next()?;
+    if tag != 'p' && tag != 's' {
+        return None;
+    }
+    let idx: u32 = chars.as_str().parse().ok()?;
+    Some((head, tag, idx))
+}
+
+/// Kahn toposort that never mutates the graph: `Ok(order)` on a DAG,
+/// `Err(on_cycle)` with every node still carrying in-degree otherwise.
+fn toposort(nl: &Netlist) -> Result<Vec<NodeId>, Vec<NodeId>> {
+    let n = nl.nodes.len();
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for e in &nl.edges {
+        if e.from < n && e.to < n && e.from != e.to {
+            indeg[e.to] += 1;
+            succ[e.from].push(e.to);
+        }
+    }
+    let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(u) = queue.pop() {
+        order.push(u);
+        for &v in &succ[u] {
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(v);
+            }
+        }
+    }
+    if order.len() == n {
+        Ok(order)
+    } else {
+        Err((0..n).filter(|&i| indeg[i] > 0).collect())
+    }
+}
+
+/// Run every structural lint pass. An empty result is the graph-shape
+/// contract the obligation family `netlist-structure` gates on.
+pub fn lint(nl: &Netlist) -> Vec<Lint> {
+    let n = nl.nodes.len();
+    let mut out = Vec::new();
+
+    // 1. Edge endpoints (defense in depth behind `add_edge`).
+    for (ei, e) in nl.edges.iter().enumerate() {
+        if e.from >= n || e.to >= n {
+            out.push(Lint {
+                kind: LintKind::EdgeEndpoint,
+                node: None,
+                detail: format!("edge #{ei} {}->{} outside 0..{n}", e.from, e.to),
+            });
+        } else if e.from == e.to {
+            out.push(Lint {
+                kind: LintKind::EdgeEndpoint,
+                node: Some(e.from),
+                detail: format!("edge #{ei} self-loop on {}", nl.nodes[e.from].kind),
+            });
+        } else if e.bits == 0 {
+            out.push(Lint {
+                kind: LintKind::EdgeEndpoint,
+                node: Some(e.from),
+                detail: format!("edge #{ei} {}->{} has zero width", e.from, e.to),
+            });
+        }
+    }
+
+    // 2. Combinational cycles.
+    let topo = toposort(nl);
+    if let Err(ref on_cycle) = topo {
+        let first = on_cycle[0];
+        out.push(Lint {
+            kind: LintKind::Cycle,
+            node: Some(first),
+            detail: format!(
+                "{} nodes on combinational cycles (first: {})",
+                on_cycle.len(),
+                nl.nodes[first].kind
+            ),
+        });
+    }
+
+    // In/out degree per node for the remaining passes.
+    let mut indeg = vec![0u32; n];
+    let mut outdeg = vec![0u32; n];
+    for e in &nl.edges {
+        if e.from < n && e.to < n {
+            outdeg[e.from] += 1;
+            indeg[e.to] += 1;
+        }
+    }
+
+    // 3. Dangling nodes (no edges at all).
+    for (i, node) in nl.nodes.iter().enumerate() {
+        if indeg[i] == 0 && outdeg[i] == 0 {
+            out.push(Lint {
+                kind: LintKind::Dangling,
+                node: Some(i),
+                detail: format!("{} has no edges", node.kind),
+            });
+        }
+    }
+
+    // 4. Reachability from primary inputs (acyclic graphs with inputs).
+    if topo.is_ok() {
+        let sources: Vec<NodeId> =
+            (0..n).filter(|&i| nl.nodes[i].kind.starts_with("in.")).collect();
+        if !sources.is_empty() {
+            let mut reached = vec![false; n];
+            let mut stack = sources;
+            for &s in &stack {
+                reached[s] = true;
+            }
+            while let Some(u) = stack.pop() {
+                reached[u] = true;
+                for e in &nl.edges {
+                    if e.from == u && !reached[e.to] {
+                        reached[e.to] = true;
+                        stack.push(e.to);
+                    }
+                }
+            }
+            for (i, node) in nl.nodes.iter().enumerate() {
+                if !reached[i] && !(indeg[i] == 0 && outdeg[i] == 0) {
+                    out.push(Lint {
+                        kind: LintKind::Unreachable,
+                        node: Some(i),
+                        detail: format!("{} unreachable from primary inputs", node.kind),
+                    });
+                }
+            }
+        }
+    }
+
+    // 5. Fan-in arity vs component kind (skip fully dangling nodes — pass 3
+    //    already reported them).
+    for (i, node) in nl.nodes.iter().enumerate() {
+        if indeg[i] == 0 && outdeg[i] == 0 {
+            continue;
+        }
+        let (lo, hi) = expected_fanin(&node.kind).unwrap_or((1, u32::MAX));
+        if indeg[i] < lo || indeg[i] > hi {
+            out.push(Lint {
+                kind: LintKind::FanInArity,
+                node: Some(i),
+                detail: format!(
+                    "{} has fan-in {} (expected {}..={})",
+                    node.kind,
+                    indeg[i],
+                    lo,
+                    if hi == u32::MAX { "*".to_string() } else { hi.to_string() }
+                ),
+            });
+        }
+    }
+
+    // 6. Bus-width consistency along chains: every `head.pK -> head.pK+1`
+    //    (and `.sK`) link of one chain must carry the same width.
+    let mut chains: Vec<(String, char, u32)> = Vec::new();
+    for e in &nl.edges {
+        if e.from >= n || e.to >= n {
+            continue;
+        }
+        let (Some((hf, tf, inf)), Some((ht, tt, int))) =
+            (split_chain(&nl.nodes[e.from].kind), split_chain(&nl.nodes[e.to].kind))
+        else {
+            continue;
+        };
+        if hf == ht && tf == tt && int == inf + 1 {
+            chains.push((hf.to_string(), tf, e.bits));
+        }
+    }
+    chains.sort();
+    for w in chains.windows(2) {
+        if w[0].0 == w[1].0 && w[0].1 == w[1].1 && w[0].2 != w[1].2 {
+            out.push(Lint {
+                kind: LintKind::BusWidth,
+                node: None,
+                detail: format!(
+                    "chain {} carries mixed widths {} and {}",
+                    w[0].0, w[0].2, w[1].2
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Static timing analysis
+// ---------------------------------------------------------------------------
+
+/// Full STA result: ASAP/ALAP start times, per-node slack, and the named
+/// critical path — the view `Netlist::schedule_asap` (longest path only)
+/// never exposes.
+#[derive(Clone, Debug)]
+pub struct Sta {
+    pub asap: Vec<f64>,
+    pub alap: Vec<f64>,
+    /// `alap - asap` per node; 0 on the critical path.
+    pub slack: Vec<f64>,
+    /// Critical-path delay in τ.
+    pub critical: f64,
+    /// Node ids along one critical path, source to sink.
+    pub critical_path: Vec<NodeId>,
+}
+
+impl Sta {
+    /// Human-readable critical path: `kind -> kind -> ...` (elided middle).
+    pub fn path_name(&self, nl: &Netlist) -> String {
+        let kinds: Vec<&str> =
+            self.critical_path.iter().map(|&i| nl.nodes[i].kind.as_str()).collect();
+        match kinds.len() {
+            0 => "<empty>".to_string(),
+            1 => kinds[0].to_string(),
+            2 => format!("{} -> {}", kinds[0], kinds[1]),
+            k => format!("{} -> .. {} nodes .. -> {}", kinds[0], k - 2, kinds[k - 1]),
+        }
+    }
+}
+
+/// Run STA over a netlist without mutating it. `None` when the graph has a
+/// combinational cycle (no schedule exists).
+pub fn sta(nl: &Netlist) -> Option<Sta> {
+    let order = toposort(nl).ok()?;
+    let n = nl.nodes.len();
+
+    // ASAP: start when the slowest predecessor finishes.
+    let mut asap = vec![0f64; n];
+    for &v in &order {
+        for e in &nl.edges {
+            if e.to == v {
+                let f = asap[e.from] + nl.nodes[e.from].delay;
+                if f > asap[v] {
+                    asap[v] = f;
+                }
+            }
+        }
+    }
+    let critical =
+        (0..n).map(|i| asap[i] + nl.nodes[i].delay).fold(0.0, f64::max);
+
+    // ALAP: latest start keeping every successor feasible. `tail[v]` is the
+    // longest delay from v's own start to the overall sink.
+    let mut tail = vec![0f64; n];
+    for &v in order.iter().rev() {
+        let mut downstream = 0f64;
+        for e in &nl.edges {
+            if e.from == v {
+                downstream = downstream.max(tail[e.to]);
+            }
+        }
+        tail[v] = nl.nodes[v].delay + downstream;
+    }
+    let alap: Vec<f64> = (0..n).map(|i| critical - tail[i] + nl.nodes[i].delay).collect();
+    // alap[i] as computed above is the latest *finish*; slack compares
+    // starts, so subtract the node delay back out.
+    let alap: Vec<f64> = (0..n).map(|i| alap[i] - nl.nodes[i].delay).collect();
+    let slack: Vec<f64> = (0..n).map(|i| alap[i] - asap[i]).collect();
+
+    // Critical path: walk back from the earliest argmax finish, at every
+    // step taking the smallest-id predecessor on the tight edge — fully
+    // deterministic.
+    let mut path = Vec::new();
+    let mut cur = (0..n)
+        .filter(|&i| (asap[i] + nl.nodes[i].delay - critical).abs() < 1e-9)
+        .min();
+    while let Some(v) = cur {
+        path.push(v);
+        cur = nl
+            .edges
+            .iter()
+            .filter(|e| {
+                e.to == v && (asap[e.from] + nl.nodes[e.from].delay - asap[v]).abs() < 1e-9
+            })
+            .map(|e| e.from)
+            .min();
+        if asap[v] == 0.0 {
+            break;
+        }
+    }
+    path.reverse();
+    Some(Sta { asap, alap, slack, critical, critical_path: path })
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline audits
+// ---------------------------------------------------------------------------
+
+/// Independent recheck of a pipeline stage assignment.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineAudit {
+    /// Edges whose producer is assigned a *later* stage than their consumer.
+    pub monotone_violations: u32,
+    /// Register bits recounted from first principles: Σ stage-gap × width
+    /// over every edge (the multiset of buses crossing each cut).
+    pub recomputed_reg_bits: u64,
+}
+
+/// Recount what `hw::pipeline` reported, trusting only the edge list and
+/// the per-node stage assignment.
+pub fn audit_pipeline(nl: &Netlist, assignment: &[u32]) -> PipelineAudit {
+    let mut monotone_violations = 0u32;
+    let mut recomputed_reg_bits = 0u64;
+    for e in &nl.edges {
+        if e.from >= assignment.len() || e.to >= assignment.len() {
+            continue; // endpoint lints own this case
+        }
+        let (sf, st) = (assignment[e.from], assignment[e.to]);
+        if sf > st {
+            monotone_violations += 1;
+        }
+        recomputed_reg_bits += u64::from(st.saturating_sub(sf)) * u64::from(e.bits);
+    }
+    PipelineAudit { monotone_violations, recomputed_reg_bits }
+}
+
+// ---------------------------------------------------------------------------
+// Seeded faults
+// ---------------------------------------------------------------------------
+
+/// A seeded netlist corruption CI injects to prove the gate can fail.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NetlistFault {
+    /// Push the reverse of the last edge: a combinational cycle.
+    Cycle,
+    /// Halve the widest output bus of the root `⊙` operator: the width
+    /// bridge must notice the accumulated sum no longer fits.
+    NarrowBus,
+    /// Halve the *reported* pipeline register bits: the recount must
+    /// disagree (models a scheduler dropping a stage register).
+    DropRegister,
+    /// Add a node wired to nothing.
+    Dangling,
+}
+
+impl NetlistFault {
+    /// Parse the CLI fault name (`net-*` namespace, disjoint from the
+    /// [`super::derive::StorageEnv`] fault names).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "net-cycle" => Some(NetlistFault::Cycle),
+            "net-narrow-bus" => Some(NetlistFault::NarrowBus),
+            "net-drop-register" => Some(NetlistFault::DropRegister),
+            "net-dangling" => Some(NetlistFault::Dangling),
+            _ => None,
+        }
+    }
+
+    /// Every fault name [`Self::from_name`] accepts.
+    pub fn fault_names() -> Vec<&'static str> {
+        vec!["net-cycle", "net-narrow-bus", "net-drop-register", "net-dangling"]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Obligation bridge
+// ---------------------------------------------------------------------------
+
+fn nob(
+    id: &'static str,
+    fmt: crate::formats::FpFormat,
+    backend: &str,
+    required_bits: u32,
+    provided_bits: u32,
+    detail: String,
+) -> Obligation {
+    Obligation {
+        id,
+        format: fmt.name.to_string(),
+        backend: backend.to_string(),
+        required_bits,
+        provided_bits,
+        detail,
+    }
+}
+
+/// Signed magnitude bits a partial sum of `terms` aligned terms needs:
+/// term → guard lift → bounded sum → sign, exactly the software chain.
+fn required_sum_bits(sig_bits: u32, guard: u32, terms: u32) -> u32 {
+    MagBits::term(sig_bits).shl(guard).sum(clog2(u64::from(terms))).signed_bits()
+}
+
+/// Verify one generated adder, optionally under a seeded fault, and emit
+/// the seven `netlist-*` obligation families for it.
+pub fn check_adder(adder: &AdderNetlist, fault: Option<NetlistFault>) -> Vec<Obligation> {
+    let fmt = adder.params.fmt;
+    let backend = format!("nl:{}", adder.config);
+    let n = adder.params.n_terms;
+    let sig = fmt.sig_bits();
+    let guard = adder.params.guard;
+
+    // Clean references, captured before fault injection: the paper-policy
+    // pipeline and the trusted longest-path delay.
+    let clean_critical = adder.nl.critical_path();
+    let stages = pipeline::paper_stages(fmt, n);
+    let clock = pipeline::min_clock_ns(adder, stages) * 1.02;
+    let pipe = pipeline::pipeline(adder, stages, clock)
+        .expect("paper-depth pipeline of a generated adder is feasible");
+    let root = adder.taps.last().expect("generated adders always have taps");
+
+    // Fault injection on a private clone (the edge/node fields are public
+    // precisely so corruption can bypass the validated constructors).
+    let mut nl = adder.nl.clone();
+    let mut reported_reg_bits = pipe.reg_bits;
+    match fault {
+        Some(NetlistFault::Cycle) => {
+            let e = *nl.edges.last().expect("generated adders have edges");
+            nl.edges.push(Edge { from: e.to, to: e.from, bits: e.bits });
+        }
+        Some(NetlistFault::NarrowBus) => {
+            let idx = nl
+                .edges
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.from == root.node)
+                .max_by_key(|(_, e)| e.bits)
+                .map(|(i, _)| i)
+                .expect("root operator drives the normalize tail");
+            nl.edges[idx].bits = (nl.edges[idx].bits / 2).max(1);
+        }
+        Some(NetlistFault::DropRegister) => reported_reg_bits = pipe.reg_bits / 2,
+        Some(NetlistFault::Dangling) => {
+            nl.add("dbg.orphan", Comp::new(1.0, 0.1));
+        }
+        None => {}
+    }
+
+    let mut out = Vec::new();
+
+    // 1. Structural lints: the graph-shape contract. The required side is
+    //    the lint count (0 on a healthy graph), so the committed artifact
+    //    carries no graph-size-dependent values.
+    let lints = lint(&nl);
+    #[allow(clippy::cast_possible_truncation)]
+    let lint_count = lints.len().min(u32::MAX as usize) as u32;
+    out.push(nob(
+        "netlist-structure",
+        fmt,
+        &backend,
+        lint_count,
+        0,
+        match lints.first() {
+            None => "structural lints over the generated adder graph".to_string(),
+            Some(first) => format!("{} lint(s), first: {}", lints.len(), first.detail),
+        },
+    ));
+
+    // 2 + 3. STA: slack consistency and agreement with schedule_asap.
+    let sta_res = sta(&nl);
+    let slack_violations = match &sta_res {
+        None => 1,
+        Some(s) => {
+            #[allow(clippy::cast_possible_truncation)]
+            let neg = s.slack.iter().filter(|&&x| x < -1e-9).count().min(u32::MAX as usize) as u32;
+            neg
+        }
+    };
+    out.push(nob(
+        "netlist-sta-slack",
+        fmt,
+        &backend,
+        slack_violations,
+        0,
+        "ASAP/ALAP slack must be non-negative at every node".to_string(),
+    ));
+    let critical_disagrees = match &sta_res {
+        None => 1,
+        Some(s) => u32::from((s.critical - clean_critical).abs() > 1e-9),
+    };
+    out.push(nob(
+        "netlist-sta-critical",
+        fmt,
+        &backend,
+        critical_disagrees,
+        0,
+        "STA longest path must equal schedule_asap's critical delay".to_string(),
+    ));
+
+    // 4. Width bridge at the root: the accumulated sum of all n terms must
+    //    fit the bus actually leaving the root operator (read back from the
+    //    possibly-faulted edge list, not from builder metadata).
+    let root_bus = nl
+        .edges
+        .iter()
+        .filter(|e| e.from == root.node)
+        .map(|e| e.bits)
+        .max()
+        .unwrap_or(0);
+    out.push(nob(
+        "netlist-width-bridge",
+        fmt,
+        &backend,
+        required_sum_bits(sig, guard, n),
+        root_bus,
+        format!("MagBits sum of {n} terms (sig {sig} << f {guard}) vs root output bus"),
+    ));
+
+    // 5. Width bridge along the whole spine: every tap's provisioned
+    //    fraction width covers the magnitude bound of the terms it holds.
+    #[allow(clippy::cast_possible_truncation)]
+    let spine_violations = adder
+        .taps
+        .iter()
+        .filter(|t| t.frac_w < required_sum_bits(sig, guard, t.terms))
+        .count()
+        .min(u32::MAX as usize) as u32;
+    out.push(nob(
+        "netlist-bus-bridge",
+        fmt,
+        &backend,
+        spine_violations,
+        0,
+        format!("{} spine taps must each fit their MagBits bound", adder.taps.len()),
+    ));
+
+    // 6 + 7. Pipeline audits against the paper-policy schedule.
+    let audit = audit_pipeline(&nl, &pipe.assignment);
+    out.push(nob(
+        "netlist-pipeline-monotone",
+        fmt,
+        &backend,
+        audit.monotone_violations,
+        0,
+        format!("stage assignment monotone along every edge at {stages} stages"),
+    ));
+    let drift = audit.recomputed_reg_bits.abs_diff(reported_reg_bits);
+    #[allow(clippy::cast_possible_truncation)]
+    out.push(nob(
+        "netlist-pipeline-regbits",
+        fmt,
+        &backend,
+        drift.min(u64::from(u32::MAX)) as u32,
+        0,
+        format!("register-bit recount must match the scheduler's report at {stages} stages"),
+    ));
+    out
+}
+
+/// Derive the netlist obligation families over the full generated suite:
+/// every paper format × (serial baseline + radix-{2,4,8} online trees) at
+/// [`VERIFY_TERMS`] terms. Deterministic order: format outer, suite order
+/// inner, the seven families per adder in a fixed sequence.
+pub fn derive_netlist_obligations(fault: Option<NetlistFault>) -> Vec<Obligation> {
+    let mut out = Vec::new();
+    for fmt in crate::formats::PAPER_FORMATS {
+        for adder in generate::generate_suite(fmt, VERIFY_TERMS) {
+            out.extend(check_adder(&adder, fault));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{BF16, FP32, PAPER_FORMATS};
+    use crate::hw::generate::GenParams;
+
+    #[test]
+    fn generated_suite_is_lint_clean_for_every_format() {
+        for fmt in PAPER_FORMATS {
+            for adder in generate::generate_suite(fmt, VERIFY_TERMS) {
+                let lints = lint(&adder.nl);
+                assert!(
+                    lints.is_empty(),
+                    "{} {}: {:?}",
+                    fmt.name,
+                    adder.config,
+                    lints.first()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lint_catches_hand_broken_graphs() {
+        let adder = generate::generate(&GenParams::online(BF16, 16, 4)).unwrap();
+
+        // Cycle.
+        let mut nl = adder.nl.clone();
+        let e = *nl.edges.last().unwrap();
+        nl.edges.push(Edge { from: e.to, to: e.from, bits: e.bits });
+        assert!(lint(&nl).iter().any(|l| l.kind == LintKind::Cycle));
+
+        // Dangling node.
+        let mut nl = adder.nl.clone();
+        nl.add("dbg.orphan", Comp::new(1.0, 0.1));
+        assert!(lint(&nl).iter().any(|l| l.kind == LintKind::Dangling));
+
+        // Bad endpoint pushed past the validated constructor.
+        let mut nl = adder.nl.clone();
+        let n = nl.nodes.len();
+        nl.edges.push(Edge { from: 0, to: n + 5, bits: 8 });
+        assert!(lint(&nl).iter().any(|l| l.kind == LintKind::EdgeEndpoint));
+
+        // Arity break: unpack with a second input.
+        let mut nl = adder.nl.clone();
+        let unp = nl.nodes.iter().position(|x| x.kind == "unpack.3").unwrap();
+        nl.edges.push(Edge { from: 0, to: unp, bits: 8 });
+        assert!(lint(&nl).iter().any(|l| l.kind == LintKind::FanInArity));
+
+        // Chain width mismatch.
+        let mut nl = adder.nl.clone();
+        let chain_edge = (0..nl.edges.len())
+            .find(|&i| {
+                let e = nl.edges[i];
+                matches!(
+                    (split_chain(&nl.nodes[e.from].kind), split_chain(&nl.nodes[e.to].kind)),
+                    (Some((hf, tf, a)), Some((ht, tt, b)))
+                        if hf == ht && tf == tt && b == a + 1
+                )
+            })
+            .unwrap();
+        nl.edges[chain_edge].bits += 7;
+        assert!(lint(&nl).iter().any(|l| l.kind == LintKind::BusWidth));
+    }
+
+    #[test]
+    fn sta_agrees_with_schedule_asap_and_names_the_path() {
+        for cfg_radix in [0u32, 2, 8] {
+            let p = if cfg_radix == 0 {
+                GenParams::serial(FP32, 16)
+            } else {
+                GenParams::online(FP32, 16, cfg_radix)
+            };
+            let adder = generate::generate(&p).unwrap();
+            let s = sta(&adder.nl).unwrap();
+            assert!((s.critical - adder.nl.critical_path()).abs() < 1e-9);
+            // Slack is non-negative everywhere, zero along the path.
+            assert!(s.slack.iter().all(|&x| x > -1e-9));
+            for &v in &s.critical_path {
+                assert!(s.slack[v].abs() < 1e-9, "critical node {v} has slack");
+            }
+            // The path runs from a primary input to the packer.
+            let name = s.path_name(&adder.nl);
+            assert!(name.starts_with("in."), "{name}");
+            assert!(name.ends_with("norm.pack"), "{name}");
+        }
+    }
+
+    #[test]
+    fn sta_returns_none_on_a_cycle() {
+        let adder = generate::generate(&GenParams::serial(BF16, 16)).unwrap();
+        let mut nl = adder.nl.clone();
+        let e = *nl.edges.last().unwrap();
+        nl.edges.push(Edge { from: e.to, to: e.from, bits: e.bits });
+        assert!(sta(&nl).is_none());
+    }
+
+    #[test]
+    fn clean_suite_obligations_are_all_green() {
+        let obs = derive_netlist_obligations(None);
+        // 7 families × 4 configs × 5 formats.
+        assert_eq!(obs.len(), 7 * 4 * 5);
+        for o in &obs {
+            assert!(
+                o.pass(),
+                "{}/{}/{}: required {} > provided {} ({})",
+                o.format,
+                o.backend,
+                o.id,
+                o.required_bits,
+                o.provided_bits,
+                o.detail
+            );
+        }
+        // The width bridge is tight: the generator provisions exactly the
+        // proved bound at the root (margin 0), so any narrowing fails.
+        assert!(obs
+            .iter()
+            .filter(|o| o.id == "netlist-width-bridge")
+            .all(|o| o.margin() == 0));
+    }
+
+    #[test]
+    fn every_seeded_fault_breaks_at_least_one_obligation() {
+        for name in NetlistFault::fault_names() {
+            let fault = NetlistFault::from_name(name).unwrap();
+            let failed: Vec<_> = derive_netlist_obligations(Some(fault))
+                .into_iter()
+                .filter(|o| !o.pass())
+                .collect();
+            assert!(!failed.is_empty(), "fault {name} went undetected");
+        }
+        assert!(NetlistFault::from_name("no-such-fault").is_none());
+    }
+
+    #[test]
+    fn fault_families_match_their_mechanisms() {
+        let fails = |f: NetlistFault| -> Vec<&'static str> {
+            let mut ids: Vec<_> = derive_netlist_obligations(Some(f))
+                .into_iter()
+                .filter(|o| !o.pass())
+                .map(|o| o.id)
+                .collect();
+            ids.dedup();
+            ids
+        };
+        assert!(fails(NetlistFault::Cycle).contains(&"netlist-structure"));
+        assert!(fails(NetlistFault::Cycle).contains(&"netlist-sta-critical"));
+        assert!(fails(NetlistFault::NarrowBus).contains(&"netlist-width-bridge"));
+        assert!(fails(NetlistFault::DropRegister).contains(&"netlist-pipeline-regbits"));
+        assert!(fails(NetlistFault::Dangling).contains(&"netlist-structure"));
+    }
+}

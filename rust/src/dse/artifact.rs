@@ -1,0 +1,258 @@
+//! The checked-in DSE artifact: `DSE_report.json`.
+//!
+//! Where `dse::report` renders the paper's tables for humans, this module
+//! emits the machine-checkable sweep the CI lane regenerates and greps:
+//! serial-alignment baseline vs the online fused-operator trees of
+//! [`SUITE_RADICES`], per paper format, at the per-format pipeline-depth
+//! policy and one stage deeper. Each online row carries its area/power
+//! delta against the serial baseline *at the same depth*, and the summary
+//! flags the per-format best savings as inside or outside the paper's
+//! §IV-A bands ([`PAPER_AREA_BAND`] / [`PAPER_POWER_BAND`]).
+//!
+//! The JSON is hand-rolled (schema `ofa-dse-v1`) with fixed-decimal float
+//! formatting so a double render is byte-identical — the same contract as
+//! `ANALYSIS_report.json`.
+#![deny(clippy::cast_precision_loss)]
+
+use super::paper::{in_band, PAPER_AREA_BAND, PAPER_POWER_BAND};
+use crate::arith::tree::RadixConfig;
+use crate::coordinator::Coordinator;
+use crate::formats::PAPER_FORMATS;
+use crate::hw::design::{attach_power, evaluate_area_at, DesignPoint};
+use crate::hw::generate::{radix_tree_config, SUITE_RADICES};
+use crate::hw::pipeline::paper_stages;
+use crate::workload::bert::power_trace;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+/// One evaluated design: a (format, config, depth) cell of the sweep with
+/// its deltas against the serial baseline at the same depth.
+#[derive(Clone, Debug)]
+pub struct DseRow {
+    pub format: &'static str,
+    pub config: String,
+    /// Operator radix knob that produced `config` (`0` = serial baseline).
+    pub radix: u32,
+    pub stages: u32,
+    /// Achieved clock (the target, or the bumped minimum when infeasible).
+    pub clock_ns: f64,
+    pub feasible: bool,
+    pub area_um2: f64,
+    pub power_mw: f64,
+    pub reg_bits: u64,
+    pub area_delta_pct: f64,
+    pub power_delta_pct: f64,
+}
+
+/// Per-format verdict at the paper's pipeline-depth policy.
+#[derive(Clone, Debug)]
+pub struct DseSummary {
+    pub format: &'static str,
+    pub stages: u32,
+    pub best_area_config: String,
+    pub best_area_save_pct: f64,
+    pub area_in_band: bool,
+    pub best_power_config: String,
+    pub best_power_save_pct: f64,
+    pub power_in_band: bool,
+}
+
+/// The full artifact behind `repro dse`.
+#[derive(Clone, Debug)]
+pub struct DseReport {
+    pub n_terms: u32,
+    pub vectors: usize,
+    pub clock_ns: f64,
+    pub rows: Vec<DseRow>,
+    pub summary: Vec<DseSummary>,
+}
+
+/// Run the sweep: for every paper format, evaluate the serial baseline and
+/// one online tree per [`SUITE_RADICES`] entry at the per-format policy
+/// depth and one stage deeper, with workload-driven power from `vectors`
+/// BERT-shaped operand vectors. Deterministic for fixed inputs — the
+/// coordinator preserves job order and the trace seed is pinned.
+pub fn dse_report(n: u32, vectors: usize, clock_ns: f64, coord: &Coordinator) -> DseReport {
+    let mut rows = Vec::new();
+    let mut summary = Vec::new();
+    for fmt in PAPER_FORMATS {
+        let trace = Arc::new(power_trace(fmt, n as usize, vectors, 0xD5E ^ u64::from(n)));
+        let policy = paper_stages(fmt, n);
+        let mut jobs: Vec<(u32, u32, RadixConfig)> = Vec::new();
+        for off in [0u32, 1] {
+            jobs.push((policy + off, 0, RadixConfig::baseline(n)));
+            for r in SUITE_RADICES {
+                let cfg = radix_tree_config(n, r).expect("suite radices factor n");
+                jobs.push((policy + off, r, cfg));
+            }
+        }
+        let tv = Arc::clone(&trace);
+        let points: Vec<(u32, u32, DesignPoint)> = coord.run(
+            &format!("dse {} N={n}", fmt.name),
+            jobs,
+            move |(stages, radix, cfg): (u32, u32, RadixConfig)| {
+                let mut p = evaluate_area_at(fmt, n, &cfg, clock_ns, stages);
+                attach_power(&mut p, &tv.vectors);
+                (stages, radix, p)
+            },
+        );
+        for off in [0u32, 1] {
+            let stages = policy + off;
+            let group: Vec<_> = points.iter().filter(|(s, _, _)| *s == stages).collect();
+            let base = &group[0].2;
+            debug_assert!(base.config.is_baseline());
+            let bpw = base.power_mw.unwrap_or(1.0);
+            for (_, radix, p) in &group {
+                let pw = p.power_mw.unwrap_or(0.0);
+                rows.push(DseRow {
+                    format: fmt.name,
+                    config: p.config.to_string(),
+                    radix: *radix,
+                    stages,
+                    clock_ns: p.clock_ns,
+                    feasible: p.feasible,
+                    area_um2: p.area_um2,
+                    power_mw: pw,
+                    reg_bits: p.reg_bits,
+                    area_delta_pct: 100.0 * (p.area_um2 - base.area_um2) / base.area_um2,
+                    power_delta_pct: 100.0 * (pw - bpw) / bpw,
+                });
+            }
+            if stages == policy {
+                let online: Vec<&DseRow> = rows
+                    .iter()
+                    .filter(|r| r.format == fmt.name && r.stages == stages && r.radix != 0)
+                    .collect();
+                let ba = online
+                    .iter()
+                    .min_by(|a, b| a.area_delta_pct.partial_cmp(&b.area_delta_pct).unwrap())
+                    .expect("at least one online row");
+                let bp = online
+                    .iter()
+                    .min_by(|a, b| a.power_delta_pct.partial_cmp(&b.power_delta_pct).unwrap())
+                    .expect("at least one online row");
+                summary.push(DseSummary {
+                    format: fmt.name,
+                    stages,
+                    best_area_config: ba.config.clone(),
+                    best_area_save_pct: -ba.area_delta_pct,
+                    area_in_band: in_band(-ba.area_delta_pct, PAPER_AREA_BAND),
+                    best_power_config: bp.config.clone(),
+                    best_power_save_pct: -bp.power_delta_pct,
+                    power_in_band: in_band(-bp.power_delta_pct, PAPER_POWER_BAND),
+                });
+            }
+        }
+    }
+    DseReport { n_terms: n, vectors, clock_ns, rows, summary }
+}
+
+impl DseReport {
+    /// Byte-deterministic JSON (schema `ofa-dse-v1`): fixed key order,
+    /// fixed-decimal floats, two renders of the same report are identical.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(32 * 1024);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"ofa-dse-v1\",\n");
+        let _ = writeln!(s, "  \"n_terms\": {},", self.n_terms);
+        let _ = writeln!(s, "  \"vectors\": {},", self.vectors);
+        let _ = writeln!(s, "  \"clock_ns\": {:.2},", self.clock_ns);
+        let _ = writeln!(
+            s,
+            "  \"paper_area_band_pct\": [{:.1}, {:.1}],",
+            PAPER_AREA_BAND.0, PAPER_AREA_BAND.1
+        );
+        let _ = writeln!(
+            s,
+            "  \"paper_power_band_pct\": [{:.1}, {:.1}],",
+            PAPER_POWER_BAND.0, PAPER_POWER_BAND.1
+        );
+        s.push_str("  \"rows\": [\n");
+        let n = self.rows.len();
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str("    {\n");
+            let _ = writeln!(s, "      \"format\": \"{}\",", r.format);
+            let _ = writeln!(s, "      \"config\": \"{}\",", r.config);
+            let _ = writeln!(s, "      \"radix\": {},", r.radix);
+            let _ = writeln!(s, "      \"stages\": {},", r.stages);
+            let _ = writeln!(s, "      \"clock_ns\": {:.2},", r.clock_ns);
+            let _ = writeln!(s, "      \"feasible\": {},", r.feasible);
+            let _ = writeln!(s, "      \"area_um2\": {:.1},", r.area_um2);
+            let _ = writeln!(s, "      \"power_mw\": {:.3},", r.power_mw);
+            let _ = writeln!(s, "      \"reg_bits\": {},", r.reg_bits);
+            let _ = writeln!(s, "      \"area_delta_pct\": {:.1},", r.area_delta_pct);
+            let _ = writeln!(s, "      \"power_delta_pct\": {:.1}", r.power_delta_pct);
+            s.push_str(if i + 1 == n { "    }\n" } else { "    },\n" });
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"summary\": [\n");
+        let m = self.summary.len();
+        for (i, v) in self.summary.iter().enumerate() {
+            s.push_str("    {\n");
+            let _ = writeln!(s, "      \"format\": \"{}\",", v.format);
+            let _ = writeln!(s, "      \"stages\": {},", v.stages);
+            let _ = writeln!(s, "      \"best_area_config\": \"{}\",", v.best_area_config);
+            let _ = writeln!(s, "      \"best_area_save_pct\": {:.1},", v.best_area_save_pct);
+            let _ = writeln!(s, "      \"area_in_band\": {},", v.area_in_band);
+            let _ = writeln!(s, "      \"best_power_config\": \"{}\",", v.best_power_config);
+            let _ = writeln!(s, "      \"best_power_save_pct\": {:.1},", v.best_power_save_pct);
+            let _ = writeln!(s, "      \"power_in_band\": {}", v.power_in_band);
+            s.push_str(if i + 1 == m { "    }\n" } else { "    },\n" });
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human summary: one paper-savings row per format.
+    pub fn summary_lines(&self) -> String {
+        let mut out = String::new();
+        for v in &self.summary {
+            let _ = writeln!(
+                out,
+                "{:<10} @{} stages: best area {} saves {:.1}% [{}], best power {} saves {:.1}% [{}]",
+                v.format,
+                v.stages,
+                v.best_area_config,
+                v.best_area_save_pct,
+                if v.area_in_band { "in band" } else { "out of band" },
+                v.best_power_config,
+                v.best_power_save_pct,
+                if v.power_in_band { "in band" } else { "out of band" },
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_has_expected_shape() {
+        let coord = Coordinator::new(4);
+        let report = dse_report(16, 16, 1.0, &coord);
+        // 5 formats x 2 depths x (serial + 3 radices).
+        assert_eq!(report.rows.len(), 5 * 2 * 4);
+        assert_eq!(report.summary.len(), 5);
+        for chunk in report.rows.chunks(4) {
+            assert_eq!(chunk[0].radix, 0);
+            assert!((chunk[0].area_delta_pct).abs() < 1e-12);
+            assert!(chunk.iter().all(|r| r.area_um2 > 0.0 && r.power_mw > 0.0));
+        }
+        // Radix 8 over 16 terms is the paper's 8-2 structure.
+        assert!(report.rows.iter().any(|r| r.radix == 8 && r.config == "8-2"));
+    }
+
+    #[test]
+    fn json_renders_byte_identically_twice() {
+        let coord = Coordinator::new(4);
+        let report = dse_report(16, 16, 1.0, &coord);
+        let a = report.to_json();
+        assert_eq!(a, report.to_json());
+        assert!(a.contains("\"schema\": \"ofa-dse-v1\""));
+        assert!(a.contains("\"best_power_save_pct\""));
+        assert!(report.summary_lines().contains("best area"));
+    }
+}

@@ -1,6 +1,8 @@
 //! Sweep engine: evaluate every radix configuration of an N-term adder in
 //! parallel over the experiment coordinator.
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::super::coordinator::Coordinator;
 use crate::arith::tree::{enumerate_configs, RadixConfig};
 use crate::formats::FpFormat;

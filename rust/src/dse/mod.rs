@@ -3,8 +3,10 @@
 //! power, and render the paper's tables and figures with paper-vs-measured
 //! columns.
 
+pub mod artifact;
 pub mod explore;
 pub mod paper;
 pub mod report;
 
+pub use artifact::{dse_report, DseReport};
 pub use explore::{sweep_format, SweepOptions};

@@ -1,6 +1,8 @@
 //! The paper's published evaluation numbers (Table I and the §IV-A text),
 //! kept here so every report can print paper-vs-measured side by side.
 
+#![deny(clippy::cast_precision_loss)]
+
 /// One Table I row: (format name, base area 10³µm², proposed area, proposed
 /// area config, area saving %, base power mW, proposed power, power config
 /// is the same as the area config in the paper, power saving %).
@@ -84,6 +86,18 @@ pub const FIG4_BEST_POWER: (&str, f64) = ("8-2-2", 26.0);
 /// pipeline depth.
 pub const FIG5_SPEEDUP_CONFIG: (&str, f64) = ("2-2-8", 16.6);
 
+/// §IV-A summary bands: across the positive Table I rows the online
+/// operator trees save 3–23 % area and 4–26 % power against the
+/// serial-alignment baselines. `DSE_report.json`'s summary flags each
+/// measured best-config saving as inside or outside these bands.
+pub const PAPER_AREA_BAND: (f64, f64) = (3.0, 23.0);
+pub const PAPER_POWER_BAND: (f64, f64) = (4.0, 26.0);
+
+/// Band membership with the paper's whole-percent rounding slack.
+pub fn in_band(save_pct: f64, band: (f64, f64)) -> bool {
+    save_pct >= band.0 - 0.5 && save_pct <= band.1 + 0.5
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +123,17 @@ mod tests {
     fn lookup() {
         assert!(table1(32).is_some());
         assert!(table1(8).is_none());
+    }
+
+    #[test]
+    fn every_positive_table1_saving_sits_inside_the_summary_bands() {
+        for rows in [&TABLE1_N16, &TABLE1_N32, &TABLE1_N64] {
+            for r in rows.iter().filter(|r| r.area_save_pct > 0.0) {
+                assert!(in_band(r.area_save_pct, PAPER_AREA_BAND), "{}", r.format);
+                assert!(in_band(r.power_save_pct, PAPER_POWER_BAND), "{}", r.format);
+            }
+        }
+        assert!(!in_band(2.0, PAPER_AREA_BAND));
+        assert!(!in_band(27.0, PAPER_POWER_BAND));
     }
 }

@@ -2,6 +2,8 @@
 //! paper-vs-measured columns (the reproduction contract is the *shape* —
 //! who wins, by roughly what factor — not absolute 28-nm numbers).
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::explore::{best_proposed, sweep_format, SweepOptions};
 use super::paper;
 use crate::coordinator::Coordinator;

@@ -6,6 +6,8 @@
 //! builders into per-stage components so the pipeline scheduler can place
 //! register cuts inside them, which is exactly the freedom HLS has.
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::gates::*;
 
 /// Area/delay of one component instance.

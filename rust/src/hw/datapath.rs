@@ -18,6 +18,8 @@
 //! * the baseline is exactly the single radix-N node of the same generator
 //!   (the paper's observation in §III-C).
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::components as comp;
 use super::gates::clog2;
 use super::netlist::{Netlist, NodeId};
@@ -97,11 +99,30 @@ impl DatapathParams {
     }
 }
 
+/// One point of the alignment-fraction spine: a node whose output bus
+/// carries the (λ-aligned, two's-complement) partial sum of `terms` input
+/// terms, provisioned `frac_w` bits wide. The builders record one tap per
+/// leaf and per `⊙` operator output so the static verifier
+/// (`analysis::netlist`) can bridge the software-side magnitude bounds
+/// ([`crate::analysis::domain::MagBits`]) onto hardware bus widths.
+#[derive(Clone, Copy, Debug)]
+pub struct OperatorTap {
+    pub node: NodeId,
+    /// Input terms accumulated into this bus.
+    pub terms: u32,
+    /// Provisioned fraction-bus width in bits.
+    pub frac_w: u32,
+    /// Tree level (0 = leaves).
+    pub level: u32,
+}
+
 /// Complete adder netlist plus handles used by diagnostics.
 pub struct AdderNetlist {
     pub nl: Netlist,
     pub params: DatapathParams,
     pub config: RadixConfig,
+    /// Fraction-spine taps, leaves first, root last (see [`OperatorTap`]).
+    pub taps: Vec<OperatorTap>,
 }
 
 /// Build the full adder netlist for a mixed-radix configuration (the
@@ -111,6 +132,7 @@ pub fn build_adder(params: DatapathParams, config: &RadixConfig) -> AdderNetlist
     assert_eq!(config.terms(), params.n_terms, "config width mismatch");
     let mut nl = Netlist::new();
     let fmt = params.fmt;
+    let mut taps = Vec::new();
 
     // Primary inputs + unpack (field split, hidden bit, 2's complement).
     let mut level: Vec<BusPair> = (0..params.n_terms)
@@ -119,12 +141,16 @@ pub fn build_adder(params: DatapathParams, config: &RadixConfig) -> AdderNetlist
             let unp = nl.add(format!("unpack.{i}"), comp::unpack(fmt.sig_bits()));
             nl.set_region(unp, "unpack");
             nl.connect(input, unp, fmt.width());
-            BusPair { exp: unp, frac: unp, frac_w: params.leaf_frac_w() }
+            let pair = BusPair { exp: unp, frac: unp, frac_w: params.leaf_frac_w() };
+            taps.push(OperatorTap { node: pair.frac, terms: 1, frac_w: pair.frac_w, level: 0 });
+            pair
         })
         .collect();
 
     // Operator levels.
+    let mut terms_covered = 1u32;
     for (li, &r) in config.radices().iter().enumerate() {
+        terms_covered *= r;
         let mut next = Vec::with_capacity(level.len() / r as usize);
         for (gi, group) in level.chunks(r as usize).enumerate() {
             let tag = format!("L{li}.g{gi}");
@@ -133,6 +159,12 @@ pub fn build_adder(params: DatapathParams, config: &RadixConfig) -> AdderNetlist
             } else {
                 radix_r_node(&mut nl, &params, &tag, group)
             };
+            taps.push(OperatorTap {
+                node: out.frac,
+                terms: terms_covered,
+                frac_w: out.frac_w,
+                level: li as u32 + 1,
+            });
             next.push(out);
         }
         level = next;
@@ -142,7 +174,7 @@ pub fn build_adder(params: DatapathParams, config: &RadixConfig) -> AdderNetlist
     // Shared normalization/rounding tail.
     normalize_tail(&mut nl, &params, level[0]);
 
-    let mut out = AdderNetlist { nl, params, config: config.clone() };
+    let mut out = AdderNetlist { nl, params, config: config.clone(), taps };
     out.nl.schedule_asap();
     out
 }

@@ -3,6 +3,8 @@
 //! the activity simulator — producing the `(area µm², power mW)` pairs the
 //! paper's tables and figures report.
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::datapath::{build_adder, DatapathParams};
 use super::gates;
 use super::pipeline::{min_clock_ns, paper_stages, pipeline, PipelineResult};

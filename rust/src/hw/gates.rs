@@ -7,6 +7,8 @@
 //! numbers (see `DESIGN.md` §Calibration) — *relative* results, which
 //! are what the reproduction compares, do not depend on them.
 
+#![deny(clippy::cast_precision_loss)]
+
 /// Area of one gate-equivalent in µm² (28-nm standard cell, routed).
 ///
 /// Calibrated so the baseline 32-term BFloat16 adder (combinational +

@@ -1,0 +1,168 @@
+//! Generator of radix-N multi-term align-and-add adder netlists,
+//! parameterized by (format, radix, accumulator width) — the verified
+//! front door to the `hw::datapath` builders.
+//!
+//! The paper's §III contrast is between the **serial-alignment baseline**
+//! (one monolithic radix-N node: every input aligned against the global
+//! maximum exponent in a single step) and **online fused operators** (a
+//! tree of small `⊙` nodes, radix `r`, each aligning locally). This module
+//! derives the corresponding [`RadixConfig`]s from a single radix knob and
+//! builds the netlists under an explicit [`AccSpec`] accumulator width, so
+//! the static verifier (`analysis::netlist`) and the DSE sweep (`dse`)
+//! share one parameterization:
+//!
+//! * radix `r` over `n` terms ⇒ divide by `r` while divisible, then by 2 —
+//!   `n=32, r=8` yields `8-2-2` (the paper's best Table I(b) config),
+//!   `n=16, r=8` yields `8-2`, `n=32, r=4` yields `4-4-2`;
+//! * radix `0` (or [`GenParams::serial`]) ⇒ the radix-N baseline.
+//!
+//! Every generated [`AdderNetlist`] carries the fraction-spine taps
+//! ([`super::datapath::OperatorTap`]) the width-obligation bridge checks.
+#![deny(clippy::cast_precision_loss)]
+
+use super::datapath::{build_adder, AdderNetlist, DatapathParams};
+use crate::arith::tree::RadixConfig;
+use crate::arith::AccSpec;
+use crate::formats::FpFormat;
+
+/// The radii the verifier suite and the DSE sweep exercise per format:
+/// binary tree, quad tree, and the paper's radix-8-first mixes.
+pub const SUITE_RADICES: [u32; 3] = [2, 4, 8];
+
+/// Parameters of one generated adder: format, term count, operator radix
+/// (`0` = serial-alignment baseline), and the accumulator width model.
+#[derive(Clone, Copy, Debug)]
+pub struct GenParams {
+    pub fmt: FpFormat,
+    pub n_terms: u32,
+    /// `⊙` operator radix; `0` selects the serial radix-N baseline.
+    pub radix: u32,
+    /// Accumulator width model (guard bits + storage width).
+    pub spec: AccSpec,
+}
+
+impl GenParams {
+    /// An online fused operator tree of radix `r` at the hardware-default
+    /// accumulator width.
+    pub fn online(fmt: FpFormat, n_terms: u32, radix: u32) -> Self {
+        GenParams { fmt, n_terms, radix, spec: AccSpec::hw_default(fmt, n_terms as usize) }
+    }
+
+    /// The serial-alignment baseline (single radix-N node).
+    pub fn serial(fmt: FpFormat, n_terms: u32) -> Self {
+        GenParams { fmt, n_terms, radix: 0, spec: AccSpec::hw_default(fmt, n_terms as usize) }
+    }
+
+    /// The mixed-radix configuration this parameterization denotes.
+    pub fn config(&self) -> Result<RadixConfig, String> {
+        if self.radix == 0 {
+            Ok(RadixConfig::baseline(self.n_terms))
+        } else {
+            radix_tree_config(self.n_terms, self.radix)
+        }
+    }
+
+    /// Signed accumulator width of the model this netlist must respect.
+    pub fn acc_width(&self) -> u32 {
+        self.spec.acc_width(self.fmt, self.n_terms as usize)
+    }
+}
+
+/// Derive the operator tree for radix `r` over `n` terms: divide by `r`
+/// while divisible, then by 2, then (for non-2^k·r^m counts) one residual
+/// level. The product of the level radii always equals `n`.
+pub fn radix_tree_config(n: u32, r: u32) -> Result<RadixConfig, String> {
+    if n < 2 {
+        return Err(format!("need at least 2 terms, got {n}"));
+    }
+    if r < 2 {
+        return Err(format!("operator radix must be >= 2, got {r}"));
+    }
+    let mut radices = Vec::new();
+    let mut rem = n;
+    while rem % r == 0 && rem >= r {
+        radices.push(r);
+        rem /= r;
+    }
+    while rem % 2 == 0 && rem >= 2 {
+        radices.push(2);
+        rem /= 2;
+    }
+    if rem > 1 {
+        radices.push(rem);
+    }
+    let cfg: RadixConfig = radices
+        .iter()
+        .map(|x| x.to_string())
+        .collect::<Vec<_>>()
+        .join("-")
+        .parse()?;
+    debug_assert_eq!(cfg.terms(), n);
+    Ok(cfg)
+}
+
+/// Build the netlist for one parameterization. The result is scheduled and
+/// carries the fraction-spine taps the width bridge checks.
+pub fn generate(p: &GenParams) -> Result<AdderNetlist, String> {
+    let cfg = p.config()?;
+    let params = DatapathParams::new(p.fmt, p.n_terms, p.spec);
+    let adder = build_adder(params, &cfg);
+    debug_assert_eq!(adder.taps.last().map(|t| t.terms), Some(p.n_terms));
+    Ok(adder)
+}
+
+/// The per-format verification suite: the serial baseline plus one online
+/// tree per [`SUITE_RADICES`] entry, in that order.
+pub fn generate_suite(fmt: FpFormat, n_terms: u32) -> Vec<AdderNetlist> {
+    let mut out = vec![generate(&GenParams::serial(fmt, n_terms)).expect("baseline generates")];
+    for r in SUITE_RADICES {
+        out.push(generate(&GenParams::online(fmt, n_terms, r)).expect("online tree generates"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{BF16, FP32};
+
+    #[test]
+    fn radix_tree_configs_match_the_paper_structures() {
+        assert_eq!(radix_tree_config(32, 8).unwrap().to_string(), "8-2-2");
+        assert_eq!(radix_tree_config(16, 8).unwrap().to_string(), "8-2");
+        assert_eq!(radix_tree_config(32, 4).unwrap().to_string(), "4-4-2");
+        assert_eq!(radix_tree_config(16, 4).unwrap().to_string(), "4-4");
+        assert_eq!(radix_tree_config(32, 2).unwrap().to_string(), "2-2-2-2-2");
+        assert_eq!(radix_tree_config(64, 8).unwrap().to_string(), "8-8");
+        // Residual odd factor collapses into one final level.
+        assert_eq!(radix_tree_config(24, 8).unwrap().to_string(), "8-3");
+        assert!(radix_tree_config(1, 2).is_err());
+        assert!(radix_tree_config(8, 1).is_err());
+    }
+
+    #[test]
+    fn generated_adders_carry_a_full_fraction_spine() {
+        for p in [GenParams::serial(BF16, 16), GenParams::online(BF16, 16, 4)] {
+            let adder = generate(&p).unwrap();
+            // One tap per leaf plus one per operator output.
+            let leaves = adder.taps.iter().filter(|t| t.level == 0).count();
+            assert_eq!(leaves, 16);
+            let root = adder.taps.last().unwrap();
+            assert_eq!(root.terms, 16);
+            // The root fraction bus fits the model's accumulator window.
+            assert!(root.frac_w <= p.acc_width());
+        }
+    }
+
+    #[test]
+    fn suite_covers_serial_plus_all_radices() {
+        let suite = generate_suite(FP32, 16);
+        assert_eq!(suite.len(), 1 + SUITE_RADICES.len());
+        assert!(suite[0].config.is_baseline());
+        assert_eq!(suite[2].config.to_string(), "4-4");
+        for a in &suite {
+            assert!(a.nl.is_scheduled());
+            assert!(a.nl.area() > 0.0);
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! * [`components`] — parameterized cost models of every datapath block;
 //! * [`netlist`] — the scheduled component DAG;
 //! * [`datapath`] — netlist builders for baseline and mixed-radix adders;
+//! * [`generate`] — (format, radix, acc-width)-parameterized generator;
 //! * [`pipeline`] — register-minimal stage cutting (the HLS scheduler);
 //! * [`power`] — switching-activity power from real operand traces;
 //! * [`design`] — one-stop evaluation of a configuration (area/power/clock).
@@ -12,6 +13,7 @@
 pub mod components;
 pub mod datapath;
 pub mod design;
+pub mod generate;
 pub mod gates;
 pub mod netlist;
 pub mod pipeline;

@@ -4,10 +4,40 @@
 //! combinational delay (longest path) and pipelining (register bits on
 //! edges crossing stage cuts — see [`super::pipeline`]).
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::components::Comp;
+use std::fmt;
 
 /// Node index.
 pub type NodeId = usize;
+
+/// Why an edge was rejected at construction. Malformed edges used to slip
+/// through release builds silently (only a `debug_assert` guarded them) and
+/// would then corrupt every downstream area/delay/power figure; endpoints
+/// are now validated eagerly so the netlist lint pass is a second line of
+/// defense, never the first.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EdgeError {
+    /// An endpoint names a node that does not exist (yet).
+    OutOfRange { from: NodeId, to: NodeId, nodes: usize },
+    /// `from == to`: a combinational self-loop can never be scheduled.
+    SelfLoop { node: NodeId },
+    /// A zero-width bus carries no value and breaks register accounting.
+    ZeroWidth { from: NodeId, to: NodeId },
+}
+
+impl fmt::Display for EdgeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            EdgeError::OutOfRange { from, to, nodes } => {
+                write!(f, "edge {from}->{to} references a node outside 0..{nodes}")
+            }
+            EdgeError::SelfLoop { node } => write!(f, "self-loop on node {node}"),
+            EdgeError::ZeroWidth { from, to } => write!(f, "zero-width bus {from}->{to}"),
+        }
+    }
+}
 
 /// One schedulable component instance.
 #[derive(Clone, Debug)]
@@ -64,7 +94,10 @@ impl Netlist {
     }
 
     /// Assign the scheduling region of the most recently added node.
+    /// Regions redefine the pipeline super-node graph, so any previously
+    /// computed schedule is invalidated like every other mutation.
     pub fn set_region(&mut self, id: NodeId, region: impl Into<String>) {
+        self.scheduled = false;
         self.nodes[id].region = region.into();
     }
 
@@ -72,6 +105,7 @@ impl Netlist {
     pub fn add_with_alt(&mut self, kind: impl Into<String>, fast: Comp, compact: Comp) -> NodeId {
         let id = self.add(kind, fast);
         debug_assert!(compact.area <= fast.area && compact.delay >= fast.delay);
+        self.scheduled = false;
         self.nodes[id].alt = Some(compact);
         id
     }
@@ -81,12 +115,38 @@ impl Netlist {
         self.add(kind, Comp::new(0.0, 0.0))
     }
 
-    /// Connect `from → to` with a `bits`-wide bus.
-    pub fn connect(&mut self, from: NodeId, to: NodeId, bits: u32) {
-        debug_assert!(from < self.nodes.len() && to < self.nodes.len());
-        debug_assert!(from != to, "self-loop");
+    /// Connect `from → to` with a `bits`-wide bus, validating the edge at
+    /// construction (release builds included).
+    pub fn add_edge(&mut self, from: NodeId, to: NodeId, bits: u32) -> Result<(), EdgeError> {
+        let nodes = self.nodes.len();
+        if from >= nodes || to >= nodes {
+            return Err(EdgeError::OutOfRange { from, to, nodes });
+        }
+        if from == to {
+            return Err(EdgeError::SelfLoop { node: from });
+        }
+        if bits == 0 {
+            return Err(EdgeError::ZeroWidth { from, to });
+        }
         self.scheduled = false;
         self.edges.push(Edge { from, to, bits });
+        Ok(())
+    }
+
+    /// Infallible [`Self::add_edge`] for the netlist builders, which only
+    /// ever wire nodes they just created: a malformed edge there is a
+    /// construction bug and panics immediately instead of corrupting the
+    /// graph.
+    pub fn connect(&mut self, from: NodeId, to: NodeId, bits: u32) {
+        if let Err(e) = self.add_edge(from, to, bits) {
+            panic!("invalid netlist edge: {e}");
+        }
+    }
+
+    /// Whether a schedule computed by [`Self::schedule_asap`] is still
+    /// valid (no mutation since).
+    pub fn is_scheduled(&self) -> bool {
+        self.scheduled
     }
 
     /// Total combinational area in GE.
@@ -132,7 +192,10 @@ impl Netlist {
 
     /// Longest finish time over all nodes (requires a prior schedule).
     pub fn critical_path(&self) -> f64 {
-        debug_assert!(self.scheduled || self.nodes.is_empty());
+        debug_assert!(
+            self.scheduled || self.nodes.is_empty(),
+            "stale schedule read: the netlist was mutated after schedule_asap"
+        );
         self.nodes.iter().map(|n| n.start + n.delay).fold(0.0, f64::max)
     }
 
@@ -187,5 +250,82 @@ mod tests {
         nl.connect(a, b, 1);
         nl.connect(b, a, 1);
         nl.schedule_asap();
+    }
+
+    #[test]
+    fn add_edge_rejects_malformed_edges_with_typed_errors() {
+        let mut nl = Netlist::new();
+        let a = nl.add("a", Comp::new(1.0, 1.0));
+        let b = nl.add("b", Comp::new(1.0, 1.0));
+        // Out-of-range endpoints — both directions.
+        assert_eq!(
+            nl.add_edge(a, 7, 4),
+            Err(EdgeError::OutOfRange { from: a, to: 7, nodes: 2 })
+        );
+        assert_eq!(
+            nl.add_edge(9, b, 4),
+            Err(EdgeError::OutOfRange { from: 9, to: b, nodes: 2 })
+        );
+        // Self-loop and zero-width bus.
+        assert_eq!(nl.add_edge(a, a, 4), Err(EdgeError::SelfLoop { node: a }));
+        assert_eq!(nl.add_edge(a, b, 0), Err(EdgeError::ZeroWidth { from: a, to: b }));
+        // None of the rejected edges landed in the graph.
+        assert!(nl.edges.is_empty());
+        assert!(nl.add_edge(a, b, 4).is_ok());
+        assert_eq!(nl.edges.len(), 1);
+        // The errors render actionable messages.
+        let msg = EdgeError::OutOfRange { from: 0, to: 7, nodes: 2 }.to_string();
+        assert!(msg.contains("0..2"), "{msg}");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid netlist edge")]
+    fn connect_panics_on_malformed_edge_in_release_too() {
+        let mut nl = Netlist::new();
+        let a = nl.add("a", Comp::new(1.0, 1.0));
+        nl.connect(a, 42, 8);
+    }
+
+    #[test]
+    fn every_mutator_invalidates_the_schedule() {
+        let mut nl = Netlist::new();
+        let a = nl.input("in.a");
+        let b = nl.add("b", Comp::new(1.0, 1.0));
+        nl.connect(a, b, 4);
+        nl.schedule_asap();
+        assert!(nl.is_scheduled());
+
+        // add
+        let c = nl.add("c", Comp::new(1.0, 1.0));
+        assert!(!nl.is_scheduled(), "add left a stale schedule readable");
+        nl.schedule_asap();
+
+        // add_edge
+        nl.add_edge(b, c, 4).unwrap();
+        assert!(!nl.is_scheduled(), "add_edge left a stale schedule readable");
+        nl.schedule_asap();
+
+        // alt-selection metadata
+        let d = nl.add_with_alt("d", Comp::new(2.0, 1.0), Comp::new(1.0, 2.0));
+        assert!(!nl.is_scheduled(), "add_with_alt left a stale schedule readable");
+        nl.connect(c, d, 4);
+        nl.schedule_asap();
+
+        // region reassignment redefines the pipeline super-node graph
+        nl.set_region(d, "lane");
+        assert!(!nl.is_scheduled(), "set_region left a stale schedule readable");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "stale schedule")]
+    fn stale_schedule_cannot_be_read_after_mutation() {
+        let mut nl = Netlist::new();
+        let a = nl.input("in.a");
+        let b = nl.add("b", Comp::new(1.0, 1.0));
+        nl.connect(a, b, 4);
+        nl.schedule_asap();
+        nl.add("late", Comp::new(1.0, 1.0)); // mutation invalidates
+        nl.critical_path(); // reading the stale schedule must trip
     }
 }

@@ -24,6 +24,8 @@
 //! downgrades adder-like regions with slack to compact (smaller, slower)
 //! variants; feasibility is re-validated exactly after every move.
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::components::register_area;
 use super::datapath::AdderNetlist;
 use super::gates::{self, clog2 as _clog2};

@@ -12,6 +12,8 @@
 //! semantics as `arith::operator` — bit-accuracy is cross-checked against
 //! the `WideInt` models in the tests.
 
+#![deny(clippy::cast_precision_loss)]
+
 use super::datapath::DatapathParams;
 use super::gates::{self, FJ_PER_GE_TOGGLE, IDLE_ACTIVITY};
 use super::pipeline::PipelineResult;
@@ -184,6 +186,7 @@ impl ActivitySim {
 
     /// Average dynamic power in mW at `clock_ghz`, for a design pipelined
     /// per `pipe` (register power from toggle density × reg bits).
+    #[allow(clippy::cast_precision_loss)] // energy/cycle and reg-bit counts enter the float model here
     pub fn power_mw(&self, clock_ghz: f64, pipe: Option<&PipelineResult>) -> f64 {
         if self.cycles == 0 {
             return 0.0;

@@ -12,8 +12,9 @@
 //! repro kernel [--format all] [--n 1024] [--blocks 1,8,64]  SoA-kernel check
 //! repro eia    [--format all] [--n 1024] [--vectors 64]     EIA backend check
 //! repro sweep  --format e4m3 --n 16           raw design-space dump
+//! repro dse    [--json] [--n 32] [--vectors 96]        serial-vs-online DSE artifact
 //! repro stats  [--prometheus|--json|--trace|--provenance] [--selftest]  live cross-tier telemetry
-//! repro analyze [--gate|--json] [--fault NAME]         static width/overflow proof
+//! repro analyze [--gate|--json] [--netlist] [--fault NAME]  static width/overflow proof
 //! repro e2e    [--sentences 4] [--requests 256]        PJRT end-to-end demo
 //! ```
 //!
@@ -41,6 +42,7 @@ fn main() -> ExitCode {
         "kernel" => cmd_kernel(&args),
         "eia" => cmd_eia(&args),
         "sweep" => cmd_sweep(&args),
+        "dse" => cmd_dse(&args),
         "stats" => cmd_stats(&args),
         "analyze" => cmd_analyze(&args),
         "e2e" => cmd_e2e(&args),
@@ -100,6 +102,18 @@ commands:
                                           equal one-shot banking, and
                                           report ingest/drain throughput
   sweep   --format F --n N [--clock 1.0]  raw design-space dump for any N
+  dse     [--json] [--n 32] [--vectors 96] [--clock 1.0]
+                                          serial-alignment baseline vs the
+                                          online fused operator trees of
+                                          radix 2/4/8 per paper format, at
+                                          the paper pipeline-depth policy
+                                          and one stage deeper, with
+                                          workload-driven power; --json
+                                          emits the byte-deterministic
+                                          artifact DSE_report.json with
+                                          per-format best savings flagged
+                                          against the paper's 3-23 % area /
+                                          4-26 % power bands
   stats   [--n 256] [--vectors 16] [--prometheus|--json|--trace|--provenance] [--selftest]
                                           exercise every registered backend,
                                           plan negotiation and the stream
@@ -113,19 +127,24 @@ commands:
                                           nothing, spans are unthreaded, or
                                           an injected panic leaves no
                                           flight-recorder postmortem
-  analyze [--gate] [--json] [--fault NAME]
+  analyze [--gate] [--json] [--netlist] [--fault NAME]
                                           static datapath width/overflow
                                           verifier (DESIGN.md §Analysis):
                                           derive the no-overflow obligation
                                           set for every format x backend and
                                           check it against the provisioned
-                                          storage; --json emits the proof
-                                          artifact ANALYSIS_report.json;
-                                          --gate additionally exercises every
+                                          storage; --netlist appends the
+                                          netlist tier (graph lints, STA,
+                                          width-obligation bridge over the
+                                          generated radix-N adder suite);
+                                          --json emits the proof artifact
+                                          ANALYSIS_report.json; --gate
+                                          additionally exercises every
                                           backend and cross-checks telemetry
                                           maxima against the proved bounds;
-                                          --fault injects a named storage
-                                          fault (self-test; must fail)
+                                          --fault injects a named storage or
+                                          netlist fault (self-test; must
+                                          fail)
   e2e     [--sentences 4] [--requests 256] PJRT BERT workload + batched serving demo
   serve   [--requests 2048] [--clients 8]  load-test the batched PJRT reduction path
   help                                    this text
@@ -317,13 +336,33 @@ fn cmd_backends(args: &Args) -> Result<(), String> {
 /// backend over every oracle distribution and cross-checks the telemetry
 /// occupancy / lane-width maxima against the statically proved bounds.
 fn cmd_analyze(args: &Args) -> Result<(), String> {
-    use online_fp_add::analysis::{self, StorageEnv};
+    use online_fp_add::analysis::{self, netlist, StorageEnv};
 
+    let with_netlist = args.has("netlist");
+    let mut net_fault = None;
     let env = match args.get("fault") {
-        Some(name) => StorageEnv::with_fault(name)?,
+        Some(name) => match StorageEnv::with_fault(name) {
+            Ok(env) => env,
+            Err(e) => match netlist::NetlistFault::from_name(name) {
+                Some(f) if with_netlist => {
+                    net_fault = Some(f);
+                    StorageEnv::actual()
+                }
+                Some(_) => {
+                    return Err(format!(
+                        "fault {name:?} targets the netlist tier; add --netlist"
+                    ))
+                }
+                None => return Err(e),
+            },
+        },
         None => StorageEnv::actual(),
     };
-    let report = analysis::analyze(&env);
+    let report = if with_netlist {
+        analysis::analyze_netlist(&env, net_fault)
+    } else {
+        analysis::analyze(&env)
+    };
 
     if args.has("json") {
         // Machine mode: emit the artifact verbatim and let CI judge it —
@@ -346,6 +385,22 @@ fn cmd_analyze(args: &Args) -> Result<(), String> {
         env.max_bins,
         env.shift_clamp,
     );
+
+    if with_netlist {
+        println!("\nSTA over the generated FP32 suite (N={}):", netlist::VERIFY_TERMS);
+        for adder in
+            online_fp_add::hw::generate::generate_suite(online_fp_add::formats::FP32, netlist::VERIFY_TERMS)
+        {
+            if let Some(s) = netlist::sta(&adder.nl) {
+                println!(
+                    "  {:<12} critical {:.2} ns  {}",
+                    adder.config.to_string(),
+                    s.critical,
+                    s.path_name(&adder.nl)
+                );
+            }
+        }
+    }
 
     if args.has("gate") {
         let terms = args.get_usize("terms", 96)?.max(1);
@@ -618,6 +673,52 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// The DSE artifact (DESIGN.md §Analysis): evaluate the serial-alignment
+/// baseline against the online fused operator trees of radix 2/4/8 for
+/// every paper format, at the per-format pipeline-depth policy and one
+/// stage deeper, with workload-driven power — then flag each format's best
+/// savings against the paper's §IV-A bands. `--json` emits the
+/// byte-deterministic `DSE_report.json`.
+fn cmd_dse(args: &Args) -> Result<(), String> {
+    use online_fp_add::dse::paper::{PAPER_AREA_BAND, PAPER_POWER_BAND};
+
+    let n = args.get_usize("n", 32)?.max(2) as u32;
+    let vectors = args.get_usize("vectors", 96)?.max(1);
+    let clock = args.get_f64("clock", 1.0)?;
+    let coord = coordinator(args)?;
+    let report = online_fp_add::dse::dse_report(n, vectors, clock, &coord);
+    if args.has("json") {
+        print!("{}", report.to_json());
+        return Ok(());
+    }
+    println!(
+        "DSE — serial-alignment baseline vs online fused operator trees \
+         (N={n}, {vectors} vectors, {clock:.2} ns target)\n"
+    );
+    let mut t = online_fp_add::util::table::Table::new(vec![
+        "format", "config", "stages", "area µm²", "area Δ", "power mW", "power Δ", "met clk",
+    ]);
+    for r in &report.rows {
+        t.row(vec![
+            r.format.to_string(),
+            r.config.clone(),
+            r.stages.to_string(),
+            format!("{:.0}", r.area_um2),
+            format!("{:+.1}%", r.area_delta_pct),
+            format!("{:.2}", r.power_mw),
+            format!("{:+.1}%", r.power_delta_pct),
+            if r.feasible { "yes".into() } else { format!("min {:.2} ns", r.clock_ns) },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "paper-savings summary (paper bands: area {:.0}-{:.0}%, power {:.0}-{:.0}%):",
+        PAPER_AREA_BAND.0, PAPER_AREA_BAND.1, PAPER_POWER_BAND.0, PAPER_POWER_BAND.1
+    );
+    print!("{}", report.summary_lines());
     Ok(())
 }
 

@@ -72,6 +72,27 @@ fn every_seeded_fault_trips_the_gate() {
     }
 }
 
+/// The netlist tier is strictly additive: `analyze` alone emits no
+/// `netlist-*` obligations, and `analyze_netlist` keeps the software
+/// derivations as an unchanged prefix — the committed artifact's first 148
+/// entries cannot shift when the netlist suite evolves.
+#[test]
+fn netlist_tier_is_an_additive_suffix() {
+    let soft = actual_report();
+    assert!(soft.obligations.iter().all(|o| !o.id.starts_with("netlist-")));
+    let full = analysis::analyze_netlist(&StorageEnv::actual(), None);
+    assert!(full.obligations.len() > soft.obligations.len());
+    for (a, b) in soft.obligations.iter().zip(&full.obligations) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.format, b.format);
+        assert_eq!(a.required_bits, b.required_bits);
+        assert_eq!(a.provided_bits, b.provided_bits);
+    }
+    assert!(full.obligations[soft.obligations.len()..]
+        .iter()
+        .all(|o| o.id.starts_with("netlist-")));
+}
+
 /// The runtime cross-check: exercise every registered backend over every
 /// oracle distribution and paper format, then assert the telemetry
 /// maxima the datapath actually produced sit inside the statically

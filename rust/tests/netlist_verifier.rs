@@ -1,0 +1,151 @@
+//! Netlist-verifier gate (DESIGN.md §Analysis, netlist tier): the CI-facing
+//! battery behind `repro analyze --netlist --gate` and `repro dse`.
+//!
+//! 1. **All green on the generated suite** — the netlist obligation
+//!    families pass for every paper format over the serial baseline and
+//!    every [`SUITE_RADICES`] online tree, and the extended artifact is
+//!    byte-deterministic.
+//! 2. **The gate can fail** — every seeded `net-*` fault breaks at least
+//!    one obligation, and the faulted artifact still serializes.
+//! 3. **Pipeline properties** — over every generated netlist and several
+//!    depths, the stage assignment is monotone along every edge, nodes of
+//!    one region share a stage, and an independent register-bit recount
+//!    over the edge list matches the scheduler's report exactly.
+//! 4. **The DSE artifact** — the serial-vs-online sweep renders a
+//!    byte-deterministic `ofa-dse-v1` report with a summary row per format.
+
+use online_fp_add::analysis::{self, netlist, StorageEnv};
+use online_fp_add::coordinator::Coordinator;
+use online_fp_add::dse;
+use online_fp_add::formats::PAPER_FORMATS;
+use online_fp_add::hw::generate::{generate_suite, SUITE_RADICES};
+use online_fp_add::hw::pipeline::{min_clock_ns, paper_stages, pipeline};
+use std::collections::HashMap;
+
+#[test]
+fn netlist_obligations_all_green_over_the_generated_suite() {
+    let report = analysis::analyze_netlist(&StorageEnv::actual(), None);
+    let failed = report.failed();
+    assert!(
+        failed.is_empty(),
+        "netlist obligations failed: {:?}",
+        failed.iter().map(|o| format!("{}/{}/{}", o.format, o.backend, o.id)).collect::<Vec<_>>()
+    );
+    // Every family × format × suite entry is present.
+    for fam in [
+        "netlist-structure",
+        "netlist-sta-slack",
+        "netlist-sta-critical",
+        "netlist-width-bridge",
+        "netlist-bus-bridge",
+        "netlist-pipeline-monotone",
+        "netlist-pipeline-regbits",
+    ] {
+        for fmt in PAPER_FORMATS {
+            let count = report
+                .obligations
+                .iter()
+                .filter(|o| o.id == fam && o.format == fmt.name)
+                .count();
+            assert_eq!(count, 1 + SUITE_RADICES.len(), "{fam} x {}", fmt.name);
+        }
+    }
+    // The software families are still all there, in front.
+    assert!(report.obligations.iter().any(|o| o.id == "acc-width"));
+    assert!(report.obligations[0].id != "netlist-structure");
+}
+
+#[test]
+fn netlist_artifact_is_byte_deterministic() {
+    let render = || analysis::analyze_netlist(&StorageEnv::actual(), None).to_json();
+    let (a, b) = (render(), render());
+    assert_eq!(a, b, "two netlist-extended renders differ");
+    assert!(a.contains("\"id\": \"netlist-width-bridge\""));
+    assert!(a.contains("\"backend\": \"nl:8-2\""));
+}
+
+#[test]
+fn every_seeded_netlist_fault_trips_the_gate() {
+    for name in netlist::NetlistFault::fault_names() {
+        let fault = netlist::NetlistFault::from_name(name).expect("known fault name");
+        let report = analysis::analyze_netlist(&StorageEnv::actual(), Some(fault));
+        let failed = report.failed();
+        assert!(!failed.is_empty(), "seeded fault {name:?} left every obligation green");
+        assert!(
+            failed.iter().all(|o| o.id.starts_with("netlist-")),
+            "netlist fault {name:?} broke a software obligation: {:?}",
+            failed.iter().map(|o| o.id).collect::<Vec<_>>()
+        );
+        assert!(report.to_json().contains("\"pass\": false"));
+    }
+    assert!(netlist::NetlistFault::from_name("no-such-fault").is_none());
+}
+
+/// Satellite property battery over `hw::pipeline`: stage monotonicity,
+/// region atomicity, and register-bit accounting, for every paper format,
+/// every suite config, and three depths.
+#[test]
+fn pipeline_stage_assignment_properties_hold_over_generated_netlists() {
+    for fmt in PAPER_FORMATS {
+        for adder in generate_suite(fmt, netlist::VERIFY_TERMS) {
+            let policy = paper_stages(fmt, netlist::VERIFY_TERMS);
+            for stages in [2, policy, policy + 1] {
+                let clock = min_clock_ns(&adder, stages) * 1.02;
+                let pipe = pipeline(&adder, stages, clock)
+                    .unwrap_or_else(|| panic!("{} infeasible at its own min clock", adder.config));
+                assert_eq!(pipe.stages, stages);
+                assert_eq!(pipe.assignment.len(), adder.nl.nodes.len());
+                assert!(pipe.assignment.iter().all(|&s| s < stages));
+
+                // Monotone along every edge, and the register-bit recount
+                // over the raw edge list matches the scheduler's report.
+                let audit = netlist::audit_pipeline(&adder.nl, &pipe.assignment);
+                assert_eq!(
+                    audit.monotone_violations, 0,
+                    "{} @{stages}: producer scheduled after consumer",
+                    adder.config
+                );
+                assert_eq!(
+                    audit.recomputed_reg_bits, pipe.reg_bits,
+                    "{} @{stages}: register-bit accounting drifted",
+                    adder.config
+                );
+
+                // Region atomicity: chain sub-nodes of one region never
+                // straddle a cut.
+                let mut region_stage: HashMap<&str, u32> = HashMap::new();
+                for (i, &s) in pipe.assignment.iter().enumerate() {
+                    match region_stage.entry(adder.nl.nodes[i].region.as_str()) {
+                        std::collections::hash_map::Entry::Vacant(e) => {
+                            e.insert(s);
+                        }
+                        std::collections::hash_map::Entry::Occupied(e) => assert_eq!(
+                            *e.get(),
+                            s,
+                            "{} @{stages}: region {} split across stages",
+                            adder.config,
+                            adder.nl.nodes[i].region
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dse_artifact_renders_deterministically_with_a_summary_per_format() {
+    let coord = Coordinator::new(4);
+    let report = dse::dse_report(16, 8, 1.0, &coord);
+    assert_eq!(report.summary.len(), PAPER_FORMATS.len());
+    assert_eq!(report.rows.len(), PAPER_FORMATS.len() * 2 * (1 + SUITE_RADICES.len()));
+    let json = report.to_json();
+    assert_eq!(json, report.to_json(), "DSE artifact is not render-stable");
+    assert!(json.contains("\"schema\": \"ofa-dse-v1\""));
+    assert!(json.contains("\"paper_area_band_pct\": [3.0, 23.0]"));
+    for v in &report.summary {
+        assert!(!v.best_area_config.is_empty());
+        // The serial baseline is never its own best online config.
+        assert_ne!(v.best_area_config, report.rows[0].config);
+    }
+}
